@@ -1,0 +1,113 @@
+//! GLUE-style finetuning (paper Table 4): pretrain a tiny LM, then
+//! finetune it on three synthetic classification tasks under two precision
+//! strategies and compare accuracies.
+//!
+//!     cargo run --release --example glue_finetune [pretrain_steps] [ft_steps]
+
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::data::glue::{GlueTask, ALL_TASKS};
+use collage::optim::strategy::Strategy;
+use collage::runtime::{ArtifactKind, Input, Manifest, Runtime};
+use collage::util::rng::Rng;
+use collage::util::table::{fnum, Table};
+
+fn main() -> collage::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let pre_steps: u64 = args.first().map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let ft_steps: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(120);
+
+    let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let model = "tiny";
+    let meta = manifest.model(model)?.clone();
+    let predict_exe =
+        runtime.load(&manifest, manifest.find(model, ArtifactKind::Predict)?)?;
+
+    let mut t = Table::new("synthetic-GLUE finetuning accuracy (cf. paper Table 4)");
+    let mut header = vec!["strategy"];
+    for k in ALL_TASKS {
+        header.push(k.name());
+    }
+    header.push("avg");
+    t.header(&header);
+
+    for strategy in [Strategy::CollagePlus, Strategy::Fp32MasterWeights] {
+        // ---- pretrain -----------------------------------------------------
+        println!("pretraining {} for {pre_steps} steps…", strategy.paper_name());
+        let cfg = RunConfig {
+            model: model.into(),
+            strategy,
+            steps: pre_steps,
+            warmup: pre_steps / 10,
+            lr: 1e-3,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut pre = Trainer::new(runtime.clone(), &manifest, cfg)?;
+        pre.run()?;
+        let theta_pre = pre.state().theta().to_vec();
+
+        // ---- finetune per task ---------------------------------------------
+        let mut row = vec![strategy.paper_name().to_string()];
+        let mut accs = Vec::new();
+        for kind in ALL_TASKS {
+            let task = GlueTask::new(kind, meta.vocab, meta.seq_len);
+            let cfg = RunConfig {
+                model: model.into(),
+                strategy,
+                steps: ft_steps,
+                warmup: 5,
+                lr: 5e-4,
+                log_every: 0,
+                ..Default::default()
+            };
+            let mut ft = Trainer::new(runtime.clone(), &manifest, cfg)?;
+            ft.set_theta(&theta_pre)?;
+            let mut rng = Rng::new(2024, kind as u64);
+            for _ in 0..ft_steps {
+                let (batch, _) = task.batch(meta.micro_batch, &mut rng);
+                ft.train_step(&batch)?;
+            }
+            // held-out accuracy via the predict artifact
+            let theta = ft.state().theta().to_vec();
+            let mut eval_rng = Rng::new(77_777, kind as u64);
+            let (mut correct, mut total) = (0usize, 0usize);
+            for _ in 0..12 {
+                let (batch, labels) = task.batch(meta.micro_batch, &mut eval_rng);
+                let out = predict_exe.execute(&[
+                    Input::I32(batch.tokens, vec![meta.micro_batch, meta.seq_len]),
+                    Input::F32(theta.clone(), vec![theta.len()]),
+                ])?;
+                // score only the label candidates (LM-as-classifier)
+                let logits = &out[0];
+                for (row, &l) in labels.iter().enumerate() {
+                    let base = row * meta.vocab;
+                    let pred = task
+                        .label_tokens
+                        .iter()
+                        .max_by(|&&a, &&b| {
+                            logits[base + a as usize]
+                                .partial_cmp(&logits[base + b as usize])
+                                .unwrap()
+                        })
+                        .copied()
+                        .unwrap();
+                    if pred == task.label_tokens[l] {
+                        correct += 1;
+                    }
+                    total += 1;
+                }
+            }
+            let acc = correct as f64 / total as f64;
+            println!("  {:>14}: {:.3}", kind.name(), acc);
+            accs.push(acc);
+            row.push(fnum(acc, 3));
+        }
+        row.push(fnum(accs.iter().sum::<f64>() / accs.len() as f64, 3));
+        t.row(row);
+    }
+    println!();
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! §Perf probe: old copy+validate path vs zero-copy hot path, plus a
+//! breakdown of upload/exec/download time per step.
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::data::batches::{BatchIterator, Split};
+use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use collage::optim::strategy::Strategy;
+use collage::runtime::{Input, Manifest, Runtime};
+use std::time::Instant;
+
+fn main() -> collage::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "small".into());
+    let iters: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    let meta = manifest.model(&model)?.clone();
+    let corpus = SyntheticCorpus::generate(CorpusConfig {
+        vocab: meta.vocab, n_tokens: 1 << 16, seed: 3, ..Default::default()
+    });
+    let batch = BatchIterator::new(&corpus, Split::Train, meta.micro_batch, meta.seq_len, 3)?
+        .batch_for_step(3, 1);
+
+    // New hot path via Trainer.
+    let cfg = RunConfig { model: model.clone(), strategy: Strategy::CollagePlus,
+        steps: u64::MAX, log_every: 0, corpus_tokens: 1 << 17, ..Default::default() };
+    let mut tr = Trainer::new(runtime.clone(), &manifest, cfg)?;
+    for _ in 0..5 { tr.train_step(&batch)?; }
+    let t0 = Instant::now();
+    for _ in 0..iters { tr.train_step(&batch)?; }
+    let new_path = t0.elapsed().as_secs_f64() / iters as f64;
+
+    // Old path: owned inputs (clones) + per-step validation.
+    let train_meta = manifest.train(&model, "collage-plus", None)?;
+    let exe = runtime.load(&manifest, train_meta)?;
+    let state = collage::optim::state::OptimState::init(
+        Strategy::CollagePlus, &manifest.load_init(&model)?);
+    let run_old = |state: &collage::optim::state::OptimState| -> collage::Result<Vec<Vec<f32>>> {
+        let mut inputs = vec![
+            Input::I32(batch.tokens.clone(), vec![meta.micro_batch, meta.seq_len]),
+            Input::I32(batch.targets.clone(), vec![meta.micro_batch, meta.seq_len]),
+            Input::ScalarF32(1e-3), Input::ScalarF32(0.1), Input::ScalarF32(0.05),
+            Input::ScalarU32(1),
+        ];
+        for v in state.vecs() { inputs.push(Input::F32(v.clone(), vec![v.len()])); }
+        exe.execute(&inputs)
+    };
+    for _ in 0..5 { run_old(&state)?; }
+    let t0 = Instant::now();
+    for _ in 0..iters { run_old(&state)?; }
+    let old_path = t0.elapsed().as_secs_f64() / iters as f64;
+
+    let stats = exe.stats();
+    println!("model={model} iters={iters}");
+    println!("old path (clone+validate): {:.3} ms/step", old_path * 1e3);
+    println!("new path (zero-copy):      {:.3} ms/step ({:+.1}%)",
+        new_path * 1e3, 100.0 * (new_path - old_path) / old_path);
+    println!("breakdown (old-path exe): exec={:.3}ms upload={:.3}ms download={:.3}ms per step",
+        stats.exec_time.as_secs_f64() * 1e3 / stats.executions as f64,
+        stats.upload_time.as_secs_f64() * 1e3 / stats.executions as f64,
+        stats.download_time.as_secs_f64() * 1e3 / stats.executions as f64);
+    Ok(())
+}

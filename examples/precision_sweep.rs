@@ -1,0 +1,85 @@
+//! Precision-strategy sweep: train the same model under every strategy of
+//! paper Table 2 (plus the Kahan/SR baselines) with identical data and
+//! hyper-parameters, and print a Table-3-style comparison.
+//!
+//!     cargo run --release --example precision_sweep [steps] [model] [beta2]
+//!
+//! Try `precision_sweep 150 tiny 0.999` to see the paper's headline
+//! pathology: plain BF16 collapses, Collage-plus tracks FP32-MW.
+
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::optim::strategy::{Strategy, ALL_STRATEGIES};
+use collage::runtime::{Manifest, Runtime};
+use collage::util::table::{fnum, Table};
+
+fn main() -> collage::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: u64 = args.first().map(|s| s.parse()).transpose()?.unwrap_or(150);
+    let model = args.get(1).cloned().unwrap_or_else(|| "tiny".to_string());
+    let beta2: Option<f64> = args.get(2).map(|s| s.parse()).transpose()?;
+
+    let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+
+    let mut t = Table::new(format!(
+        "precision sweep — {model}, {steps} steps, β₂={}",
+        beta2.map(|b| b.to_string()).unwrap_or_else(|| "default(0.95)".into())
+    ));
+    t.header(&[
+        "strategy",
+        "train ppl",
+        "val ppl",
+        "EDQ ratio",
+        "lost %",
+        "bytes/param",
+        "ms/step",
+    ]);
+
+    for strategy in ALL_STRATEGIES {
+        // β₂ variants are only exported for the strategies each figure
+        // needs; skip combos without artifacts instead of failing.
+        let cfg = RunConfig {
+            model: model.clone(),
+            strategy,
+            beta2,
+            steps,
+            warmup: steps / 10,
+            lr: 1e-3,
+            eval_every: steps,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut trainer = match Trainer::new(runtime.clone(), &manifest, cfg) {
+            Ok(tr) => tr,
+            Err(e) => {
+                eprintln!("skipping {}: {e}", strategy.option_str());
+                continue;
+            }
+        };
+        let o = trainer.run()?;
+        println!(
+            "  {} done: ppl {:.3}",
+            strategy.paper_name(),
+            o.train_ppl
+        );
+        t.row(vec![
+            strategy.paper_name().to_string(),
+            fnum(o.train_ppl, 3),
+            fnum(o.val_ppl, 3),
+            fnum(o.edq_ratio, 4),
+            fnum(o.lost_frac * 100.0, 1),
+            strategy.bytes_per_param().to_string(),
+            fnum(o.step_time * 1e3, 1),
+        ]);
+        let _ = o.log.write_csv(std::path::Path::new(&format!(
+            "runs/precision_sweep/{model}_{}.csv",
+            strategy.option_str()
+        )));
+    }
+    println!();
+    t.print();
+    println!("(full per-step curves in runs/precision_sweep/*.csv — compare with paper Fig. 3)");
+    let _ = Strategy::Bf16; // silence unused-import lints on some toolchains
+    Ok(())
+}

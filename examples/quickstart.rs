@@ -1,0 +1,45 @@
+//! Quickstart: load the AOT artifacts and pretrain a tiny GPT under the
+//! Collage-plus strategy for 100 steps, printing the paper's diagnostics.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::optim::strategy::Strategy;
+use collage::runtime::{Manifest, Runtime};
+
+fn main() -> collage::Result<()> {
+    // 1. A PJRT CPU client + the artifact manifest produced by `make
+    //    artifacts` (python runs once there, never again).
+    let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    println!("platform={} devices={}", runtime.platform(), runtime.device_count());
+
+    // 2. A run configuration: tiny GPT, Collage-plus (Option C), 100 steps.
+    let cfg = RunConfig {
+        model: "tiny".into(),
+        strategy: Strategy::CollagePlus,
+        steps: 100,
+        warmup: 10,
+        lr: 1e-3,
+        eval_every: 50,
+        log_every: 10,
+        ..Default::default()
+    };
+
+    // 3. Train.  The trainer synthesizes a deterministic corpus, executes
+    //    the fused train-step HLO each step, and tracks EDQ / lost
+    //    arithmetic — the paper's Fig. 3 metrics — as it goes.
+    let mut trainer = Trainer::new(runtime, &manifest, cfg)?;
+    let outcome = trainer.run()?;
+
+    println!("\n-- summary -----------------------------------");
+    println!("train perplexity : {:.3}", outcome.train_ppl);
+    println!("val perplexity   : {:.3}", outcome.val_ppl);
+    println!("EDQ ratio        : {:.4} (1.0 = no information lost)", outcome.edq_ratio);
+    println!("lost arithmetic  : {:.2}%", outcome.lost_frac * 100.0);
+    println!("throughput       : {:.0} tokens/s", outcome.tokens_per_sec);
+    outcome.log.write_csv(std::path::Path::new("runs/quickstart.csv"))?;
+    println!("metrics          : runs/quickstart.csv");
+    Ok(())
+}

@@ -1,0 +1,300 @@
+"""AOT exporter: lower every (model config × precision option) train step,
+the eval step and the grad-only step to HLO **text** artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--configs tiny,small] [--options all] [--init-states]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import optim
+from .kernels.mcf import BLOCK
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(dtype, shape):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_row(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def _train_input_specs(cfg, n):
+    b, t = cfg.micro_batch, cfg.seq_len
+    return [
+        ("tokens", _spec(jnp.int32, (b, t)), _io_row("tokens", "s32", (b, t))),
+        ("targets", _spec(jnp.int32, (b, t)), _io_row("targets", "s32", (b, t))),
+        ("lr", _spec(jnp.float32, ()), _io_row("lr", "f32", ())),
+        ("bc1", _spec(jnp.float32, ()), _io_row("bc1", "f32", ())),
+        ("bc2", _spec(jnp.float32, ()), _io_row("bc2", "f32", ())),
+        ("seed", _spec(jnp.uint32, ()), _io_row("seed", "u32", ())),
+    ]
+
+
+def export_train(cfg, option, oc, out_dir, tag=""):
+    """Lower one train step; returns its manifest entry.
+
+    ``tag`` distinguishes β₂-variant artifacts (e.g. "b999_") so they never
+    collide with the config-default export.
+    """
+    n = model_lib.padded_len(cfg)
+    step = optim.make_train_step(option, cfg, oc)
+    fixed = _train_input_specs(cfg, n)
+    state_rows = optim.STATE_SPECS[option]
+    specs = [s for _, s, _ in fixed] + [_spec(jnp.float32, (n,))] * len(state_rows)
+    t0 = time.time()
+    lowered = jax.jit(step, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{cfg.name}_{tag}{option}_train.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    inputs = [row for _, _, row in fixed] + [
+        _io_row(name, "f32", (n,)) for name, _ in state_rows
+    ]
+    outputs = [_io_row(name, "f32", (n,)) for name, _ in state_rows] + [
+        _io_row("metrics", "f32", (optim.NUM_METRICS,))
+    ]
+    print(f"  {fname}: {len(text)} chars in {time.time()-t0:.1f}s")
+    return {
+        "file": fname,
+        "kind": "train",
+        "config": cfg.name,
+        "option": option,
+        "inputs": inputs,
+        "outputs": outputs,
+        "state": [{"name": nm, "semantic_dtype": dt} for nm, dt in state_rows],
+        "metrics": list(optim.METRIC_NAMES),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def export_eval(cfg, out_dir, compute_dtype=jnp.bfloat16, tag="eval"):
+    n = model_lib.padded_len(cfg)
+    b, t = cfg.micro_batch, cfg.seq_len
+    step = optim.make_eval_step(cfg, compute_dtype)
+    lowered = jax.jit(step, keep_unused=True).lower(
+        _spec(jnp.int32, (b, t)), _spec(jnp.int32, (b, t)), _spec(jnp.float32, (n,))
+    )
+    text = to_hlo_text(lowered)
+    fname = f"{cfg.name}_{tag}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+    return {
+        "file": fname,
+        "kind": tag,
+        "config": cfg.name,
+        "option": None,
+        "inputs": [
+            _io_row("tokens", "s32", (b, t)),
+            _io_row("targets", "s32", (b, t)),
+            _io_row("theta", "f32", (n,)),
+        ],
+        "outputs": [_io_row("loss", "f32", ())],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def export_grad(cfg, out_dir, compute_dtype=jnp.bfloat16):
+    """Forward+backward-only artifact for the data-parallel workers."""
+    n = model_lib.padded_len(cfg)
+    b, t = cfg.micro_batch, cfg.seq_len
+    step = optim.make_grad_step(cfg, compute_dtype)
+    lowered = jax.jit(step, keep_unused=True).lower(
+        _spec(jnp.int32, (b, t)), _spec(jnp.int32, (b, t)), _spec(jnp.float32, (n,))
+    )
+    text = to_hlo_text(lowered)
+    fname = f"{cfg.name}_grad.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+    return {
+        "file": fname,
+        "kind": "grad",
+        "config": cfg.name,
+        "option": None,
+        "inputs": [
+            _io_row("tokens", "s32", (b, t)),
+            _io_row("targets", "s32", (b, t)),
+            _io_row("theta", "f32", (n,)),
+        ],
+        "outputs": [_io_row("loss", "f32", ()), _io_row("grad", "f32", (n,))],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def export_predict(cfg, out_dir, compute_dtype=jnp.bfloat16):
+    """Last-position logits artifact (GLUE-style classification).
+
+    Outputs the fp32 logits of the final sequence position per row; the
+    coordinator scores only the label-candidate tokens (the standard
+    LM-as-classifier evaluation), so accuracy is well-defined even when
+    the bulk of the distribution sits on body tokens.
+    """
+    n = model_lib.padded_len(cfg)
+    b, t = cfg.micro_batch, cfg.seq_len
+
+    def step(tokens, theta):
+        logits = model_lib.forward(theta, tokens, cfg, compute_dtype)
+        return logits[:, -1, :]
+
+    lowered = jax.jit(step, keep_unused=True).lower(
+        _spec(jnp.int32, (b, t)), _spec(jnp.float32, (n,))
+    )
+    text = to_hlo_text(lowered)
+    fname = f"{cfg.name}_predict.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  {fname}: {len(text)} chars")
+    return {
+        "file": fname,
+        "kind": "predict",
+        "config": cfg.name,
+        "option": None,
+        "inputs": [
+            _io_row("tokens", "s32", (b, t)),
+            _io_row("theta", "f32", (n,)),
+        ],
+        "outputs": [_io_row("last_logits", "f32", (b, cfg.vocab))],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def export_init(cfg, out_dir, seed=1234):
+    """Initial bf16-representable flat parameter vector (npy, fp32)."""
+    flat = np.asarray(model_lib.init_params(seed, cfg), np.float32)
+    fname = f"{cfg.name}_init.npy"
+    np.save(os.path.join(out_dir, fname), flat)
+    print(f"  {fname}: {flat.shape[0]} params (padded)")
+    return fname
+
+
+def config_manifest(cfg):
+    return {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "micro_batch": cfg.micro_batch,
+        "n_params": model_lib.num_params(cfg),
+        "padded_len": model_lib.padded_len(cfg),
+        "param_table": [
+            {"name": nm, "shape": list(sh), "offset": off}
+            for nm, sh, off in model_lib.param_offsets(cfg)
+        ],
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--configs", default="tiny,tiny2x,small,medium")
+    p.add_argument("--options", default="all")
+    p.add_argument("--beta2", type=float, default=None,
+                   help="override β₂ (default: per-config standard values)")
+    p.add_argument("--seed", type=int, default=1234)
+    args = p.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [c for c in args.configs.split(",") if c]
+    options = list(optim.OPTIONS) if args.options == "all" else args.options.split(",")
+
+    manifest = {
+        "version": 1,
+        "block": BLOCK,
+        "metric_names": list(optim.METRIC_NAMES),
+        "options": list(optim.OPTIONS),
+        "state_specs": {
+            opt: [{"name": nm, "semantic_dtype": dt} for nm, dt in rows]
+            for opt, rows in optim.STATE_SPECS.items()
+        },
+        "configs": {},
+        "artifacts": [],
+        "optim": {},
+    }
+
+    for name in names:
+        cfg = model_lib.CONFIGS[name]
+        # β₂ is baked into each artifact; the paper's per-model defaults.
+        beta2 = args.beta2 if args.beta2 is not None else 0.95
+        oc = optim.OptimConfig(beta2=beta2)
+        manifest["configs"][name] = config_manifest(cfg)
+        manifest["optim"][name] = {
+            "beta1": oc.beta1,
+            "beta2": oc.beta2,
+            "eps": oc.eps,
+            "weight_decay": oc.weight_decay,
+            "grad_clip": oc.grad_clip,
+        }
+        print(f"[{name}] n_params={model_lib.num_params(cfg)} padded={model_lib.padded_len(cfg)}")
+        manifest["artifacts"].append(export_eval(cfg, args.out_dir))
+        manifest["artifacts"].append(export_grad(cfg, args.out_dir))
+        manifest["artifacts"].append(export_predict(cfg, args.out_dir))
+        manifest["configs"][name]["init_file"] = export_init(cfg, args.out_dir, args.seed)
+        for option in options:
+            manifest["artifacts"].append(export_train(cfg, option, oc, args.out_dir))
+
+    def export_variant(cfg_name, beta2, variant_options):
+        """β₂-ablation train artifacts (Table 6 / Figs 5-12)."""
+        tag = f"b{str(beta2).replace('0.', '')}_"
+        cfg = model_lib.CONFIGS[cfg_name]
+        oc = optim.OptimConfig(beta2=beta2)
+        for option in variant_options:
+            entry = export_train(cfg, option, oc, args.out_dir, tag=tag)
+            entry["beta2"] = beta2
+            manifest["artifacts"].append(entry)
+
+    if args.beta2 is None:
+        core = [o for o in ("a", "collage-light", "collage-plus", "dmw", "d")
+                if o in options]
+        # tiny gets the full strategy set at each β₂ (Fig. 3 compares all
+        # baselines at β₂=0.999); tiny2x only needs the Table-6 options.
+        if "tiny" in names:
+            for beta2 in (0.99, 0.999):
+                export_variant("tiny", beta2, options)
+        if "tiny2x" in names:
+            for beta2 in (0.99, 0.999):
+                export_variant("tiny2x", beta2, core)
+        # OpenLLaMA-style β₂=0.99 stability study on the small config
+        # (Fig. 6): A vs Collage vs D under the unstable β₂.
+        if "small" in names:
+            export_variant("small", 0.99, [o for o in ("a", "collage-light",
+                           "collage-plus", "d") if o in options])
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""Pallas kernels for the Collage MCF optimizer — the paper's compute hot-spot.
+
+Layer-1 of the stack.  Each kernel fuses the *entire* per-element optimizer
+update chain of Algorithm 2 (moment EMAs, bias-corrected Δθ, and the
+Grow-based parameter update) into a single pass over the flat parameter
+vector: one read and one write per state vector per step, which is exactly
+the memory-traffic profile that yields the paper's Table-7 speedups.
+
+Kernels are lowered with ``interpret=True`` so the resulting HLO runs on any
+PJRT backend (the Rust CPU client); a real-TPU port would keep the same
+BlockSpec structure (8×128-aligned elementwise VPU blocks, double-buffered —
+see DESIGN.md §L1 real-TPU estimate).
+
+Numerical semantics are inherited from :mod:`ref` — emulated bf16 via
+explicit f32→bf16 round after every elementwise op — and pytest enforces
+bitwise agreement between each kernel and its oracle.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Flat-vector alignment: 8 sublanes × 128 lanes — the native TPU VPU tile.
+# All flat state vectors are padded to a multiple of this.
+BLOCK = 1024
+
+# Block size used by the fused kernels.  On a real TPU this would be a
+# VMEM-sized tile (e.g. 64-512 KiB per operand) iterated by the grid with
+# double buffering; under interpret=True on CPU every grid step costs a
+# full interpreter dispatch (§Perf: a 900-block grid made one small-model
+# step take 3.5 s), so we use ONE full-vector block — the kernel is purely
+# elementwise, and the structure (BlockSpec + grid) stays identical, only
+# the tile extent changes for the TPU port (see DESIGN.md §L1).
+def _grid_and_block(n: int):
+    if n % BLOCK != 0:
+        raise ValueError(
+            f"flat vector length {n} must be padded to a multiple of {BLOCK}; "
+            "see aot.py / model.flatten_params"
+        )
+    block = int(os.environ.get("COLLAGE_KERNEL_BLOCK", n))
+    if n % block != 0:
+        raise ValueError(f"block {block} must divide padded length {n}")
+    return (n // block,), block
+
+
+def _scal_spec():
+    """BlockSpec broadcasting the scalar vector to every grid step."""
+    return pl.BlockSpec((ref.NUM_SCALARS,), lambda i: (0,))
+
+
+def _vec_spec(block):
+    """BlockSpec carving the flat state vectors into block-sized tiles."""
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+# ---------------------------------------------------------------------------
+# Fused optimizer-step kernels.
+# ---------------------------------------------------------------------------
+
+
+def _adamw_a_kernel(scal_ref, g_ref, th_ref, m_ref, v_ref, th_o, m_o, v_o, dt_o):
+    scal = ref.unpack_scalars(scal_ref[...])
+    th, dc_m, dc_v, dt = ref.adamw_step_a(g_ref[...], th_ref[...], m_ref[...], v_ref[...], scal)
+    th_o[...], m_o[...], v_o[...], dt_o[...] = th, dc_m, dc_v, dt
+
+
+def adamw_a(scal, g, theta, m, v):
+    """Option A — pure bf16 AdamW, fused. Returns (θ', m', v', Δθ)."""
+    n = g.shape[0]
+    grid, block = _grid_and_block(n)
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _adamw_a_kernel,
+        grid=grid,
+        in_specs=[_scal_spec()] + [_vec_spec(block)] * 4,
+        out_specs=[_vec_spec(block)] * 4,
+        out_shape=[out] * 4,
+        interpret=True,
+    )(scal, g, theta, m, v)
+
+
+def _collage_light_kernel(
+    scal_ref, g_ref, th_ref, dc_ref, m_ref, v_ref, th_o, dc_o, m_o, v_o, dt_o
+):
+    scal = ref.unpack_scalars(scal_ref[...])
+    th, dc, m, v, dt = ref.adamw_step_light(
+        g_ref[...], th_ref[...], dc_ref[...], m_ref[...], v_ref[...], scal
+    )
+    th_o[...], dc_o[...], m_o[...], v_o[...], dt_o[...] = th, dc, m, v, dt
+
+
+def collage_light(scal, g, theta, dtheta_c, m, v):
+    """Option B — Collage-light: MCF (θ, δθ) via Grow. Returns (θ', δθ', m', v', Δθ)."""
+    n = g.shape[0]
+    grid, block = _grid_and_block(n)
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _collage_light_kernel,
+        grid=grid,
+        in_specs=[_scal_spec()] + [_vec_spec(block)] * 5,
+        out_specs=[_vec_spec(block)] * 5,
+        out_shape=[out] * 5,
+        interpret=True,
+    )(scal, g, theta, dtheta_c, m, v)
+
+
+def _collage_plus_kernel(
+    scal_ref, g_ref, th_ref, dc_ref, m_ref, v_ref, dv_ref,
+    th_o, dc_o, m_o, v_o, dv_o, dt_o,
+):
+    scal = ref.unpack_scalars(scal_ref[...])
+    th, dc, m, v, dv, dt = ref.adamw_step_plus(
+        g_ref[...], th_ref[...], dc_ref[...], m_ref[...], v_ref[...], dv_ref[...], scal
+    )
+    th_o[...], dc_o[...], m_o[...], v_o[...], dv_o[...], dt_o[...] = th, dc, m, v, dv, dt
+
+
+def collage_plus(scal, g, theta, dtheta_c, m, v, dv):
+    """Option C — Collage-plus: MCF parameters *and* MCF second moment.
+
+    Returns (θ', δθ', m', v', δv', Δθ).
+    """
+    n = g.shape[0]
+    grid, block = _grid_and_block(n)
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _collage_plus_kernel,
+        grid=grid,
+        in_specs=[_scal_spec()] + [_vec_spec(block)] * 6,
+        out_specs=[_vec_spec(block)] * 6,
+        out_shape=[out] * 6,
+        interpret=True,
+    )(scal, g, theta, dtheta_c, m, v, dv)
+
+
+def _kahan_kernel(scal_ref, g_ref, th_ref, c_ref, m_ref, v_ref, th_o, c_o, m_o, v_o, dt_o):
+    scal = ref.unpack_scalars(scal_ref[...])
+    th, c, m, v, dt = ref.adamw_step_kahan(
+        g_ref[...], th_ref[...], c_ref[...], m_ref[...], v_ref[...], scal
+    )
+    th_o[...], c_o[...], m_o[...], v_o[...], dt_o[...] = th, c, m, v, dt
+
+
+def kahan(scal, g, theta, c, m, v):
+    """Kahan-compensated bf16 AdamW baseline. Returns (θ', c', m', v', Δθ)."""
+    n = g.shape[0]
+    grid, block = _grid_and_block(n)
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _kahan_kernel,
+        grid=grid,
+        in_specs=[_scal_spec()] + [_vec_spec(block)] * 5,
+        out_specs=[_vec_spec(block)] * 5,
+        out_shape=[out] * 5,
+        interpret=True,
+    )(scal, g, theta, c, m, v)
+
+
+# ---------------------------------------------------------------------------
+# Primitive MCF kernels — exposed for tests, benches and downstream reuse.
+# Whole-array single-block kernels: accept any shape/dtype=f32.
+# ---------------------------------------------------------------------------
+
+
+def _binary_expansion_call(kernel_body, a, b):
+    out = jax.ShapeDtypeStruct(a.shape, jnp.float32)
+    return pl.pallas_call(kernel_body, out_shape=(out, out), interpret=True)(a, b)
+
+
+def two_sum(a, b):
+    """Pallas TwoSum: exact a + b = (x, y) for arbitrary bf16 operands."""
+
+    def body(a_ref, b_ref, x_o, y_o):
+        x_o[...], y_o[...] = ref.two_sum(a_ref[...], b_ref[...])
+
+    return _binary_expansion_call(body, a, b)
+
+
+def fast2sum(a, b):
+    """Pallas Fast2Sum (requires |a| >= |b| elementwise)."""
+
+    def body(a_ref, b_ref, x_o, y_o):
+        x_o[...], y_o[...] = ref.fast2sum(a_ref[...], b_ref[...])
+
+    return _binary_expansion_call(body, a, b)
+
+
+def two_prod(a, b):
+    """Pallas TwoProdFMA: exact a * b = (x, e)."""
+
+    def body(a_ref, b_ref, x_o, y_o):
+        x_o[...], y_o[...] = ref.two_prod(a_ref[...], b_ref[...])
+
+    return _binary_expansion_call(body, a, b)
+
+
+def grow(x, y, a):
+    """Pallas Grow: expansion (x, y) + float a -> expansion (u, v)."""
+
+    def body(x_ref, y_ref, a_ref, u_o, v_o):
+        u_o[...], v_o[...] = ref.grow(x_ref[...], y_ref[...], a_ref[...])
+
+    out = jax.ShapeDtypeStruct(x.shape, jnp.float32)
+    return pl.pallas_call(body, out_shape=(out, out), interpret=True)(x, y, a)
+
+
+def scaling(a1, a2, v):
+    """Pallas Scaling: expansion (a1, a2) times float v -> expansion."""
+
+    def body(a1_ref, a2_ref, v_ref, x_o, e_o):
+        x_o[...], e_o[...] = ref.scaling(a1_ref[...], a2_ref[...], v_ref[...])
+
+    out = jax.ShapeDtypeStruct(a1.shape, jnp.float32)
+    return pl.pallas_call(body, out_shape=(out, out), interpret=True)(a1, a2, v)
+
+
+def mul(a1, a2, b1, b2):
+    """Pallas Mul: expansion × expansion -> expansion."""
+
+    def body(a1_ref, a2_ref, b1_ref, b2_ref, x_o, e_o):
+        x_o[...], e_o[...] = ref.mul(a1_ref[...], a2_ref[...], b1_ref[...], b2_ref[...])
+
+    out = jax.ShapeDtypeStruct(a1.shape, jnp.float32)
+    return pl.pallas_call(body, out_shape=(out, out), interpret=True)(a1, a2, b1, b2)
+
+
+# Registry used by optim.py / aot.py to pick the fused kernel per option.
+FUSED = {
+    "a": adamw_a,
+    "collage-light": collage_light,
+    "collage-plus": collage_plus,
+    "kahan": kahan,
+}
+
+__all__ = [
+    "BLOCK",
+    "adamw_a",
+    "collage_light",
+    "collage_plus",
+    "kahan",
+    "two_sum",
+    "fast2sum",
+    "two_prod",
+    "grow",
+    "scaling",
+    "mul",
+    "FUSED",
+]

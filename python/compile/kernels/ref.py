@@ -1,0 +1,337 @@
+"""Pure-jnp oracle for the Collage MCF kernels.
+
+This module is the single source of truth for the *semantics* of emulated
+bfloat16 arithmetic and the multi-component-float (MCF) expansion algebra of
+the paper (Priest 1991; Dekker 1971; Yu et al. 2022 "MCTensor"):
+
+  * every emulated-bf16 value is stored in an f32 container (every bf16 is
+    exactly an f32),
+  * every bf16 operation is realized as the exact f32 operation followed by
+    an explicit round-to-nearest-even cast to bf16 (``rnb``).
+
+This is bit-exact bf16 arithmetic: rounding an IEEE-correct f32 result to
+bf16 equals direct bf16 rounding because f32 carries 24 significand bits
+>= 2*8+2 (the classic "double rounding is innocuous when p2 >= 2*p1+2"
+theorem, Figueroa 1995).  The Rust reference implementation
+(``rust/src/numerics``) mirrors these exact semantics so that the two stacks
+can be cross-checked bitwise.
+
+The Pallas kernels in ``mcf.py`` must match this oracle *exactly* (bitwise);
+pytest enforces that.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Emulated bf16 primitive: round-to-nearest-even into a bfloat16 container.
+# ---------------------------------------------------------------------------
+
+
+def rnb(x):
+    """Round an f32 array to bf16 (RN-even), returned in an f32 container."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def badd(a, b):
+    """bf16 addition: F_bf16(a + b) for bf16-representable f32 inputs."""
+    return rnb(a + b)
+
+
+def bsub(a, b):
+    """bf16 subtraction: F_bf16(a - b)."""
+    return rnb(a - b)
+
+
+def bmul(a, b):
+    """bf16 multiplication: F_bf16(a * b)."""
+    return rnb(a * b)
+
+
+def bdiv(a, b):
+    """bf16 division: F_bf16(a / b)."""
+    return rnb(a / b)
+
+
+def bsqrt(a):
+    """bf16 square root: F_bf16(sqrt(a))."""
+    return rnb(jnp.sqrt(a))
+
+
+# ---------------------------------------------------------------------------
+# MCF expansion primitives (paper Sec. 4.1 / Appendix C).
+# All inputs/outputs are bf16-representable f32 arrays.
+# ---------------------------------------------------------------------------
+
+
+def two_sum(a, b):
+    """TwoSum (Alg. 2): exact a + b = x + y for any floats, no ordering."""
+    x = badd(a, b)
+    b_virtual = bsub(x, a)
+    a_virtual = bsub(x, b_virtual)
+    b_roundoff = bsub(b, b_virtual)
+    a_roundoff = bsub(a, a_virtual)
+    y = badd(a_roundoff, b_roundoff)
+    return x, y
+
+
+def fast2sum(a, b):
+    """Fast2Sum (Dekker 1971, Thm 4.1): requires |a| >= |b|.
+
+    Produces (x, y) with a + b = x + y exactly and |y| <= ulp(x)/2.
+    """
+    x = badd(a, b)
+    y = bsub(b, bsub(x, a))
+    return x, y
+
+
+def two_prod(a, b):
+    """TwoProdFMA (Alg. 5): exact a * b = x + e.
+
+    The product of two bf16 values (8-bit significands) has at most 16
+    significand bits and is exactly representable in f32, so the error term
+    ``e = f32(a)*f32(b) - f32(x)`` is computed exactly; this is the standard
+    TwoProdFMA realization (see DESIGN.md §TwoProdFMA note).
+    """
+    x = bmul(a, b)
+    e = rnb(a * b - x)
+    return x, e
+
+
+def grow(x, y, a):
+    """Grow (Alg. 1): add float ``a`` to expansion ``(x, y)``, |x| >= |a|.
+
+    Returns a length-2 expansion (u, v) with u + v ~= x + y + a where the
+    dominant rounding error of the x + a addition is captured exactly.
+    """
+    u, v = fast2sum(x, a)
+    u, v = fast2sum(u, badd(y, v))
+    return u, v
+
+
+def scaling(a1, a2, v):
+    """Scaling (Alg. 6): multiply expansion (a1, a2) by float v."""
+    x, e = two_prod(a1, v)
+    e = badd(bmul(a2, v), e)
+    return fast2sum(x, e)
+
+
+def mul(a1, a2, b1, b2):
+    """Mul (Alg. 7): multiply two length-2 expansions -> length-2 expansion."""
+    x, e = two_prod(a1, b1)
+    e = badd(e, badd(bmul(a1, b2), bmul(a2, b1)))
+    return fast2sum(x, e)
+
+
+def split_scalar(value: float):
+    """Exact length-2 bf16 expansion of a python float (paper Table 1).
+
+    hi = RN_bf16(value), lo = RN_bf16(value - hi).  For the β₂ values used in
+    practice (0.999, 0.99, 0.98, 0.95) the expansion is exact.
+    """
+    import ml_dtypes
+    import numpy as np
+
+    hi = np.float32(np.asarray(value, dtype=np.float32).astype(ml_dtypes.bfloat16))
+    lo = np.float32(
+        np.asarray(np.float64(value) - np.float64(hi), dtype=np.float32).astype(
+            ml_dtypes.bfloat16
+        )
+    )
+    return float(hi), float(lo)
+
+
+# ---------------------------------------------------------------------------
+# Reference optimizer updates (elementwise; flat f32 arrays in/out).
+# These mirror Algorithm 2 of the paper; the Pallas kernels fuse the same
+# op-chain and must match bitwise.
+#
+# Scalar arguments (beta1, one_m_beta1, ..., bc1, bc2, lr, eps, wd) are f32
+# *high-precision* scalars per the paper's rule of thumb ("do as many scalar
+# computations in high precision as possible"); the elementwise tensor math
+# is emulated bf16.
+# ---------------------------------------------------------------------------
+
+
+def moments_bf16(g, m, v, beta1, one_m_beta1, beta2, one_m_beta2):
+    """Standard bf16 AdamW moment updates (options A, B, kahan, sr).
+
+    m' = F(F(β₁ ⊙ m) ⊕ F((1-β₁) ⊙ g)) ;  v' analogous with g².
+    The scalars are f32; each elementwise op rounds to bf16.
+    """
+    m_new = badd(bmul(m, beta1), bmul(g, one_m_beta1))
+    g2 = bmul(g, g)
+    v_new = badd(bmul(v, beta2), bmul(g2, one_m_beta2))
+    return m_new, v_new
+
+
+def moments_plus(g, m, v, dv, beta1, one_m_beta1, b2hi, b2lo, one_m_beta2):
+    """Collage-plus moment updates (Alg. 2 line 9).
+
+    m is standard bf16; the second moment is a length-2 expansion (v, δv)
+    multiplied by the β₂ expansion (b2hi, b2lo) via Mul, then Grown by the
+    float (1-β₂)·g².
+    """
+    m_new = badd(bmul(m, beta1), bmul(g, one_m_beta1))
+    g2 = bmul(g, g)
+    incr = bmul(g2, one_m_beta2)
+    vx, ve = mul(v, dv, b2hi, b2lo)
+    v_new, dv_new = grow(vx, ve, incr)
+    return m_new, v_new, dv_new
+
+
+def delta_theta(theta, m_new, v_eval_hat, bc1, lr, eps, wd):
+    """Aggregated update Δθ (Alg. 2 line 12), emulated bf16.
+
+    Δθ = -α( m̂ / (sqrt(v̂) + ε) + λθ ) with m̂ = m/bc1 (bc1 = 1-β₁ᵗ in f32)
+    and v̂ supplied by the caller (option-dependent, already bias-corrected
+    in f32 per the paper's scalar rule).  Decoupled weight decay sits inside
+    Δθ (the paper's fix for the weight-decay lost-arithmetic issue, App. D).
+    """
+    m_hat = rnb(m_new / bc1)
+    denom = badd(bsqrt(v_eval_hat), eps)
+    t1 = bdiv(m_hat, denom)
+    t2 = bmul(theta, wd)
+    return rnb(-lr * badd(t1, t2))
+
+
+def v_hat_bf16(v_new, bc2):
+    """Bias-corrected second moment for single-float v (f32 scalar divide)."""
+    return rnb(v_new / bc2)
+
+
+def v_hat_plus(v_new, dv_new, bc2):
+    """Bias-corrected second moment for the (v, δv) expansion.
+
+    The expansion is evaluated in f32 (exact: hi+lo fits easily) and divided
+    by the f32 scalar bc2 = 1-β₂ᵗ, then rounded once — the "scalar math in
+    high precision" rule.
+    """
+    return rnb((v_new + dv_new) / bc2)
+
+
+def apply_update_bf16(theta, dtheta):
+    """Option-A parameter update: θ' = F(θ ⊕ Δθ) — where arithmetic is lost."""
+    return badd(theta, dtheta)
+
+
+def apply_update_light(theta, dtheta_c, dtheta):
+    """Collage-light/plus parameter update: (θ, δθ) ← Grow((θ, δθ), Δθ)."""
+    return grow(theta, dtheta_c, dtheta)
+
+
+def apply_update_kahan(theta, c, dtheta):
+    """Kahan-compensated update (Zamirai et al. 2020; App. B).
+
+    Δθ' = F(Δθ ⊕ c); θ' = F(θ ⊕ Δθ'); c' = F(Δθ' ⊖ F(θ' ⊖ θ)).
+    """
+    d = badd(dtheta, c)
+    theta_new = badd(theta, d)
+    c_new = bsub(d, bsub(theta_new, theta))
+    return theta_new, c_new
+
+
+def adamw_step_a(g, theta, m, v, scal):
+    """Full Option-A (pure bf16) fused step. ``scal`` is the scalar dict."""
+    m_new, v_new = moments_bf16(
+        g, m, v, scal["beta1"], scal["one_m_beta1"], scal["b2hi"], scal["one_m_beta2"]
+    )
+    vh = v_hat_bf16(v_new, scal["bc2"])
+    dt = delta_theta(theta, m_new, vh, scal["bc1"], scal["lr"], scal["eps"], scal["wd"])
+    theta_new = apply_update_bf16(theta, dt)
+    return theta_new, m_new, v_new, dt
+
+
+def adamw_step_light(g, theta, dtheta_c, m, v, scal):
+    """Full Collage-light fused step (MCF parameters only)."""
+    m_new, v_new = moments_bf16(
+        g, m, v, scal["beta1"], scal["one_m_beta1"], scal["b2hi"], scal["one_m_beta2"]
+    )
+    vh = v_hat_bf16(v_new, scal["bc2"])
+    dt = delta_theta(theta, m_new, vh, scal["bc1"], scal["lr"], scal["eps"], scal["wd"])
+    theta_new, dc_new = apply_update_light(theta, dtheta_c, dt)
+    return theta_new, dc_new, m_new, v_new, dt
+
+
+def adamw_step_plus(g, theta, dtheta_c, m, v, dv, scal):
+    """Full Collage-plus fused step (MCF parameters + MCF second moment)."""
+    m_new, v_new, dv_new = moments_plus(
+        g,
+        m,
+        v,
+        dv,
+        scal["beta1"],
+        scal["one_m_beta1"],
+        scal["b2hi"],
+        scal["b2lo"],
+        scal["one_m_beta2"],
+    )
+    vh = v_hat_plus(v_new, dv_new, scal["bc2"])
+    dt = delta_theta(theta, m_new, vh, scal["bc1"], scal["lr"], scal["eps"], scal["wd"])
+    theta_new, dc_new = apply_update_light(theta, dtheta_c, dt)
+    return theta_new, dc_new, m_new, v_new, dv_new, dt
+
+
+def adamw_step_kahan(g, theta, c, m, v, scal):
+    """Full Kahan-compensated bf16 step (baseline; App. B/D)."""
+    m_new, v_new = moments_bf16(
+        g, m, v, scal["beta1"], scal["one_m_beta1"], scal["b2hi"], scal["one_m_beta2"]
+    )
+    vh = v_hat_bf16(v_new, scal["bc2"])
+    dt = delta_theta(theta, m_new, vh, scal["bc1"], scal["lr"], scal["eps"], scal["wd"])
+    theta_new, c_new = apply_update_kahan(theta, c, dt)
+    return theta_new, c_new, m_new, v_new, dt
+
+
+# ---------------------------------------------------------------------------
+# Scalar packing shared by oracle, Pallas kernels and the L2 optimizer.
+# ---------------------------------------------------------------------------
+
+SCALAR_NAMES = (
+    "beta1",
+    "one_m_beta1",
+    "b2hi",
+    "b2lo",
+    "one_m_beta2",
+    "bc1",
+    "bc2",
+    "lr",
+    "eps",
+    "wd",
+)
+
+NUM_SCALARS = len(SCALAR_NAMES)
+
+
+def pack_scalars(beta1, beta2, bc1, bc2, lr, eps, wd):
+    """Build the f32 scalar vector fed to the fused kernels.
+
+    β₁, (1-β₁) are f32 scalars; β₂ is carried as its exact bf16 expansion
+    (b2hi, b2lo) — Table 1 of the paper — while (1-β₂) is the exact f32
+    scalar (the paper's rule: scalar math in high precision).
+    bc1/bc2 = 1-βᵗ bias corrections, computed in f32 by the caller
+    (possibly traced); lr likewise.
+    """
+    beta2_f = jnp.asarray(beta2, jnp.float32)
+    b2hi = beta2_f.astype(jnp.bfloat16).astype(jnp.float32)
+    b2lo = (beta2_f - b2hi).astype(jnp.bfloat16).astype(jnp.float32)
+    beta1_f = jnp.asarray(beta1, jnp.float32)
+    vals = [
+        beta1_f,
+        jnp.float32(1.0) - beta1_f,
+        b2hi,
+        b2lo,
+        jnp.float32(1.0) - beta2_f,
+        jnp.asarray(bc1, jnp.float32),
+        jnp.asarray(bc2, jnp.float32),
+        jnp.asarray(lr, jnp.float32),
+        jnp.float32(eps),
+        jnp.float32(wd),
+    ]
+    return jnp.stack([jnp.asarray(x, jnp.float32) for x in vals])
+
+
+def unpack_scalars(vec):
+    """Inverse of :func:`pack_scalars`: scalar vector -> named dict."""
+    return {name: vec[i] for i, name in enumerate(SCALAR_NAMES)}

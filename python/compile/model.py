@@ -1,0 +1,284 @@
+"""Layer-2: GPT-style transformer LM over a flat parameter vector.
+
+The model follows the NeMo-Megatron GPT recipe used by the paper (App. E.2):
+pre-LN decoder blocks, rotary position embeddings (RoPE, fraction 1.0),
+GELU MLP with 4× expansion, untied embedding / output head, causal
+attention, sequence-major [B, T] token batches.
+
+Mixed precision matches the paper's setup: weights and activations are bf16,
+GEMMs accumulate in fp32 ("mixed-precision for GEMM", Sec. 2.1), layernorm
+statistics and softmax run in fp32, and the loss is fp32.
+
+All parameters live in ONE flat f32 vector (bf16-representable values; see
+DESIGN.md "flat-parameter design").  ``PARAM_TABLE`` defines the canonical
+(name, shape, offset) layout which the Rust coordinator reads from
+``manifest.json`` for checkpointing and inspection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mcf import BLOCK
+
+# ---------------------------------------------------------------------------
+# Model configuration zoo.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + micro-batch geometry for one AOT artifact."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    micro_batch: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Runnable configs (CPU-PJRT scale). ``medium`` is the end-to-end example
+# config (~5M params — the largest that trains a few hundred steps in
+# minutes on CPU); ``tiny`` is the test config.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=2, seq_len=32, micro_batch=4),
+    # tiny with doubled micro-batch — the "global batch size" ablation axis
+    # of paper Table 6 (batch geometry is baked into each artifact).
+    "tiny2x": ModelConfig("tiny2x", vocab=256, d_model=64, n_layers=2, n_heads=2, seq_len=32, micro_batch=8),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=4, n_heads=4, seq_len=64, micro_batch=8),
+    "medium": ModelConfig("medium", vocab=1024, d_model=256, n_layers=6, n_heads=8, seq_len=128, micro_batch=8),
+    "big": ModelConfig("big", vocab=4096, d_model=512, n_layers=8, n_heads=8, seq_len=256, micro_batch=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout.
+# ---------------------------------------------------------------------------
+
+
+def param_table(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical ordered (name, shape) list for the flat vector."""
+    t: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        t += [
+            (p + "ln1.g", (cfg.d_model,)),
+            (p + "ln1.b", (cfg.d_model,)),
+            (p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "attn.bqkv", (3 * cfg.d_model,)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "attn.bo", (cfg.d_model,)),
+            (p + "ln2.g", (cfg.d_model,)),
+            (p + "ln2.b", (cfg.d_model,)),
+            (p + "mlp.wi", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.bi", (cfg.d_ff,)),
+            (p + "mlp.wo", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.bo", (cfg.d_model,)),
+        ]
+    t += [("lnf.g", (cfg.d_model,)), ("lnf.b", (cfg.d_model,)), ("head", (cfg.d_model, cfg.vocab))]
+    return t
+
+
+def num_params(cfg: ModelConfig) -> int:
+    """True (unpadded) parameter count."""
+    return sum(math.prod(s) for _, s in param_table(cfg))
+
+
+def padded_len(cfg: ModelConfig) -> int:
+    """Flat-vector length padded to the Pallas BLOCK multiple."""
+    n = num_params(cfg)
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+def param_offsets(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """(name, shape, offset) manifest rows."""
+    rows, off = [], 0
+    for name, shape in param_table(cfg):
+        rows.append((name, shape, off))
+        off += math.prod(shape)
+    return rows
+
+
+def split_flat(flat, cfg: ModelConfig):
+    """Slice the flat vector into the ordered per-tensor list (f32).
+
+    Slices are static (offsets known at trace time).  Kept OUTSIDE the
+    differentiated region: the VJP of a slice is a full-length `pad`, and
+    ~50 of those per backward cost more than the whole forward (§Perf);
+    differentiating w.r.t. the parts instead makes the cotangent a single
+    concatenate.
+    """
+    parts, off = [], 0
+    for _, shape in param_table(cfg):
+        n = math.prod(shape)
+        parts.append(jax.lax.slice(flat, (off,), (off + n,)).reshape(shape))
+        off += n
+    return parts
+
+
+def params_from_parts(parts, cfg: ModelConfig, dtype):
+    """Name the parts and cast to the compute dtype (the model sees only
+    the bf16 hi component under the MCF strategies)."""
+    return {
+        name: p.astype(dtype)
+        for (name, _), p in zip(param_table(cfg), parts)
+    }
+
+
+def unflatten(flat, cfg: ModelConfig, dtype):
+    """Slice the flat vector into named tensors, cast to compute dtype."""
+    return params_from_parts(split_flat(flat, cfg), cfg, dtype)
+
+
+def init_params(seed: int, cfg: ModelConfig) -> jnp.ndarray:
+    """GPT-2-style init, returned as a padded flat f32 vector of
+    bf16-representable values (so the boundary invariant holds from step 0).
+    """
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    scale_out = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    for name, shape in param_table(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", ".bi", ".bo", ".bqkv", "ln1.b", "ln2.b", "lnf.b")):
+            w = jnp.zeros(shape, jnp.float32)
+        elif name.endswith((".g",)):
+            w = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("attn.wo", "mlp.wo")):
+            w = jax.random.normal(sub, shape, jnp.float32) * scale_out
+        else:
+            w = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        chunks.append(w.reshape(-1))
+    flat = jnp.concatenate(chunks)
+    flat = jnp.pad(flat, (0, padded_len(cfg) - flat.shape[0]))
+    # Round to bf16-representable values: the stored format is bf16.
+    return flat.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b):
+    """LayerNorm with fp32 statistics (NeMo default), output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _matmul(a, w):
+    """Mixed-precision GEMM: low-precision operands, fp32 accumulation."""
+    return jnp.matmul(a, w, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def _rope(x, positions):
+    """Rotary position embedding (rotary fraction 1.0, paper App. E.2).
+
+    x: [B, H, T, Dh]; positions: [T].
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(10000.0) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[None, None, :, :]
+    sin = jnp.sin(angles)[None, None, :, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _attention(x, p, prefix, cfg: ModelConfig):
+    """Causal multi-head self-attention with fp32 softmax."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    qkv = _matmul(x, p[prefix + "wqkv"]) + p[prefix + "bqkv"].astype(x.dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, h, dh).transpose(0, 2, 1, 3)  # [B,H,T,Dh]
+
+    positions = jnp.arange(t)
+    q, k, v = heads(q), heads(k), heads(v)
+    q, k = _rope(q, positions), _rope(k, positions)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v, preferred_element_type=jnp.float32)
+    ctx = ctx.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return _matmul(ctx, p[prefix + "wo"]) + p[prefix + "bo"].astype(x.dtype)
+
+
+def forward(flat, tokens, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    """Forward pass: flat params + tokens [B, T] -> fp32 logits [B, T, V]."""
+    return forward_params(unflatten(flat, cfg, compute_dtype), tokens, cfg)
+
+
+def forward_params(p, tokens, cfg: ModelConfig):
+    """Forward pass over the named parameter dict (already compute-dtype)."""
+    x = jnp.take(p["embed"], tokens, axis=0)  # [B, T, D]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _layernorm(x, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        x = x + _attention(h, p, pre + "attn.", cfg)
+        h = _layernorm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        h = _matmul(h, p[pre + "mlp.wi"]) + p[pre + "mlp.bi"].astype(x.dtype)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        h = _matmul(h, p[pre + "mlp.wo"]) + p[pre + "mlp.bo"].astype(x.dtype)
+        x = x + h
+    x = _layernorm(x, p["lnf.g"], p["lnf.b"])
+    logits = jnp.matmul(x, p["head"], preferred_element_type=jnp.float32)
+    return logits
+
+
+def loss_fn(flat, tokens, targets, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    """Mean token cross-entropy in fp32. targets: [B, T] int32."""
+    logits = forward(flat, tokens, cfg, compute_dtype)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def loss_and_grad(flat, tokens, targets, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    """(loss, fp32 grad w.r.t. the flat vector).
+
+    Differentiates w.r.t. the per-tensor parts and concatenates the
+    cotangents once (§Perf — see `split_flat`).  The gradient of the
+    padded tail is identically zero; callers quantize g to bf16 per the
+    storage policy.
+    """
+    parts = split_flat(flat, cfg)
+
+    def loss_from_parts(parts):
+        p = params_from_parts(parts, cfg, compute_dtype)
+        logits = forward_params(p, tokens, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    loss, part_grads = jax.value_and_grad(loss_from_parts)(parts)
+    g = jnp.concatenate([x.reshape(-1) for x in part_grads])
+    g = jnp.pad(g, (0, flat.shape[0] - g.shape[0]))
+    return loss, g

@@ -1,0 +1,295 @@
+"""Layer-2 precision-strategy train steps (paper Sec. 5, Table 2).
+
+One train-step function per precision option; each is later lowered once by
+``aot.py`` to a self-contained HLO artifact that the Rust coordinator
+executes every step — Python never runs at training time.
+
+Strategies (ordered by bytes/parameter, Table 2):
+
+==============  =====================================================
+``a``           Option A — pure bf16 parameters + bf16 optimizer states
+``collage-light``  Option B — bf16 + MCF (θ, δθ) via the Pallas kernel
+``collage-plus``   Option C — B plus MCF second moment (v, δv) and β₂
+``dmw``         D⁻ᴹᵂ — bf16 params, fp32 optimizer states, no master wts
+``d``           Option D — bf16 + fp32 optimizer states + fp32 master wts
+``kahan``       BF16-Kahan baseline (Zamirai et al. 2020)
+``sr``          BF16 + stochastic rounding at the parameter update
+``fp32``        full fp32 reference ("FP32" curve in Fig. 3)
+==============  =====================================================
+
+Every step returns its new state followed by a fixed metrics vector
+(see ``METRIC_NAMES``) carrying the paper's diagnostics: loss, grad norm
+(Fig. 5/6), parameter/update norms (Fig. 2), **EDQ** (Def. 3.3, Fig. 3
+right), and the imprecision/lost-arithmetic percentage (Fig. 3 left).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+from .kernels import mcf, ref
+
+OPTIONS = ("a", "collage-light", "collage-plus", "dmw", "d", "kahan", "sr", "fp32")
+
+METRIC_NAMES = (
+    "loss",
+    "grad_norm",       # fp32 global grad norm, pre-clipping
+    "param_norm",      # ‖θ_eval‖₂ (MCF options evaluate θ+δθ)  — Fig. 2
+    "update_norm",     # ‖Δθ‖₂ (intended update)                — Fig. 2
+    "eff_update_norm", # ‖Δθ̂‖₂ (effective update, Eq. 2)
+    "edq",             # effective descent quality (Eq. 3)      — Fig. 3
+    "lost_frac",       # fraction of params with Δθ≠0 yet unchanged θ
+    "clip_coef",       # gradient-clipping coefficient applied
+)
+NUM_METRICS = len(METRIC_NAMES)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    """AdamW hyper-parameters shared by every strategy (paper App. E)."""
+
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0  # NeMo default global-norm clipping
+
+
+# State vector names per option, in artifact I/O order.  All are flat
+# [padded_len] f32 containers; semantic dtype is recorded for the memory
+# model and the manifest.
+STATE_SPECS: Dict[str, List[Tuple[str, str]]] = {
+    "a": [("theta", "bf16"), ("m", "bf16"), ("v", "bf16")],
+    "collage-light": [("theta", "bf16"), ("dtheta_c", "bf16"), ("m", "bf16"), ("v", "bf16")],
+    "collage-plus": [
+        ("theta", "bf16"),
+        ("dtheta_c", "bf16"),
+        ("m", "bf16"),
+        ("v", "bf16"),
+        ("dv", "bf16"),
+    ],
+    "dmw": [("theta", "bf16"), ("m", "fp32"), ("v", "fp32")],
+    "d": [("theta", "bf16"), ("m", "fp32"), ("v", "fp32"), ("mw", "fp32")],
+    "kahan": [("theta", "bf16"), ("c", "bf16"), ("m", "bf16"), ("v", "bf16")],
+    "sr": [("theta", "bf16"), ("m", "bf16"), ("v", "bf16")],
+    "fp32": [("theta", "fp32"), ("m", "fp32"), ("v", "fp32")],
+}
+
+
+def init_state(option: str, flat_theta: jnp.ndarray) -> List[jnp.ndarray]:
+    """Zero-initialized optimizer state for ``option`` given initial θ."""
+    out = []
+    for name, _ in STATE_SPECS[option]:
+        if name == "theta":
+            out.append(flat_theta)
+        elif name == "mw":
+            out.append(flat_theta)  # master weights start as fp32 copy of θ
+        else:
+            out.append(jnp.zeros_like(flat_theta))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces.
+# ---------------------------------------------------------------------------
+
+
+def _grad_prep(flat_for_model, tokens, targets, cfg, oc: OptimConfig, compute_dtype):
+    """Loss, clipped bf16 grad, and the fp32 grad-norm metric."""
+    loss, g32 = model_lib.loss_and_grad(flat_for_model, tokens, targets, cfg, compute_dtype)
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(g32)))
+    coef = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-6))
+    return loss, g32 * coef, gnorm, coef
+
+
+def bias_corrections(oc: OptimConfig, t: int):
+    """bc = 1 - βᵗ computed in float64, single-rounded to f32 — the paper's
+    high-precision-scalar rule.  The *coordinator* computes these each step
+    and feeds them as scalar inputs (so the Rust reference and the HLO
+    artifact consume bit-identical values; in-graph `pow` would not be
+    reproducible across backends)."""
+    import numpy as np
+
+    bc1 = np.float32(1.0 - np.float64(oc.beta1) ** t)
+    bc2 = np.float32(1.0 - np.float64(oc.beta2) ** t)
+    return bc1, bc2
+
+
+def _metrics(loss, gnorm, coef, theta_eval_old, theta_eval_new, dtheta):
+    """The fixed fp32 metrics vector (names in METRIC_NAMES).
+
+    ``lost_frac`` is measured on the *effective* parameter (the expansion
+    sum for MCF strategies, the master weights for option D): an update
+    absorbed into δθ is captured, not lost — only a parameter whose
+    evaluated value did not move despite a non-zero intended update counts
+    (Def. 3.2 applied to the strategy's true state).
+    """
+    eff = theta_eval_new - theta_eval_old  # Δθ̂ (Eq. 2) in fp32
+    un = jnp.sqrt(jnp.sum(jnp.square(dtheta)))
+    en = jnp.sqrt(jnp.sum(jnp.square(eff)))
+    edq = jnp.sum(dtheta * eff) / jnp.maximum(un, 1e-30)  # Eq. 3
+    lost = jnp.mean(
+        jnp.logical_and(eff == 0.0, dtheta != 0.0).astype(jnp.float32)
+    )
+    pn = jnp.sqrt(jnp.sum(jnp.square(theta_eval_new)))
+    return jnp.stack([loss, gnorm, pn, un, en, edq, lost, coef])
+
+
+def _fp32_adamw_delta(theta_ref, g, m, v, bc1, bc2, lr, oc: OptimConfig):
+    """Plain fp32 AdamW Δθ (used by options d / dmw / fp32)."""
+    m_new = oc.beta1 * m + (1.0 - oc.beta1) * g
+    v_new = oc.beta2 * v + (1.0 - oc.beta2) * jnp.square(g)
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    dtheta = -lr * (m_hat / (jnp.sqrt(v_hat) + oc.eps) + oc.weight_decay * theta_ref)
+    return dtheta, m_new, v_new
+
+
+def _pack(oc: OptimConfig, bc1, bc2, lr):
+    return ref.pack_scalars(oc.beta1, oc.beta2, bc1, bc2, lr, oc.eps, oc.weight_decay)
+
+
+# ---------------------------------------------------------------------------
+# Per-option train steps.  Uniform signature:
+#   step(tokens, targets, lr, bc1, bc2, seed, *state) -> (*new_state, metrics)
+# ``bc1``/``bc2`` are the fp32 bias corrections 1-βᵗ supplied by the
+# coordinator (see ``bias_corrections``); ``seed`` is a u32 scalar (used
+# only by ``sr`` but kept in every signature so the runtime is uniform).
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(option: str, cfg: model_lib.ModelConfig, oc: OptimConfig) -> Callable:
+    """Build the jittable train step for ``option``."""
+    if option not in OPTIONS:
+        raise ValueError(f"unknown option {option!r}; expected one of {OPTIONS}")
+    compute_dtype = jnp.float32 if option == "fp32" else jnp.bfloat16
+
+    def step(tokens, targets, lr, bc1, bc2, seed, *state):
+        if option == "a":
+            theta, m, v = state
+            loss, gc, gnorm, coef = _grad_prep(theta, tokens, targets, cfg, oc, compute_dtype)
+            g = ref.rnb(gc)
+            scal = _pack(oc, bc1, bc2, lr)
+            th_new, m_new, v_new, dt = mcf.adamw_a(scal, g, theta, m, v)
+            mets = _metrics(loss, gnorm, coef, theta, th_new, dt)
+            return th_new, m_new, v_new, mets
+
+        if option == "collage-light":
+            theta, dc, m, v = state
+            loss, gc, gnorm, coef = _grad_prep(theta, tokens, targets, cfg, oc, compute_dtype)
+            g = ref.rnb(gc)
+            scal = _pack(oc, bc1, bc2, lr)
+            th_new, dc_new, m_new, v_new, dt = mcf.collage_light(scal, g, theta, dc, m, v)
+            mets = _metrics(loss, gnorm, coef, theta + dc, th_new + dc_new, dt)
+            return th_new, dc_new, m_new, v_new, mets
+
+        if option == "collage-plus":
+            theta, dc, m, v, dv = state
+            loss, gc, gnorm, coef = _grad_prep(theta, tokens, targets, cfg, oc, compute_dtype)
+            g = ref.rnb(gc)
+            scal = _pack(oc, bc1, bc2, lr)
+            th_new, dc_new, m_new, v_new, dv_new, dt = mcf.collage_plus(
+                scal, g, theta, dc, m, v, dv
+            )
+            mets = _metrics(loss, gnorm, coef, theta + dc, th_new + dc_new, dt)
+            return th_new, dc_new, m_new, v_new, dv_new, mets
+
+        if option == "kahan":
+            theta, c, m, v = state
+            loss, gc, gnorm, coef = _grad_prep(theta, tokens, targets, cfg, oc, compute_dtype)
+            g = ref.rnb(gc)
+            scal = _pack(oc, bc1, bc2, lr)
+            th_new, c_new, m_new, v_new, dt = mcf.kahan(scal, g, theta, c, m, v)
+            mets = _metrics(loss, gnorm, coef, theta, th_new, dt)
+            return th_new, c_new, m_new, v_new, mets
+
+        if option == "sr":
+            theta, m, v = state
+            loss, gc, gnorm, coef = _grad_prep(theta, tokens, targets, cfg, oc, compute_dtype)
+            g = ref.rnb(gc)
+            scal = _pack(oc, bc1, bc2, lr)
+            sd = ref.unpack_scalars(scal)
+            m_new, v_new = ref.moments_bf16(
+                g, m, v, sd["beta1"], sd["one_m_beta1"], sd["b2hi"], sd["one_m_beta2"]
+            )
+            vh = ref.v_hat_bf16(v_new, sd["bc2"])
+            dt = ref.delta_theta(theta, m_new, vh, sd["bc1"], sd["lr"], sd["eps"], sd["wd"])
+            # Stochastic rounding of the exact fp32 sum to bf16 (App. B):
+            # add a uniform u16 to the low mantissa bits, truncate to bf16.
+            exact = theta + dt
+            key = jax.random.PRNGKey(seed)
+            noise = jnp.bitwise_and(
+                jax.random.bits(key, exact.shape, jnp.uint32), jnp.uint32(0xFFFF)
+            )
+            bits = jax.lax.bitcast_convert_type(exact, jnp.uint32) + noise
+            th_new = jax.lax.bitcast_convert_type(
+                jnp.bitwise_and(bits, jnp.uint32(0xFFFF0000)), jnp.float32
+            )
+            # preserve exact zeros (bit trick maps +0 with noise to denormals)
+            th_new = jnp.where(exact == 0.0, 0.0, th_new)
+            mets = _metrics(loss, gnorm, coef, theta, th_new, dt)
+            return th_new, m_new, v_new, mets
+
+        if option == "dmw":
+            theta, m, v = state
+            loss, gc, gnorm, coef = _grad_prep(theta, tokens, targets, cfg, oc, compute_dtype)
+            g = ref.rnb(gc)  # gradients stored bf16 (Table 2)
+            dt32, m_new, v_new = _fp32_adamw_delta(theta, g, m, v, bc1, bc2, lr, oc)
+            # fp32 optimizer math, but the *storage* is bf16 → the final
+            # rounding still loses the small updates (Table 3: D⁻ᴹᵂ ≈ A+).
+            th_new = ref.rnb(theta + dt32)
+            mets = _metrics(loss, gnorm, coef, theta, th_new, dt32)
+            return th_new, m_new, v_new, mets
+
+        if option == "d":
+            theta, m, v, mw = state
+            loss, gc, gnorm, coef = _grad_prep(theta, tokens, targets, cfg, oc, compute_dtype)
+            g = ref.rnb(gc)
+            dt32, m_new, v_new = _fp32_adamw_delta(mw, g, m, v, bc1, bc2, lr, oc)
+            mw_new = mw + dt32  # fp32 master-weight update: nothing lost
+            th_new = ref.rnb(mw_new)  # bf16 working copy for the next fwd/bwd
+            mets = _metrics(loss, gnorm, coef, mw, mw_new, dt32)
+            return th_new, m_new, v_new, mw_new, mets
+
+        if option == "fp32":
+            theta, m, v = state
+            loss, g32 = model_lib.loss_and_grad(theta, tokens, targets, cfg, compute_dtype)
+            gnorm = jnp.sqrt(jnp.sum(jnp.square(g32)))
+            coef = jnp.minimum(1.0, oc.grad_clip / (gnorm + 1e-6))
+            g = g32 * coef
+            dt32, m_new, v_new = _fp32_adamw_delta(theta, g, m, v, bc1, bc2, lr, oc)
+            th_new = theta + dt32
+            mets = _metrics(loss, gnorm, coef, theta, th_new, dt32)
+            return th_new, m_new, v_new, mets
+
+        raise AssertionError(option)
+
+    return step
+
+
+def make_eval_step(cfg: model_lib.ModelConfig, compute_dtype=jnp.bfloat16) -> Callable:
+    """Validation step: (tokens, targets, θ) -> scalar mean NLL."""
+
+    def step(tokens, targets, theta):
+        return model_lib.loss_fn(theta, tokens, targets, cfg, compute_dtype)
+
+    return step
+
+
+def make_grad_step(cfg: model_lib.ModelConfig, compute_dtype=jnp.bfloat16) -> Callable:
+    """Forward+backward only: (tokens, targets, θ) -> (loss, bf16 grad).
+
+    Used by the data-parallel runtime: each worker computes grads on its
+    shard; the leader all-reduces and runs the optimizer artifact once.
+    """
+
+    def step(tokens, targets, theta):
+        loss, g32 = model_lib.loss_and_grad(theta, tokens, targets, cfg, compute_dtype)
+        return loss, g32
+
+    return step

@@ -1,0 +1,80 @@
+"""AOT exporter tests: HLO-text lowering round-trips, manifest coherence,
+and the bias-correction contract shared with the Rust coordinator."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import aot, model as M, optim as O
+
+
+def test_to_hlo_text_produces_parseable_module():
+    import jax
+
+    cfg = M.CONFIGS["tiny"]
+    step = O.make_eval_step(cfg)
+    lowered = jax.jit(step, keep_unused=True).lower(
+        jax.ShapeDtypeStruct((cfg.micro_batch, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.micro_batch, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((M.padded_len(cfg),), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    # the interchange contract: tuple-rooted entry computation
+    assert "ROOT" in text and "tuple" in text.lower()
+
+
+def test_export_eval_and_init_roundtrip(tmp_path):
+    cfg = M.CONFIGS["tiny"]
+    entry = aot.export_eval(cfg, str(tmp_path))
+    path = tmp_path / entry["file"]
+    assert path.exists()
+    import hashlib
+
+    assert entry["sha256"] == hashlib.sha256(path.read_bytes()).hexdigest()
+    fname = aot.export_init(cfg, str(tmp_path), seed=7)
+    flat = np.load(tmp_path / fname)
+    assert flat.shape == (M.padded_len(cfg),)
+    assert flat.dtype == np.float32
+    # bf16-representable boundary invariant
+    rt = np.asarray(jnp.asarray(flat).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(flat, rt)
+
+
+def test_export_train_manifest_contract(tmp_path):
+    cfg = M.CONFIGS["tiny"]
+    oc = O.OptimConfig(beta2=0.99)
+    entry = aot.export_train(cfg, "collage-plus", oc, str(tmp_path), tag="t_")
+    assert entry["file"] == "tiny_t_collage-plus_train.hlo.txt"
+    input_names = [i["name"] for i in entry["inputs"]]
+    assert input_names[:6] == ["tokens", "targets", "lr", "bc1", "bc2", "seed"]
+    assert input_names[6:] == [n for n, _ in O.STATE_SPECS["collage-plus"]]
+    output_names = [o["name"] for o in entry["outputs"]]
+    assert output_names[-1] == "metrics"
+    assert entry["metrics"] == list(O.METRIC_NAMES)
+
+
+def test_config_manifest_param_table(tmp_path):
+    cfg = M.CONFIGS["tiny"]
+    man = aot.config_manifest(cfg)
+    assert man["n_params"] == M.num_params(cfg)
+    rows = man["param_table"]
+    assert rows[0]["name"] == "embed" and rows[0]["offset"] == 0
+    last = rows[-1]
+    assert last["offset"] + int(np.prod(last["shape"])) == man["n_params"]
+    json.dumps(man)  # must be JSON-serializable
+
+
+def test_bias_corrections_contract():
+    """Must equal the Rust coordinator's (1 - β^t in f64) -> f32."""
+    oc = O.OptimConfig(beta2=0.999)
+    bc1, bc2 = O.bias_corrections(oc, 1)
+    assert bc1 == np.float32(1.0 - 0.9)
+    assert bc2 == np.float32(1.0 - 0.999)
+    bc1_10, bc2_10 = O.bias_corrections(oc, 10)
+    assert bc1_10 == np.float32(1.0 - np.float64(0.9) ** 10)
+    assert 0 < bc2_10 < 0.01

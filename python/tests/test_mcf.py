@@ -1,0 +1,259 @@
+"""L1 correctness: Pallas MCF kernels vs the pure-jnp oracle — the core
+correctness signal of the compile path.
+
+Every kernel must match `ref.py` **bitwise** (they share semantics by
+construction; this guards against Pallas lowering/interpret divergence),
+and the oracle itself must satisfy the exactness theorems of the paper
+(Fast2Sum/TwoSum/TwoProd exact-sum properties, Thm 4.1 bounds).
+
+Hypothesis sweeps shapes, dtypes of the scalar schedule, and magnitude
+regimes (the corners where rounding bugs live).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mcf, ref
+
+RNG = np.random.default_rng(20240710)
+
+
+def bf16(x):
+    return np.asarray(jnp.asarray(x, jnp.float32).astype(jnp.bfloat16).astype(jnp.float32))
+
+
+def interesting_bf16(shape, scale_pow=0, rng=RNG):
+    """bf16-representable values across magnitude regimes."""
+    x = rng.normal(size=shape).astype(np.float32) * (10.0**scale_pow)
+    return bf16(x)
+
+
+def assert_bitwise(a, b, msg=""):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    assert a.shape == b.shape, f"{msg}: shape {a.shape} vs {b.shape}"
+    ok = np.array_equal(a.view(np.uint32), b.view(np.uint32))
+    if not ok:
+        i = np.argmax(a.view(np.uint32) != b.view(np.uint32))
+        raise AssertionError(f"{msg}: first mismatch at {i}: {a.flat[i]!r} vs {b.flat[i]!r}")
+
+
+# ---------------------------------------------------------------------------
+# Primitive kernels vs oracle (bitwise).
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(1, 64),
+    sa=st.integers(-6, 6),
+    sb=st.integers(-6, 6),
+)
+def test_two_sum_kernel_matches_ref(rows, cols, sa, sb):
+    a = jnp.asarray(interesting_bf16((rows, cols), sa))
+    b = jnp.asarray(interesting_bf16((rows, cols), sb))
+    kx, ky = mcf.two_sum(a, b)
+    rx, ry = ref.two_sum(a, b)
+    assert_bitwise(kx, rx, "two_sum.x")
+    assert_bitwise(ky, ry, "two_sum.y")
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 256), sa=st.integers(-4, 4))
+def test_fast2sum_kernel_matches_ref(n, sa):
+    hi = jnp.asarray(interesting_bf16((n,), sa))
+    lo = jnp.asarray(bf16(np.asarray(hi) * 1e-3))
+    kx, ky = mcf.fast2sum(hi, lo)
+    rx, ry = ref.fast2sum(hi, lo)
+    assert_bitwise(kx, rx)
+    assert_bitwise(ky, ry)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 128), sa=st.integers(-3, 3), sb=st.integers(-3, 3))
+def test_two_prod_kernel_matches_ref(n, sa, sb):
+    a = jnp.asarray(interesting_bf16((n,), sa))
+    b = jnp.asarray(interesting_bf16((n,), sb))
+    kx, ke = mcf.two_prod(a, b)
+    rx, re = ref.two_prod(a, b)
+    assert_bitwise(kx, rx)
+    assert_bitwise(ke, re)
+
+
+def test_grow_mul_scaling_match_ref():
+    n = 512
+    x = jnp.asarray(interesting_bf16((n,), 1))
+    y = jnp.asarray(bf16(np.asarray(x) * 1e-3))
+    a = jnp.asarray(bf16(np.asarray(x) * 0.1))
+    for k_out, r_out in zip(mcf.grow(x, y, a), ref.grow(x, y, a)):
+        assert_bitwise(k_out, r_out, "grow")
+    b1 = jnp.asarray(interesting_bf16((n,), 0))
+    b2 = jnp.asarray(bf16(np.asarray(b1) * 1e-3))
+    for k_out, r_out in zip(mcf.mul(x, y, b1, b2), ref.mul(x, y, b1, b2)):
+        assert_bitwise(k_out, r_out, "mul")
+    v = jnp.asarray(interesting_bf16((n,), 0))
+    for k_out, r_out in zip(mcf.scaling(x, y, v), ref.scaling(x, y, v)):
+        assert_bitwise(k_out, r_out, "scaling")
+
+
+# ---------------------------------------------------------------------------
+# Exactness theorems on the oracle (f64 verification).
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(sa=st.integers(-8, 8), sb=st.integers(-8, 8))
+def test_two_sum_exact_in_f64(sa, sb):
+    a = interesting_bf16((256,), sa)
+    b = interesting_bf16((256,), sb)
+    x, y = ref.two_sum(jnp.asarray(a), jnp.asarray(b))
+    lhs = a.astype(np.float64) + b.astype(np.float64)
+    rhs = np.asarray(x, np.float64) + np.asarray(y, np.float64)
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(s=st.integers(-6, 6))
+def test_fast2sum_error_bound_thm41(s):
+    """Thm 4.1: |y| <= ulp(x)/2."""
+    a = interesting_bf16((256,), s)
+    b = bf16(interesting_bf16((256,), s) * 1e-2)
+    big = np.where(np.abs(a) >= np.abs(b), a, b)
+    small = np.where(np.abs(a) >= np.abs(b), b, a)
+    x, y = ref.fast2sum(jnp.asarray(big), jnp.asarray(small))
+    x, y = np.asarray(x), np.asarray(y)
+    # ulp(x) for bf16 = 2^(e-7)
+    with np.errstate(divide="ignore"):
+        e = np.floor(np.log2(np.abs(x), where=x != 0, out=np.zeros_like(x)))
+    ulp = np.exp2(e - 7)
+    mask = x != 0
+    assert np.all(np.abs(y[mask]) <= ulp[mask] / 2 + 1e-45)
+
+
+def test_two_prod_exact():
+    a = interesting_bf16((4096,), 0)
+    b = interesting_bf16((4096,), 0)
+    x, e = ref.two_prod(jnp.asarray(a), jnp.asarray(b))
+    lhs = a.astype(np.float64) * b.astype(np.float64)
+    rhs = np.asarray(x, np.float64) + np.asarray(e, np.float64)
+    # exclude products that underflow bf16's error representability
+    mask = np.abs(lhs) > 1e-30
+    np.testing.assert_array_equal(lhs[mask], rhs[mask])
+
+
+def test_beta2_expansions_table1():
+    """Paper Table 1: exact bf16 expansions of β₂."""
+    hi, lo = ref.split_scalar(0.999)
+    assert hi == 1.0 and abs(lo + 0.001) < 1e-5
+    hi, lo = ref.split_scalar(0.95)
+    assert hi == 0.94921875
+    assert abs((hi + lo) - 0.95) < 1e-6
+    # plain bf16 rounds 0.999 to 1.0 — the paper's Sec. 2.2 example
+    assert float(jnp.asarray(0.999, jnp.bfloat16)) == 1.0
+
+
+def test_lost_arithmetic_example():
+    """Sec. 3.1: F_bf16(200 ⊕ 0.1) = 200."""
+    out = ref.badd(jnp.float32(200.0), jnp.float32(0.1))
+    assert float(out) == 200.0
+
+
+# ---------------------------------------------------------------------------
+# Fused optimizer kernels vs oracle (bitwise), across regimes.
+# ---------------------------------------------------------------------------
+
+
+def _scal(beta2=0.999, t=3, lr=1e-3):
+    bc1 = 1.0 - 0.9**t
+    bc2 = 1.0 - beta2**t
+    return ref.pack_scalars(0.9, beta2, bc1, bc2, lr, 1e-8, 0.1)
+
+
+def _state(n, theta_scale=1.0):
+    theta = bf16(RNG.normal(size=n).astype(np.float32) * theta_scale)
+    g = bf16(RNG.normal(size=n).astype(np.float32) * 0.01)
+    zeros = np.zeros(n, np.float32)
+    m = bf16(RNG.normal(size=n).astype(np.float32) * 0.001)
+    v = bf16(np.abs(RNG.normal(size=n)).astype(np.float32) * 1e-4)
+    return g, theta, zeros.copy(), m, v, zeros.copy()
+
+
+@pytest.mark.parametrize("beta2", [0.95, 0.99, 0.999])
+@pytest.mark.parametrize("theta_scale", [0.02, 1.0, 100.0])
+def test_fused_kernels_match_oracle(beta2, theta_scale):
+    n = 2 * mcf.BLOCK
+    g, theta, dc, m, v, dv = _state(n, theta_scale)
+    scal = _scal(beta2)
+    sd = ref.unpack_scalars(scal)
+
+    outs = mcf.adamw_a(scal, g, theta, m, v)
+    refs = ref.adamw_step_a(jnp.asarray(g), jnp.asarray(theta), jnp.asarray(m), jnp.asarray(v), sd)
+    for i, (k, r) in enumerate(zip(outs, refs)):
+        assert_bitwise(k, r, f"adamw_a[{i}]")
+
+    outs = mcf.collage_light(scal, g, theta, dc, m, v)
+    refs = ref.adamw_step_light(
+        jnp.asarray(g), jnp.asarray(theta), jnp.asarray(dc), jnp.asarray(m), jnp.asarray(v), sd
+    )
+    for i, (k, r) in enumerate(zip(outs, refs)):
+        assert_bitwise(k, r, f"light[{i}]")
+
+    outs = mcf.collage_plus(scal, g, theta, dc, m, v, dv)
+    refs = ref.adamw_step_plus(
+        jnp.asarray(g), jnp.asarray(theta), jnp.asarray(dc), jnp.asarray(m),
+        jnp.asarray(v), jnp.asarray(dv), sd,
+    )
+    for i, (k, r) in enumerate(zip(outs, refs)):
+        assert_bitwise(k, r, f"plus[{i}]")
+
+    outs = mcf.kahan(scal, g, theta, dc, m, v)
+    refs = ref.adamw_step_kahan(
+        jnp.asarray(g), jnp.asarray(theta), jnp.asarray(dc), jnp.asarray(m), jnp.asarray(v), sd
+    )
+    for i, (k, r) in enumerate(zip(outs, refs)):
+        assert_bitwise(k, r, f"kahan[{i}]")
+
+
+def test_fused_kernel_rejects_unpadded():
+    n = mcf.BLOCK + 1
+    g = np.zeros(n, np.float32)
+    with pytest.raises(ValueError, match="padded"):
+        mcf.adamw_a(_scal(), g, g, g, g)
+
+
+def test_collage_plus_beats_a_on_second_moment_decay():
+    """β₂=0.999 (hi component 1.0) makes plain-bf16 v saturate at the point
+    where (1-β₂)g² drops below ulp(v)/2 — here v ≈ 2⁻⁸ — while Collage-plus
+    keeps tracking the true EMA through δv (paper Sec. 4.2)."""
+    import jax
+
+    n = mcf.BLOCK
+    scal = _scal(0.999, t=1, lr=0.0)
+    theta = bf16(np.ones(n, np.float32))
+    zeros = np.zeros(n, np.float32)
+    g = bf16(np.full(n, 0.1, np.float32))
+    steps = 700
+
+    step_a = jax.jit(mcf.adamw_a)
+    step_c = jax.jit(mcf.collage_plus)
+
+    m = zeros.copy()
+    v_a = jnp.asarray(zeros)
+    for _ in range(steps):
+        _, m, v_a, _ = step_a(scal, g, theta, m, v_a)
+    m = zeros.copy()
+    v_c, dv_c = jnp.asarray(zeros), jnp.asarray(zeros)
+    for _ in range(steps):
+        _, _, m, v_c, dv_c, _ = step_c(scal, g, theta, zeros, m, v_c, dv_c)
+
+    truth = 0.01 * (1.0 - 0.999**steps)  # true (un-corrected) EMA of g²=0.01
+    v_a0 = float(np.asarray(v_a)[0])
+    v_c0 = float(np.asarray(v_c)[0] + np.asarray(dv_c)[0])
+    # plain bf16: additions of (1-β₂)g² = 1e-5 are lost once v ≥ 2⁻⁸
+    assert v_a0 < 0.0045, f"A's v should saturate ≈2^-8, got {v_a0}"
+    assert v_c0 > v_a0, f"plus ({v_c0}) must exceed A's saturated v ({v_a0})"
+    assert abs(v_c0 - truth) / truth < 0.1, f"plus v {v_c0} vs truth {truth}"

@@ -1,0 +1,144 @@
+"""L2 model tests: flat-parameter layout, forward shapes, mixed-precision
+invariants, gradients."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+def test_param_table_offsets_are_contiguous():
+    rows = M.param_offsets(CFG)
+    off = 0
+    for name, shape, offset in rows:
+        assert offset == off, name
+        off += int(np.prod(shape))
+    assert off == M.num_params(CFG)
+
+
+def test_padded_len_is_block_multiple():
+    from compile.kernels.mcf import BLOCK
+
+    for cfg in M.CONFIGS.values():
+        assert M.padded_len(cfg) % BLOCK == 0
+        assert M.padded_len(cfg) >= M.num_params(cfg)
+
+
+def test_init_params_bf16_representable():
+    flat = M.init_params(0, CFG)
+    roundtrip = flat.astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(roundtrip))
+
+
+def test_init_deterministic_per_seed():
+    a = np.asarray(M.init_params(7, CFG))
+    b = np.asarray(M.init_params(7, CFG))
+    c = np.asarray(M.init_params(8, CFG))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_unflatten_shapes_and_padding_unused():
+    flat = M.init_params(0, CFG)
+    params = M.unflatten(flat, CFG, jnp.bfloat16)
+    table = dict((n, s) for n, s in M.param_table(CFG))
+    assert set(params) == set(table)
+    for name, p in params.items():
+        assert p.shape == table[name], name
+        assert p.dtype == jnp.bfloat16
+
+
+def test_forward_shapes_and_dtype():
+    flat = M.init_params(0, CFG)
+    tok = jnp.zeros((CFG.micro_batch, CFG.seq_len), jnp.int32)
+    logits = M.forward(flat, tok, CFG)
+    assert logits.shape == (CFG.micro_batch, CFG.seq_len, CFG.vocab)
+    assert logits.dtype == jnp.float32
+
+
+def test_loss_near_uniform_at_init():
+    flat = M.init_params(0, CFG)
+    rng = np.random.default_rng(0)
+    tok = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    tgt = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    loss = float(M.loss_fn(flat, tok, tgt, CFG))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5, loss
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    flat = M.init_params(0, CFG)
+    rng = np.random.default_rng(1)
+    tok = rng.integers(0, CFG.vocab, (1, CFG.seq_len)).astype(np.int32)
+    l1 = np.asarray(M.forward(flat, jnp.asarray(tok), CFG))
+    tok2 = tok.copy()
+    tok2[0, -1] = (tok2[0, -1] + 1) % CFG.vocab
+    l2 = np.asarray(M.forward(flat, jnp.asarray(tok2), CFG))
+    cut = CFG.seq_len - 1
+    np.testing.assert_array_equal(l1[0, :cut], l2[0, :cut])
+    assert not np.array_equal(l1[0, -1], l2[0, -1])
+
+
+def test_grad_zero_on_padding():
+    flat = M.init_params(0, CFG)
+    rng = np.random.default_rng(2)
+    tok = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    tgt = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    _, g = M.loss_and_grad(flat, jnp.asarray(tok), jnp.asarray(tgt), CFG)
+    g = np.asarray(g)
+    n = M.num_params(CFG)
+    np.testing.assert_array_equal(g[n:], 0.0)
+    assert np.abs(g[:n]).max() > 0.0
+
+
+def test_grad_direction_decreases_loss():
+    flat = M.init_params(0, CFG)
+    rng = np.random.default_rng(3)
+    tok = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    tgt = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    loss0, g = M.loss_and_grad(flat, jnp.asarray(tok), jnp.asarray(tgt), CFG)
+    stepped = flat - 0.5 * g
+    loss1 = M.loss_fn(stepped, jnp.asarray(tok), jnp.asarray(tgt), CFG)
+    assert float(loss1) < float(loss0)
+
+
+def test_rope_rotation_properties():
+    """RoPE must be position-dependent, norm-preserving, and make the
+    q·k inner product depend only on relative position."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(1, 2, 8, 16)).astype(np.float32))
+    positions = jnp.arange(8)
+    y = np.asarray(M._rope(x, positions))
+    # position 0 is the identity rotation
+    np.testing.assert_allclose(y[0, 0, 0], np.asarray(x)[0, 0, 0], rtol=1e-5)
+    # later positions rotate (different from input)
+    assert not np.allclose(y[0, 0, 5], np.asarray(x)[0, 0, 5], atol=1e-4)
+    # rotations preserve norms
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=-1), np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4
+    )
+    # relative-position property: <rope(q,i), rope(k,j)> == <rope(q,i+d), rope(k,j+d)>
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    def dot_at(i, j):
+        qi = np.asarray(M._rope(q, jnp.asarray([i])))[0, 0, 0]
+        kj = np.asarray(M._rope(k, jnp.asarray([j])))[0, 0, 0]
+        return float(qi @ kj)
+    np.testing.assert_allclose(dot_at(2, 5), dot_at(4, 7), rtol=1e-4)
+    assert abs(dot_at(2, 5) - dot_at(2, 7)) > 1e-5
+
+
+def test_fp32_compute_dtype_changes_numerics():
+    flat = M.init_params(0, CFG)
+    rng = np.random.default_rng(4)
+    tok = jnp.asarray(rng.integers(0, CFG.vocab, (1, CFG.seq_len)).astype(np.int32))
+    lb = np.asarray(M.forward(flat, tok, CFG, jnp.bfloat16))
+    lf = np.asarray(M.forward(flat, tok, CFG, jnp.float32))
+    assert not np.array_equal(lb, lf)
+    # but they agree loosely (bf16 noise only)
+    np.testing.assert_allclose(lb, lf, atol=0.2, rtol=0.2)

@@ -1,0 +1,157 @@
+"""L2 train-step tests: every precision strategy's step function — state
+arity, metric semantics, EDQ ordering, β₂ pathology, SR statistics."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import optim as O
+
+CFG = M.CONFIGS["tiny"]
+RNG = np.random.default_rng(99)
+
+
+def batch(seed=42):
+    """Order-independent: a fresh generator per call (pytest may run tests
+    in any order; a shared stream would couple test data to ordering)."""
+    rng = np.random.default_rng(seed)
+    tok = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    tgt = rng.integers(0, CFG.vocab, (CFG.micro_batch, CFG.seq_len)).astype(np.int32)
+    return jnp.asarray(tok), jnp.asarray(tgt)
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return M.init_params(0, CFG)
+
+
+@pytest.mark.parametrize("option", O.OPTIONS)
+def test_step_runs_and_preserves_arity(option, flat):
+    oc = O.OptimConfig()
+    step = jax.jit(O.make_train_step(option, CFG, oc))
+    state = O.init_state(option, flat)
+    tok, tgt = batch()
+    bc1, bc2 = O.bias_corrections(oc, 1)
+    outs = step(tok, tgt, jnp.float32(1e-3), bc1, bc2, jnp.uint32(0), *state)
+    assert len(outs) == len(state) + 1
+    mets = np.asarray(outs[-1])
+    assert mets.shape == (O.NUM_METRICS,)
+    assert np.isfinite(mets).all()
+    names = dict(zip(O.METRIC_NAMES, mets))
+    assert 3.0 < names["loss"] < 8.0
+    assert names["grad_norm"] > 0
+    assert 0 <= names["lost_frac"] <= 1
+    # every state output stays bf16-representable (fp32 options excepted)
+    for (name, dtype), vec in zip(O.STATE_SPECS[option], outs[:-1]):
+        if dtype == "bf16":
+            v = np.asarray(vec)
+            rt = np.asarray(jnp.asarray(v).astype(jnp.bfloat16).astype(jnp.float32))
+            np.testing.assert_array_equal(v, rt, err_msg=f"{option}:{name}")
+
+
+@pytest.mark.parametrize("option", ["a", "collage-light", "collage-plus", "d"])
+def test_multi_step_loss_decreases(option, flat):
+    oc = O.OptimConfig()
+    step = jax.jit(O.make_train_step(option, CFG, oc))
+    state = list(O.init_state(option, flat))
+    tok, tgt = batch()  # overfit one batch
+    losses = []
+    for t in range(1, 31):
+        bc1, bc2 = O.bias_corrections(oc, t)
+        outs = step(tok, tgt, jnp.float32(2e-3), bc1, bc2, jnp.uint32(t), *state)
+        state = list(outs[:-1])
+        losses.append(float(outs[-1][0]))
+    assert losses[-1] < losses[0] - 0.5, f"{option}: {losses[0]:.3f} -> {losses[-1]:.3f}"
+
+
+def test_edq_ordering_beta2_999(flat):
+    """After enough steps at β₂=0.999: EDQ(plus) ≥ EDQ(light) > EDQ(A),
+    and option D is lossless — the Fig. 3-right ordering."""
+    oc = O.OptimConfig(beta2=0.999)
+    tok, tgt = batch()
+    ratios = {}
+    lost = {}
+    for option in ["a", "collage-light", "collage-plus", "d"]:
+        step = jax.jit(O.make_train_step(option, CFG, oc))
+        state = list(O.init_state(option, flat))
+        for t in range(1, 41):
+            bc1, bc2 = O.bias_corrections(oc, t)
+            outs = step(tok, tgt, jnp.float32(1e-3), bc1, bc2, jnp.uint32(t), *state)
+            state = list(outs[:-1])
+        mets = dict(zip(O.METRIC_NAMES, np.asarray(outs[-1])))
+        ratios[option] = mets["edq"] / max(mets["update_norm"], 1e-30)
+        lost[option] = mets["lost_frac"]
+    # Short-horizon margins: the quality gap needs thousands of steps to
+    # open (Fig. 3 runs 28k), but the EDQ separation is visible at once.
+    assert abs(ratios["d"] - 1.0) < 1e-3
+    assert ratios["collage-plus"] > 0.9999, ratios
+    assert ratios["collage-light"] > 0.9999, ratios
+    assert ratios["a"] < 0.9995, ratios
+    assert lost["a"] > lost["collage-plus"], lost
+
+
+def test_sr_moves_parameters_in_expectation(flat):
+    """SR escapes lost arithmetic statistically (different seeds differ)."""
+    oc = O.OptimConfig()
+    step = jax.jit(O.make_train_step("sr", CFG, oc))
+    tok, tgt = batch()
+    state = O.init_state("sr", flat)
+    bc1, bc2 = O.bias_corrections(oc, 1)
+    o1 = step(tok, tgt, jnp.float32(1e-3), bc1, bc2, jnp.uint32(1), *state)
+    o2 = step(tok, tgt, jnp.float32(1e-3), bc1, bc2, jnp.uint32(2), *state)
+    th1, th2 = np.asarray(o1[0]), np.asarray(o2[0])
+    assert not np.array_equal(th1, th2), "SR must depend on the seed"
+    # SR outputs remain bf16-representable
+    rt = np.asarray(jnp.asarray(th1).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(th1, rt)
+
+
+def test_option_d_master_weights_track_fp32(flat):
+    """Option D's MW carries more information than its bf16 θ."""
+    oc = O.OptimConfig()
+    step = jax.jit(O.make_train_step("d", CFG, oc))
+    state = list(O.init_state("d", flat))
+    tok, tgt = batch()
+    for t in range(1, 11):
+        bc1, bc2 = O.bias_corrections(oc, t)
+        outs = step(tok, tgt, jnp.float32(1e-4), bc1, bc2, jnp.uint32(t), *state)
+        state = list(outs[:-1])
+    theta, mw = np.asarray(state[0]), np.asarray(state[3])
+    # θ is the bf16 rounding of MW
+    rt = np.asarray(jnp.asarray(mw).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(theta, rt)
+    assert not np.array_equal(theta, mw)
+
+
+def test_grad_step_matches_train_loss(flat):
+    """The DP grad artifact's loss equals the fused step's reported loss."""
+    oc = O.OptimConfig()
+    tok, tgt = batch()
+    gstep = jax.jit(O.make_grad_step(CFG))
+    loss_g, _ = gstep(tok, tgt, flat)
+    tstep = jax.jit(O.make_train_step("a", CFG, oc))
+    bc1, bc2 = O.bias_corrections(oc, 1)
+    outs = tstep(tok, tgt, jnp.float32(1e-3), bc1, bc2, jnp.uint32(0),
+                 *O.init_state("a", flat))
+    loss_t = np.asarray(outs[-1])[0]
+    np.testing.assert_allclose(float(loss_g), float(loss_t), rtol=1e-4)
+
+
+def test_eval_step_matches_loss_fn(flat):
+    tok, tgt = batch()
+    estep = jax.jit(O.make_eval_step(CFG))
+    l1 = float(estep(tok, tgt, flat))
+    l2 = float(M.loss_fn(flat, tok, tgt, CFG))
+    # jit vs eager differ by fusion order in the fp32 reductions
+    np.testing.assert_allclose(l1, l2, rtol=1e-4)
+
+
+def test_weight_decay_lost_in_naive_form():
+    """App. D: θ ← (1-αλ)θ is a no-op in bf16 for αλ = 1.2e-5."""
+    theta = jnp.asarray([1.0, -2.0, 0.5], jnp.float32)
+    alpha_lambda = jnp.float32(1.2e-5)
+    naive = (theta * (1.0 - alpha_lambda)).astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(naive), np.asarray(theta))

@@ -1,0 +1,53 @@
+//! Bench: data-pipeline substrates — corpus synthesis, batch extraction,
+//! and the deterministic all-reduce collective.  The coordinator must
+//! never be input-bound (paper Sec. 5.3 measures pure training throughput).
+//!
+//!     cargo bench --bench data_pipeline
+
+use collage::data::batches::{BatchIterator, Split};
+use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use collage::parallel::allreduce::allreduce_mean;
+use collage::util::bench::Bench;
+use collage::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::from_env();
+
+    bench.case_items("corpus-gen 256k tokens", 262_144.0, || {
+        SyntheticCorpus::generate(CorpusConfig {
+            n_tokens: 1 << 18,
+            ..Default::default()
+        })
+    });
+
+    let corpus = SyntheticCorpus::generate(CorpusConfig {
+        n_tokens: 1 << 20,
+        ..Default::default()
+    });
+    let mut it = BatchIterator::new(&corpus, Split::Train, 8, 128, 0).unwrap();
+    bench.case_items("next_batch 8x128", (8 * 128) as f64, || it.next_batch());
+    bench.case_items("batch_for_step 8x128 (stateless)", (8 * 128) as f64, || {
+        it.batch_for_step(0, 17)
+    });
+
+    let mut rng = Rng::new(1, 0);
+    for ranks in [2usize, 4, 8] {
+        let grads: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| (0..(1 << 20)).map(|_| rng.normal() as f32).collect())
+            .collect();
+        bench.case_items(
+            format!("allreduce-mean {ranks} ranks x 1M"),
+            (ranks << 20) as f64,
+            || allreduce_mean(&grads),
+        );
+    }
+
+    bench.case_items("glue batch gen 8x32", (8 * 32) as f64, || {
+        let task = collage::data::glue::GlueTask::new(
+            collage::data::glue::TaskKind::BandMajority,
+            256,
+            32,
+        );
+        task.batch(8, &mut rng)
+    });
+}

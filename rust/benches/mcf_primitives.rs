@@ -1,0 +1,88 @@
+//! Bench: MCF expansion-algebra primitives (Fast2Sum, TwoSum, TwoProd,
+//! Grow, Mul) — the Layer-1 building blocks, in both the generic-format
+//! and the bf16 fast-path forms.  Feeds the §Perf log in EXPERIMENTS.md.
+//!
+//!     cargo bench --bench mcf_primitives
+
+use collage::numerics::expansion as exp;
+use collage::numerics::format::BF16;
+use collage::util::bench::Bench;
+use collage::util::rng::Rng;
+
+fn main() {
+    let n: usize = 1 << 20;
+    let mut rng = Rng::new(11, 0);
+    let a: Vec<f32> = (0..n).map(|_| exp::rn_bf16(rng.normal() as f32)).collect();
+    let b: Vec<f32> = (0..n)
+        .map(|_| exp::rn_bf16(0.001 * rng.normal() as f32))
+        .collect();
+    let mut bench = Bench::from_env();
+    println!("== MCF primitives over {n} elements ==");
+
+    bench.case_items("rn_bf16 (round only)", n as f64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += exp::rn_bf16(a[i] + b[i]);
+        }
+        acc
+    });
+
+    bench.case_items("fast2sum (bf16 fast path)", n as f64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, y) = exp::fast2sum_bf16(a[i], b[i]);
+            acc += x + y;
+        }
+        acc
+    });
+
+    bench.case_items("fast2sum (generic f64 path)", n as f64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, y) = exp::fast2sum(&BF16, a[i], b[i]);
+            acc += x + y;
+        }
+        acc
+    });
+
+    bench.case_items("two_sum (generic)", n as f64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, y) = exp::two_sum(&BF16, a[i], b[i]);
+            acc += x + y;
+        }
+        acc
+    });
+
+    bench.case_items("two_prod (bf16 fast path)", n as f64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, e) = exp::two_prod_bf16(a[i], b[i]);
+            acc += x + e;
+        }
+        acc
+    });
+
+    bench.case_items("grow (bf16 fast path)", n as f64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, y) = exp::grow_bf16(a[i], b[i], b[i]);
+            acc += x + y;
+        }
+        acc
+    });
+
+    bench.case_items("mul (bf16 fast path)", n as f64, || {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, y) = exp::mul_bf16(a[i], b[i], a[i], b[i]);
+            acc += x + y;
+        }
+        acc
+    });
+
+    println!(
+        "\nnote: the fused optimizer kernels chain ~10 of these per element; \
+         see `cargo bench --bench optimizer_step` for the end-to-end cost."
+    );
+}

@@ -1,0 +1,54 @@
+//! Bench + regeneration driver for the analytic experiments: prints the
+//! paper's Table 2, Table 8, Table 9, Table 12 and the Table-7 bytes model
+//! (same output as `collage experiment all-analytic`), then times the
+//! planner/model substrates.
+//!
+//!     cargo bench --bench memory_model
+
+use collage::experiments::memory_tables;
+use collage::model::config::{find, PAPER_CONFIGS};
+use collage::model::memory::MemoryModel;
+use collage::optim::strategy::Strategy;
+use collage::parallel::sharding::ShardPlan;
+use collage::util::bench::Bench;
+
+fn main() {
+    // Regenerate every analytic table (the bench doubles as the driver).
+    memory_tables::table2().print();
+    println!();
+    memory_tables::table9().print();
+    println!();
+    memory_tables::table8().print();
+    println!();
+    memory_tables::table12().print();
+    println!();
+    memory_tables::table7_bytes_model().print();
+    println!();
+
+    let mut bench = Bench::from_env();
+    let m = MemoryModel::default();
+    let cfg30 = find("gpt-30b").unwrap();
+
+    bench.case("peak-memory eval (one point)", || {
+        m.peak(cfg30, Strategy::CollagePlus, 2, 2048, 8, 2)
+    });
+
+    bench.case("shard-plan gpt-30b (tp8, pp2)", || {
+        ShardPlan::plan(cfg30, 8, 2).unwrap()
+    });
+
+    bench.case("full table-12 sweep", || {
+        let mut total = 0.0;
+        for cfg in PAPER_CONFIGS {
+            for s in [
+                Strategy::Bf16,
+                Strategy::CollageLight,
+                Strategy::CollagePlus,
+                Strategy::Fp32MasterWeights,
+            ] {
+                total += m.peak(cfg, s, 1, 2048, 8, 1).total_gb();
+            }
+        }
+        total
+    });
+}

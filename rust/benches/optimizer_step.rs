@@ -1,0 +1,126 @@
+//! Bench: optimizer-only step cost per precision strategy — the measured
+//! companion to paper Table 7 (relative training speed) at the layer where
+//! Collage's advantage originates: optimizer-state memory traffic.
+//!
+//! Two measurements per strategy:
+//!   1. the pure-Rust fused update over a 4M-element flat state (the
+//!      memory-bound regime; paper Table 7's ordering A > B > C > D must
+//!      reproduce), and
+//!   2. the full AOT HLO train step on the `small` config (end-to-end,
+//!      includes fwd/bwd — the realistic amortization).
+//!
+//!     cargo bench --bench optimizer_step
+
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::numerics::expansion::rn_bf16;
+use collage::optim::adamw::AdamW;
+use collage::optim::state::OptimState;
+use collage::optim::strategy::{Strategy, PAPER_OPTIONS};
+use collage::runtime::{Manifest, Runtime};
+use collage::util::bench::Bench;
+use collage::util::rng::Rng;
+use collage::util::table::{fnum, Table};
+
+fn main() {
+    let n: usize = std::env::var("COLLAGE_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 22);
+    let mut bench = Bench::from_env();
+    let mut rng = Rng::new(7, 0);
+    let theta: Vec<f32> = (0..n).map(|_| rn_bf16(rng.normal() as f32)).collect();
+    let g: Vec<f32> = (0..n).map(|_| rn_bf16(0.01 * rng.normal() as f32)).collect();
+    let opt = AdamW::default();
+
+    println!("== pure-Rust fused optimizer step, {n} params ==");
+    let mut times = Vec::new();
+    for strategy in PAPER_OPTIONS {
+        let mut state = OptimState::init(strategy, &theta);
+        let mut t = 0u64;
+        let r = bench.case_items(format!("opt/{}", strategy.option_str()), n as f64, || {
+            t += 1;
+            opt.step(&mut state, &g, 1e-4, t, &mut rng)
+        });
+        times.push((strategy, r.median));
+    }
+    let d_time = times
+        .iter()
+        .find(|(s, _)| *s == Strategy::Fp32MasterWeights)
+        .unwrap()
+        .1;
+    let mut table = Table::new("Table 7 (optimizer-only): relative speed vs option D");
+    table.header(&["strategy", "median/step", "speedup vs D", "state B/param"]);
+    for (s, t) in &times {
+        table.row(vec![
+            s.paper_name().to_string(),
+            format!("{:.2?}", t),
+            format!("{:.2}x", d_time.as_secs_f64() / t.as_secs_f64()),
+            s.state_bytes_per_param().to_string(),
+        ]);
+    }
+    println!();
+    table.print();
+
+    // ---- end-to-end HLO train step (includes fwd/bwd) ----------------------
+    let manifest_dir = std::path::Path::new("artifacts");
+    if !manifest_dir.join("manifest.json").exists() {
+        println!("(skipping HLO end-to-end half: run `make artifacts`)");
+        return;
+    }
+    let runtime = Runtime::cpu().expect("pjrt");
+    let manifest = Manifest::load(manifest_dir).expect("manifest");
+    println!("\n== end-to-end HLO train step (small config) ==");
+    let small = manifest.model("small").expect("small config").clone();
+    let corpus = collage::data::synthetic::SyntheticCorpus::generate(
+        collage::data::synthetic::CorpusConfig {
+            vocab: small.vocab,
+            n_tokens: 1 << 16,
+            seed: 3,
+            ..Default::default()
+        },
+    );
+    let batch = collage::data::batches::BatchIterator::new(
+        &corpus,
+        collage::data::batches::Split::Train,
+        small.micro_batch,
+        small.seq_len,
+        3,
+    )
+    .unwrap()
+    .batch_for_step(3, 1);
+
+    let mut e2e = Vec::new();
+    for strategy in PAPER_OPTIONS {
+        let cfg = RunConfig {
+            model: "small".into(),
+            strategy,
+            steps: u64::MAX,
+            warmup: 10,
+            log_every: 0,
+            corpus_tokens: 1 << 17,
+            ..Default::default()
+        };
+        let Ok(mut trainer) = Trainer::new(runtime.clone(), &manifest, cfg) else {
+            println!("train/{}: no artifact, skipped", strategy.option_str());
+            continue;
+        };
+        let r = bench.case(format!("train/{}", strategy.option_str()), || {
+            trainer.train_step(&batch).expect("step")
+        });
+        e2e.push((strategy, r.median));
+    }
+    if let Some(&(_, d)) = e2e.iter().find(|(s, _)| *s == Strategy::Fp32MasterWeights) {
+        let mut table = Table::new("Table 7 (end-to-end, small): relative speed vs option D");
+        table.header(&["strategy", "median/step", "speedup vs D"]);
+        for (s, t) in &e2e {
+            table.row(vec![
+                s.paper_name().to_string(),
+                format!("{:.2?}", t),
+                fnum(d.as_secs_f64() / t.as_secs_f64(), 2) + "x",
+            ]);
+        }
+        println!();
+        table.print();
+    }
+}

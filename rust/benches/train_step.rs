@@ -1,0 +1,90 @@
+//! Bench: end-to-end train step across model sizes + the data-parallel
+//! runtime scaling — the wall-clock backing for the paper's Table-7 claim
+//! that Collage preserves Option-A throughput while D pays for fp32 state.
+//!
+//!     cargo bench --bench train_step
+
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::data::batches::{BatchIterator, Split};
+use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use collage::optim::adamw::AdamW;
+use collage::optim::strategy::Strategy;
+use collage::parallel::worker::DataParallel;
+use collage::runtime::{Manifest, Runtime};
+use collage::util::bench::Bench;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("run `make artifacts` first");
+        return;
+    }
+    let runtime = Runtime::cpu().expect("pjrt");
+    let manifest = Manifest::load(dir).expect("manifest");
+    let mut bench = Bench::from_env();
+
+    // Per-size end-to-end step (Collage-plus).
+    for model in ["tiny", "small", "medium"] {
+        let Ok(meta) = manifest.model(model) else { continue };
+        let meta = meta.clone();
+        let cfg = RunConfig {
+            model: model.into(),
+            strategy: Strategy::CollagePlus,
+            steps: u64::MAX,
+            log_every: 0,
+            corpus_tokens: 1 << 17,
+            ..Default::default()
+        };
+        let Ok(mut trainer) = Trainer::new(runtime.clone(), &manifest, cfg) else {
+            continue;
+        };
+        let corpus = SyntheticCorpus::generate(CorpusConfig {
+            vocab: meta.vocab,
+            n_tokens: 1 << 16,
+            seed: 5,
+            ..Default::default()
+        });
+        let batch =
+            BatchIterator::new(&corpus, Split::Train, meta.micro_batch, meta.seq_len, 5)
+                .unwrap()
+                .batch_for_step(5, 1);
+        let tokens = (meta.micro_batch * meta.seq_len) as f64;
+        bench.case_items(
+            format!("train-step/{model} ({} params)", meta.n_params),
+            tokens,
+            || trainer.train_step(&batch).expect("step"),
+        );
+    }
+
+    // Data-parallel scaling on tiny.
+    println!("\n== data-parallel scaling (tiny, collage-plus) ==");
+    for workers in [1usize, 2, 4] {
+        let meta = manifest.model("tiny").unwrap().clone();
+        let Ok(mut dp) = DataParallel::new(
+            &manifest,
+            "tiny",
+            Strategy::CollagePlus,
+            workers,
+            AdamW::default(),
+            9,
+        ) else {
+            continue;
+        };
+        let corpus = SyntheticCorpus::generate(CorpusConfig {
+            vocab: meta.vocab,
+            n_tokens: 1 << 16,
+            seed: 9,
+            ..Default::default()
+        });
+        let it =
+            BatchIterator::new(&corpus, Split::Train, meta.micro_batch, meta.seq_len, 9).unwrap();
+        let shards: Vec<_> = (0..workers)
+            .map(|w| it.batch_for_step(w as u64, 1))
+            .collect();
+        let tokens = (workers * meta.micro_batch * meta.seq_len) as f64;
+        bench.case_items(format!("dp-step/{workers} workers"), tokens, || {
+            dp.step(&shards, 1e-3).expect("dp step")
+        });
+    }
+}

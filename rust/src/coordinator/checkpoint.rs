@@ -1,0 +1,131 @@
+//! Checkpointing: the flat optimizer-state vectors + step counter, written
+//! in a simple length-prefixed binary format with a JSON header, so runs
+//! can resume bit-exactly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::optim::state::OptimState;
+use crate::optim::strategy::Strategy;
+use crate::util::json::{Obj, Value};
+
+const MAGIC: &[u8; 8] = b"COLLAGE1";
+
+/// A saved training state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub model: String,
+    pub state: OptimState,
+}
+
+impl Checkpoint {
+    /// Serialize to `path` (atomic: write then rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+            );
+            let mut header = Obj::new();
+            header.insert("step", self.step);
+            header.insert("model", self.model.as_str());
+            header.insert("strategy", self.state.strategy.option_str());
+            header.insert("n", self.state.n);
+            header.insert(
+                "vectors",
+                Value::Arr(
+                    self.state.names().iter().map(|&n| Value::Str(n.to_string())).collect(),
+                ),
+            );
+            let header_text = Value::Obj(header).dump();
+            f.write_all(MAGIC)?;
+            f.write_all(&(header_text.len() as u64).to_le_bytes())?;
+            f.write_all(header_text.as_bytes())?;
+            for vec in self.state.vecs() {
+                f.write_all(&(vec.len() as u64).to_le_bytes())?;
+                for &x in vec {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming to {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load from `path`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a collage checkpoint");
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Value::parse(std::str::from_utf8(&hbytes)?)?;
+        let step = header.get("step")?.as_i64()? as u64;
+        let model = header.get("model")?.as_str()?.to_string();
+        let strategy = Strategy::parse(header.get("strategy")?.as_str()?)?;
+        let n_vectors = header.get("vectors")?.as_arr()?.len();
+        let mut vecs = Vec::with_capacity(n_vectors);
+        for _ in 0..n_vectors {
+            f.read_exact(&mut len8)?;
+            let n = u64::from_le_bytes(len8) as usize;
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            vecs.push(
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+        }
+        let state = OptimState::from_vecs(strategy, vecs)?;
+        Ok(Checkpoint { step, model, state })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bitexact() {
+        let theta: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin()).collect();
+        let state = OptimState::init(Strategy::CollagePlus, &theta);
+        let ck = Checkpoint { step: 42, model: "tiny".into(), state };
+        let dir = std::env::temp_dir().join("collage_test_ckpt");
+        let path = dir.join("c.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.model, "tiny");
+        assert_eq!(back.state.strategy, Strategy::CollagePlus);
+        for (a, b) in ck.state.vecs().iter().zip(back.state.vecs()) {
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("collage_test_ckpt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,175 @@
+//! Run configuration: everything that defines one training run.  Can be
+//! loaded from / saved to JSON so experiment sweeps are reproducible
+//! artifacts themselves.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::optim::strategy::Strategy;
+use crate::util::json::{Obj, Value};
+
+/// One training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model config name (must have artifacts: `tiny`, `small`, ...).
+    pub model: String,
+    /// Precision strategy.
+    pub strategy: Strategy,
+    /// Total optimizer steps.
+    pub steps: u64,
+    /// Linear warmup steps (paper: 200 for GPTs).
+    pub warmup: u64,
+    /// Peak learning rate.
+    pub lr: f64,
+    /// Cosine floor as a fraction of peak lr.
+    pub min_lr_ratio: f64,
+    /// β₂ override; `None` uses the config default baked at export.
+    pub beta2: Option<f64>,
+    /// Corpus + batching seed.
+    pub seed: u64,
+    /// Number of corpus tokens to synthesize.
+    pub corpus_tokens: usize,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: u64,
+    /// Validation batches per evaluation.
+    pub eval_batches: usize,
+    /// Log every `log_every` steps to stdout.
+    pub log_every: u64,
+    /// Data-parallel worker count (1 = single-process trainer).
+    pub dp_workers: usize,
+    /// Optional checkpoint directory.
+    pub checkpoint_dir: Option<String>,
+    /// Checkpoint every N steps (0 = only at the end, if dir set).
+    pub checkpoint_every: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".to_string(),
+            strategy: Strategy::CollagePlus,
+            steps: 200,
+            warmup: 20,
+            lr: 1e-3,
+            min_lr_ratio: 0.1,
+            beta2: None,
+            seed: 1234,
+            corpus_tokens: 1 << 20,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 10,
+            dp_workers: 1,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn to_json(&self) -> Value {
+        let mut o = Obj::new();
+        o.insert("model", self.model.as_str());
+        o.insert("strategy", self.strategy.option_str());
+        o.insert("steps", self.steps);
+        o.insert("warmup", self.warmup);
+        o.insert("lr", self.lr);
+        o.insert("min_lr_ratio", self.min_lr_ratio);
+        match self.beta2 {
+            Some(b) => o.insert("beta2", b),
+            None => o.insert("beta2", Value::Null),
+        }
+        o.insert("seed", self.seed);
+        o.insert("corpus_tokens", self.corpus_tokens);
+        o.insert("eval_every", self.eval_every);
+        o.insert("eval_batches", self.eval_batches);
+        o.insert("log_every", self.log_every);
+        o.insert("dp_workers", self.dp_workers);
+        match &self.checkpoint_dir {
+            Some(d) => o.insert("checkpoint_dir", d.as_str()),
+            None => o.insert("checkpoint_dir", Value::Null),
+        }
+        o.insert("checkpoint_every", self.checkpoint_every);
+        Value::Obj(o)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = RunConfig::default();
+        Ok(RunConfig {
+            model: v.get("model")?.as_str()?.to_string(),
+            strategy: Strategy::parse(v.get("strategy")?.as_str()?)?,
+            steps: v.get("steps")?.as_i64()? as u64,
+            warmup: v.opt("warmup").map(|x| x.as_i64().unwrap_or(0) as u64).unwrap_or(d.warmup),
+            lr: v.opt("lr").map(|x| x.as_f64().unwrap_or(d.lr)).unwrap_or(d.lr),
+            min_lr_ratio: v
+                .opt("min_lr_ratio")
+                .map(|x| x.as_f64().unwrap_or(d.min_lr_ratio))
+                .unwrap_or(d.min_lr_ratio),
+            beta2: v.opt("beta2").and_then(|x| x.as_f64().ok()),
+            seed: v.opt("seed").map(|x| x.as_i64().unwrap_or(1234) as u64).unwrap_or(d.seed),
+            corpus_tokens: v
+                .opt("corpus_tokens")
+                .map(|x| x.as_usize().unwrap_or(d.corpus_tokens))
+                .unwrap_or(d.corpus_tokens),
+            eval_every: v
+                .opt("eval_every")
+                .map(|x| x.as_i64().unwrap_or(0) as u64)
+                .unwrap_or(d.eval_every),
+            eval_batches: v
+                .opt("eval_batches")
+                .map(|x| x.as_usize().unwrap_or(d.eval_batches))
+                .unwrap_or(d.eval_batches),
+            log_every: v
+                .opt("log_every")
+                .map(|x| x.as_i64().unwrap_or(10) as u64)
+                .unwrap_or(d.log_every),
+            dp_workers: v
+                .opt("dp_workers")
+                .map(|x| x.as_usize().unwrap_or(1))
+                .unwrap_or(d.dp_workers),
+            checkpoint_dir: v.opt("checkpoint_dir").and_then(|x| x.as_str().ok()).map(String::from),
+            checkpoint_every: v
+                .opt("checkpoint_every")
+                .map(|x| x.as_i64().unwrap_or(0) as u64)
+                .unwrap_or(d.checkpoint_every),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty(1))
+            .with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.strategy = Strategy::CollageLight;
+        cfg.beta2 = Some(0.999);
+        cfg.checkpoint_dir = Some("/tmp/ckpt".into());
+        let v = cfg.to_json();
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(back.strategy, Strategy::CollageLight);
+        assert_eq!(back.beta2, Some(0.999));
+        assert_eq!(back.checkpoint_dir.as_deref(), Some("/tmp/ckpt"));
+        assert_eq!(back.steps, cfg.steps);
+    }
+
+    #[test]
+    fn missing_optionals_use_defaults() {
+        let v = Value::parse(r#"{"model": "tiny", "strategy": "a", "steps": 7}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.beta2, None);
+        assert_eq!(cfg.eval_batches, RunConfig::default().eval_batches);
+    }
+}

@@ -1,0 +1,213 @@
+//! Per-step metric log: in-memory history + CSV export.  The column set
+//! carries every series the paper plots: loss/perplexity, grad norm
+//! (Fig. 5/6), parameter & update norms (Fig. 2), EDQ (Fig. 3 right,
+//! Figs. 7-12) and the lost-arithmetic percentage (Fig. 3 left).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One training-step record (mirrors `optim.METRIC_NAMES` + bookkeeping).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepRow {
+    pub step: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub grad_norm: f64,
+    pub param_norm: f64,
+    pub update_norm: f64,
+    pub eff_update_norm: f64,
+    pub edq: f64,
+    pub lost_frac: f64,
+    pub clip_coef: f64,
+    /// Validation loss if an eval ran at this step (NaN otherwise).
+    pub val_loss: f64,
+    /// Wall-clock seconds for this step.
+    pub step_time: f64,
+}
+
+impl StepRow {
+    pub fn perplexity(&self) -> f64 {
+        self.loss.exp()
+    }
+
+    pub fn val_perplexity(&self) -> f64 {
+        self.val_loss.exp()
+    }
+
+    /// EDQ normalized by the intended update norm (1.0 = lossless).
+    pub fn edq_ratio(&self) -> f64 {
+        if self.update_norm > 0.0 {
+            self.edq / self.update_norm
+        } else {
+            1.0
+        }
+    }
+}
+
+pub const CSV_HEADER: &str = "step,loss,ppl,lr,grad_norm,param_norm,update_norm,\
+eff_update_norm,edq,edq_ratio,lost_frac,clip_coef,val_loss,val_ppl,step_time";
+
+/// Accumulating metrics log.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsLog {
+    rows: Vec<StepRow>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, row: StepRow) {
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[StepRow] {
+        &self.rows
+    }
+
+    pub fn last(&self) -> Option<&StepRow> {
+        self.rows.last()
+    }
+
+    /// Mean training loss over the final `k` steps (the paper reports
+    /// converged train perplexity this way).
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        if self.rows.is_empty() {
+            return f64::NAN;
+        }
+        let k = k.min(self.rows.len()).max(1);
+        let s: f64 = self.rows[self.rows.len() - k..].iter().map(|r| r.loss).sum();
+        s / k as f64
+    }
+
+    pub fn tail_perplexity(&self, k: usize) -> f64 {
+        self.tail_loss(k).exp()
+    }
+
+    /// Latest recorded validation loss (NaN if never evaluated).
+    pub fn last_val_loss(&self) -> f64 {
+        self.rows
+            .iter()
+            .rev()
+            .find(|r| !r.val_loss.is_nan())
+            .map(|r| r.val_loss)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Mean EDQ ratio over the final `k` steps.
+    pub fn tail_edq_ratio(&self, k: usize) -> f64 {
+        if self.rows.is_empty() {
+            return f64::NAN;
+        }
+        let k = k.min(self.rows.len()).max(1);
+        let s: f64 = self.rows[self.rows.len() - k..]
+            .iter()
+            .map(|r| r.edq_ratio())
+            .sum();
+        s / k as f64
+    }
+
+    /// Mean lost-arithmetic fraction over the final `k` steps.
+    pub fn tail_lost_frac(&self, k: usize) -> f64 {
+        if self.rows.is_empty() {
+            return f64::NAN;
+        }
+        let k = k.min(self.rows.len()).max(1);
+        self.rows[self.rows.len() - k..]
+            .iter()
+            .map(|r| r.lost_frac)
+            .sum::<f64>()
+            / k as f64
+    }
+
+    /// Mean step time over all steps except the first (compile/warmup).
+    pub fn mean_step_time(&self) -> f64 {
+        if self.rows.len() < 2 {
+            return self.rows.first().map(|r| r.step_time).unwrap_or(f64::NAN);
+        }
+        let s: f64 = self.rows[1..].iter().map(|r| r.step_time).sum();
+        s / (self.rows.len() - 1) as f64
+    }
+
+    /// Write the full history as CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+        );
+        writeln!(f, "{CSV_HEADER}")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{:.6},{:.4},{:.3e},{:.4},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.3},{:.6},{:.4},{:.4}",
+                r.step,
+                r.loss,
+                r.perplexity(),
+                r.lr,
+                r.grad_norm,
+                r.param_norm,
+                r.update_norm,
+                r.eff_update_norm,
+                r.edq,
+                r.edq_ratio(),
+                r.lost_frac,
+                r.clip_coef,
+                r.val_loss,
+                r.val_perplexity(),
+                r.step_time,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(step: u64, loss: f64) -> StepRow {
+        StepRow { step, loss, val_loss: f64::NAN, ..Default::default() }
+    }
+
+    #[test]
+    fn tail_statistics() {
+        let mut log = MetricsLog::new();
+        for i in 1..=10 {
+            log.push(row(i, i as f64));
+        }
+        assert!((log.tail_loss(2) - 9.5).abs() < 1e-12);
+        assert!((log.tail_perplexity(1) - (10f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn last_val_skips_nan() {
+        let mut log = MetricsLog::new();
+        log.push(StepRow { step: 1, val_loss: 2.0, ..Default::default() });
+        log.push(row(2, 1.0));
+        assert_eq!(log.last_val_loss(), 2.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricsLog::new();
+        log.push(row(1, 0.5));
+        let dir = std::env::temp_dir().join("collage_test_metrics");
+        let path = dir.join("m.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,loss"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn edq_ratio_degenerate() {
+        let r = StepRow::default();
+        assert_eq!(r.edq_ratio(), 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! The training coordinator: run configuration, LR scheduling, the step
+//! loop over AOT artifacts, metric logging and checkpointing.
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use config::RunConfig;
+pub use metrics::{MetricsLog, StepRow};
+pub use schedule::LrSchedule;
+pub use trainer::{TrainOutcome, Trainer};

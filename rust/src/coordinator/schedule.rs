@@ -1,0 +1,70 @@
+//! Learning-rate schedule: linear warmup + cosine annealing to a floor —
+//! the NeMo `CosineAnnealing` scheduler the paper uses (App. E.2).
+
+/// Warmup-then-cosine schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub warmup: u64,
+    pub total: u64,
+    pub min_ratio: f64,
+}
+
+impl LrSchedule {
+    pub fn new(peak: f64, warmup: u64, total: u64, min_ratio: f64) -> Self {
+        LrSchedule { peak, warmup, total, min_ratio }
+    }
+
+    /// Learning rate at 1-based step `t`.
+    pub fn at(&self, t: u64) -> f64 {
+        if self.warmup > 0 && t <= self.warmup {
+            return self.peak * t as f64 / self.warmup as f64;
+        }
+        let min_lr = self.peak * self.min_ratio;
+        if t >= self.total {
+            return min_lr;
+        }
+        let progress =
+            (t - self.warmup) as f64 / (self.total - self.warmup).max(1) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        min_lr + (self.peak - min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(1e-3, 10, 100, 0.1);
+        assert!((s.at(1) - 1e-4).abs() < 1e-12);
+        assert!((s.at(10) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::new(1e-3, 10, 100, 0.1);
+        assert!(s.at(11) < 1e-3);
+        assert!(s.at(50) > s.at(90));
+        assert!((s.at(100) - 1e-4).abs() < 1e-10);
+        assert!((s.at(200) - 1e-4).abs() < 1e-10); // clamped after total
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::new(6e-4, 20, 500, 0.05);
+        let mut prev = f64::INFINITY;
+        for t in 21..=500 {
+            let lr = s.at(t);
+            assert!(lr <= prev + 1e-15, "lr rose at t={t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn zero_warmup_ok() {
+        let s = LrSchedule::new(1e-3, 0, 10, 0.0);
+        assert!(s.at(1) <= 1e-3 && s.at(1) > 0.0);
+    }
+}

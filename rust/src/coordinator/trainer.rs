@@ -1,0 +1,315 @@
+//! The training loop: executes the fused AOT train-step artifact every
+//! step, tracks the paper's diagnostics, evaluates on a fixed validation
+//! set, and checkpoints.  Python never runs here.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::batches::{BatchIterator, Split};
+use crate::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use crate::optim::state::OptimState;
+use crate::runtime::{ArtifactKind, Executable, InputRef, Manifest, Runtime};
+
+use super::checkpoint::Checkpoint;
+use super::config::RunConfig;
+use super::metrics::{MetricsLog, StepRow};
+use super::schedule::LrSchedule;
+
+/// Index layout of the train artifact's metrics vector (must match
+/// `optim.METRIC_NAMES` in python).
+mod metric_idx {
+    pub const LOSS: usize = 0;
+    pub const GRAD_NORM: usize = 1;
+    pub const PARAM_NORM: usize = 2;
+    pub const UPDATE_NORM: usize = 3;
+    pub const EFF_UPDATE_NORM: usize = 4;
+    pub const EDQ: usize = 5;
+    pub const LOST_FRAC: usize = 6;
+    pub const CLIP_COEF: usize = 7;
+}
+
+/// Summary of a finished run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub steps: u64,
+    /// Mean training loss over the last 10% of steps.
+    pub train_loss: f64,
+    pub train_ppl: f64,
+    /// Final validation loss/perplexity.
+    pub val_loss: f64,
+    pub val_ppl: f64,
+    /// Mean EDQ ratio / lost fraction over the last 10% of steps.
+    pub edq_ratio: f64,
+    pub lost_frac: f64,
+    /// Mean post-warmup step time in seconds.
+    pub step_time: f64,
+    /// Tokens processed per second (micro-batch × seq / step time).
+    pub tokens_per_sec: f64,
+    pub log: MetricsLog,
+}
+
+/// Single-process trainer over AOT artifacts.
+pub struct Trainer {
+    runtime: Arc<Runtime>,
+    pub cfg: RunConfig,
+    train_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    state: OptimState,
+    step: u64,
+    train_iter: BatchIterator,
+    val_batches: Vec<crate::data::batches::Batch>,
+    schedule: LrSchedule,
+    pub log: MetricsLog,
+    micro_batch: usize,
+    seq_len: usize,
+    /// First train_step validates I/O layout; later steps skip it (§Perf).
+    layout_checked: bool,
+    /// AdamW βs baked into the train artifact (for bias corrections).
+    beta1: f64,
+    beta2: f64,
+}
+
+impl Trainer {
+    /// Build a trainer: loads artifacts, synthesizes the corpus, and
+    /// initializes (or resumes) the optimizer state.
+    pub fn new(runtime: Arc<Runtime>, manifest: &Manifest, cfg: RunConfig) -> Result<Self> {
+        let model = manifest.model(&cfg.model)?.clone();
+        let train_meta = manifest.train(&cfg.model, cfg.strategy.option_str(), cfg.beta2)?;
+        let eval_meta = manifest.find(&cfg.model, ArtifactKind::Eval)?;
+        let train_exe = runtime.load(manifest, train_meta)?;
+        let eval_exe = runtime.load(manifest, eval_meta)?;
+
+        let corpus = SyntheticCorpus::generate(CorpusConfig {
+            vocab: model.vocab,
+            n_tokens: cfg.corpus_tokens,
+            seed: cfg.seed,
+            ..Default::default()
+        });
+        let train_iter = BatchIterator::new(
+            &corpus,
+            Split::Train,
+            model.micro_batch,
+            model.seq_len,
+            cfg.seed,
+        )?;
+        let val_iter =
+            BatchIterator::new(&corpus, Split::Val, model.micro_batch, model.seq_len, cfg.seed)?;
+        let val_batches = val_iter.fixed_batches(cfg.eval_batches);
+
+        // Initial state: exported init vector, or resume from checkpoint.
+        let mut step = 0u64;
+        let state = if let Some(ck_path) = Self::latest_checkpoint(&cfg) {
+            let ck = Checkpoint::load(&ck_path)
+                .with_context(|| format!("resuming from {ck_path:?}"))?;
+            if ck.model != cfg.model {
+                bail!("checkpoint model {} != run model {}", ck.model, cfg.model);
+            }
+            if ck.state.strategy != cfg.strategy {
+                bail!("checkpoint strategy mismatch");
+            }
+            step = ck.step;
+            ck.state
+        } else {
+            let theta0 = manifest.load_init(&cfg.model)?;
+            OptimState::init(cfg.strategy, &theta0)
+        };
+
+        let optim_meta = manifest.optim(&cfg.model)?;
+        let beta1 = optim_meta.beta1;
+        let beta2 = cfg.beta2.unwrap_or(optim_meta.beta2);
+
+        let schedule = LrSchedule::new(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_ratio);
+        Ok(Trainer {
+            beta1,
+            beta2,
+            layout_checked: false,
+            runtime,
+            micro_batch: model.micro_batch,
+            seq_len: model.seq_len,
+            cfg,
+            train_exe,
+            eval_exe,
+            state,
+            step,
+            train_iter,
+            val_batches,
+            schedule,
+            log: MetricsLog::new(),
+        })
+    }
+
+    fn latest_checkpoint(cfg: &RunConfig) -> Option<PathBuf> {
+        let dir = cfg.checkpoint_dir.as_ref()?;
+        let path = PathBuf::from(dir).join("latest.ckpt");
+        path.exists().then_some(path)
+    }
+
+    pub fn state(&self) -> &OptimState {
+        &self.state
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Inject a pre-trained parameter vector (finetuning entry point).
+    pub fn set_theta(&mut self, theta: &[f32]) -> Result<()> {
+        if theta.len() != self.state.n {
+            bail!("theta length {} != state length {}", theta.len(), self.state.n);
+        }
+        self.state = OptimState::init(self.cfg.strategy, theta);
+        Ok(())
+    }
+
+    /// Execute one training step; returns the step's metric row.
+    pub fn train_step(&mut self, batch: &crate::data::batches::Batch) -> Result<StepRow> {
+        let t0 = Instant::now();
+        self.step += 1;
+        let lr = self.schedule.at(self.step) as f32;
+        let b = self.micro_batch;
+        let t = self.seq_len;
+        // Bias corrections 1-βᵗ in f64, single-rounded to f32 (the paper's
+        // high-precision-scalar rule; matches optim.bias_corrections).
+        let bc1 = (1.0 - self.beta1.powi(self.step as i32)) as f32;
+        let bc2 = (1.0 - self.beta2.powi(self.step as i32)) as f32;
+        // §Perf: zero-copy borrowed inputs + layout validated once at
+        // construction — no per-step clones of the state vectors.
+        let tok_shape = [b, t];
+        let n_shape = [self.state.n];
+        let mut inputs: Vec<InputRef> = vec![
+            InputRef::I32(&batch.tokens, &tok_shape),
+            InputRef::I32(&batch.targets, &tok_shape),
+            InputRef::ScalarF32(lr),
+            InputRef::ScalarF32(bc1),
+            InputRef::ScalarF32(bc2),
+            InputRef::ScalarU32(self.cfg.seed as u32 ^ (self.step as u32).rotate_left(16)),
+        ];
+        for vec in self.state.vecs() {
+            inputs.push(InputRef::F32(vec, &n_shape));
+        }
+        let mut outputs = if self.layout_checked {
+            self.train_exe.execute_unchecked(&inputs)?
+        } else {
+            let out = self.train_exe.execute_refs(&inputs)?;
+            self.layout_checked = true;
+            out
+        };
+        let metrics = outputs.pop().context("missing metrics output")?;
+        self.state.set_vecs(outputs)?;
+
+        let row = StepRow {
+            step: self.step,
+            loss: metrics[metric_idx::LOSS] as f64,
+            lr: lr as f64,
+            grad_norm: metrics[metric_idx::GRAD_NORM] as f64,
+            param_norm: metrics[metric_idx::PARAM_NORM] as f64,
+            update_norm: metrics[metric_idx::UPDATE_NORM] as f64,
+            eff_update_norm: metrics[metric_idx::EFF_UPDATE_NORM] as f64,
+            edq: metrics[metric_idx::EDQ] as f64,
+            lost_frac: metrics[metric_idx::LOST_FRAC] as f64,
+            clip_coef: metrics[metric_idx::CLIP_COEF] as f64,
+            val_loss: f64::NAN,
+            step_time: t0.elapsed().as_secs_f64(),
+        };
+        Ok(row)
+    }
+
+    /// Mean validation loss over the fixed validation batches.
+    pub fn evaluate(&self) -> Result<f64> {
+        let theta = self.state.theta();
+        let tok_shape = [self.micro_batch, self.seq_len];
+        let n_shape = [theta.len()];
+        let mut total = 0.0f64;
+        for batch in &self.val_batches {
+            let out = self.eval_exe.execute_refs(&[
+                InputRef::I32(&batch.tokens, &tok_shape),
+                InputRef::I32(&batch.targets, &tok_shape),
+                InputRef::F32(theta, &n_shape),
+            ])?;
+            total += out[0][0] as f64;
+        }
+        Ok(total / self.val_batches.len().max(1) as f64)
+    }
+
+    fn maybe_checkpoint(&self, force: bool) -> Result<()> {
+        let Some(dir) = &self.cfg.checkpoint_dir else { return Ok(()) };
+        let every = self.cfg.checkpoint_every;
+        if !force && (every == 0 || self.step % every != 0) {
+            return Ok(());
+        }
+        let ck = Checkpoint {
+            step: self.step,
+            model: self.cfg.model.clone(),
+            state: self.state.clone(),
+        };
+        ck.save(&PathBuf::from(dir).join("latest.ckpt"))
+    }
+
+    /// Run the configured number of steps (resuming counts).
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        self.run_until(self.cfg.steps)
+    }
+
+    /// Run until `stop` (≤ cfg.steps).  The LR schedule always spans
+    /// cfg.steps, so interrupted + resumed runs follow the identical
+    /// trajectory as an uninterrupted one.
+    pub fn run_until(&mut self, stop: u64) -> Result<TrainOutcome> {
+        let total = stop.min(self.cfg.steps);
+        while self.step < total {
+            // Stateless per-step batch: checkpoint resume is bit-exact.
+            let batch = self.train_iter.batch_for_step(self.cfg.seed, self.step + 1);
+            let mut row = self.train_step(&batch)?;
+            let do_eval = (self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0)
+                || self.step == total;
+            if do_eval {
+                row.val_loss = self.evaluate()?;
+            }
+            if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+                let val = if row.val_loss.is_nan() {
+                    String::new()
+                } else {
+                    format!(" val_ppl={:.3}", row.val_perplexity())
+                };
+                println!(
+                    "[{}/{}] loss={:.4} ppl={:.3} lr={:.2e} gnorm={:.3} edq={:.3} lost={:.1}%{} ({:.0} tok/s)",
+                    row.step,
+                    total,
+                    row.loss,
+                    row.perplexity(),
+                    row.lr,
+                    row.grad_norm,
+                    row.edq_ratio(),
+                    row.lost_frac * 100.0,
+                    val,
+                    (self.micro_batch * self.seq_len) as f64 / row.step_time,
+                );
+            }
+            self.log.push(row);
+            self.maybe_checkpoint(false)?;
+        }
+        self.maybe_checkpoint(true)?;
+
+        let tail = (total as usize / 10).max(1);
+        let val_loss = self.log.last_val_loss();
+        let step_time = self.log.mean_step_time();
+        Ok(TrainOutcome {
+            steps: self.step,
+            train_loss: self.log.tail_loss(tail),
+            train_ppl: self.log.tail_perplexity(tail),
+            val_loss,
+            val_ppl: val_loss.exp(),
+            edq_ratio: self.log.tail_edq_ratio(tail),
+            lost_frac: self.log.tail_lost_frac(tail),
+            step_time,
+            tokens_per_sec: (self.micro_batch * self.seq_len) as f64 / step_time,
+            log: self.log.clone(),
+        })
+    }
+}

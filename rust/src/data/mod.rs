@@ -1,0 +1,19 @@
+//! Data pipeline: synthetic "wiki-like" corpus generation, tokenization,
+//! deterministic batching with a 980:10:10 train/val/test split (paper
+//! App. E.2), and a synthetic GLUE-style classification task generator for
+//! the finetuning experiments (Table 4).
+//!
+//! The paper pretrains on Wikipedia-en; that corpus is not available here,
+//! so `synthetic` builds a Zipf-weighted Markov-chain token stream whose
+//! unigram/bigram statistics give a language-model a learnable signal (loss
+//! decreases ⇔ the optimizer works) while staying fully deterministic.
+//! See DESIGN.md §Hardware-Adaptation for why this preserves the paper's
+//! phenomena (the imprecision effects depend on optimizer-state dynamics,
+//! not on the text itself).
+
+pub mod batches;
+pub mod glue;
+pub mod synthetic;
+
+pub use batches::{Batch, BatchIterator, Split};
+pub use synthetic::SyntheticCorpus;

@@ -1,0 +1,200 @@
+//! Analytic experiments: Table 2 / Fig. 1 (bytes per parameter), Table 9
+//! (formats & ulp), Fig. 4 + Table 12 (peak memory & savings), Table 8
+//! (OOM feasibility for GPT-30B).  These need no artifacts — pure memory
+//! model + numerics.
+
+use crate::model::config::{find, PAPER_CONFIGS};
+use crate::model::memory::MemoryModel;
+use crate::numerics::format::ALL_FORMATS;
+use crate::optim::strategy::{Strategy, PAPER_OPTIONS};
+use crate::util::table::{fnum, Table};
+
+/// Table 2 + Fig. 1 (right): precision breakdown in bytes/parameter.
+pub fn table2() -> Table {
+    let mut t = Table::new("Table 2 — bytes/parameter per precision strategy");
+    t.header(&["Precision Option", "Param+Grad", "Optim states", "MCF / MW", "bytes/param"]);
+    for s in [
+        Strategy::Bf16,
+        Strategy::CollageLight,
+        Strategy::CollagePlus,
+        Strategy::Fp32MasterWeights,
+    ] {
+        let (pg, opt, extra) = match s {
+            Strategy::Bf16 => ("BF16 x2", "BF16 x2", "-"),
+            Strategy::CollageLight => ("BF16 x2", "BF16 x2", "BF16 x1"),
+            Strategy::CollagePlus => ("BF16 x2", "BF16 x2", "BF16 x2"),
+            Strategy::Fp32MasterWeights => ("BF16 x2", "FP32 x2", "FP32 x1"),
+            _ => unreachable!(),
+        };
+        t.row(vec![
+            s.paper_name().to_string(),
+            pg.into(),
+            opt.into(),
+            extra.into(),
+            s.bytes_per_param().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table 9: floating-point formats and ulp(1).
+pub fn table9() -> Table {
+    let mut t = Table::new("Table 9 — floating-point precisions and ULPs");
+    t.header(&["Precision", "#Exponent bits", "#Mantissa bits", "ulp(1)"]);
+    for f in ALL_FORMATS {
+        t.row(vec![
+            f.name.to_string(),
+            f.exp_bits.to_string(),
+            f.mantissa_bits.to_string(),
+            format!("2^-{}", f.mantissa_bits),
+        ]);
+    }
+    t
+}
+
+/// Fig. 4 + Table 12: peak memory (GB) and savings vs option D, at the
+/// paper's geometry (UBS=1, seq 2048, TP=8 except 125M on 1 GPU).
+pub fn table12() -> Table {
+    let m = MemoryModel::default();
+    let mut t = Table::new(
+        "Table 12 / Fig. 4 — peak pretraining memory (GB) and savings vs option D",
+    );
+    t.header(&["Model", "A (BF16)", "B (light)", "C (plus)", "D peak GB"]);
+    for name in ["gpt-125m", "gpt-1.3b", "gpt-2.7b", "gpt-6.7b", "openllama-7b"] {
+        let cfg = find(name).unwrap();
+        let tp = if name == "gpt-125m" { 1 } else { 8 };
+        let d_total = m.peak(cfg, Strategy::Fp32MasterWeights, 1, 2048, tp, 1).total_gb();
+        let cell = |s: Strategy| {
+            let saved = m.saved_vs_d(cfg, s) / (1u64 << 30) as f64;
+            let pct = 100.0 * saved / d_total;
+            format!("-{} ({}%)", fnum(saved, 1), fnum(pct, 1))
+        };
+        t.row(vec![
+            name.to_string(),
+            cell(Strategy::Bf16),
+            cell(Strategy::CollageLight),
+            cell(Strategy::CollagePlus),
+            fnum(d_total, 1),
+        ]);
+    }
+    t
+}
+
+/// Table 8: OOM feasibility of GPT-30B (TP=8, PP=2, 40 GB GPUs).
+pub fn table8() -> Table {
+    let m = MemoryModel::default();
+    let cfg = find("gpt-30b").unwrap();
+    let mut t = Table::new("Table 8 — GPT-30B memory compatibility (TP=8, PP=2, A100-40GB)");
+    t.header(&[
+        "Precision option",
+        "UBS=1 s=1024",
+        "UBS=1 s=2048",
+        "UBS=2 s=1024",
+        "UBS=2 s=2048",
+    ]);
+    for s in [
+        Strategy::Bf16,
+        Strategy::CollageLight,
+        Strategy::CollagePlus,
+        Strategy::Fp32MasterWeights,
+    ] {
+        let mut row = vec![s.paper_name().to_string()];
+        for (ubs, seq) in [(1usize, 1024usize), (1, 2048), (2, 1024), (2, 2048)] {
+            let p = m.peak(cfg, s, ubs, seq, 8, 2);
+            let fits = p.per_gpu_bytes <= m.budget_per_gpu;
+            row.push(format!(
+                "{} ({:.1}GB/gpu)",
+                if fits { "OK" } else { "OOM" },
+                p.per_gpu_gb()
+            ));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Table 7 companion: the bytes-moved model behind the throughput ordering
+/// (optimizer-state traffic per parameter per step).
+pub fn table7_bytes_model() -> Table {
+    let mut t = Table::new(
+        "Table 7 model — optimizer-state bytes touched per parameter per step \
+         (read+write; lower = faster memory-bound step)",
+    );
+    t.header(&["Option", "state B/param", "traffic B/param/step", "vs D"]);
+    let d_traffic = traffic(Strategy::Fp32MasterWeights);
+    for s in PAPER_OPTIONS {
+        let tr = traffic(s);
+        t.row(vec![
+            s.paper_name().to_string(),
+            s.state_bytes_per_param().to_string(),
+            tr.to_string(),
+            format!("{:.2}x", d_traffic as f64 / tr as f64),
+        ]);
+    }
+    t
+}
+
+fn traffic(s: Strategy) -> usize {
+    // read grad + read state + write state
+    2 + 2 * s.state_bytes_per_param()
+}
+
+/// Fig. 1 (right): total bytes/parameter savings plot series (CSV-style).
+pub fn fig1_series() -> Vec<(String, usize)> {
+    PAPER_OPTIONS
+        .iter()
+        .map(|s| (s.paper_name().to_string(), s.bytes_per_param()))
+        .collect()
+}
+
+/// Paper-size memory sweep used by Fig. 4's series output.
+pub fn fig4_series() -> Vec<(String, Vec<(String, f64)>)> {
+    let m = MemoryModel::default();
+    let mut out = Vec::new();
+    for s in [
+        Strategy::Bf16,
+        Strategy::CollageLight,
+        Strategy::CollagePlus,
+        Strategy::Fp32MasterWeights,
+    ] {
+        let mut pts = Vec::new();
+        for cfg in PAPER_CONFIGS.iter().filter(|c| c.name != "gpt-30b") {
+            let tp = if cfg.name == "gpt-125m" { 1 } else { 8 };
+            let d = m.peak(cfg, Strategy::Fp32MasterWeights, 1, 2048, tp, 1).total_gb();
+            let gb = d - m.saved_vs_d(cfg, s) / (1u64 << 30) as f64;
+            pts.push((cfg.name.to_string(), gb));
+        }
+        out.push((s.paper_name().to_string(), pts));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_nonempty() {
+        for t in [table2(), table9(), table12(), table8(), table7_bytes_model()] {
+            let s = t.render();
+            assert!(s.lines().count() >= 4, "{s}");
+        }
+    }
+
+    #[test]
+    fn table8_matches_paper_pattern() {
+        let s = table8().render();
+        // Option A row: all OK; option D row: exactly one OK.
+        let a_row = s.lines().find(|l| l.starts_with("A (BF16)")).unwrap();
+        assert_eq!(a_row.matches("OK").count(), 4);
+        let d_row = s.lines().find(|l| l.contains("FP32MW")).unwrap();
+        assert_eq!(d_row.matches("OOM").count(), 3);
+    }
+
+    #[test]
+    fn traffic_ordering_matches_table7() {
+        // A < B < C < D traffic → A > B > C > D speedup ordering.
+        let tr: Vec<usize> = PAPER_OPTIONS.iter().map(|&s| traffic(s)).collect();
+        assert!(tr[0] < tr[1] && tr[1] < tr[2] && tr[2] < tr[4]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment drivers: one generator per table/figure of the paper.
+//! See DESIGN.md "Experiment index" for the mapping.
+
+pub mod memory_tables;
+pub mod pretrain;
+pub mod registry;
+
+pub use registry::{list, run};

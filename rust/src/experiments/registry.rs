@@ -1,0 +1,113 @@
+//! Experiment registry: maps paper table/figure ids to their generators.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{memory_tables, pretrain};
+use crate::util::table::Table;
+
+/// All experiment ids with one-line descriptions.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table2", "bytes/parameter per precision strategy (analytic)"),
+    ("table3", "BERT/RoBERTa-proxy pretraining perplexity"),
+    ("table4", "synthetic-GLUE finetuning accuracy"),
+    ("table5", "model-size sweep train|val perplexity + β₂=0.99 column"),
+    ("table6", "β₂ × batch ablation (GPT-125M proxy)"),
+    ("table7", "relative train-step speed vs option D (measured + bytes model)"),
+    ("table8", "GPT-30B OOM feasibility grid (analytic)"),
+    ("table9", "floating-point formats and ulp(1)"),
+    ("table12", "peak memory savings vs option D (analytic, = Fig. 4)"),
+    ("fig1", "bytes/param savings series"),
+    ("fig2", "parameter vs update norm scale gap"),
+    ("fig3", "imprecision %, train ppl, EDQ per strategy"),
+    ("fig4", "peak memory vs model size series (analytic)"),
+    ("fig56", "β₂ = 0.95 vs 0.99 stability (ppl + grad norms)"),
+    ("fig7to12", "EDQ/ppl grids over β₂ × batch (CSV; same runs as table6)"),
+    ("all-analytic", "every experiment that needs no artifacts"),
+];
+
+/// List experiments as a rendered table.
+pub fn list() -> Table {
+    let mut t = Table::new("experiments (collage experiment <id>)");
+    t.header(&["id", "description"]);
+    for (id, desc) in EXPERIMENTS {
+        t.row(vec![id.to_string(), desc.to_string()]);
+    }
+    t
+}
+
+/// Run one experiment; prints its table(s) and writes CSVs to `out_dir`.
+pub fn run(id: &str, artifacts: &Path, out_dir: &Path, quick: bool) -> Result<()> {
+    std::fs::create_dir_all(out_dir).ok();
+    // Analytic experiments need no artifacts.
+    match id {
+        "table2" => {
+            memory_tables::table2().print();
+            return Ok(());
+        }
+        "table8" => {
+            memory_tables::table8().print();
+            return Ok(());
+        }
+        "table9" => {
+            memory_tables::table9().print();
+            return Ok(());
+        }
+        "table12" | "fig4" => {
+            memory_tables::table12().print();
+            if id == "fig4" {
+                let csv = out_dir.join("fig4_peak_memory.csv");
+                let mut text = String::from("strategy,model,peak_gb\n");
+                for (s, pts) in memory_tables::fig4_series() {
+                    for (m, gb) in pts {
+                        text.push_str(&format!("{s},{m},{gb:.2}\n"));
+                    }
+                }
+                std::fs::write(&csv, text)?;
+                println!("wrote {}", csv.display());
+            }
+            return Ok(());
+        }
+        "fig1" => {
+            let mut t = Table::new("Fig. 1 (right) — total bytes/parameter");
+            t.header(&["strategy", "bytes/param"]);
+            for (name, b) in memory_tables::fig1_series() {
+                t.row(vec![name, b.to_string()]);
+            }
+            t.print();
+            return Ok(());
+        }
+        "all-analytic" => {
+            memory_tables::table2().print();
+            memory_tables::table9().print();
+            memory_tables::table8().print();
+            memory_tables::table12().print();
+            memory_tables::table7_bytes_model().print();
+            return Ok(());
+        }
+        _ => {}
+    }
+
+    // Training experiments.
+    let ctx = pretrain::Ctx::new(artifacts, out_dir, quick)?;
+    let table = match id {
+        "fig2" => pretrain::fig2(&ctx)?,
+        "fig3" => pretrain::fig3(&ctx)?,
+        "table3" => pretrain::table3(&ctx)?,
+        "table4" => pretrain::table4(&ctx)?,
+        "table5" => pretrain::table5(&ctx)?,
+        "table6" | "fig7to12" => pretrain::table6(&ctx)?,
+        "table7" => {
+            memory_tables::table7_bytes_model().print();
+            pretrain::table7(&ctx)?
+        }
+        "fig56" => pretrain::fig56(&ctx)?,
+        other => bail!("unknown experiment {other:?}; see `collage experiment --list`"),
+    };
+    table.print();
+    let out = out_dir.join(format!("{id}.txt"));
+    std::fs::write(&out, table.render())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! # Collage — light-weight low-precision (MCF) LLM-training framework
+//!
+//! A from-scratch reproduction of *"Collage: Light-Weight Low-Precision
+//! Strategy for LLM Training"* (Yu et al., ICML 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): fused Pallas kernels for the
+//!   multi-component-float (MCF) AdamW update — the paper's hot spot.
+//! * **Layer 2** (`python/compile/`): a GPT-style transformer and one
+//!   train-step per precision strategy, AOT-lowered to HLO text.
+//! * **Layer 3** (this crate): the training framework — configs, launcher,
+//!   data pipeline, PJRT runtime, metrics (incl. the paper's EDQ), the
+//!   analytic memory model, a data-parallel runtime, and a bit-exact pure
+//!   Rust reference of the entire MCF numerics/optimizer stack.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the HLO
+//! once; the `collage` binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a generator in
+//! [`experiments`].
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod model;
+pub mod numerics;
+pub mod optim;
+pub mod parallel;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+// pub use coordinator::trainer::{TrainOutcome, Trainer};
+// pub use coordinator::config::RunConfig;
+// pub use optim::strategy::Strategy;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

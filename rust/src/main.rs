@@ -1,0 +1,365 @@
+//! `collage` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train       pretrain a model under one precision strategy
+//!   eval        evaluate a checkpoint on the validation split
+//!   experiment  regenerate a paper table/figure (see --list)
+//!   memory      analytic peak-memory report for any (model, strategy)
+//!   inspect     dump manifest/artifact information
+//!   dp-train    data-parallel training demo (threaded workers)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use collage::coordinator::checkpoint::Checkpoint;
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::data::batches::{BatchIterator, Split};
+use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use collage::experiments;
+use collage::model::config as model_config;
+use collage::model::memory::MemoryModel;
+use collage::optim::adamw::AdamW;
+use collage::optim::strategy::Strategy;
+use collage::parallel::worker::DataParallel;
+use collage::runtime::{Manifest, Runtime};
+use collage::util::cli::ArgSpec;
+use collage::util::table::{fnum, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "collage — Collage low-precision LLM-training framework (ICML 2024 reproduction)\n\n\
+     USAGE:\n  collage <SUBCOMMAND> [OPTIONS]\n\n\
+     SUBCOMMANDS:\n\
+       train        pretrain under one precision strategy\n\
+       eval         evaluate a checkpoint\n\
+       experiment   regenerate a paper table/figure (--list to enumerate)\n\
+       memory       analytic peak-memory report\n\
+       inspect      show artifact manifest details\n\
+       dp-train     threaded data-parallel training\n\n\
+     Run `collage <SUBCOMMAND> --help` for options.\n"
+        .to_string()
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "experiment" => cmd_experiment(rest),
+        "memory" => cmd_memory(rest),
+        "inspect" => cmd_inspect(rest),
+        "dp-train" => cmd_dp_train(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n\n{}", usage()),
+    }
+}
+
+fn artifacts_opt(spec: ArgSpec) -> ArgSpec {
+    spec.opt("artifacts", "artifacts", "artifact directory (make artifacts)")
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("collage train", "Pretrain a model under one precision strategy")
+            .opt("model", "small", "model config (tiny|tiny2x|small|medium|big)")
+            .opt(
+                "strategy",
+                "collage-plus",
+                "precision strategy (a|collage-light|collage-plus|dmw|d|kahan|sr|fp32)",
+            )
+            .opt("steps", "200", "optimizer steps")
+            .opt("warmup", "20", "warmup steps")
+            .opt("lr", "1e-3", "peak learning rate")
+            .opt("beta2", "", "β₂ override (needs a matching exported artifact)")
+            .opt("seed", "1234", "rng seed")
+            .opt("eval-every", "50", "eval cadence (0 = end only)")
+            .opt("log-every", "10", "stdout cadence")
+            .opt("corpus-tokens", "1048576", "synthetic corpus size")
+            .opt("csv", "", "write per-step metrics CSV here")
+            .opt("checkpoint-dir", "", "checkpoint directory (resume if present)")
+            .opt("checkpoint-every", "0", "checkpoint cadence"),
+    );
+    let a = spec.parse(args)?;
+    let cfg = RunConfig {
+        model: a.get("model").to_string(),
+        strategy: Strategy::parse(a.get("strategy"))?,
+        steps: a.u64("steps")?,
+        warmup: a.u64("warmup")?,
+        lr: a.f64("lr")?,
+        beta2: parse_opt_f64(a.get("beta2"))?,
+        seed: a.u64("seed")?,
+        eval_every: a.u64("eval-every")?,
+        log_every: a.u64("log-every")?,
+        corpus_tokens: a.usize("corpus-tokens")?,
+        checkpoint_dir: non_empty(a.get("checkpoint-dir")),
+        checkpoint_every: a.u64("checkpoint-every")?,
+        ..Default::default()
+    };
+    let runtime = Runtime::cpu()?;
+    println!(
+        "platform={} devices={} model={} strategy={}",
+        runtime.platform(),
+        runtime.device_count(),
+        cfg.model,
+        cfg.strategy.paper_name()
+    );
+    let manifest = Manifest::load(a.get("artifacts"))?;
+    let mut trainer = Trainer::new(runtime, &manifest, cfg)?;
+    let outcome = trainer.run()?;
+    println!(
+        "done: steps={} train_ppl={:.3} val_ppl={:.3} edq_ratio={:.4} lost={:.2}% {:.1} ms/step ({:.0} tok/s)",
+        outcome.steps,
+        outcome.train_ppl,
+        outcome.val_ppl,
+        outcome.edq_ratio,
+        outcome.lost_frac * 100.0,
+        outcome.step_time * 1e3,
+        outcome.tokens_per_sec
+    );
+    let csv = a.get("csv");
+    if !csv.is_empty() {
+        outcome.log.write_csv(Path::new(csv))?;
+        println!("metrics -> {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("collage eval", "Evaluate a checkpoint on the validation split")
+            .req("checkpoint", "checkpoint file")
+            .opt("eval-batches", "16", "validation batches")
+            .opt("seed", "1234", "corpus seed (must match training)")
+            .opt("corpus-tokens", "1048576", "synthetic corpus size"),
+    );
+    let a = spec.parse(args)?;
+    let ck = Checkpoint::load(Path::new(a.get("checkpoint")))?;
+    let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load(a.get("artifacts"))?;
+    let cfg = RunConfig {
+        model: ck.model.clone(),
+        strategy: ck.state.strategy,
+        eval_batches: a.usize("eval-batches")?,
+        seed: a.u64("seed")?,
+        corpus_tokens: a.usize("corpus-tokens")?,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(runtime, &manifest, cfg)?;
+    trainer.set_theta(ck.state.theta())?;
+    let loss = trainer.evaluate()?;
+    println!(
+        "checkpoint step {} model {}: val_loss={loss:.4} val_ppl={:.3}",
+        ck.step,
+        ck.model,
+        loss.exp()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new("collage experiment", "Regenerate a paper table or figure")
+            .pos("id", "experiment id (table2..table12, fig1..fig7to12)")
+            .opt("out-dir", "runs", "output directory for CSVs/tables")
+            .flag("quick", "reduced step counts (CI mode)")
+            .flag("list", "list available experiments"),
+    );
+    let a = spec.parse(args)?;
+    if a.flag("list") || a.positional.is_empty() {
+        experiments::list().print();
+        return Ok(());
+    }
+    let id = &a.positional[0];
+    experiments::run(
+        id,
+        Path::new(a.get("artifacts")),
+        &PathBuf::from(a.get("out-dir")).join(id),
+        a.flag("quick"),
+    )
+}
+
+fn cmd_memory(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("collage memory", "Analytic peak-memory report")
+        .opt("model", "gpt-6.7b", "model (paper sizes: gpt-125m..gpt-30b, openllama-7b)")
+        .opt("micro-batch", "1", "micro batch size")
+        .opt("seq-len", "2048", "sequence length")
+        .opt("tp", "8", "tensor parallelism")
+        .opt("pp", "1", "pipeline parallelism")
+        .opt("budget-gb", "40", "per-GPU memory budget");
+    let a = spec.parse(args)?;
+    let Some(cfg) = model_config::find(a.get("model")) else {
+        bail!("unknown model {:?}", a.get("model"));
+    };
+    let mut m = MemoryModel::default();
+    m.budget_per_gpu = a.f64("budget-gb")? * (1u64 << 30) as f64;
+    let (ubs, seq, tp, pp) =
+        (a.usize("micro-batch")?, a.usize("seq-len")?, a.usize("tp")?, a.usize("pp")?);
+    let mut t = Table::new(format!(
+        "peak memory — {} (UBS={ubs}, seq={seq}, TP={tp}, PP={pp}, {} params)",
+        cfg.name,
+        cfg.n_params()
+    ));
+    t.header(&["strategy", "state GB", "act GB", "total GB", "per-GPU GB", "fits?"]);
+    for s in collage::optim::strategy::ALL_STRATEGIES {
+        let p = m.peak(cfg, s, ubs, seq, tp, pp);
+        t.row(vec![
+            s.paper_name().to_string(),
+            fnum(p.state_bytes / 1073741824.0, 1),
+            fnum(p.activation_bytes / 1073741824.0, 1),
+            fnum(p.total_gb(), 1),
+            fnum(p.per_gpu_gb(), 1),
+            (if p.per_gpu_bytes <= m.budget_per_gpu { "OK" } else { "OOM" }).to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let spec = artifacts_opt(ArgSpec::new("collage inspect", "Show artifact manifest details"));
+    let a = spec.parse(args)?;
+    let manifest = Manifest::load(a.get("artifacts"))?;
+    println!("artifact dir: {}", manifest.dir.display());
+    println!("block: {}  metric columns: {:?}", manifest.block, manifest.metric_names);
+    let mut t = Table::new("configs");
+    t.header(&["name", "vocab", "d_model", "layers", "heads", "seq", "batch", "params", "padded"]);
+    for (name, m) in &manifest.configs {
+        t.row(vec![
+            name.clone(),
+            m.vocab.to_string(),
+            m.d_model.to_string(),
+            m.n_layers.to_string(),
+            m.n_heads.to_string(),
+            m.seq_len.to_string(),
+            m.micro_batch.to_string(),
+            m.n_params.to_string(),
+            m.padded_len.to_string(),
+        ]);
+    }
+    t.print();
+    let mut t = Table::new("artifacts");
+    t.header(&["file", "kind", "config", "option", "beta2", "inputs", "outputs"]);
+    for art in &manifest.artifacts {
+        t.row(vec![
+            art.file.clone(),
+            format!("{:?}", art.kind),
+            art.config.clone(),
+            art.option.clone().unwrap_or_else(|| "-".into()),
+            art.beta2.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            art.inputs.len().to_string(),
+            art.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_dp_train(args: &[String]) -> Result<()> {
+    let spec = artifacts_opt(
+        ArgSpec::new(
+            "collage dp-train",
+            "Data-parallel training: threaded workers + deterministic all-reduce + \
+             bit-exact Rust optimizer",
+        )
+        .opt("model", "tiny", "model config")
+        .opt("strategy", "collage-plus", "precision strategy")
+        .opt("workers", "4", "data-parallel worker count")
+        .opt("steps", "100", "global steps")
+        .opt("lr", "1e-3", "peak learning rate")
+        .opt("beta2", "0.95", "AdamW β₂")
+        .opt("seed", "1234", "rng seed")
+        .opt("log-every", "10", "stdout cadence"),
+    );
+    let a = spec.parse(args)?;
+    let manifest = Manifest::load(a.get("artifacts"))?;
+    let model = a.get("model").to_string();
+    let strategy = Strategy::parse(a.get("strategy"))?;
+    let workers = a.usize("workers")?;
+    let steps = a.u64("steps")?;
+    let seed = a.u64("seed")?;
+    let meta = manifest.model(&model)?.clone();
+
+    let corpus = SyntheticCorpus::generate(CorpusConfig {
+        vocab: meta.vocab,
+        n_tokens: 1 << 20,
+        seed,
+        ..Default::default()
+    });
+    let mut iters: Vec<BatchIterator> = (0..workers)
+        .map(|w| {
+            BatchIterator::new(
+                &corpus,
+                Split::Train,
+                meta.micro_batch,
+                meta.seq_len,
+                seed + w as u64,
+            )
+        })
+        .collect::<Result<_>>()?;
+
+    let opt = AdamW::with_beta2(a.f64("beta2")?);
+    let mut dp = DataParallel::new(&manifest, &model, strategy, workers, opt, seed)?;
+    let schedule =
+        collage::coordinator::schedule::LrSchedule::new(a.f64("lr")?, steps / 10, steps, 0.1);
+    let log_every = a.u64("log-every")?;
+    println!(
+        "dp-train: {workers} workers × micro-batch {} (global batch {}) strategy {}",
+        meta.micro_batch,
+        workers * meta.micro_batch,
+        strategy.paper_name()
+    );
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let shards: Vec<_> = iters.iter_mut().map(|it| it.next_batch()).collect();
+        let r = dp.step(&shards, schedule.at(step) as f32)?;
+        if log_every > 0 && step % log_every == 0 {
+            println!(
+                "[{step}/{steps}] loss={:.4} ppl={:.3} gnorm={:.3} edq={:.3} lost={:.1}%",
+                r.loss,
+                r.loss.exp(),
+                r.grad_norm,
+                r.stats.edq.edq_ratio,
+                r.stats.lost_frac * 100.0
+            );
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let tokens = steps as f64 * (workers * meta.micro_batch * meta.seq_len) as f64;
+    println!(
+        "dp-train done: {:.1}s, {:.0} tokens/s across {workers} workers",
+        dt,
+        tokens / dt
+    );
+    Ok(())
+}
+
+fn parse_opt_f64(s: &str) -> Result<Option<f64>> {
+    if s.is_empty() {
+        Ok(None)
+    } else {
+        Ok(Some(s.parse().context("parsing float option")?))
+    }
+}
+
+fn non_empty(s: &str) -> Option<String> {
+    (!s.is_empty()).then(|| s.to_string())
+}

@@ -1,0 +1,115 @@
+//! GPT configuration zoo: the paper's model sizes (App. E.2, Table 11 +
+//! the GPT-30B of Sec. 5.3) and the runnable CPU-scale configs that have
+//! AOT artifacts.  Parameter counting follows the NeMo/GPT-NeoX layout the
+//! paper trains (untied embedding + output head, learned biases, 4× MLP).
+
+/// GPT-family architecture description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GptConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    /// Default global batch size (paper Table 11).
+    pub global_batch: usize,
+    /// Default tensor parallelism (paper Table 11).
+    pub tensor_parallel: usize,
+    /// Default learning rate (paper Table 11).
+    pub lr: f64,
+}
+
+impl GptConfig {
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Parameter count: embeddings + per-layer (2 LN + QKV + proj + MLP)
+    /// + final LN + untied head.  Matches `python/compile/model.py`.
+    pub fn n_params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let v = self.vocab as u64;
+        let ff = self.d_ff() as u64;
+        let per_layer = 2 * (2 * d)              // two layernorms (g, b)
+            + d * 3 * d + 3 * d                   // QKV + bias
+            + d * d + d                           // attention projection + bias
+            + d * ff + ff                         // MLP in + bias
+            + ff * d + d; // MLP out + bias
+        v * d                                     // embedding
+            + self.n_layers as u64 * per_layer
+            + 2 * d                               // final layernorm
+            + d * v // untied output head
+    }
+
+    /// FLOPs per token for fwd+bwd (the standard 6·N approximation).
+    pub fn flops_per_token(&self) -> f64 {
+        6.0 * self.n_params() as f64
+    }
+}
+
+/// The paper's models (Table 11, Sec. 5.3).  Vocab 50257 for GPT-2 BPE,
+/// 32000 for the LLaMA tokenizer.
+pub const PAPER_CONFIGS: &[GptConfig] = &[
+    GptConfig { name: "gpt-125m", vocab: 50257, d_model: 768, n_layers: 12, n_heads: 12, seq_len: 2048, global_batch: 1024, tensor_parallel: 1, lr: 6e-4 },
+    GptConfig { name: "gpt-1.3b", vocab: 50257, d_model: 2048, n_layers: 24, n_heads: 16, seq_len: 2048, global_batch: 1024, tensor_parallel: 8, lr: 2e-4 },
+    GptConfig { name: "gpt-2.7b", vocab: 50257, d_model: 2560, n_layers: 32, n_heads: 32, seq_len: 2048, global_batch: 512, tensor_parallel: 8, lr: 1.6e-4 },
+    GptConfig { name: "gpt-6.7b", vocab: 50257, d_model: 4096, n_layers: 32, n_heads: 32, seq_len: 2048, global_batch: 256, tensor_parallel: 8, lr: 1.2e-4 },
+    GptConfig { name: "openllama-7b", vocab: 32000, d_model: 4096, n_layers: 32, n_heads: 32, seq_len: 2048, global_batch: 256, tensor_parallel: 8, lr: 3e-4 },
+    GptConfig { name: "gpt-30b", vocab: 50257, d_model: 7168, n_layers: 56, n_heads: 56, seq_len: 2048, global_batch: 256, tensor_parallel: 8, lr: 1e-4 },
+];
+
+/// CPU-scale configs with AOT artifacts (mirror `model.CONFIGS` in python).
+pub const RUNNABLE_CONFIGS: &[GptConfig] = &[
+    GptConfig { name: "tiny", vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, seq_len: 32, global_batch: 16, tensor_parallel: 1, lr: 1e-3 },
+    GptConfig { name: "small", vocab: 512, d_model: 128, n_layers: 4, n_heads: 4, seq_len: 64, global_batch: 32, tensor_parallel: 1, lr: 6e-4 },
+    GptConfig { name: "medium", vocab: 1024, d_model: 256, n_layers: 6, n_heads: 8, seq_len: 128, global_batch: 32, tensor_parallel: 1, lr: 6e-4 },
+    GptConfig { name: "big", vocab: 4096, d_model: 512, n_layers: 8, n_heads: 8, seq_len: 256, global_batch: 16, tensor_parallel: 1, lr: 3e-4 },
+];
+
+/// Look up a config by name across both zoos.
+pub fn find(name: &str) -> Option<&'static GptConfig> {
+    PAPER_CONFIGS
+        .iter()
+        .chain(RUNNABLE_CONFIGS.iter())
+        .find(|c| c.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_are_approximately_right() {
+        // Sanity: each named size lands near its nominal parameter count.
+        let expect: &[(&str, f64)] = &[
+            ("gpt-125m", 0.125e9),
+            ("gpt-1.3b", 1.3e9),
+            ("gpt-2.7b", 2.7e9),
+            ("gpt-6.7b", 6.7e9),
+            ("openllama-7b", 7e9),
+            ("gpt-30b", 30e9),
+        ];
+        for (name, nominal) in expect {
+            let c = find(name).unwrap();
+            let n = c.n_params() as f64;
+            let ratio = n / nominal;
+            assert!(
+                (0.7..1.35).contains(&ratio),
+                "{name}: {n:.3e} params vs nominal {nominal:.3e} (ratio {ratio:.2})"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_matches_python_param_count() {
+        // python model.num_params(tiny) == 132864 (verified at export).
+        let tiny = find("tiny").unwrap();
+        assert_eq!(tiny.n_params(), 132_864);
+    }
+
+    #[test]
+    fn unknown_config_is_none() {
+        assert!(find("nope").is_none());
+    }
+}

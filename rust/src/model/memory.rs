@@ -1,0 +1,238 @@
+//! Analytic peak-memory model — the substitute for the paper's physical
+//! A100-40GB probes (Sec. 5.3, Fig. 4, Tables 8 & 12).
+//!
+//! The *training-state* term (parameters + gradients + optimizer state +
+//! MCF/master-weight extras) is exact arithmetic from Table 2 — the paper
+//! itself notes the measured savings "match the theoretical calculation in
+//! Table 2".  The *activation* term follows the Korthikanti et al. (2023)
+//! per-layer accounting, collapsed to a single calibrated coefficient
+//! (`act_factor` ≈ bytes per token per hidden unit per layer) because the
+//! paper enables flash attention + selective recompute; `overhead_per_gpu`
+//! models the CUDA/NCCL context.  Defaults are calibrated once so that
+//! option D reproduces the paper's Table-8 OOM pattern on GPT-30B; they are
+//! *not* tuned per experiment.
+
+use crate::optim::strategy::Strategy;
+
+use super::config::GptConfig;
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Peak memory breakdown for one (model, strategy, geometry) point.
+#[derive(Debug, Clone, Copy)]
+pub struct PeakMemory {
+    pub state_bytes: f64,
+    pub activation_bytes: f64,
+    pub overhead_bytes: f64,
+    pub n_gpus: usize,
+    /// Worst single-GPU occupancy in bytes.
+    pub per_gpu_bytes: f64,
+}
+
+impl PeakMemory {
+    pub fn total_bytes(&self) -> f64 {
+        self.state_bytes + self.activation_bytes + self.overhead_bytes
+    }
+
+    pub fn total_gb(&self) -> f64 {
+        self.total_bytes() / GB
+    }
+
+    pub fn per_gpu_gb(&self) -> f64 {
+        self.per_gpu_bytes / GB
+    }
+}
+
+/// The calibrated analytic model.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Activation bytes per (token × hidden × layer); ≈34 for vanilla fp16
+    /// (Korthikanti et al. Eq. 2 without the s²a term, flash attention),
+    /// doubled-ish here to cover recompute buffers + fp32 logits staging.
+    pub act_factor: f64,
+    /// Fixed per-GPU framework overhead (CUDA context, NCCL, workspaces).
+    pub overhead_per_gpu: f64,
+    /// Device memory budget (A100-40GB in the paper).
+    pub budget_per_gpu: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        // act_factor=110 ≈ Korthikanti's 34 B/(token·hidden·layer) scaled
+        // by recompute/staging duplication; overhead 0.3 GiB/GPU.  These
+        // two constants jointly reproduce the paper's Table-8 ✓/OOM
+        // boundary on GPT-30B (the feasible window for the activation
+        // coefficient is (96, 116) — the paper's grid is tight by
+        // construction).
+        MemoryModel {
+            act_factor: 110.0,
+            overhead_per_gpu: 0.3 * GB,
+            budget_per_gpu: 40.0 * GB,
+        }
+    }
+}
+
+impl MemoryModel {
+    /// Training-state bytes (params + grads + optimizer state), total
+    /// across all shards — exact Table-2 arithmetic.
+    pub fn state_bytes(&self, cfg: &GptConfig, strategy: Strategy) -> f64 {
+        strategy.bytes_per_param() as f64 * cfg.n_params() as f64
+    }
+
+    /// Activation bytes for one in-flight micro-batch set, total across
+    /// GPUs.  Pipeline stages hold `pp` micro-batches in flight (1F1B).
+    pub fn activation_bytes(
+        &self,
+        cfg: &GptConfig,
+        micro_batch: usize,
+        seq_len: usize,
+        pp: usize,
+    ) -> f64 {
+        let per_mb = self.act_factor
+            * seq_len as f64
+            * micro_batch as f64
+            * cfg.d_model as f64
+            * cfg.n_layers as f64;
+        // fp32 logits + embedding activations at the last stage.
+        let logits = 4.0 * seq_len as f64 * micro_batch as f64 * cfg.vocab as f64;
+        per_mb * pp as f64 + logits
+    }
+
+    /// Full peak-memory estimate.
+    pub fn peak(
+        &self,
+        cfg: &GptConfig,
+        strategy: Strategy,
+        micro_batch: usize,
+        seq_len: usize,
+        tp: usize,
+        pp: usize,
+    ) -> PeakMemory {
+        let n_gpus = tp * pp;
+        let state = self.state_bytes(cfg, strategy);
+        let act = self.activation_bytes(cfg, micro_batch, seq_len, pp);
+        let overhead = self.overhead_per_gpu * n_gpus as f64;
+        // Sharding is uniform across TP×PP in this model; the worst GPU
+        // carries its state shard + its activation share + overhead.
+        let per_gpu = state / n_gpus as f64 + act / n_gpus as f64 + self.overhead_per_gpu;
+        PeakMemory {
+            state_bytes: state,
+            activation_bytes: act,
+            overhead_bytes: overhead,
+            n_gpus,
+            per_gpu_bytes: per_gpu,
+        }
+    }
+
+    /// Does the configuration fit on the per-GPU budget? (Table 8)
+    pub fn fits(
+        &self,
+        cfg: &GptConfig,
+        strategy: Strategy,
+        micro_batch: usize,
+        seq_len: usize,
+        tp: usize,
+        pp: usize,
+    ) -> bool {
+        self.peak(cfg, strategy, micro_batch, seq_len, tp, pp).per_gpu_bytes
+            <= self.budget_per_gpu
+    }
+
+    /// Memory saved vs option D (Table 12 / Fig. 1-right): exact Table-2
+    /// arithmetic, independent of the activation calibration.
+    pub fn saved_vs_d(&self, cfg: &GptConfig, strategy: Strategy) -> f64 {
+        (Strategy::Fp32MasterWeights.bytes_per_param() - strategy.bytes_per_param()) as f64
+            * cfg.n_params() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::find;
+
+    #[test]
+    fn table8_oom_pattern_gpt30b() {
+        // Paper Table 8 (GPT-30B, TP=8, PP=2, A100-40GB):
+        //   A fits everywhere; B/C OOM only at (UBS=2, s=2048);
+        //   D fits only at (UBS=1, s=1024).
+        let m = MemoryModel::default();
+        let cfg = find("gpt-30b").unwrap();
+        let cases = [(1usize, 1024usize), (1, 2048), (2, 1024), (2, 2048)];
+        let expect = |s: Strategy| -> [bool; 4] {
+            match s {
+                Strategy::Bf16 => [true, true, true, true],
+                Strategy::CollageLight | Strategy::CollagePlus => [true, true, true, false],
+                Strategy::Fp32MasterWeights => [true, false, false, false],
+                _ => unreachable!(),
+            }
+        };
+        for s in [
+            Strategy::Bf16,
+            Strategy::CollageLight,
+            Strategy::CollagePlus,
+            Strategy::Fp32MasterWeights,
+        ] {
+            for (i, &(ubs, seq)) in cases.iter().enumerate() {
+                let fits = m.fits(cfg, s, ubs, seq, 8, 2);
+                assert_eq!(
+                    fits,
+                    expect(s)[i],
+                    "{}: UBS={ubs} s={seq}: got fits={fits} (per-GPU {:.1} GB)",
+                    s.paper_name(),
+                    m.peak(cfg, s, ubs, seq, 8, 2).per_gpu_gb()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn savings_scale_with_model_size() {
+        // Fig. 4 / Table 12: savings grow with N; light saves 6 B/param,
+        // plus saves 4 B/param versus option D.
+        let m = MemoryModel::default();
+        let c125 = find("gpt-125m").unwrap();
+        let c67 = find("gpt-6.7b").unwrap();
+        let s_light_125 = m.saved_vs_d(c125, Strategy::CollageLight);
+        let s_light_67 = m.saved_vs_d(c67, Strategy::CollageLight);
+        assert!(s_light_67 > 40.0 * s_light_125 / 2.0);
+        assert_eq!(
+            m.saved_vs_d(c125, Strategy::CollageLight),
+            6.0 * c125.n_params() as f64
+        );
+        assert_eq!(
+            m.saved_vs_d(c125, Strategy::CollagePlus),
+            4.0 * c125.n_params() as f64
+        );
+        assert_eq!(m.saved_vs_d(c125, Strategy::Bf16), 8.0 * c125.n_params() as f64);
+    }
+
+    #[test]
+    fn savings_percentages_near_paper_table12() {
+        // Paper Table 12 (TP=8, UBS=1, s=2048): light/plus save on average
+        // 23.8%/15.6% of option-D peak; check we land in the same band.
+        let m = MemoryModel::default();
+        let mut light = Vec::new();
+        let mut plus = Vec::new();
+        for name in ["gpt-1.3b", "gpt-2.7b", "gpt-6.7b", "openllama-7b"] {
+            let cfg = find(name).unwrap();
+            let d = m.peak(cfg, Strategy::Fp32MasterWeights, 1, 2048, 8, 1).total_bytes();
+            light.push(m.saved_vs_d(cfg, Strategy::CollageLight) / d);
+            plus.push(m.saved_vs_d(cfg, Strategy::CollagePlus) / d);
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (al, ap) = (avg(&light), avg(&plus));
+        assert!((0.15..0.35).contains(&al), "light avg saving {al}");
+        assert!((0.10..0.25).contains(&ap), "plus avg saving {ap}");
+        assert!(al > ap);
+    }
+
+    #[test]
+    fn per_gpu_includes_overhead() {
+        let m = MemoryModel::default();
+        let cfg = find("gpt-125m").unwrap();
+        let p = m.peak(cfg, Strategy::Fp32MasterWeights, 1, 2048, 1, 1);
+        assert_eq!(p.n_gpus, 1);
+        assert!(p.per_gpu_bytes > p.state_bytes); // overhead + activations on top
+    }
+}

@@ -1,0 +1,13 @@
+//! Model-architecture metadata and the analytic memory model.
+//!
+//! `config` holds the GPT config zoo — both the paper's true sizes
+//! (125M … 30B, OpenLLaMA-7B) for the memory experiments and the runnable
+//! CPU-scale sizes that have AOT artifacts.  `memory` reproduces the
+//! paper's memory accounting: Table 2 (bytes/param), Fig. 1/4, Table 8
+//! (OOM feasibility) and Table 12 (peak GB savings).
+
+pub mod config;
+pub mod memory;
+
+pub use config::{GptConfig, PAPER_CONFIGS, RUNNABLE_CONFIGS};
+pub use memory::{MemoryModel, PeakMemory};

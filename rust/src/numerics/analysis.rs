@@ -1,0 +1,171 @@
+//! Imprecision diagnostics: the lost-arithmetic predicate (Def. 3.2), the
+//! imprecision percentage (Fig. 3 left) and the paper's novel metric,
+//! **effective descent quality** (EDQ, Def. 3.3).
+
+use super::format::FloatFormat;
+
+/// Def. 3.2: the operation `F(a ∘ b) = r` is *lost* if the result collapsed
+/// onto one of its operands, i.e. `|r - a| <= ulp(a)/2` (so `r == a`) or
+/// symmetric in b.
+pub fn is_lost(fmt: &FloatFormat, a: f32, b: f32, result: f32) -> bool {
+    ((result - a).abs() as f64) <= fmt.ulp(a) / 2.0
+        || ((result - b).abs() as f64) <= fmt.ulp(b) / 2.0
+}
+
+/// The common LLM-training special case (Sec. 3.2): an update addition
+/// `θ ⊕ Δθ` is lost when the parameter did not move despite a non-zero
+/// intended update.
+pub fn update_lost(theta_old: f32, theta_new: f32, dtheta: f32) -> bool {
+    dtheta != 0.0 && theta_new == theta_old
+}
+
+/// Fraction of parameters whose update was lost (Fig. 3 left: "imprecision
+/// percentage").
+pub fn lost_fraction(theta_old: &[f32], theta_new: &[f32], dtheta: &[f32]) -> f64 {
+    assert_eq!(theta_old.len(), theta_new.len());
+    assert_eq!(theta_old.len(), dtheta.len());
+    if theta_old.is_empty() {
+        return 0.0;
+    }
+    let lost = theta_old
+        .iter()
+        .zip(theta_new)
+        .zip(dtheta)
+        .filter(|((&o, &n), &d)| update_lost(o, n, d))
+        .count();
+    lost as f64 / theta_old.len() as f64
+}
+
+/// Full EDQ report for one optimizer step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EdqReport {
+    /// ‖Δθ‖₂ — intended update norm.
+    pub update_norm: f64,
+    /// ‖Δθ̂‖₂ — effective update norm (Eq. 2).
+    pub effective_norm: f64,
+    /// ⟨Δθ/‖Δθ‖, Δθ̂⟩ (Eq. 3).  Equals `update_norm` when nothing is lost.
+    pub edq: f64,
+    /// EDQ normalized by the intended norm ∈ [~0, 1]: 1 = no loss.
+    pub edq_ratio: f64,
+}
+
+/// EDQ (Def. 3.3) of an effective update `theta_new - theta_old` versus the
+/// intended update `dtheta`.  For MCF strategies pass the *evaluated*
+/// parameters (hi + lo).
+pub fn edq(theta_old: &[f32], theta_new: &[f32], dtheta: &[f32]) -> EdqReport {
+    assert_eq!(theta_old.len(), theta_new.len());
+    assert_eq!(theta_old.len(), dtheta.len());
+    let mut un2 = 0.0f64;
+    let mut en2 = 0.0f64;
+    let mut dot = 0.0f64;
+    for ((&o, &n), &d) in theta_old.iter().zip(theta_new).zip(dtheta) {
+        let eff = n as f64 - o as f64;
+        un2 += (d as f64) * (d as f64);
+        en2 += eff * eff;
+        dot += (d as f64) * eff;
+    }
+    let update_norm = un2.sqrt();
+    let effective_norm = en2.sqrt();
+    let edq = if update_norm > 0.0 { dot / update_norm } else { 0.0 };
+    EdqReport {
+        update_norm,
+        effective_norm,
+        edq,
+        edq_ratio: if update_norm > 0.0 { edq / update_norm } else { 1.0 },
+    }
+}
+
+/// EDQ with expansion-valued parameters (hi/lo pairs evaluated in f64).
+pub fn edq_expansion(
+    theta_old_hi: &[f32],
+    theta_old_lo: &[f32],
+    theta_new_hi: &[f32],
+    theta_new_lo: &[f32],
+    dtheta: &[f32],
+) -> EdqReport {
+    let n = dtheta.len();
+    let mut un2 = 0.0f64;
+    let mut en2 = 0.0f64;
+    let mut dot = 0.0f64;
+    for i in 0..n {
+        let old = theta_old_hi[i] as f64 + theta_old_lo[i] as f64;
+        let new = theta_new_hi[i] as f64 + theta_new_lo[i] as f64;
+        let eff = new - old;
+        let d = dtheta[i] as f64;
+        un2 += d * d;
+        en2 += eff * eff;
+        dot += d * eff;
+    }
+    let update_norm = un2.sqrt();
+    EdqReport {
+        update_norm,
+        effective_norm: en2.sqrt(),
+        edq: if update_norm > 0.0 { dot / update_norm } else { 0.0 },
+        edq_ratio: if update_norm > 0.0 { dot / (update_norm * update_norm) } else { 1.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::expansion::rn_bf16;
+    use crate::numerics::format::BF16;
+
+    #[test]
+    fn lost_arithmetic_paper_example() {
+        // F(200 ⊕ 0.1) = 200 (Sec. 3.1 remark).
+        let r = rn_bf16(200.0 + 0.1);
+        assert_eq!(r, 200.0);
+        assert!(is_lost(&BF16, 200.0, 0.1, r));
+        // A balanced add is not lost.
+        let r2 = rn_bf16(1.0 + 1.0);
+        assert!(!is_lost(&BF16, 1.0, 1.0, r2));
+    }
+
+    #[test]
+    fn edq_no_loss_equals_norm() {
+        // When the effective update IS the intended update, EDQ = ‖Δθ‖.
+        let old = [1.0f32, 2.0, -3.0];
+        let d = [0.5f32, -0.25, 0.125];
+        let new: Vec<f32> = old.iter().zip(&d).map(|(o, x)| o + x).collect();
+        let r = edq(&old, &new, &d);
+        assert!((r.edq - r.update_norm).abs() < 1e-9);
+        assert!((r.edq_ratio - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edq_total_loss_is_zero() {
+        let old = [200.0f32; 4];
+        let d = [0.1f32; 4];
+        let new = old; // nothing moved
+        let r = edq(&old, &new, &d);
+        assert_eq!(r.edq, 0.0);
+        assert_eq!(r.effective_norm, 0.0);
+        assert_eq!(lost_fraction(&old, &new, &d), 1.0);
+    }
+
+    #[test]
+    fn edq_partial_loss_between() {
+        let old = [200.0f32, 1.0];
+        let d = [0.1f32, 0.1];
+        let new = [200.0f32, 1.1]; // first lost, second applied
+        let r = edq(&old, &new, &d);
+        assert!(r.edq > 0.0 && r.edq < r.update_norm);
+        assert!((lost_fraction(&old, &new, &d) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expansion_edq_sees_lo_component() {
+        // The hi components don't move but lo accumulates: EDQ(MCF) > 0
+        // while EDQ(hi only) = 0 — why Collage tracks near-optimal EDQ.
+        let old_hi = [200.0f32];
+        let old_lo = [0.0f32];
+        let d = [0.1f32];
+        let new_hi = [200.0f32];
+        let new_lo = [rn_bf16(0.1)];
+        let r = edq_expansion(&old_hi, &old_lo, &new_hi, &new_lo, &d);
+        assert!(r.edq > 0.09, "edq={}", r.edq);
+        let r_hi = edq(&old_hi, &new_hi, &d);
+        assert_eq!(r_hi.edq, 0.0);
+    }
+}

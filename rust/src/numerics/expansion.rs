@@ -1,0 +1,376 @@
+//! Multi-component-float (MCF) expansion algebra — paper Sec. 4.1 and
+//! Appendix C, bit-exact against `python/compile/kernels/ref.py`.
+//!
+//! All functions take bf16-representable (or generic-format-representable)
+//! values in f32 containers and apply the exact-then-round convention: the
+//! exact operation is computed in f64 (always exact or innocuously
+//! double-rounded for p ≤ 11 targets) and rounded once into the format.
+
+use super::format::FloatFormat;
+#[cfg(test)]
+use super::format::BF16;
+
+/// A length-2 expansion: the unevaluated sum `hi + lo` with non-overlapping
+/// components, `|lo| <= ulp(hi)/2` (Priest 1991, Def. 2.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Expansion {
+    pub hi: f32,
+    pub lo: f32,
+}
+
+impl Expansion {
+    pub fn new(hi: f32, lo: f32) -> Self {
+        Expansion { hi, lo }
+    }
+
+    pub fn zero() -> Self {
+        Expansion { hi: 0.0, lo: 0.0 }
+    }
+
+    /// The evaluated (f64) value.
+    pub fn value(&self) -> f64 {
+        self.hi as f64 + self.lo as f64
+    }
+
+    /// Exact expansion of an f64 scalar in `fmt` (paper Table 1):
+    /// `hi = RN(x)`, `lo = RN(x - hi)`.
+    pub fn split_scalar(fmt: &FloatFormat, x: f64) -> Self {
+        let hi = fmt.round_nearest_f64(x);
+        let lo = fmt.round_nearest_f64(x - hi as f64);
+        Expansion { hi, lo }
+    }
+}
+
+/// The format-rounded binary operation `RN(a ∘ b)`.
+#[inline]
+fn rn(fmt: &FloatFormat, x: f64) -> f32 {
+    fmt.round_nearest_f64(x)
+}
+
+/// Fast bf16 path used by the optimizer hot loop.
+#[inline]
+pub fn rn_bf16(x: f32) -> f32 {
+    super::format::bf16_round(x)
+}
+
+// ---------------------------------------------------------------------------
+// Basic algorithms (Appendix C), generic over format.
+// ---------------------------------------------------------------------------
+
+/// TwoSum (Alg. 2): exact `a + b = x + y` for *any* ordering of a, b.
+pub fn two_sum(fmt: &FloatFormat, a: f32, b: f32) -> (f32, f32) {
+    let x = rn(fmt, a as f64 + b as f64);
+    let b_virtual = rn(fmt, x as f64 - a as f64);
+    let a_virtual = rn(fmt, x as f64 - b_virtual as f64);
+    let b_roundoff = rn(fmt, b as f64 - b_virtual as f64);
+    let a_roundoff = rn(fmt, a as f64 - a_virtual as f64);
+    let y = rn(fmt, a_roundoff as f64 + b_roundoff as f64);
+    (x, y)
+}
+
+/// Fast2Sum (Dekker 1971; Thm 4.1): requires `|a| >= |b|`;
+/// exact `a + b = x + y` with `|y| <= ulp(x)/2`.
+pub fn fast2sum(fmt: &FloatFormat, a: f32, b: f32) -> (f32, f32) {
+    let x = rn(fmt, a as f64 + b as f64);
+    let y = rn(fmt, b as f64 - (rn(fmt, x as f64 - a as f64) as f64));
+    (x, y)
+}
+
+/// TwoProdFMA (Alg. 5): exact `a * b = x + e`.  The f64 product of two
+/// p ≤ 11-bit-significand values is exact, so the error term is computed
+/// exactly (see DESIGN.md §TwoProdFMA note).
+pub fn two_prod(fmt: &FloatFormat, a: f32, b: f32) -> (f32, f32) {
+    let prod = a as f64 * b as f64; // exact for p<=26 operands
+    let x = rn(fmt, prod);
+    let e = rn(fmt, prod - x as f64);
+    (x, e)
+}
+
+/// Split (Alg. 3): `a = a_hi + a_lo`, each with ~p/2 mantissa bits.
+/// Provided for completeness (TwoProd uses the FMA realization instead).
+pub fn split(fmt: &FloatFormat, a: f32) -> (f32, f32) {
+    let c = fmt.mantissa_bits.div_ceil(2);
+    let factor = (1u64 << c) as f64 + 1.0;
+    let t = rn(fmt, factor * a as f64);
+    let a_hi = rn(fmt, t as f64 - rn(fmt, t as f64 - a as f64) as f64);
+    let a_lo = rn(fmt, a as f64 - a_hi as f64);
+    (a_hi, a_lo)
+}
+
+/// Grow (Alg. 1): add float `a` to expansion `(x, y)`, assuming `|x| >= |a|`.
+pub fn grow(fmt: &FloatFormat, e: Expansion, a: f32) -> Expansion {
+    let (u, v) = fast2sum(fmt, e.hi, a);
+    let (u, v) = fast2sum(fmt, u, rn(fmt, e.lo as f64 + v as f64));
+    Expansion { hi: u, lo: v }
+}
+
+/// Scaling (Alg. 6): expansion × float.
+pub fn scaling(fmt: &FloatFormat, a: Expansion, v: f32) -> Expansion {
+    let (x, e) = two_prod(fmt, a.hi, v);
+    let e = rn(fmt, rn(fmt, a.lo as f64 * v as f64) as f64 + e as f64);
+    let (x, e) = fast2sum(fmt, x, e);
+    Expansion { hi: x, lo: e }
+}
+
+/// Mul (Alg. 7): expansion × expansion.
+pub fn mul(fmt: &FloatFormat, a: Expansion, b: Expansion) -> Expansion {
+    let (x, e) = two_prod(fmt, a.hi, b.hi);
+    let cross = rn(
+        fmt,
+        rn(fmt, a.hi as f64 * b.lo as f64) as f64 + rn(fmt, a.lo as f64 * b.hi as f64) as f64,
+    );
+    let e = rn(fmt, e as f64 + cross as f64);
+    let (x, e) = fast2sum(fmt, x, e);
+    Expansion { hi: x, lo: e }
+}
+
+// ---------------------------------------------------------------------------
+// bf16 fast paths (f32 arithmetic + bit-trick rounding).  These are the
+// exact same functions specialized for the optimizer hot loop; tests assert
+// bitwise agreement with the generic versions.
+// ---------------------------------------------------------------------------
+
+/// Fast2Sum in bf16 via f32 intermediates (innocuous double rounding).
+#[inline]
+pub fn fast2sum_bf16(a: f32, b: f32) -> (f32, f32) {
+    let x = rn_bf16(a + b);
+    let y = rn_bf16(b - rn_bf16(x - a));
+    (x, y)
+}
+
+/// Grow in bf16 via f32 intermediates.
+#[inline]
+pub fn grow_bf16(hi: f32, lo: f32, a: f32) -> (f32, f32) {
+    let (u, v) = fast2sum_bf16(hi, a);
+    fast2sum_bf16(u, rn_bf16(lo + v))
+}
+
+/// TwoProdFMA in bf16: the product of two bf16 values is exact in f32.
+#[inline]
+pub fn two_prod_bf16(a: f32, b: f32) -> (f32, f32) {
+    let prod = a * b; // exact: 8+8 significand bits fit in f32's 24
+    let x = rn_bf16(prod);
+    let e = rn_bf16(prod - x);
+    (x, e)
+}
+
+/// Mul in bf16 via f32 intermediates.
+#[inline]
+pub fn mul_bf16(a_hi: f32, a_lo: f32, b_hi: f32, b_lo: f32) -> (f32, f32) {
+    let (x, e) = two_prod_bf16(a_hi, b_hi);
+    let cross = rn_bf16(rn_bf16(a_hi * b_lo) + rn_bf16(a_lo * b_hi));
+    let e = rn_bf16(e + cross);
+    fast2sum_bf16(x, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_msg, gen_bf16_interesting};
+
+    fn gen_pair(rng: &mut crate::util::rng::Rng) -> (f32, f32) {
+        (gen_bf16_interesting(rng), gen_bf16_interesting(rng))
+    }
+
+    fn gen_sorted_pair(rng: &mut crate::util::rng::Rng) -> (f32, f32) {
+        let (a, b) = gen_pair(rng);
+        if a.abs() >= b.abs() {
+            (a, b)
+        } else {
+            (b, a)
+        }
+    }
+
+    #[test]
+    fn prop_two_sum_exact() {
+        // a + b == x + y exactly (f64 evaluation is exact for bf16 pairs
+        // whose exponents span < 45 binades; our generator stays within).
+        check_msg("two_sum exact", gen_pair, |&(a, b)| {
+            if !(a + b).is_finite() {
+                return Ok(());
+            }
+            let (x, y) = two_sum(&BF16, a, b);
+            let lhs = a as f64 + b as f64;
+            let rhs = x as f64 + y as f64;
+            if lhs == rhs {
+                Ok(())
+            } else {
+                Err(format!("{a:e}+{b:e}: ({x:e},{y:e}) sums to {rhs:e} != {lhs:e}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_fast2sum_exact_and_bounded() {
+        check_msg("fast2sum exact", gen_sorted_pair, |&(a, b)| {
+            if !(a + b).is_finite() {
+                return Ok(());
+            }
+            let (x, y) = fast2sum(&BF16, a, b);
+            if a as f64 + b as f64 != x as f64 + y as f64 {
+                return Err(format!("not exact: ({x:e},{y:e})"));
+            }
+            // Thm 4.1: |y| <= ulp(x)/2
+            if x != 0.0 && (y.abs() as f64) > BF16.ulp(x) / 2.0 {
+                return Err(format!("|y|={:e} > ulp(x)/2={:e}", y.abs(), BF16.ulp(x) / 2.0));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fast2sum_matches_two_sum_when_sorted() {
+        check_msg("fast2sum == two_sum (sorted)", gen_sorted_pair, |&(a, b)| {
+            if !(a + b).is_finite() {
+                return Ok(());
+            }
+            let s1 = fast2sum(&BF16, a, b);
+            let s2 = two_sum(&BF16, a, b);
+            if s1 == s2 {
+                Ok(())
+            } else {
+                Err(format!("fast {s1:?} != two {s2:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_two_prod_exact() {
+        check_msg("two_prod exact", gen_pair, |&(a, b)| {
+            let p = a as f64 * b as f64;
+            if !p.is_finite() || p != 0.0 && p.abs() < 1e-30 {
+                return Ok(()); // underflow region: error term subnormalizes
+            }
+            let (x, e) = two_prod(&BF16, a, b);
+            if !x.is_finite() {
+                return Ok(());
+            }
+            if x as f64 + e as f64 == p {
+                Ok(())
+            } else {
+                Err(format!("{a:e}*{b:e}: {x:e}+{e:e} != {p:e}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_bf16_fast_paths_match_generic() {
+        check_msg("bf16 fast == generic", gen_sorted_pair, |&(a, b)| {
+            if !(a + b).is_finite() || !(a * b).is_finite() {
+                return Ok(());
+            }
+            let f = fast2sum_bf16(a, b);
+            let g = fast2sum(&BF16, a, b);
+            if f != g {
+                return Err(format!("fast2sum {f:?} != {g:?}"));
+            }
+            let p1 = two_prod_bf16(a, b);
+            let p2 = two_prod(&BF16, a, b);
+            if p1 != p2 && !(p1.0.is_nan() || p2.0.is_nan()) {
+                return Err(format!("two_prod {p1:?} != {p2:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grow_accumulates_small_updates() {
+        // The paper's headline micro-behaviour: adding 0.1 to 200 in bf16 is
+        // lost under plain ⊕ but preserved by Grow on an expansion.
+        let mut plain = 200.0f32;
+        let mut exp = Expansion::new(200.0, 0.0);
+        let upd = BF16.round_nearest(0.1);
+        for _ in 0..64 {
+            plain = rn_bf16(plain + upd);
+            exp = grow(&BF16, exp, upd);
+        }
+        assert_eq!(plain, 200.0, "plain bf16 add should be entirely lost");
+        let truth = 200.0 + 64.0 * upd as f64;
+        assert!(
+            (exp.value() - truth).abs() < 0.5,
+            "expansion drifted: {} vs {truth}",
+            exp.value()
+        );
+    }
+
+    #[test]
+    fn split_scalar_table1() {
+        // Paper Table 1 β₂ expansions.
+        let e999 = Expansion::split_scalar(&BF16, 0.999);
+        assert_eq!(e999.hi, 1.0);
+        assert!((e999.lo + 0.001).abs() < 1e-5, "lo={}", e999.lo);
+        let e95 = Expansion::split_scalar(&BF16, 0.95);
+        assert_eq!(e95.hi, 0.94921875);
+        assert!((e95.value() - 0.95).abs() < 1e-6);
+        let e99 = Expansion::split_scalar(&BF16, 0.99);
+        assert!((e99.value() - 0.99).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mul_expansion_more_accurate_than_plain() {
+        // (β₂ expansion)·(v expansion) vs plain bf16 multiply: the paper's
+        // second-moment decay argument.
+        let b2 = Expansion::split_scalar(&BF16, 0.999);
+        let mut v_plain = 1.0f32;
+        let mut v_exp = Expansion::new(1.0, 0.0);
+        for _ in 0..200 {
+            v_plain = rn_bf16(v_plain * rn_bf16(0.999));
+            v_exp = mul(&BF16, v_exp, b2);
+        }
+        let truth = 0.999f64.powi(200);
+        assert_eq!(v_plain, 1.0, "plain bf16: 0.999 rounds to 1.0, no decay");
+        assert!(
+            (v_exp.value() - truth).abs() / truth < 0.05,
+            "expansion decay {} vs {truth}",
+            v_exp.value()
+        );
+    }
+
+    #[test]
+    fn prop_grow_preserves_sum_approximately() {
+        check_msg(
+            "grow error bounded",
+            |rng| {
+                let hi = gen_bf16_interesting(rng).abs().max(1e-10);
+                let lo = BF16.round_nearest(hi * 0.001 * (rng.f32() - 0.5));
+                let a = BF16.round_nearest(hi * rng.f32());
+                (hi, lo, a)
+            },
+            |&(hi, lo, a)| {
+                let e = grow(&BF16, Expansion::new(hi, lo), a);
+                if !e.hi.is_finite() {
+                    return Ok(());
+                }
+                let truth = hi as f64 + lo as f64 + a as f64;
+                let err = (e.value() - truth).abs();
+                // Grow's only unrecovered rounding is inside F(lo ⊕ v) and
+                // the second Fast2Sum's lo word; both are ≤ ulp(hi)/2, so
+                // a sound (loose) bound is one ulp of the result's hi word.
+                let bound = BF16.ulp(e.hi);
+                if err <= bound.max(truth.abs() * 1e-4) {
+                    Ok(())
+                } else {
+                    Err(format!("err {err:e} > bound {bound:e} (truth {truth:e})"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn expansion_components_nonoverlapping() {
+        check_msg("nonoverlap |lo| <= ulp(hi)/2", gen_sorted_pair, |&(a, b)| {
+            if !(a + b).is_finite() {
+                return Ok(());
+            }
+            let (x, y) = fast2sum(&BF16, a, b);
+            if x == 0.0 || y == 0.0 {
+                return Ok(());
+            }
+            if (y.abs() as f64) <= BF16.ulp(x) / 2.0 {
+                Ok(())
+            } else {
+                Err(format!("overlap: x={x:e} y={y:e} ulp(x)={:e}", BF16.ulp(x)))
+            }
+        });
+    }
+}

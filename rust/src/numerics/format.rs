@@ -1,0 +1,288 @@
+//! Floating-point format descriptors (paper Appendix A, Table 9) and
+//! round-to-nearest-even quantization into each format.
+
+/// A binary floating-point format described by its exponent/mantissa split
+/// (IEEE-754 style, radix 2, with subnormals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FloatFormat {
+    pub name: &'static str,
+    pub exp_bits: u32,
+    /// Explicit mantissa (significand fraction) bits; precision P = m + 1.
+    pub mantissa_bits: u32,
+    /// Storage width in bytes (for the memory model).
+    pub bytes: usize,
+    /// Whether overflow saturates to the max finite value instead of ±inf
+    /// (FP8-E4M3 per the OCP spec has no infinities).
+    pub saturating: bool,
+}
+
+/// bfloat16: 8 exponent bits, 7 mantissa bits — FP32's range, tiny precision.
+pub const BF16: FloatFormat =
+    FloatFormat { name: "bf16", exp_bits: 8, mantissa_bits: 7, bytes: 2, saturating: false };
+/// IEEE half precision.
+pub const FP16: FloatFormat =
+    FloatFormat { name: "fp16", exp_bits: 5, mantissa_bits: 10, bytes: 2, saturating: false };
+/// FP8 E4M3 (saturating, no inf).
+pub const FP8E4M3: FloatFormat =
+    FloatFormat { name: "fp8e4m3", exp_bits: 4, mantissa_bits: 3, bytes: 1, saturating: true };
+/// FP8 E5M2.
+pub const FP8E5M2: FloatFormat =
+    FloatFormat { name: "fp8e5m2", exp_bits: 5, mantissa_bits: 2, bytes: 1, saturating: false };
+/// IEEE single precision (identity quantizer over f32 containers).
+pub const FP32: FloatFormat =
+    FloatFormat { name: "fp32", exp_bits: 8, mantissa_bits: 23, bytes: 4, saturating: false };
+
+/// All formats the library knows about (Table 9 order).
+pub const ALL_FORMATS: [FloatFormat; 5] = [FP32, FP16, BF16, FP8E4M3, FP8E5M2];
+
+impl FloatFormat {
+    /// Exponent bias.
+    pub fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Minimum normal exponent e_min.
+    pub fn e_min(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Maximum normal exponent e_max.  Saturating formats (E4M3, OCP)
+    /// reclaim the all-ones exponent for finite values (only the all-ones
+    /// mantissa encodes NaN), extending the range by one binade.
+    pub fn e_max(&self) -> i32 {
+        self.bias() + if self.saturating { 1 } else { 0 }
+    }
+
+    /// Largest finite value.
+    pub fn max_finite(&self) -> f64 {
+        let frac = 2.0 - 2f64.powi(-(self.mantissa_bits as i32));
+        // E4M3 sacrifices its top mantissa code point to NaN: max is
+        // 1.75 * 2^8 = 448 rather than 1.875 * 2^8.
+        let frac = if self.saturating { frac - 2f64.powi(-(self.mantissa_bits as i32)) } else { frac };
+        frac * 2f64.powi(self.e_max())
+    }
+
+    /// Unit in the last place of `x` (Def. 3.1):
+    /// `ulp(x) = 2^(max(e, e_min) - mantissa_bits)`.
+    pub fn ulp(&self, x: f32) -> f64 {
+        if x == 0.0 {
+            return 2f64.powi(self.e_min() - self.mantissa_bits as i32);
+        }
+        let e = (x.abs() as f64).log2().floor() as i32;
+        // log2 can misround at exact powers of two boundaries; fix up.
+        let e = fixup_exponent(x.abs() as f64, e);
+        2f64.powi(e.max(self.e_min()) - self.mantissa_bits as i32)
+    }
+
+    /// `ulp(1.0)` — the Table 9 column.
+    pub fn ulp_one(&self) -> f64 {
+        2f64.powi(-(self.mantissa_bits as i32))
+    }
+
+    /// Round an f64 to this format with round-to-nearest-even, returning an
+    /// f32 container.  Handles zeros, subnormals, overflow and NaN.
+    pub fn round_nearest_f64(&self, x: f64) -> f32 {
+        if self.mantissa_bits == 23 && self.exp_bits == 8 {
+            return x as f32; // FP32: rust f64→f32 cast is RN-even
+        }
+        if x.is_nan() {
+            return f32::NAN;
+        }
+        if x == 0.0 {
+            return if x.is_sign_negative() { -0.0 } else { 0.0 };
+        }
+        if x.is_infinite() {
+            return if self.saturating {
+                (self.max_finite() as f32).copysign(x as f32)
+            } else {
+                x as f32
+            };
+        }
+        let sign = if x < 0.0 { -1.0f64 } else { 1.0 };
+        let m = x.abs();
+        let e = fixup_exponent(m, m.log2().floor() as i32);
+        // Quantum: distance between representable values in x's binade
+        // (subnormal quantum below e_min).
+        let q_exp = e.max(self.e_min()) - self.mantissa_bits as i32;
+        let quantum = 2f64.powi(q_exp);
+        let scaled = m / quantum; // exact (power-of-two divide)
+        let rounded = round_ties_even(scaled);
+        let mut v = rounded * quantum;
+        // Rounding may push into the next binade (e.g. 1.996 -> 2.0): still
+        // correct since the next binade's grid contains this value.
+        if v > self.max_finite() {
+            v = if self.saturating { self.max_finite() } else { f64::INFINITY };
+        }
+        (sign * v) as f32
+    }
+
+    /// Round an f32 to this format with RN-even (fast path for bf16).
+    pub fn round_nearest(&self, x: f32) -> f32 {
+        if self.mantissa_bits == 7 && self.exp_bits == 8 {
+            return bf16_round(x);
+        }
+        self.round_nearest_f64(x as f64)
+    }
+
+    /// True iff `x` is exactly representable in this format.
+    pub fn representable(&self, x: f32) -> bool {
+        x.is_nan() || self.round_nearest(x) == x
+    }
+
+    /// The next representable value above `x` (toward +inf).
+    pub fn next_up(&self, x: f32) -> f32 {
+        let u = self.ulp(x) as f32;
+        let mut y = self.round_nearest(x + u);
+        if y <= x {
+            y = self.round_nearest(x + 2.0 * u);
+        }
+        y
+    }
+}
+
+/// `log2().floor()` misrounds just below powers of two; nudge the exponent
+/// so that `2^e <= m < 2^(e+1)`.
+fn fixup_exponent(m: f64, mut e: i32) -> i32 {
+    if 2f64.powi(e) > m {
+        e -= 1;
+    }
+    if 2f64.powi(e + 1) <= m {
+        e += 1;
+    }
+    e
+}
+
+/// Round-half-to-even for non-negative f64 (values well below 2^52).
+fn round_ties_even(x: f64) -> f64 {
+    let f = x.floor();
+    let r = x - f;
+    if r > 0.5 {
+        f + 1.0
+    } else if r < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Fast bf16 RN-even on the raw f32 bits (the hardware algorithm).
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let bits = x.to_bits();
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    let rounded = bits.wrapping_add(rounding_bias) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_ulp_one() {
+        // Paper Table 9.
+        assert_eq!(FP32.ulp_one(), 2f64.powi(-23));
+        assert_eq!(FP16.ulp_one(), 2f64.powi(-10));
+        assert_eq!(BF16.ulp_one(), 2f64.powi(-7));
+        assert_eq!(FP8E4M3.ulp_one(), 2f64.powi(-3));
+        assert_eq!(FP8E5M2.ulp_one(), 2f64.powi(-2));
+    }
+
+    #[test]
+    fn bf16_examples_from_paper() {
+        // 0.999 -> 1.0 (Sec. 2.2); 0.1 rounds to ~0.1001 (Sec. 3.1).
+        assert_eq!(BF16.round_nearest(0.999), 1.0);
+        let r = BF16.round_nearest(0.1);
+        assert!((r - 0.1).abs() < 1e-3 && r != 0.1);
+        // ulp(200) = 1 -> 200 + 0.1 == 200 (Sec. 3.1 remark).
+        assert_eq!(BF16.ulp(200.0), 1.0);
+        assert_eq!(BF16.round_nearest(200.0 + 0.1), 200.0);
+    }
+
+    #[test]
+    fn bf16_fast_matches_generic() {
+        // The bit-trick rounding must agree with the generic f64 quantizer.
+        let mut rng = crate::util::rng::Rng::new(1, 0);
+        for _ in 0..20_000 {
+            let x = f32::from_bits(rng.next_u32());
+            if x.is_nan() {
+                continue;
+            }
+            let fast = bf16_round(x);
+            let slow = BF16.round_nearest_f64(x as f64);
+            assert!(
+                fast == slow || (fast.is_infinite() && slow.is_infinite() && fast == slow),
+                "x={x:e} bits={:08x}: fast={fast:e} slow={slow:e}",
+                x.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1 + 2^-8 is exactly between 1.0 and 1 + 2^-7 in bf16 -> even (1.0)
+        assert_eq!(BF16.round_nearest(1.0 + 2f32.powi(-8)), 1.0);
+        // 1 + 3*2^-8 is between 1+2^-7 and 1+2^-6 -> even mantissa (1+2^-6)
+        assert_eq!(BF16.round_nearest(1.0 + 3.0 * 2f32.powi(-8)), 1.0 + 2f32.powi(-6));
+    }
+
+    #[test]
+    fn e4m3_saturates() {
+        assert_eq!(FP8E4M3.max_finite(), 448.0);
+        assert_eq!(FP8E4M3.round_nearest(1e6), 448.0);
+        assert_eq!(FP8E4M3.round_nearest(-1e6), -448.0);
+        assert_eq!(FP8E5M2.round_nearest(1e6), f32::INFINITY);
+    }
+
+    #[test]
+    fn fp16_known_values() {
+        assert_eq!(FP16.round_nearest(1.0), 1.0);
+        assert_eq!(FP16.round_nearest(65504.0), 65504.0); // max finite
+        assert_eq!(FP16.round_nearest(65520.0), f32::INFINITY);
+        // subnormal: smallest positive fp16 is 2^-24
+        assert_eq!(FP16.round_nearest(2f32.powi(-24)), 2f32.powi(-24));
+        assert_eq!(FP16.round_nearest(2f32.powi(-26)), 0.0);
+    }
+
+    #[test]
+    fn representable_closed_under_round() {
+        let mut rng = crate::util::rng::Rng::new(2, 0);
+        for fmt in [BF16, FP16, FP8E4M3, FP8E5M2] {
+            for _ in 0..2000 {
+                let x = (rng.normal() as f32) * 10f32.powi(rng.below(20) as i32 - 10);
+                let r = fmt.round_nearest(x);
+                if r.is_finite() {
+                    assert!(fmt.representable(r), "{} {x:e} -> {r:e}", fmt.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subnormal_zero_and_signs() {
+        assert_eq!(BF16.round_nearest(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(BF16.round_nearest(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert!(BF16.round_nearest(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn ulp_def_matches_spacing() {
+        for x in [1.0f32, 1.5, 2.0, 3.0, 100.0, 0.007, 1e-20] {
+            let u = BF16.ulp(x) as f32;
+            let r = BF16.round_nearest(x);
+            let up = BF16.next_up(r);
+            if up.is_finite() && r > 0.0 {
+                assert!(
+                    (up - r) == u || (up - r) == 2.0 * u, // binade boundary
+                    "x={x}: spacing {} vs ulp {u}",
+                    up - r
+                );
+            }
+        }
+    }
+}

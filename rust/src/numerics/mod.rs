@@ -1,0 +1,21 @@
+//! Software floating-point substrate: format descriptors, rounding modes,
+//! lost-arithmetic analysis, and the multi-component-float (MCF) expansion
+//! algebra of the paper — a bit-exact Rust mirror of the Pallas/jnp
+//! semantics in `python/compile/kernels/ref.py`.
+//!
+//! The emulation convention everywhere: values of a low-precision format
+//! are carried in `f32` containers (every bf16/fp16/fp8 value is exactly
+//! representable in f32); each low-precision operation is the exact
+//! operation followed by an explicit round into the format.  Rounding an
+//! IEEE-correct f32/f64 intermediate into a ≤11-bit-significand format is
+//! equivalent to direct rounding (innocuous double rounding,
+//! p₂ ≥ 2·p₁ + 2), so this matches hardware arithmetic bit-for-bit.
+
+pub mod analysis;
+pub mod expansion;
+pub mod format;
+pub mod round;
+
+pub use analysis::{edq, lost_fraction, EdqReport};
+pub use expansion::Expansion;
+pub use format::{FloatFormat, BF16, FP16, FP32, FP8E4M3, FP8E5M2};

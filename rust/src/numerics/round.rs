@@ -1,0 +1,118 @@
+//! Rounding modes beyond RN-even: stochastic rounding (paper Appendix B)
+//! and directed rounding helpers used by tests.
+
+use crate::util::rng::Rng;
+
+use super::format::FloatFormat;
+
+/// Round `x` down to the format grid (toward −inf).
+pub fn round_down(fmt: &FloatFormat, x: f64) -> f32 {
+    let r = fmt.round_nearest_f64(x);
+    if (r as f64) <= x {
+        r
+    } else {
+        prev_repr(fmt, r)
+    }
+}
+
+/// Round `x` up to the format grid (toward +inf).
+pub fn round_up(fmt: &FloatFormat, x: f64) -> f32 {
+    let r = fmt.round_nearest_f64(x);
+    if (r as f64) >= x {
+        r
+    } else {
+        next_repr(fmt, r)
+    }
+}
+
+fn next_repr(fmt: &FloatFormat, x: f32) -> f32 {
+    let u = fmt.ulp(x) as f64;
+    fmt.round_nearest_f64(x as f64 + u)
+}
+
+fn prev_repr(fmt: &FloatFormat, x: f32) -> f32 {
+    // Below a power of two the downward spacing halves; stepping by the
+    // half-ulp and re-rounding lands on the previous grid point.
+    let u = fmt.ulp(x) as f64;
+    let cand = fmt.round_nearest_f64(x as f64 - u / 2.0);
+    if cand < x {
+        cand
+    } else {
+        fmt.round_nearest_f64(x as f64 - u)
+    }
+}
+
+/// Stochastic rounding (App. B): rounds to the lower neighbour `a_l` with
+/// probability `(a_u - x)/(a_u - a_l)`, upper neighbour otherwise; unbiased:
+/// `E[SR(x)] = x`.
+pub fn stochastic_round(fmt: &FloatFormat, x: f64, rng: &mut Rng) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let lo = round_down(fmt, x);
+    let hi = round_up(fmt, x);
+    if lo == hi || (lo as f64) == x {
+        return lo;
+    }
+    let p_up = (x - lo as f64) / (hi as f64 - lo as f64);
+    if rng.f64() < p_up {
+        hi
+    } else {
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::format::BF16;
+
+    #[test]
+    fn directed_bracket_the_value() {
+        let mut rng = Rng::new(3, 0);
+        for _ in 0..5000 {
+            let x = rng.normal() * 10f64.powi(rng.below(12) as i32 - 6);
+            let lo = round_down(&BF16, x);
+            let hi = round_up(&BF16, x);
+            assert!((lo as f64) <= x, "lo {lo} > x {x}");
+            assert!((hi as f64) >= x, "hi {hi} < x {x}");
+            assert!(BF16.representable(lo) && BF16.representable(hi));
+        }
+    }
+
+    #[test]
+    fn exact_values_fixed_points() {
+        let mut rng = Rng::new(4, 0);
+        for _ in 0..1000 {
+            let x = BF16.round_nearest(rng.normal() as f32) as f64;
+            assert_eq!(round_down(&BF16, x), x as f32);
+            assert_eq!(round_up(&BF16, x), x as f32);
+            assert_eq!(stochastic_round(&BF16, x, &mut rng), x as f32);
+        }
+    }
+
+    #[test]
+    fn sr_is_unbiased() {
+        // E[SR(x)] = x: average many draws of a value between grid points.
+        let mut rng = Rng::new(5, 0);
+        let x = 1.0 + 0.3 * BF16.ulp_one(); // 30% of the way to the next grid point
+        let n = 50_000;
+        let mean: f64 = (0..n)
+            .map(|_| stochastic_round(&BF16, x, &mut rng) as f64)
+            .sum::<f64>()
+            / n as f64;
+        let err = (mean - x).abs() / BF16.ulp_one();
+        assert!(err < 0.02, "bias {err} ulp");
+    }
+
+    #[test]
+    fn sr_escapes_lost_arithmetic() {
+        // 200 ⊕ 0.1 is lost under RN (Sec. 3.1) but SR moves eventually.
+        let mut rng = Rng::new(6, 0);
+        let mut x = 200.0f32;
+        for _ in 0..1000 {
+            x = stochastic_round(&BF16, x as f64 + 0.1, &mut rng);
+        }
+        assert!(x > 200.0, "SR never rounded up");
+    }
+}

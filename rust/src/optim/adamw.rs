@@ -1,0 +1,490 @@
+//! AdamW under every precision strategy (paper Algorithm 2) — the pure-Rust
+//! reference, op-for-op identical to `python/compile/kernels/ref.py` so the
+//! HLO artifacts can be cross-validated bitwise.
+//!
+//! Elementwise tensor math is emulated bf16 (f32 container + explicit
+//! round after every op); scalars (β₁, 1-β₂, bias corrections, lr, ε, λ)
+//! stay in high precision per the paper's rule of thumb (Sec. 4.2 / App. D).
+
+use crate::numerics::analysis::{edq, edq_expansion, EdqReport};
+use crate::numerics::expansion::{grow_bf16, mul_bf16, rn_bf16};
+use crate::util::rng::Rng;
+
+use super::state::OptimState;
+use super::strategy::Strategy;
+
+/// AdamW hyper-parameters (paper App. E defaults).
+///
+/// β values are stored in f64 and narrowed exactly where the Python train
+/// steps narrow them, so the two implementations consume bit-identical
+/// scalars (see the scalar-semantics notes on each use site).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamW {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamW {
+    fn default() -> Self {
+        AdamW { beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 }
+    }
+}
+
+/// Per-step diagnostics (feeds Fig. 2/3 and the Table 6 ablations).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    pub edq: EdqReport,
+    /// Fraction of parameters with a lost update (hi component unchanged).
+    pub lost_frac: f64,
+    /// ‖θ_eff‖₂ after the step (Fig. 2 left).
+    pub param_norm: f64,
+}
+
+impl AdamW {
+    pub fn with_beta2(beta2: f64) -> Self {
+        AdamW { beta2, ..Default::default() }
+    }
+
+    /// β₂ as its exact bf16 expansion (paper Table 1), computed through
+    /// f32 exactly as `ref.pack_scalars` does.
+    pub fn beta2_expansion(&self) -> (f32, f32) {
+        let beta2_f = self.beta2 as f32;
+        let hi = rn_bf16(beta2_f);
+        let lo = rn_bf16(beta2_f - hi);
+        (hi, lo)
+    }
+
+    /// Bias corrections `1 - βᵗ` in f32 (computed in f64, single-rounded —
+    /// the "scalar math in high precision" rule).  The coordinator computes
+    /// the same values and feeds them to the HLO artifact as inputs, so
+    /// both implementations consume bit-identical scalars.
+    pub fn bias_corrections(&self, t: u64) -> (f32, f32) {
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        (bc1 as f32, bc2 as f32)
+    }
+
+    /// One optimizer step: consumes the (clipped, storage-rounded) gradient
+    /// and advances `state` in place.  `t` is 1-based.  `rng` is only used
+    /// by [`Strategy::StochasticRounding`].
+    pub fn step(
+        &self,
+        state: &mut OptimState,
+        g: &[f32],
+        lr: f32,
+        t: u64,
+        rng: &mut Rng,
+    ) -> StepStats {
+        assert_eq!(g.len(), state.n, "gradient length mismatch");
+        let strategy = state.strategy;
+        let (bc1, bc2) = self.bias_corrections(t);
+        let (b2hi, b2lo) = self.beta2_expansion();
+        // bf16-path scalars: narrowed to f32 first, then subtracted in f32
+        // (mirrors `ref.pack_scalars`: jnp.float32(1.0) - beta_f32).
+        let beta1_f = self.beta1 as f32;
+        let beta2_f = self.beta2 as f32;
+        let one_m_beta1 = 1.0f32 - beta1_f;
+        let one_m_beta2 = 1.0f32 - beta2_f;
+        // fp32-path scalars: python computes `1.0 - beta` in f64 and lets
+        // tracing narrow the literal (mirrors `_fp32_adamw_delta`).
+        let one_m_beta1_hp = (1.0f64 - self.beta1) as f32;
+        let one_m_beta2_hp = (1.0f64 - self.beta2) as f32;
+        let n = state.n;
+
+        // Snapshot the effective parameter for EDQ (hi+lo or MW).
+        let theta_old_hi: Vec<f32> = state.theta().to_vec();
+        let theta_old_lo: Option<Vec<f32>> = state.get("dtheta_c").map(|v| v.to_vec());
+        let mw_old: Option<Vec<f32>> = state.get("mw").map(|v| v.to_vec());
+
+        let mut dtheta = vec![0.0f32; n];
+
+        match strategy {
+            Strategy::Bf16 | Strategy::Kahan | Strategy::StochasticRounding => {
+                let vecs = state.vecs_mut();
+                // layout: Bf16/SR = [theta, m, v]; Kahan = [theta, c, m, v]
+                let (theta_i, c_i, m_i, v_i) = if strategy == Strategy::Kahan {
+                    (0, Some(1), 2, 3)
+                } else {
+                    (0, None, 1, 2)
+                };
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new = rn_bf16(rn_bf16(vecs[m_i][k] * beta1_f)
+                        + rn_bf16(gk * one_m_beta1));
+                    let g2 = rn_bf16(gk * gk);
+                    let v_new =
+                        rn_bf16(rn_bf16(vecs[v_i][k] * b2hi) + rn_bf16(g2 * one_m_beta2));
+                    let vh = rn_bf16(v_new / bc2);
+                    let dt = delta_theta_bf16(
+                        vecs[theta_i][k], m_new, vh, bc1, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    vecs[m_i][k] = m_new;
+                    vecs[v_i][k] = v_new;
+                    match strategy {
+                        Strategy::Bf16 => {
+                            vecs[theta_i][k] = rn_bf16(vecs[theta_i][k] + dt);
+                        }
+                        Strategy::Kahan => {
+                            let ci = c_i.unwrap();
+                            let d = rn_bf16(dt + vecs[ci][k]);
+                            let th_new = rn_bf16(vecs[theta_i][k] + d);
+                            vecs[ci][k] = rn_bf16(d - rn_bf16(th_new - vecs[theta_i][k]));
+                            vecs[theta_i][k] = th_new;
+                        }
+                        Strategy::StochasticRounding => {
+                            let exact = vecs[theta_i][k] + dt;
+                            vecs[theta_i][k] = sr_bf16_bits(exact, rng);
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+
+            Strategy::CollageLight => {
+                let vecs = state.vecs_mut(); // [theta, dtheta_c, m, v]
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new =
+                        rn_bf16(rn_bf16(vecs[2][k] * beta1_f) + rn_bf16(gk * one_m_beta1));
+                    let g2 = rn_bf16(gk * gk);
+                    let v_new = rn_bf16(rn_bf16(vecs[3][k] * b2hi) + rn_bf16(g2 * one_m_beta2));
+                    let vh = rn_bf16(v_new / bc2);
+                    let dt = delta_theta_bf16(
+                        vecs[0][k], m_new, vh, bc1, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    let (th, dc) = grow_bf16(vecs[0][k], vecs[1][k], dt);
+                    vecs[0][k] = th;
+                    vecs[1][k] = dc;
+                    vecs[2][k] = m_new;
+                    vecs[3][k] = v_new;
+                }
+            }
+
+            Strategy::CollagePlus => {
+                let vecs = state.vecs_mut(); // [theta, dtheta_c, m, v, dv]
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new =
+                        rn_bf16(rn_bf16(vecs[2][k] * beta1_f) + rn_bf16(gk * one_m_beta1));
+                    let g2 = rn_bf16(gk * gk);
+                    let incr = rn_bf16(g2 * one_m_beta2);
+                    // (v, δv) ← Grow(Mul((v, δv), (β₂, δβ₂)), incr)
+                    let (vx, ve) = mul_bf16(vecs[3][k], vecs[4][k], b2hi, b2lo);
+                    let (v_new, dv_new) = grow_bf16(vx, ve, incr);
+                    let vh = rn_bf16((v_new + dv_new) / bc2);
+                    let dt = delta_theta_bf16(
+                        vecs[0][k], m_new, vh, bc1, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    let (th, dc) = grow_bf16(vecs[0][k], vecs[1][k], dt);
+                    vecs[0][k] = th;
+                    vecs[1][k] = dc;
+                    vecs[2][k] = m_new;
+                    vecs[3][k] = v_new;
+                    vecs[4][k] = dv_new;
+                }
+            }
+
+            Strategy::Fp32Optim => {
+                let vecs = state.vecs_mut(); // [theta(bf16), m(f32), v(f32)]
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new = beta1_f * vecs[1][k] + one_m_beta1_hp * gk;
+                    let v_new = beta2_f * vecs[2][k] + one_m_beta2_hp * (gk * gk);
+                    let dt = delta_theta_fp32(
+                        vecs[0][k], m_new, v_new, bc1, bc2, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    vecs[1][k] = m_new;
+                    vecs[2][k] = v_new;
+                    // fp32 math, bf16 storage: the final round is the leak.
+                    vecs[0][k] = rn_bf16(vecs[0][k] + dt);
+                }
+            }
+
+            Strategy::Fp32MasterWeights => {
+                let vecs = state.vecs_mut(); // [theta(bf16), m, v, mw]
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new = beta1_f * vecs[1][k] + one_m_beta1_hp * gk;
+                    let v_new = beta2_f * vecs[2][k] + one_m_beta2_hp * (gk * gk);
+                    let dt = delta_theta_fp32(
+                        vecs[3][k], m_new, v_new, bc1, bc2, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    vecs[1][k] = m_new;
+                    vecs[2][k] = v_new;
+                    vecs[3][k] += dt; // master weights: nothing lost
+                    vecs[0][k] = rn_bf16(vecs[3][k]); // bf16 working copy
+                }
+            }
+
+            Strategy::Fp32 => {
+                let vecs = state.vecs_mut(); // [theta(f32), m, v]
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new = beta1_f * vecs[1][k] + one_m_beta1_hp * gk;
+                    let v_new = beta2_f * vecs[2][k] + one_m_beta2_hp * (gk * gk);
+                    let dt = delta_theta_fp32(
+                        vecs[0][k], m_new, v_new, bc1, bc2, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    vecs[1][k] = m_new;
+                    vecs[2][k] = v_new;
+                    vecs[0][k] += dt;
+                }
+            }
+        }
+
+        // ---- diagnostics ---------------------------------------------------
+        let report = match strategy {
+            Strategy::CollageLight | Strategy::CollagePlus => {
+                let lo_old = theta_old_lo.as_ref().unwrap();
+                edq_expansion(
+                    &theta_old_hi,
+                    lo_old,
+                    state.theta(),
+                    state.get("dtheta_c").unwrap(),
+                    &dtheta,
+                )
+            }
+            Strategy::Fp32MasterWeights => {
+                edq(mw_old.as_ref().unwrap(), state.get("mw").unwrap(), &dtheta)
+            }
+            _ => edq(&theta_old_hi, state.theta(), &dtheta),
+        };
+        // lost_frac on the *effective* parameter: an update absorbed into
+        // δθ (or fp32 MW) is captured, not lost (matches optim.py
+        // _metrics; Def. 3.2 applied to the strategy's true state).
+        let old_eff: Vec<f64> = match strategy {
+            Strategy::CollageLight | Strategy::CollagePlus => {
+                let lo_old = theta_old_lo.as_ref().unwrap();
+                theta_old_hi
+                    .iter()
+                    .zip(lo_old)
+                    .map(|(&h, &l)| h as f64 + l as f64)
+                    .collect()
+            }
+            Strategy::Fp32MasterWeights => {
+                mw_old.as_ref().unwrap().iter().map(|&x| x as f64).collect()
+            }
+            _ => theta_old_hi.iter().map(|&x| x as f64).collect(),
+        };
+        let new_eff = state.theta_effective();
+        let lost = dtheta
+            .iter()
+            .zip(old_eff.iter().zip(&new_eff))
+            .filter(|(&d, (o, n))| d != 0.0 && **o == **n)
+            .count() as f64
+            / n as f64;
+        let pn = new_eff.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        StepStats { edq: report, lost_frac: lost, param_norm: pn }
+    }
+}
+
+/// Δθ in emulated bf16 (Alg. 2 line 12 — weight decay *inside* the update,
+/// the paper's fix for the weight-decay lost-arithmetic issue).
+#[inline]
+fn delta_theta_bf16(theta: f32, m_new: f32, v_hat: f32, bc1: f32, lr: f32, eps: f32, wd: f32) -> f32 {
+    let m_hat = rn_bf16(m_new / bc1);
+    let denom = rn_bf16(rn_bf16(v_hat.sqrt()) + eps);
+    let t1 = rn_bf16(m_hat / denom);
+    let t2 = rn_bf16(theta * wd);
+    rn_bf16(-lr * rn_bf16(t1 + t2))
+}
+
+/// Δθ in plain fp32 (options D / D⁻ᴹᵂ / fp32).
+#[inline]
+fn delta_theta_fp32(
+    theta_ref: f32,
+    m_new: f32,
+    v_new: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+    wd: f32,
+) -> f32 {
+    let m_hat = m_new / bc1;
+    let v_hat = v_new / bc2;
+    -lr * (m_hat / (v_hat.sqrt() + eps) + wd * theta_ref)
+}
+
+/// Stochastic rounding of an exact f32 sum to bf16 via the mantissa-noise
+/// bit trick (same construction as the `sr` train-step artifact; the RNG
+/// stream differs so results are statistically, not bitwise, comparable).
+#[inline]
+fn sr_bf16_bits(exact: f32, rng: &mut Rng) -> f32 {
+    if exact == 0.0 {
+        return exact;
+    }
+    let noise = (rng.next_u32() & 0xFFFF) as u32;
+    f32::from_bits(exact.to_bits().wrapping_add(noise) & 0xFFFF_0000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quantize(v: &mut [f32]) {
+        for x in v.iter_mut() {
+            *x = rn_bf16(*x);
+        }
+    }
+
+    fn setup(strategy: Strategy, n: usize) -> (OptimState, Vec<f32>, Rng) {
+        let mut rng = Rng::new(42, strategy as u64);
+        let mut theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut g: Vec<f32> = (0..n).map(|_| 0.01 * rng.normal() as f32).collect();
+        if strategy != Strategy::Fp32 {
+            quantize(&mut theta);
+            quantize(&mut g);
+        }
+        (OptimState::init(strategy, &theta), g, rng)
+    }
+
+    #[test]
+    fn all_strategies_take_steps() {
+        for strategy in super::super::strategy::ALL_STRATEGIES {
+            let (mut st, g, mut rng) = setup(strategy, 512);
+            let opt = AdamW::default();
+            let before = st.theta_effective();
+            for t in 1..=5 {
+                let stats = opt.step(&mut st, &g, 1e-3, t, &mut rng);
+                assert!(stats.param_norm.is_finite(), "{strategy}");
+            }
+            let after = st.theta_effective();
+            assert_ne!(before, after, "{strategy}: parameters never moved");
+            st.check_representable().unwrap_or_else(|e| panic!("{strategy}: {e}"));
+        }
+    }
+
+    #[test]
+    fn bf16_loses_more_than_collage() {
+        // Run identical gradient streams; EDQ(plus) > EDQ(A) after the
+        // parameters have grown relative to the updates.
+        let n = 2048;
+        let mut edqs = std::collections::HashMap::new();
+        for strategy in [Strategy::Bf16, Strategy::CollagePlus, Strategy::Fp32MasterWeights] {
+            let mut rng = Rng::new(7, 0);
+            let mut theta: Vec<f32> = (0..n).map(|_| 5.0 * rng.normal() as f32).collect();
+            quantize(&mut theta);
+            let mut st = OptimState::init(strategy, &theta);
+            let opt = AdamW::with_beta2(0.999);
+            let mut last = StepStats::default();
+            for t in 1..=30 {
+                let g: Vec<f32> = (0..n)
+                    .map(|_| rn_bf16(0.02 * rng.normal() as f32))
+                    .collect();
+                last = opt.step(&mut st, &g, 1e-4, t, &mut rng);
+            }
+            edqs.insert(strategy, (last.edq.edq_ratio, last.lost_frac));
+        }
+        let (edq_a, lost_a) = edqs[&Strategy::Bf16];
+        let (edq_c, lost_c) = edqs[&Strategy::CollagePlus];
+        let (edq_d, _) = edqs[&Strategy::Fp32MasterWeights];
+        assert!(lost_a > lost_c, "lost A {lost_a} <= lost C {lost_c}");
+        assert!(edq_c > edq_a, "EDQ plus {edq_c} <= EDQ A {edq_a}");
+        assert!((edq_d - 1.0).abs() < 1e-3, "option D should have optimal EDQ, got {edq_d}");
+    }
+
+    #[test]
+    fn beta2_999_freezes_plain_bf16_second_moment() {
+        // With β₂=0.999 (→1.0 in bf16) plain-bf16 v grows monotonically
+        // (Sec. 4.2); Collage-plus decays it correctly.
+        let opt = AdamW::with_beta2(0.999);
+        let (b2hi, b2lo) = opt.beta2_expansion();
+        assert_eq!(b2hi, 1.0);
+        assert!(b2lo < 0.0);
+        let g = [rn_bf16(0.1f32)];
+        let mut st_a = OptimState::init(Strategy::Bf16, &[1.0]);
+        let mut st_c = OptimState::init(Strategy::CollagePlus, &[1.0]);
+        let mut rng = Rng::new(0, 0);
+        for t in 1..=100 {
+            opt.step(&mut st_a, &g, 0.0, t, &mut rng);
+            opt.step(&mut st_c, &g, 0.0, t, &mut rng);
+        }
+        // constant gradient: true v converges to g² from below
+        let v_a = st_a.get("v").unwrap()[0] as f64;
+        let v_c = st_c.get("v").unwrap()[0] as f64 + st_c.get("dv").unwrap()[0] as f64;
+        let truth = 0.01 * (1.0 - 0.999f64.powi(100)); // un-bias-corrected EMA
+        // plain bf16 with β₂→1.0: v = t·(1-β₂)·g² keeps growing linearly
+        let runaway = 100.0 * 0.001 * 0.01;
+        assert!(
+            (v_a - runaway).abs() / runaway < 0.3,
+            "v_a={v_a} expected ≈ linear growth {runaway}"
+        );
+        assert!((v_c - truth).abs() / truth < 0.15, "v_c={v_c} truth={truth}");
+    }
+
+    #[test]
+    fn master_weights_never_lose() {
+        let (mut st, g, mut rng) = setup(Strategy::Fp32MasterWeights, 256);
+        let opt = AdamW::default();
+        for t in 1..=10 {
+            let stats = opt.step(&mut st, &g, 1e-3, t, &mut rng);
+            // fp32 master-weight update: EDQ ratio = 1 up to the f32
+            // rounding of mw += dt (one ulp per element).
+            assert!(
+                (stats.edq.edq_ratio - 1.0).abs() < 1e-4,
+                "MW EDQ ratio {}",
+                stats.edq.edq_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn weight_decay_inside_update_not_lost() {
+        // α·λ = 1.2e-5 ≪ ulp(1)/2: naive θ ← (1-αλ)θ is a no-op in bf16
+        // (App. D).  Our Δθ-internal decay must shrink MCF parameters.
+        let theta = vec![1.0f32; 64];
+        let opt = AdamW { weight_decay: 0.1, ..Default::default() };
+        let g = vec![0.0f32; 64];
+        let mut st = OptimState::init(Strategy::CollagePlus, &theta);
+        let mut rng = Rng::new(1, 0);
+        for t in 1..=50 {
+            opt.step(&mut st, &g, 1.2e-4, t, &mut rng);
+        }
+        let eff = st.theta_effective();
+        assert!(
+            eff[0] < 1.0 - 1e-4,
+            "weight decay was lost: theta_eff = {}",
+            eff[0]
+        );
+    }
+
+    #[test]
+    fn kahan_matches_light_under_magnitude_assumption() {
+        // App. D: Kahan is a special case of Collage-light when updates
+        // stay small relative to parameters; trajectories should be close.
+        let n = 512;
+        let mut rng = Rng::new(3, 0);
+        let mut theta: Vec<f32> = (0..n).map(|_| 3.0 + rng.normal() as f32 * 0.1).collect();
+        quantize(&mut theta);
+        let mut st_k = OptimState::init(Strategy::Kahan, &theta);
+        let mut st_l = OptimState::init(Strategy::CollageLight, &theta);
+        let opt = AdamW::default();
+        for t in 1..=40 {
+            let g: Vec<f32> = (0..n)
+                .map(|_| rn_bf16(0.01 * rng.normal() as f32))
+                .collect();
+            let mut r1 = Rng::new(9, t);
+            let mut r2 = Rng::new(9, t);
+            opt.step(&mut st_k, &g, 1e-3, t, &mut r1);
+            opt.step(&mut st_l, &g, 1e-3, t, &mut r2);
+        }
+        let ek = st_k.theta_effective();
+        let el = st_l.theta_effective();
+        let rel: f64 = ek
+            .iter()
+            .zip(&el)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / n as f64;
+        assert!(rel < 8e-3, "Kahan vs light mean divergence {rel}");
+    }
+}

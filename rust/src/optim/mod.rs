@@ -1,0 +1,21 @@
+//! Pure-Rust reference implementation of the paper's optimizer stack: every
+//! precision strategy of Table 2 as an AdamW variant over flat f32-container
+//! state vectors.
+//!
+//! This is NOT the training hot path (that's the AOT HLO artifact executed
+//! by `runtime`); it exists to
+//!   1. cross-validate the HLO train-step bitwise (integration tests),
+//!   2. drive the numerics experiments (Fig. 3, Table 6 ablations) without
+//!      a model in the loop,
+//!   3. benchmark the optimizer-only cost per strategy (Table 7's
+//!      state-bytes argument).
+
+pub mod adamw;
+pub mod generic;
+pub mod state;
+pub mod strategy;
+
+pub use adamw::{AdamW, StepStats};
+pub use generic::{GenericAdamW, GenericState, GenericStrategy};
+pub use state::OptimState;
+pub use strategy::Strategy;

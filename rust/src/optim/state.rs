@@ -1,0 +1,192 @@
+//! Optimizer state container: the named flat vectors a strategy carries
+//! between steps, stored exactly as the artifact I/O layout expects.
+
+use anyhow::{bail, Result};
+
+use super::strategy::Strategy;
+use crate::tensor::SemanticDtype;
+
+/// Flat optimizer state for one strategy: vectors in artifact I/O order.
+#[derive(Debug, Clone)]
+pub struct OptimState {
+    pub strategy: Strategy,
+    pub n: usize,
+    names: Vec<&'static str>,
+    dtypes: Vec<SemanticDtype>,
+    vecs: Vec<Vec<f32>>,
+}
+
+impl OptimState {
+    /// Initialize from the initial parameter vector: θ (and the fp32 master
+    /// copy for option D) start at `theta0`, all other vectors at zero.
+    pub fn init(strategy: Strategy, theta0: &[f32]) -> Self {
+        let spec = strategy.state_spec();
+        let mut vecs = Vec::with_capacity(spec.len());
+        for (name, _) in &spec {
+            match *name {
+                "theta" | "mw" => vecs.push(theta0.to_vec()),
+                _ => vecs.push(vec![0.0; theta0.len()]),
+            }
+        }
+        OptimState {
+            strategy,
+            n: theta0.len(),
+            names: spec.iter().map(|(n, _)| *n).collect(),
+            dtypes: spec.iter().map(|(_, d)| *d).collect(),
+            vecs,
+        }
+    }
+
+    /// Rebuild from raw vectors (checkpoint restore / artifact outputs).
+    pub fn from_vecs(strategy: Strategy, vecs: Vec<Vec<f32>>) -> Result<Self> {
+        let spec = strategy.state_spec();
+        if vecs.len() != spec.len() {
+            bail!(
+                "strategy {strategy} expects {} state vectors, got {}",
+                spec.len(),
+                vecs.len()
+            );
+        }
+        let n = vecs[0].len();
+        if vecs.iter().any(|v| v.len() != n) {
+            bail!("state vectors have inconsistent lengths");
+        }
+        Ok(OptimState {
+            strategy,
+            n,
+            names: spec.iter().map(|(nm, _)| *nm).collect(),
+            dtypes: spec.iter().map(|(_, d)| *d).collect(),
+            vecs,
+        })
+    }
+
+    pub fn names(&self) -> &[&'static str] {
+        &self.names
+    }
+
+    pub fn vecs(&self) -> &[Vec<f32>] {
+        &self.vecs
+    }
+
+    pub fn vecs_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.vecs
+    }
+
+    /// Replace all vectors (e.g. with artifact outputs).
+    pub fn set_vecs(&mut self, vecs: Vec<Vec<f32>>) -> Result<()> {
+        if vecs.len() != self.vecs.len() || vecs.iter().any(|v| v.len() != self.n) {
+            bail!("replacement state has wrong arity/length");
+        }
+        self.vecs = vecs;
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.names
+            .iter()
+            .position(|&n| n == name)
+            .map(|i| self.vecs[i].as_slice())
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Vec<f32>> {
+        self.names
+            .iter()
+            .position(|&n| n == name)
+            .map(move |i| &mut self.vecs[i])
+    }
+
+    /// The parameter vector the *model* sees (bf16 hi component).
+    pub fn theta(&self) -> &[f32] {
+        self.get("theta").expect("every strategy has theta")
+    }
+
+    /// The *effective* parameter in f64 (θ + δθ for MCF, master weights for
+    /// option D) — what EDQ and Fig. 2's parameter norm are measured on.
+    pub fn theta_effective(&self) -> Vec<f64> {
+        match self.strategy {
+            Strategy::CollageLight | Strategy::CollagePlus => {
+                let hi = self.get("theta").unwrap();
+                let lo = self.get("dtheta_c").unwrap();
+                hi.iter().zip(lo).map(|(&h, &l)| h as f64 + l as f64).collect()
+            }
+            Strategy::Fp32MasterWeights => {
+                self.get("mw").unwrap().iter().map(|&x| x as f64).collect()
+            }
+            _ => self.theta().iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Semantic memory footprint in bytes (what real bf16/fp32 storage
+    /// would occupy — the Table 2 accounting, optimizer state only).
+    pub fn semantic_bytes(&self) -> usize {
+        self.dtypes.iter().map(|d| d.bytes() * self.n).sum()
+    }
+
+    /// Check the f32-container invariant: every bf16-tagged vector holds
+    /// only bf16-representable values.
+    pub fn check_representable(&self) -> Result<()> {
+        for ((name, dtype), vec) in self.names.iter().zip(&self.dtypes).zip(&self.vecs) {
+            let fmt = dtype.format();
+            if fmt.mantissa_bits == 23 {
+                continue;
+            }
+            if let Some(idx) = vec.iter().position(|&v| !fmt.representable(v)) {
+                bail!(
+                    "state vector {name:?}[{idx}] = {:e} is not {}-representable",
+                    vec[idx],
+                    fmt.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_contents() {
+        let theta = vec![1.0f32, 2.0, 3.0];
+        let st = OptimState::init(Strategy::Fp32MasterWeights, &theta);
+        assert_eq!(st.names(), ["theta", "m", "v", "mw"]);
+        assert_eq!(st.get("mw").unwrap(), &theta[..]);
+        assert_eq!(st.get("m").unwrap(), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn semantic_bytes_table2() {
+        let theta = vec![0.0f32; 1000];
+        // Option C optimizer state: 5 bf16 vectors = 10 B/param.
+        let st = OptimState::init(Strategy::CollagePlus, &theta);
+        assert_eq!(st.semantic_bytes(), 10 * 1000);
+        // Option D: bf16 θ + 3 fp32 = 2 + 12 = 14 B/param.
+        let st = OptimState::init(Strategy::Fp32MasterWeights, &theta);
+        assert_eq!(st.semantic_bytes(), 14 * 1000);
+    }
+
+    #[test]
+    fn representability_check_fires() {
+        let mut st = OptimState::init(Strategy::Bf16, &[1.0, 2.0]);
+        assert!(st.check_representable().is_ok());
+        st.get_mut("theta").unwrap()[0] = 0.1; // not bf16-representable
+        assert!(st.check_representable().is_err());
+    }
+
+    #[test]
+    fn effective_theta_variants() {
+        let st = OptimState::from_vecs(
+            Strategy::CollageLight,
+            vec![vec![1.0], vec![0.25], vec![0.0], vec![0.0]],
+        )
+        .unwrap();
+        assert_eq!(st.theta_effective(), vec![1.25]);
+        let st = OptimState::from_vecs(
+            Strategy::Fp32MasterWeights,
+            vec![vec![1.0], vec![0.0], vec![0.0], vec![1.125]],
+        )
+        .unwrap();
+        assert_eq!(st.theta_effective(), vec![1.125]);
+    }
+}

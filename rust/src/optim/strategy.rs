@@ -1,0 +1,190 @@
+//! Precision strategies (paper Table 2 plus the Appendix-B baselines).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::SemanticDtype;
+
+/// One precision strategy for the training loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Option A: pure bf16 parameters + bf16 optimizer states.
+    Bf16,
+    /// Option B: Collage-light — MCF (θ, δθ), bf16 optimizer states.
+    CollageLight,
+    /// Option C: Collage-plus — MCF (θ, δθ) and MCF (v, δv), β₂ expansion.
+    CollagePlus,
+    /// D⁻ᴹᵂ: bf16 parameters, fp32 optimizer states, no master weights.
+    Fp32Optim,
+    /// Option D: bf16 + fp32 optimizer states + fp32 master weights.
+    Fp32MasterWeights,
+    /// BF16 + Kahan-compensated update (Zamirai et al. 2020).
+    Kahan,
+    /// BF16 + stochastic rounding at the parameter update.
+    StochasticRounding,
+    /// Full fp32 reference.
+    Fp32,
+}
+
+pub const ALL_STRATEGIES: [Strategy; 8] = [
+    Strategy::Bf16,
+    Strategy::CollageLight,
+    Strategy::CollagePlus,
+    Strategy::Fp32Optim,
+    Strategy::Fp32MasterWeights,
+    Strategy::Kahan,
+    Strategy::StochasticRounding,
+    Strategy::Fp32,
+];
+
+/// The paper's Table 2/3 comparison set, in byte/param order.
+pub const PAPER_OPTIONS: [Strategy; 5] = [
+    Strategy::Bf16,
+    Strategy::CollageLight,
+    Strategy::CollagePlus,
+    Strategy::Fp32Optim,
+    Strategy::Fp32MasterWeights,
+];
+
+impl Strategy {
+    /// The artifact-option string used by `aot.py` / the manifest.
+    pub fn option_str(&self) -> &'static str {
+        match self {
+            Strategy::Bf16 => "a",
+            Strategy::CollageLight => "collage-light",
+            Strategy::CollagePlus => "collage-plus",
+            Strategy::Fp32Optim => "dmw",
+            Strategy::Fp32MasterWeights => "d",
+            Strategy::Kahan => "kahan",
+            Strategy::StochasticRounding => "sr",
+            Strategy::Fp32 => "fp32",
+        }
+    }
+
+    /// Human name as in the paper's tables.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Strategy::Bf16 => "A (BF16)",
+            Strategy::CollageLight => "B (COLLAGE-light)",
+            Strategy::CollagePlus => "C (COLLAGE-plus)",
+            Strategy::Fp32Optim => "D-MW (BF16 + FP32Optim)",
+            Strategy::Fp32MasterWeights => "D (BF16 + FP32Optim + FP32MW)",
+            Strategy::Kahan => "BF16-Kahan",
+            Strategy::StochasticRounding => "BF16-SR",
+            Strategy::Fp32 => "FP32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "a" | "bf16" => Strategy::Bf16,
+            "b" | "collage-light" | "light" => Strategy::CollageLight,
+            "c" | "collage-plus" | "plus" => Strategy::CollagePlus,
+            "dmw" | "fp32-optim" => Strategy::Fp32Optim,
+            "d" | "fp32-mw" | "mixed" => Strategy::Fp32MasterWeights,
+            "kahan" => Strategy::Kahan,
+            "sr" | "stochastic" => Strategy::StochasticRounding,
+            "fp32" => Strategy::Fp32,
+            other => bail!(
+                "unknown strategy {other:?} (a|collage-light|collage-plus|dmw|d|kahan|sr|fp32)"
+            ),
+        })
+    }
+
+    /// State vectors (name, semantic dtype) in artifact I/O order; must
+    /// match `optim.STATE_SPECS` on the Python side.
+    pub fn state_spec(&self) -> Vec<(&'static str, SemanticDtype)> {
+        use SemanticDtype::{Bf16, Fp32};
+        match self {
+            Strategy::Bf16 | Strategy::StochasticRounding => {
+                vec![("theta", Bf16), ("m", Bf16), ("v", Bf16)]
+            }
+            Strategy::CollageLight => {
+                vec![("theta", Bf16), ("dtheta_c", Bf16), ("m", Bf16), ("v", Bf16)]
+            }
+            Strategy::CollagePlus => vec![
+                ("theta", Bf16),
+                ("dtheta_c", Bf16),
+                ("m", Bf16),
+                ("v", Bf16),
+                ("dv", Bf16),
+            ],
+            Strategy::Fp32Optim => vec![("theta", Bf16), ("m", Fp32), ("v", Fp32)],
+            Strategy::Fp32MasterWeights => {
+                vec![("theta", Bf16), ("m", Fp32), ("v", Fp32), ("mw", Fp32)]
+            }
+            Strategy::Kahan => vec![("theta", Bf16), ("c", Bf16), ("m", Bf16), ("v", Bf16)],
+            Strategy::Fp32 => vec![("theta", Fp32), ("m", Fp32), ("v", Fp32)],
+        }
+    }
+
+    /// Training-state bytes per parameter **excluding** the gradient
+    /// (which is bf16×1 = 2 bytes for every option; Table 2 counts
+    /// parameter+gradient as BF16×2).
+    pub fn state_bytes_per_param(&self) -> usize {
+        self.state_spec().iter().map(|(_, d)| d.bytes()).sum()
+    }
+
+    /// Total bytes/parameter as the paper's Table 2 counts them:
+    /// parameter + gradient + optimizer states + MCF/master-weight extras.
+    pub fn bytes_per_param(&self) -> usize {
+        let grad = match self {
+            Strategy::Fp32 => 4,
+            _ => 2,
+        };
+        self.state_bytes_per_param() + grad
+    }
+
+    /// Does the effective parameter live in an expansion (θ + δθ)?
+    pub fn is_mcf_params(&self) -> bool {
+        matches!(self, Strategy::CollageLight | Strategy::CollagePlus)
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.option_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_bytes_per_param() {
+        // Paper Table 2: A=8, B=10, C=12, D=16; D-MW = 12 (Sec. 5.1).
+        assert_eq!(Strategy::Bf16.bytes_per_param(), 8);
+        assert_eq!(Strategy::CollageLight.bytes_per_param(), 10);
+        assert_eq!(Strategy::CollagePlus.bytes_per_param(), 12);
+        assert_eq!(Strategy::Fp32MasterWeights.bytes_per_param(), 16);
+        assert_eq!(Strategy::Fp32Optim.bytes_per_param(), 12);
+        // Baselines: Kahan adds one bf16 word over A; SR adds none.
+        assert_eq!(Strategy::Kahan.bytes_per_param(), 10);
+        assert_eq!(Strategy::StochasticRounding.bytes_per_param(), 8);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ALL_STRATEGIES {
+            assert_eq!(Strategy::parse(s.option_str()).unwrap(), s);
+        }
+        assert!(Strategy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn state_spec_matches_python_layout() {
+        // Mirror of optim.STATE_SPECS ordering — the artifact I/O contract.
+        let names: Vec<&str> = Strategy::CollagePlus
+            .state_spec()
+            .iter()
+            .map(|(n, _)| *n)
+            .collect();
+        assert_eq!(names, ["theta", "dtheta_c", "m", "v", "dv"]);
+        let names: Vec<&str> = Strategy::Fp32MasterWeights
+            .state_spec()
+            .iter()
+            .map(|(n, _)| *n)
+            .collect();
+        assert_eq!(names, ["theta", "m", "v", "mw"]);
+    }
+}

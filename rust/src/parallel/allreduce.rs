@@ -1,0 +1,85 @@
+//! Gradient all-reduce for the data-parallel runtime.
+//!
+//! Implements ring-style chunked reduction over in-process "ranks"
+//! (threads).  The arithmetic is order-fixed (rank 0 → N-1 per chunk) so
+//! the reduced gradient is bit-deterministic regardless of thread timing —
+//! the property that makes DP runs reproducible and lets the leader's
+//! optimizer cross-check against single-process training.
+
+use crate::util::threadpool::parallel_map;
+
+/// Mean-reduce `grads[rank][i]` over ranks into a single vector, in a
+/// fixed summation order (deterministic), parallelized over chunks.
+pub fn allreduce_mean(grads: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!grads.is_empty());
+    let n = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == n), "rank gradient lengths differ");
+    let ranks = grads.len();
+    if ranks == 1 {
+        return grads[0].clone();
+    }
+    let chunks = num_chunks(n);
+    let chunk_len = n.div_ceil(chunks);
+    let scale = 1.0f32 / ranks as f32;
+    let parts = parallel_map(chunks, chunks.min(crate::util::threadpool::default_workers()), |c| {
+        let lo = c * chunk_len;
+        let hi = ((c + 1) * chunk_len).min(n);
+        let mut acc = vec![0.0f32; hi - lo];
+        // fixed order: rank 0, 1, 2, ... — deterministic f32 summation
+        for g in grads {
+            for (a, &x) in acc.iter_mut().zip(&g[lo..hi]) {
+                *a += x;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= scale;
+        }
+        acc
+    });
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+fn num_chunks(n: usize) -> usize {
+    // chunk to ~64KiB of f32s to balance parallelism and cache locality
+    (n / 16_384).clamp(1, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_identical_is_identity() {
+        let g = vec![vec![1.0f32, -2.0, 3.5]; 4];
+        assert_eq!(allreduce_mean(&g), vec![1.0, -2.0, 3.5]);
+    }
+
+    #[test]
+    fn mean_is_correct() {
+        let g = vec![vec![1.0f32, 0.0], vec![3.0, 2.0]];
+        assert_eq!(allreduce_mean(&g), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn deterministic_across_invocations() {
+        let mut rng = crate::util::rng::Rng::new(5, 0);
+        let grads: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..100_000).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let a = allreduce_mean(&grads);
+        let b = allreduce_mean(&grads);
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb);
+    }
+
+    #[test]
+    fn single_rank_passthrough() {
+        let g = vec![vec![7.0f32; 10]];
+        assert_eq!(allreduce_mean(&g), g[0]);
+    }
+}

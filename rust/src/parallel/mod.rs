@@ -1,0 +1,11 @@
+//! Distributed-training substrate: the TP/PP sharding planner that feeds
+//! the memory model, plus a real threaded data-parallel runtime (workers
+//! execute the fwd+bwd artifact on batch shards; the leader all-reduces
+//! gradients and applies the bit-exact Rust optimizer).
+
+pub mod allreduce;
+pub mod sharding;
+pub mod worker;
+
+pub use sharding::{ShardPlan, ShardSpec};
+pub use worker::DataParallel;

@@ -1,0 +1,161 @@
+//! Tensor/pipeline-parallel sharding planner.
+//!
+//! The paper trains with NeMo-Megatron TP=8 (and PP=2 for GPT-30B); the
+//! memory experiments (Fig. 4, Tables 8/12) depend on how state and
+//! activations shard across devices.  This planner reproduces Megatron's
+//! partitioning rules: attention/MLP weights split across TP ranks, layers
+//! split across PP stages, layernorms and embeddings replicated within a
+//! TP group (embedding vocab-sharded).
+
+use anyhow::{bail, Result};
+
+use crate::model::config::GptConfig;
+
+/// How one logical tensor is distributed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardSpec {
+    /// Fully replicated on every rank of the group.
+    Replicated,
+    /// Split along the given axis across TP ranks.
+    Split { axis: usize },
+}
+
+/// One tensor's placement in the plan.
+#[derive(Debug, Clone)]
+pub struct PlannedTensor {
+    pub name: String,
+    pub elements: u64,
+    pub spec: ShardSpec,
+    /// Pipeline stage owning this tensor.
+    pub stage: usize,
+    /// Elements held per TP rank.
+    pub per_rank: u64,
+}
+
+/// A full TP×PP placement of a GPT model.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub tp: usize,
+    pub pp: usize,
+    pub tensors: Vec<PlannedTensor>,
+}
+
+impl ShardPlan {
+    /// Plan a model onto `tp × pp` ranks (Megatron partitioning).
+    pub fn plan(cfg: &GptConfig, tp: usize, pp: usize) -> Result<Self> {
+        if tp == 0 || pp == 0 {
+            bail!("tp and pp must be >= 1");
+        }
+        if cfg.n_heads % tp != 0 {
+            bail!("n_heads {} not divisible by tp {}", cfg.n_heads, tp);
+        }
+        if cfg.n_layers % pp != 0 {
+            bail!("n_layers {} not divisible by pp {}", cfg.n_layers, pp);
+        }
+        let d = cfg.d_model as u64;
+        let v = cfg.vocab as u64;
+        let ff = cfg.d_ff() as u64;
+        let layers_per_stage = cfg.n_layers / pp;
+        let mut tensors = Vec::new();
+        let mut push = |name: String, elements: u64, spec: ShardSpec, stage: usize| {
+            let per_rank = match spec {
+                ShardSpec::Replicated => elements,
+                ShardSpec::Split { .. } => elements / tp as u64,
+            };
+            tensors.push(PlannedTensor { name, elements, spec, stage, per_rank });
+        };
+        // Embedding: vocab-sharded (Megatron), first stage.
+        push("embed".into(), v * d, ShardSpec::Split { axis: 0 }, 0);
+        for l in 0..cfg.n_layers {
+            let stage = l / layers_per_stage;
+            let p = format!("layer{l}.");
+            push(p.clone() + "ln1", 2 * d, ShardSpec::Replicated, stage);
+            // QKV: column-parallel (out features split).
+            push(p.clone() + "attn.wqkv", d * 3 * d + 3 * d, ShardSpec::Split { axis: 1 }, stage);
+            // Attention out: row-parallel (in features split).
+            push(p.clone() + "attn.wo", d * d + d, ShardSpec::Split { axis: 0 }, stage);
+            push(p.clone() + "ln2", 2 * d, ShardSpec::Replicated, stage);
+            push(p.clone() + "mlp.wi", d * ff + ff, ShardSpec::Split { axis: 1 }, stage);
+            push(p + "mlp.wo", ff * d + d, ShardSpec::Split { axis: 0 }, stage);
+        }
+        push("lnf".into(), 2 * d, ShardSpec::Replicated, pp - 1);
+        push("head".into(), d * v, ShardSpec::Split { axis: 1 }, pp - 1);
+        Ok(ShardPlan { tp, pp, tensors })
+    }
+
+    /// Total elements (sanity: equals the model's parameter count).
+    pub fn total_elements(&self) -> u64 {
+        self.tensors.iter().map(|t| t.elements).sum()
+    }
+
+    /// Parameters held by one (tp_rank, stage) device.
+    pub fn elements_on(&self, stage: usize) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.stage == stage)
+            .map(|t| t.per_rank)
+            .sum()
+    }
+
+    /// Worst-case per-device parameter share (drives per-GPU memory).
+    pub fn max_per_device(&self) -> u64 {
+        (0..self.pp).map(|s| self.elements_on(s)).max().unwrap_or(0)
+    }
+
+    /// Sharding efficiency: ideal share / worst actual share (≤ 1; lost to
+    /// replicated layernorms and stage imbalance).
+    pub fn balance(&self) -> f64 {
+        let ideal = self.total_elements() as f64 / (self.tp * self.pp) as f64;
+        ideal / self.max_per_device() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::find;
+
+    #[test]
+    fn plan_conserves_parameters() {
+        let cfg = find("gpt-1.3b").unwrap();
+        let plan = ShardPlan::plan(cfg, 8, 1).unwrap();
+        assert_eq!(plan.total_elements(), cfg.n_params());
+    }
+
+    #[test]
+    fn tp_splits_big_tensors() {
+        let cfg = find("gpt-2.7b").unwrap();
+        let plan = ShardPlan::plan(cfg, 8, 1).unwrap();
+        let qkv = plan.tensors.iter().find(|t| t.name == "layer0.attn.wqkv").unwrap();
+        assert_eq!(qkv.per_rank * 8, qkv.elements);
+        let ln = plan.tensors.iter().find(|t| t.name == "layer0.ln1").unwrap();
+        assert_eq!(ln.per_rank, ln.elements);
+    }
+
+    #[test]
+    fn pp_stages_partition_layers() {
+        let cfg = find("gpt-30b").unwrap();
+        let plan = ShardPlan::plan(cfg, 8, 2).unwrap();
+        let stage0: u64 = plan.elements_on(0);
+        let stage1: u64 = plan.elements_on(1);
+        assert!(stage0 > 0 && stage1 > 0);
+        // near-balanced: embedding vs head roughly offset each other
+        let ratio = stage0 as f64 / stage1 as f64;
+        assert!((0.8..1.25).contains(&ratio), "stage imbalance {ratio}");
+    }
+
+    #[test]
+    fn balance_close_to_one_for_big_models() {
+        let cfg = find("gpt-6.7b").unwrap();
+        let plan = ShardPlan::plan(cfg, 8, 1).unwrap();
+        assert!(plan.balance() > 0.9, "balance {}", plan.balance());
+    }
+
+    #[test]
+    fn invalid_divisions_rejected() {
+        let cfg = find("gpt-125m").unwrap(); // 12 heads
+        assert!(ShardPlan::plan(cfg, 5, 1).is_err());
+        assert!(ShardPlan::plan(cfg, 1, 5).is_err());
+        assert!(ShardPlan::plan(cfg, 0, 1).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Data-parallel training runtime.
+//!
+//! Each worker is a dedicated OS thread owning its **own** PJRT client and
+//! its own compiled copy of the fwd+bwd (`grad`) artifact — exactly the
+//! process topology of multi-GPU data parallelism (the `xla` crate's
+//! handles are not `Send`, which conveniently enforces the real-world
+//! one-client-per-rank structure).  The leader broadcasts (θ, batch-shard)
+//! jobs over channels, all-reduces the returned gradients
+//! deterministically (see `allreduce`), and applies the precision-strategy
+//! optimizer — the bit-exact Rust mirror of the fused Pallas kernel
+//! (cross-validated against the HLO in `tests/hlo_cross_check.rs`).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::batches::Batch;
+use crate::numerics::expansion::rn_bf16;
+use crate::optim::adamw::{AdamW, StepStats};
+use crate::optim::state::OptimState;
+use crate::optim::strategy::Strategy;
+use crate::runtime::{ArtifactKind, Input, Manifest, Runtime};
+use crate::util::rng::Rng;
+
+/// One job for a worker: evaluate fwd+bwd on a batch shard.
+struct Job {
+    theta: Arc<Vec<f32>>,
+    batch: Batch,
+}
+
+/// Worker → leader result.
+struct JobResult {
+    rank: usize,
+    loss: f32,
+    grad: Vec<f32>,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Job>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The data-parallel leader + persistent worker threads.
+pub struct DataParallel {
+    workers_handles: Vec<WorkerHandle>,
+    result_rx: mpsc::Receiver<Result<JobResult>>,
+    pub workers: usize,
+    pub state: OptimState,
+    pub opt: AdamW,
+    grad_clip: f32,
+    step: u64,
+    rng: Rng,
+    micro_batch: usize,
+    seq_len: usize,
+}
+
+/// Result of one data-parallel step.
+#[derive(Debug, Clone, Copy)]
+pub struct DpStepResult {
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub clip_coef: f64,
+    pub stats: StepStats,
+}
+
+impl DataParallel {
+    /// Spawn `workers` ranks.  Each rank creates its own PJRT CPU client
+    /// and compiles the grad artifact before the first step.
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        strategy: Strategy,
+        workers: usize,
+        opt: AdamW,
+        seed: u64,
+    ) -> Result<Self> {
+        let workers = workers.max(1);
+        let meta = manifest.find(model, ArtifactKind::Grad)?.clone();
+        let m = manifest.model(model)?.clone();
+        let theta0 = manifest.load_init(model)?;
+        let (result_tx, result_rx) = mpsc::channel::<Result<JobResult>>();
+
+        let mut handles = Vec::with_capacity(workers);
+        for rank in 0..workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let result_tx = result_tx.clone();
+            let manifest = manifest.clone();
+            let meta = meta.clone();
+            let b = m.micro_batch;
+            let t = m.seq_len;
+            let join = std::thread::Builder::new()
+                .name(format!("dp-worker-{rank}"))
+                .spawn(move || {
+                    // Per-rank runtime: own client, own executable.
+                    let setup = (|| -> Result<_> {
+                        let runtime = Runtime::cpu()?;
+                        let exe = runtime.load(&manifest, &meta)?;
+                        Ok((runtime, exe))
+                    })();
+                    let (_runtime, exe) = match setup {
+                        Ok(x) => x,
+                        Err(e) => {
+                            let _ = result_tx.send(Err(e.context(format!(
+                                "worker {rank}: runtime setup failed"
+                            ))));
+                            return;
+                        }
+                    };
+                    while let Ok(job) = rx.recv() {
+                        let res = (|| -> Result<JobResult> {
+                            let out = exe.execute(&[
+                                Input::I32(job.batch.tokens.clone(), vec![b, t]),
+                                Input::I32(job.batch.targets.clone(), vec![b, t]),
+                                Input::F32(job.theta.as_ref().clone(), vec![job.theta.len()]),
+                            ])?;
+                            Ok(JobResult { rank, loss: out[0][0], grad: out[1].clone() })
+                        })();
+                        if result_tx.send(res).is_err() {
+                            break; // leader gone
+                        }
+                    }
+                })
+                .context("spawning worker thread")?;
+            handles.push(WorkerHandle { tx, join: Some(join) });
+        }
+
+        Ok(DataParallel {
+            workers_handles: handles,
+            result_rx,
+            workers,
+            state: OptimState::init(strategy, &theta0),
+            opt,
+            grad_clip: 1.0,
+            step: 0,
+            rng: Rng::new(seed, 0xD9),
+            micro_batch: m.micro_batch,
+            seq_len: m.seq_len,
+        })
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn micro_batch(&self) -> usize {
+        self.micro_batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// One global step over `shards` (one micro-batch per worker).
+    pub fn step(&mut self, shards: &[Batch], lr: f32) -> Result<DpStepResult> {
+        if shards.len() != self.workers {
+            bail!("need one batch shard per worker ({} != {})", shards.len(), self.workers);
+        }
+        let theta = Arc::new(self.state.theta().to_vec());
+
+        // Fan out.
+        for (handle, batch) in self.workers_handles.iter().zip(shards) {
+            handle
+                .tx
+                .send(Job { theta: Arc::clone(&theta), batch: batch.clone() })
+                .context("worker channel closed")?;
+        }
+
+        // Gather (in rank order for determinism of the loss mean).
+        let mut per_rank: Vec<Option<(f32, Vec<f32>)>> = vec![None; self.workers];
+        for _ in 0..self.workers {
+            let r = self
+                .result_rx
+                .recv()
+                .context("all workers disconnected")??;
+            per_rank[r.rank] = Some((r.loss, r.grad));
+        }
+        let mut losses = Vec::with_capacity(self.workers);
+        let mut grads = Vec::with_capacity(self.workers);
+        for slot in per_rank {
+            let (l, g) = slot.context("missing worker result")?;
+            losses.push(l as f64);
+            grads.push(g);
+        }
+
+        // Collective: deterministic mean all-reduce.
+        let mut g = super::allreduce::allreduce_mean(&grads);
+
+        // Leader: global-norm clip in f32, quantize to bf16 storage, then
+        // the strategy optimizer (bit-exact vs the fused kernel).
+        let gnorm = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        let coef = (self.grad_clip as f64 / (gnorm + 1e-6)).min(1.0) as f32;
+        let quantize = self.state.strategy != Strategy::Fp32;
+        for x in g.iter_mut() {
+            *x *= coef;
+            if quantize {
+                *x = rn_bf16(*x);
+            }
+        }
+        self.step += 1;
+        let stats = self.opt.step(&mut self.state, &g, lr, self.step, &mut self.rng);
+        Ok(DpStepResult {
+            loss: losses.iter().sum::<f64>() / losses.len() as f64,
+            grad_norm: gnorm,
+            clip_coef: coef as f64,
+            stats,
+        })
+    }
+}
+
+impl Drop for DataParallel {
+    fn drop(&mut self) {
+        // Closing the job channels ends the worker loops.
+        for h in &mut self.workers_handles {
+            let (dead_tx, _) = mpsc::channel();
+            h.tx = dead_tx;
+            if let Some(j) = h.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}

@@ -1,0 +1,435 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json`) and the Rust coordinator.
+//!
+//! The manifest pins, per artifact: the HLO file, the model config, the
+//! precision option, the ordered input/output tensor specs, the optimizer
+//! state layout and a content hash.  The runtime refuses to execute an
+//! artifact whose on-disk HLO no longer matches its recorded hash.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// What a lowered computation does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Full fused train step: fwd + bwd + optimizer update + metrics.
+    Train,
+    /// Validation loss only.
+    Eval,
+    /// Forward + backward only (data-parallel workers).
+    Grad,
+    /// Final-position argmax (classification accuracy for Table 4).
+    Predict,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "train" => Self::Train,
+            "eval" => Self::Eval,
+            "grad" => Self::Grad,
+            "predict" => Self::Predict,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// Dtype/shape of one executable input or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "s32" | "u32"
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(IoSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_usize()?))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One row of the flat-parameter layout table.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model architecture + geometry, mirrored from `model.ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub n_params: usize,
+    pub padded_len: usize,
+    pub param_table: Vec<ParamEntry>,
+    pub init_file: Option<String>,
+}
+
+/// AdamW hyper-parameters baked into a config's train artifacts.
+#[derive(Debug, Clone, Copy)]
+pub struct OptimMeta {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub grad_clip: f64,
+}
+
+/// One lowered computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub config: String,
+    /// Precision option for train artifacts (`a`, `collage-light`, ...).
+    pub option: Option<String>,
+    /// β₂ override for ablation artifacts (None = the config default).
+    pub beta2: Option<f64>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Optimizer state vector names, in I/O order (train artifacts).
+    pub state: Vec<String>,
+    pub sha256: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block: usize,
+    pub metric_names: Vec<String>,
+    pub options: Vec<String>,
+    pub configs: BTreeMap<String, ModelMeta>,
+    pub optim: BTreeMap<String, OptimMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in v.get("configs")?.as_obj()?.iter() {
+            let mut param_table = Vec::new();
+            for row in c.get("param_table")?.as_arr()? {
+                param_table.push(ParamEntry {
+                    name: row.get("name")?.as_str()?.to_string(),
+                    shape: row
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| Ok(x.as_usize()?))
+                        .collect::<Result<_>>()?,
+                    offset: row.get("offset")?.as_usize()?,
+                });
+            }
+            configs.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    vocab: c.get("vocab")?.as_usize()?,
+                    d_model: c.get("d_model")?.as_usize()?,
+                    n_layers: c.get("n_layers")?.as_usize()?,
+                    n_heads: c.get("n_heads")?.as_usize()?,
+                    seq_len: c.get("seq_len")?.as_usize()?,
+                    micro_batch: c.get("micro_batch")?.as_usize()?,
+                    n_params: c.get("n_params")?.as_usize()?,
+                    padded_len: c.get("padded_len")?.as_usize()?,
+                    param_table,
+                    init_file: c.opt("init_file").map(|f| f.as_str().unwrap_or("").to_string()),
+                },
+            );
+        }
+
+        let mut optim = BTreeMap::new();
+        if let Ok(o) = v.get("optim") {
+            for (name, m) in o.as_obj()?.iter() {
+                optim.insert(
+                    name.clone(),
+                    OptimMeta {
+                        beta1: m.get("beta1")?.as_f64()?,
+                        beta2: m.get("beta2")?.as_f64()?,
+                        eps: m.get("eps")?.as_f64()?,
+                        weight_decay: m.get("weight_decay")?.as_f64()?,
+                        grad_clip: m.get("grad_clip")?.as_f64()?,
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let state = match a.opt("state") {
+                Some(rows) => rows
+                    .as_arr()?
+                    .iter()
+                    .map(|r| Ok(r.get("name")?.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            };
+            artifacts.push(ArtifactMeta {
+                file: a.get("file")?.as_str()?.to_string(),
+                kind: ArtifactKind::parse(a.get("kind")?.as_str()?)?,
+                config: a.get("config")?.as_str()?.to_string(),
+                option: a.opt("option").map(|o| o.as_str().unwrap_or("").to_string()),
+                beta2: a.opt("beta2").map(|b| b.as_f64().unwrap_or(f64::NAN)),
+                inputs: a
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(IoSpec::parse)
+                    .collect::<Result<_>>()?,
+                state,
+                sha256: a.get("sha256")?.as_str()?.to_string(),
+            });
+        }
+
+        let metric_names = v
+            .get("metric_names")?
+            .as_arr()?
+            .iter()
+            .map(|m| Ok(m.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let options = v
+            .get("options")?
+            .as_arr()?
+            .iter()
+            .map(|m| Ok(m.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+
+        Ok(Manifest {
+            dir,
+            block: v.get("block")?.as_usize()?,
+            metric_names,
+            options,
+            configs,
+            optim,
+            artifacts,
+        })
+    }
+
+    /// Find the train artifact for (config, option, β₂-override).
+    pub fn train(&self, config: &str, option: &str, beta2: Option<f64>) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == ArtifactKind::Train
+                    && a.config == config
+                    && a.option.as_deref() == Some(option)
+                    && match beta2 {
+                        None => a.beta2.is_none(),
+                        Some(b) => a.beta2.map(|x| (x - b).abs() < 1e-9).unwrap_or(false),
+                    }
+            })
+            .with_context(|| {
+                format!("no train artifact for config={config} option={option} beta2={beta2:?}")
+            })
+    }
+
+    /// Find the eval (or grad) artifact for a config.
+    pub fn find(&self, config: &str, kind: ArtifactKind) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.config == config)
+            .with_context(|| format!("no {kind:?} artifact for config={config}"))
+    }
+
+    pub fn model(&self, config: &str) -> Result<&ModelMeta> {
+        self.configs
+            .get(config)
+            .with_context(|| format!("config {config:?} not in manifest"))
+    }
+
+    pub fn optim(&self, config: &str) -> Result<&OptimMeta> {
+        self.optim
+            .get(config)
+            .with_context(|| format!("optim hyper-params for {config:?} not in manifest"))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Load the exported initial flat parameter vector for a config.
+    pub fn load_init(&self, config: &str) -> Result<Vec<f32>> {
+        let model = self.model(config)?;
+        let file = model
+            .init_file
+            .as_ref()
+            .with_context(|| format!("config {config} has no init file"))?;
+        read_npy_f32(&self.dir.join(file))
+    }
+}
+
+/// Minimal NPY (v1.0) reader for little-endian f32 1-D arrays — the format
+/// `aot.py` uses for the initial parameter vector.
+pub fn read_npy_f32(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("{path:?} is not an NPY file");
+    }
+    let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    let header = std::str::from_utf8(&bytes[10..10 + header_len])?;
+    if !header.contains("'descr': '<f4'") {
+        bail!("NPY {path:?}: expected little-endian f32, got header {header}");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("NPY {path:?}: fortran order not supported");
+    }
+    let data = &bytes[10 + header_len..];
+    if data.len() % 4 != 0 {
+        bail!("NPY {path:?}: data not a multiple of 4 bytes");
+    }
+    Ok(data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// SHA-256 of a byte slice (pure-Rust, used to validate artifact hashes).
+pub fn sha256_hex(data: &[u8]) -> String {
+    // FIPS 180-4 constants
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+        0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+        0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+        0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+        0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+        0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+        0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+        0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+        0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let bit_len = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bit_len.to_be_bytes());
+    let mut w = [0u32; 64];
+    for chunk in msg.chunks_exact(64) {
+        for i in 0..16 {
+            w[i] = u32::from_be_bytes([
+                chunk[4 * i],
+                chunk[4 * i + 1],
+                chunk[4 * i + 2],
+                chunk[4 * i + 3],
+            ]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        // multi-block message
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn artifact_kind_parse() {
+        assert!(ArtifactKind::parse("train").is_ok());
+        assert!(ArtifactKind::parse("bogus").is_err());
+    }
+}

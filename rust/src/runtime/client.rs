@@ -1,0 +1,102 @@
+//! PJRT client wrapper: one process-wide CPU client, a compile cache, and
+//! artifact integrity checks.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{sha256_hex, ArtifactMeta, Manifest};
+use super::executable::Executable;
+
+/// Process-wide PJRT runtime.
+///
+/// Compilation is cached by artifact file name, so repeated
+/// `Trainer`/worker construction reuses executables.  `xla::PjRtClient` is
+/// internally reference-counted and the underlying CPU client is
+/// thread-safe; the cache mutex only guards the map itself.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// Verify on-disk HLO hashes against the manifest before compiling.
+    pub verify_hashes: bool,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Arc<Self>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            verify_hashes: true,
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile one artifact (cached).
+    pub fn load(&self, manifest: &Manifest, meta: &ArtifactMeta) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&meta.file) {
+            return Ok(exe.clone());
+        }
+        let path = manifest.path(meta);
+        if self.verify_hashes {
+            let text = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+            let got = sha256_hex(&text);
+            if got != meta.sha256 {
+                bail!(
+                    "artifact {:?} hash mismatch (manifest {}, file {}): \
+                     re-run `make artifacts`",
+                    meta.file,
+                    &meta.sha256[..12],
+                    &got[..12]
+                );
+            }
+        }
+        let exe = Arc::new(self.compile_file(&path, meta.clone())?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(meta.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile an HLO-text file into an executable (uncached).
+    pub fn compile_file(&self, path: &Path, meta: ArtifactMeta) -> Result<Executable> {
+        let t0 = Instant::now();
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {path:?}"))?;
+        let dt = t0.elapsed();
+        Ok(Executable::new(exe, meta, dt))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("devices", &self.device_count())
+            .finish()
+    }
+}

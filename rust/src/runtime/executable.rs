@@ -1,0 +1,283 @@
+//! A compiled AOT artifact plus typed host-side I/O.
+//!
+//! The lowered computations all return a tuple (`return_tuple=True` at
+//! lowering); outputs are fetched as one tuple literal and split.  Inputs
+//! are staged through device buffers (`execute_b`) so repeated executions
+//! can reuse unchanged inputs (see [`Executable::execute_buffers`]).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::ArtifactMeta;
+
+/// One host-side input tensor.
+#[derive(Debug, Clone)]
+pub enum Input {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+    ScalarF32(f32),
+    ScalarU32(u32),
+}
+
+impl Input {
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Input::F32(..) | Input::ScalarF32(_) => "f32",
+            Input::I32(..) => "s32",
+            Input::U32(..) | Input::ScalarU32(_) => "u32",
+        }
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            Input::F32(_, s) | Input::I32(_, s) | Input::U32(_, s) => s.clone(),
+            Input::ScalarF32(_) | Input::ScalarU32(_) => vec![],
+        }
+    }
+
+    pub fn as_ref(&self) -> InputRef<'_> {
+        match self {
+            Input::F32(d, s) => InputRef::F32(d, s),
+            Input::I32(d, s) => InputRef::I32(d, s),
+            Input::U32(d, s) => InputRef::U32(d, s),
+            Input::ScalarF32(v) => InputRef::ScalarF32(*v),
+            Input::ScalarU32(v) => InputRef::ScalarU32(*v),
+        }
+    }
+}
+
+/// Borrowed input tensor — the zero-copy hot-path variant of [`Input`]
+/// (§Perf: the trainer's state vectors are uploaded straight from its own
+/// buffers instead of being cloned every step).
+#[derive(Debug, Clone, Copy)]
+pub enum InputRef<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    U32(&'a [u32], &'a [usize]),
+    ScalarF32(f32),
+    ScalarU32(u32),
+}
+
+impl<'a> InputRef<'a> {
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            InputRef::F32(..) | InputRef::ScalarF32(_) => "f32",
+            InputRef::I32(..) => "s32",
+            InputRef::U32(..) | InputRef::ScalarU32(_) => "u32",
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            InputRef::F32(_, s) | InputRef::I32(_, s) | InputRef::U32(_, s) => s,
+            InputRef::ScalarF32(_) | InputRef::ScalarU32(_) => &[],
+        }
+    }
+}
+
+/// Cumulative execution statistics for one executable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub exec_time: Duration,
+    pub upload_time: Duration,
+    pub download_time: Duration,
+}
+
+/// A compiled artifact bound to its manifest metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    pub compile_time: Duration,
+    stats: std::sync::Mutex<ExecStats>,
+}
+
+impl Executable {
+    pub(crate) fn new(
+        exe: xla::PjRtLoadedExecutable,
+        meta: ArtifactMeta,
+        compile_time: Duration,
+    ) -> Self {
+        Executable {
+            exe,
+            meta,
+            compile_time,
+            stats: std::sync::Mutex::new(ExecStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Upload one input to a device buffer.
+    pub fn upload(&self, input: &Input) -> Result<xla::PjRtBuffer> {
+        let client = self.exe.client();
+        let buf = match input {
+            Input::F32(data, shape) => client.buffer_from_host_buffer(data, shape, None)?,
+            Input::I32(data, shape) => client.buffer_from_host_buffer(data, shape, None)?,
+            Input::U32(data, shape) => client.buffer_from_host_buffer(data, shape, None)?,
+            Input::ScalarF32(v) => client.buffer_from_host_buffer(&[*v], &[], None)?,
+            Input::ScalarU32(v) => client.buffer_from_host_buffer(&[*v], &[], None)?,
+        };
+        Ok(buf)
+    }
+
+    /// Validate inputs against the manifest spec (shape + dtype).
+    fn check_inputs(&self, inputs: &[Input]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.file,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (got, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if got.dtype() != spec.dtype {
+                bail!(
+                    "{}: input {:?} dtype mismatch: manifest {}, got {}",
+                    self.meta.file,
+                    spec.name,
+                    spec.dtype,
+                    got.dtype()
+                );
+            }
+            if got.shape() != spec.shape {
+                bail!(
+                    "{}: input {:?} shape mismatch: manifest {:?}, got {:?}",
+                    self.meta.file,
+                    spec.name,
+                    spec.shape,
+                    got.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host inputs; returns one `Vec<f32>` per output
+    /// (scalars come back as length-1 vectors).
+    pub fn execute(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        self.check_inputs(inputs)?;
+        let refs: Vec<InputRef> = inputs.iter().map(|i| i.as_ref()).collect();
+        self.execute_unchecked(&refs)
+    }
+
+    /// Zero-copy execute with borrowed inputs (shape/dtype validated).
+    pub fn execute_refs(&self, inputs: &[InputRef]) -> Result<Vec<Vec<f32>>> {
+        self.check_input_refs(inputs)?;
+        self.execute_unchecked(inputs)
+    }
+
+    /// Hot-path execute: borrowed inputs, NO validation (the caller has
+    /// validated the layout once — e.g. the trainer at construction).
+    pub fn execute_unchecked(&self, inputs: &[InputRef]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let client = self.exe.client();
+        let buffers = inputs
+            .iter()
+            .map(|i| -> Result<xla::PjRtBuffer> {
+                Ok(match i {
+                    InputRef::F32(d, s) => client.buffer_from_host_buffer(d, s, None)?,
+                    InputRef::I32(d, s) => client.buffer_from_host_buffer(d, s, None)?,
+                    InputRef::U32(d, s) => client.buffer_from_host_buffer(d, s, None)?,
+                    InputRef::ScalarF32(v) => client.buffer_from_host_buffer(&[*v], &[], None)?,
+                    InputRef::ScalarU32(v) => client.buffer_from_host_buffer(&[*v], &[], None)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let t_up = t0.elapsed();
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().collect();
+        let out = self.execute_buffers(&refs)?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.upload_time += t_up;
+        Ok(out)
+    }
+
+    fn check_input_refs(&self, inputs: &[InputRef]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.file,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (got, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if got.dtype() != spec.dtype || got.shape() != spec.shape {
+                bail!(
+                    "{}: input {:?} mismatch: manifest {} {:?}, got {} {:?}",
+                    self.meta.file,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    got.dtype(),
+                    got.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with pre-staged device buffers (the hot path: the trainer
+    /// re-uploads only the tensors that changed since the previous step).
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let results = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {}", self.meta.file))?;
+        let t_exec = t0.elapsed();
+
+        let t1 = Instant::now();
+        let tuple = results[0][0]
+            .to_literal_sync()
+            .context("fetching result tuple")?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.file,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&self.meta.outputs) {
+            let v: Vec<f32> = lit
+                .to_vec()
+                .with_context(|| format!("reading output {:?}", spec.name))?;
+            if v.len() != spec.elements() {
+                bail!(
+                    "{}: output {:?} has {} elements, manifest says {}",
+                    self.meta.file,
+                    spec.name,
+                    v.len(),
+                    spec.elements()
+                );
+            }
+            out.push(v);
+        }
+        let t_down = t1.elapsed();
+
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.exec_time += t_exec;
+        stats.download_time += t_down;
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable")
+            .field("file", &self.meta.file)
+            .field("inputs", &self.meta.inputs.len())
+            .field("outputs", &self.meta.outputs.len())
+            .field("compile_time", &self.compile_time)
+            .finish()
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only module that touches the `xla` FFI crate; everything
+//! above it deals in plain `f32`/`i32` host vectors.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, IoSpec, Manifest, ModelMeta, ParamEntry};
+pub use client::Runtime;
+pub use executable::{Executable, Input, InputRef};

@@ -1,0 +1,135 @@
+//! Minimal host tensor: a flat `Vec<f32>` with a shape and a *semantic*
+//! storage format tag.  The runtime boundary is always f32 containers (see
+//! `numerics`); the tag records what the bytes mean for the memory model
+//! and for checkpoint round-trips.
+
+use anyhow::{bail, Result};
+
+use crate::numerics::format::{FloatFormat, BF16, FP32};
+
+/// Semantic storage dtype of an f32-containerized tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SemanticDtype {
+    Bf16,
+    Fp32,
+}
+
+impl SemanticDtype {
+    pub fn format(&self) -> FloatFormat {
+        match self {
+            SemanticDtype::Bf16 => BF16,
+            SemanticDtype::Fp32 => FP32,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.format().bytes
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "bf16" => SemanticDtype::Bf16,
+            "fp32" | "f32" => SemanticDtype::Fp32,
+            other => bail!("unknown semantic dtype {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SemanticDtype::Bf16 => "bf16",
+            SemanticDtype::Fp32 => "fp32",
+        }
+    }
+}
+
+/// A flat host tensor.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+    pub dtype: SemanticDtype,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize], dtype: SemanticDtype) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec(), dtype }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize], dtype: SemanticDtype) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { data, shape: shape.to_vec(), dtype })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Storage bytes under the semantic dtype (not the f32 container).
+    pub fn semantic_bytes(&self) -> usize {
+        self.len() * self.dtype.bytes()
+    }
+
+    /// Quantize all elements into the semantic format (idempotent).
+    pub fn quantize(&mut self) {
+        let fmt = self.dtype.format();
+        if fmt.mantissa_bits == 23 {
+            return;
+        }
+        for v in &mut self.data {
+            *v = fmt.round_nearest(*v);
+        }
+    }
+
+    /// True iff every element is representable in the semantic format —
+    /// the boundary invariant of the f32-container convention.
+    pub fn is_representable(&self) -> bool {
+        let fmt = self.dtype.format();
+        self.data.iter().all(|&v| fmt.representable(v))
+    }
+
+    /// L2 norm in f64.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_enforces_representability() {
+        let mut t = Tensor::from_vec(vec![0.1, 0.999, 1.0, -3.7], &[4], SemanticDtype::Bf16)
+            .unwrap();
+        assert!(!t.is_representable());
+        t.quantize();
+        assert!(t.is_representable());
+        assert_eq!(t.data[1], 1.0); // 0.999 -> 1.0 in bf16
+    }
+
+    #[test]
+    fn semantic_bytes_differ_from_container() {
+        let t = Tensor::zeros(&[10], SemanticDtype::Bf16);
+        assert_eq!(t.semantic_bytes(), 20);
+        let t32 = Tensor::zeros(&[10], SemanticDtype::Fp32);
+        assert_eq!(t32.semantic_bytes(), 40);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_vec(vec![1.0; 5], &[2, 3], SemanticDtype::Fp32).is_err());
+    }
+
+    #[test]
+    fn norm_matches_hand_computation() {
+        let t = Tensor::from_vec(vec![3.0, 4.0], &[2], SemanticDtype::Fp32).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,216 @@
+//! Micro-benchmark harness (no `criterion` offline): warmup + timed
+//! iterations with robust statistics, and a one-line report format shared
+//! by all `rust/benches/*.rs` targets.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Optional throughput denominator (e.g. parameters per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// items/second, when a denominator was registered.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:.2} K/s", t / 1e3),
+            Some(t) => format!("  {t:.2} /s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10} median {:>10} p10 {:>10} p90 ({} iters){}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+            self.iterations,
+            tp
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI (`COLLAGE_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if std::env::var("COLLAGE_BENCH_FAST").is_ok() {
+            b.warmup = Duration::from_millis(20);
+            b.budget = Duration::from_millis(200);
+        }
+        b
+    }
+
+    /// Time `f`, preventing the compiler from eliding it via its returned
+    /// value.  Registers and prints the result.
+    pub fn case<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.case_throughput(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Like [`Bench::case`] with a per-iteration item count for
+    /// throughput reporting.
+    pub fn case_items<T>(
+        &mut self,
+        name: impl Into<String>,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.case_throughput(name, Some(items), move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    fn case_throughput(
+        &mut self,
+        name: impl Into<String>,
+        items: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // Warmup and calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup || calib_iters < 3 {
+            f();
+            calib_iters += 1;
+            if calib_iters > self.max_iters {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        let target = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .clamp(self.min_iters, self.max_iters);
+
+        // Timed samples: split into ≤64 batches for percentile stats.
+        let batches = 64u64.min(target);
+        let per_batch = (target / batches).max(1);
+        let mut samples = Vec::with_capacity(batches as usize);
+        let mut total = Duration::ZERO;
+        for _ in 0..batches {
+            let s = Instant::now();
+            for _ in 0..per_batch {
+                f();
+            }
+            let dt = s.elapsed();
+            total += dt;
+            samples.push(dt / per_batch as u32);
+        }
+        samples.sort();
+        let iterations = batches * per_batch;
+        let result = BenchResult {
+            name: name.into(),
+            iterations,
+            mean: total / iterations as u32,
+            median: samples[samples.len() / 2],
+            p10: samples[samples.len() / 10],
+            p90: samples[samples.len() * 9 / 10],
+            items_per_iter: items,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Median runtime of a named case (for relative-speedup tables).
+    pub fn median_of(&self, name: &str) -> Option<Duration> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.median)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(30),
+            ..Default::default()
+        };
+        let r = b.case("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.iterations >= 5);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(2),
+            budget: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let r = b.case_items("t", 1000.0, || 1 + 1);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,242 @@
+//! Tiny declarative CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and auto-generated `--help`.  Each subcommand of the `collage` binary
+//! builds an [`ArgSpec`] and parses the tail of `std::env::args`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+    required: bool,
+}
+
+/// Declarative argument specification.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+    positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: impl Into<String>, about: &'static str) -> Self {
+        ArgSpec { program: program.into(), about, opts: Vec::new(), positional: Vec::new() }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, mandatory.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    /// Boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    /// Positional argument (for help text only; all positionals collected).
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nUSAGE:\n  {}", self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p:<18}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let dflt = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ if o.required => " [required]".to_string(),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {left:<22} {}{dflt}\n", o.help));
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse a token list (without the program name).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name, false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name, d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.usage()))?;
+                if opt.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{name} takes no value");
+                    }
+                    flags.insert(opt.name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(opt.name, v);
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && !values.contains_key(o.name) {
+                bail!("missing required option --{}\n\n{}", o.name, self.usage());
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option {name:?} not declared"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag {name:?} not declared"))
+    }
+
+    pub fn opt_get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get(name).parse()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("prog", "test")
+            .opt("steps", "100", "number of steps")
+            .req("config", "model config")
+            .flag("verbose", "log more")
+            .pos("input", "input file")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = spec()
+            .parse(&toks(&["--config", "tiny", "file.txt", "--steps=5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("config"), "tiny");
+        assert_eq!(a.usize("steps").unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, ["file.txt"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&toks(&["--config", "x"])).unwrap();
+        assert_eq!(a.usize("steps").unwrap(), 100);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(spec().parse(&toks(&["--steps", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&toks(&["--config", "x", "--nope"])).is_err());
+    }
+}

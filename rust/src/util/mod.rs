@@ -1,0 +1,11 @@
+//! Self-contained utility substrates (no external deps are available in
+//! this environment beyond the `xla` FFI crate, so JSON, CLI parsing,
+//! RNGs, a thread pool and a bench harness are built in-tree).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,79 @@
+//! Fixed-size thread pool with scoped parallel-map — the substrate for the
+//! data-parallel training runtime (`parallel::worker`).  Built on
+//! `std::thread::scope`, so closures may borrow stack data.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for `i in 0..n` on up to `workers` threads, returning results
+/// in index order.  Panics in workers propagate to the caller.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n);
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker did not produce a result"))
+        .collect()
+}
+
+/// Number of worker threads to default to (leave one core for the leader).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_ok() {
+        assert_eq!(parallel_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_ok() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(parallel_map(2, 16, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn borrows_stack_data() {
+        let data = vec![10, 20, 30];
+        let out = parallel_map(3, 2, |i| data[i] * 2);
+        assert_eq!(out, vec![20, 40, 60]);
+    }
+}

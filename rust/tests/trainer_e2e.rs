@@ -1,0 +1,143 @@
+//! End-to-end trainer integration tests over real AOT artifacts:
+//! loss decreases, strategies order as the paper predicts, checkpoint
+//! resume is bit-exact, eval is deterministic.
+
+use collage::coordinator::config::RunConfig;
+use collage::coordinator::trainer::Trainer;
+use collage::optim::strategy::Strategy;
+use collage::runtime::{Manifest, Runtime};
+
+fn setup() -> Option<(std::sync::Arc<Runtime>, Manifest)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some((Runtime::cpu().unwrap(), Manifest::load(&dir).unwrap()))
+}
+
+fn run_cfg(strategy: Strategy, steps: u64, seed: u64) -> RunConfig {
+    RunConfig {
+        model: "tiny".into(),
+        strategy,
+        steps,
+        warmup: 5,
+        lr: 2e-3,
+        seed,
+        eval_every: 0,
+        log_every: 0,
+        corpus_tokens: 1 << 17,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let Some((rt, manifest)) = setup() else { return };
+    let mut tr = Trainer::new(rt, &manifest, run_cfg(Strategy::CollagePlus, 40, 1)).unwrap();
+    let o = tr.run().unwrap();
+    let first = o.log.rows()[..5].iter().map(|r| r.loss).sum::<f64>() / 5.0;
+    let last = o.log.rows()[35..].iter().map(|r| r.loss).sum::<f64>() / 5.0;
+    assert!(
+        last < first - 0.15,
+        "no learning: first5={first:.3} last5={last:.3}"
+    );
+    assert!(o.val_ppl.is_finite() && o.val_ppl > 1.0);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some((rt, manifest)) = setup() else { return };
+    let mut a = Trainer::new(rt.clone(), &manifest, run_cfg(Strategy::Bf16, 10, 7)).unwrap();
+    let oa = a.run().unwrap();
+    let mut b = Trainer::new(rt, &manifest, run_cfg(Strategy::Bf16, 10, 7)).unwrap();
+    let ob = b.run().unwrap();
+    let la: Vec<u64> = oa.log.rows().iter().map(|r| r.loss.to_bits()).collect();
+    let lb: Vec<u64> = ob.log.rows().iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(la, lb, "training must be bit-deterministic");
+    let ta: Vec<u32> = a.state().theta().iter().map(|x| x.to_bits()).collect();
+    let tb: Vec<u32> = b.state().theta().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(ta, tb);
+}
+
+#[test]
+fn checkpoint_resume_is_bitexact() {
+    let Some((rt, manifest)) = setup() else { return };
+    let dir = std::env::temp_dir().join(format!("collage_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Continuous 20-step run.
+    let mut full = Trainer::new(rt.clone(), &manifest, run_cfg(Strategy::CollageLight, 20, 5))
+        .unwrap();
+    full.run().unwrap();
+
+    // 10 steps + checkpoint, then resume for 10 more.  The partial run
+    // keeps cfg.steps = 20 so the cosine schedule matches the full run.
+    let mut cfg1 = run_cfg(Strategy::CollageLight, 20, 5);
+    cfg1.checkpoint_dir = Some(dir.to_str().unwrap().to_string());
+    let mut part1 = Trainer::new(rt.clone(), &manifest, cfg1).unwrap();
+    part1.run_until(10).unwrap();
+
+    let mut cfg2 = run_cfg(Strategy::CollageLight, 20, 5);
+    cfg2.checkpoint_dir = Some(dir.to_str().unwrap().to_string());
+    let mut part2 = Trainer::new(rt, &manifest, cfg2).unwrap();
+    assert_eq!(part2.current_step(), 10, "must resume from step 10");
+    part2.run().unwrap();
+
+    for (name, (a, b)) in full
+        .state()
+        .names()
+        .iter()
+        .zip(full.state().vecs().iter().zip(part2.state().vecs()))
+    {
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb, "state {name:?} diverged after resume");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn strategies_rank_as_paper_predicts_at_beta2_999() {
+    // The Fig-3 ordering on the proxy task at β₂=0.999.  Perplexity gaps
+    // need thousands of steps to open on this scale (the `table3`
+    // experiment shows them); what separates cleanly even in short runs is
+    // the paper's EDQ metric and the lost-arithmetic fraction: plus keeps
+    // EDQ ≈ 1 / lost ≈ 0 where A degrades, while quality must not regress.
+    let Some((rt, manifest)) = setup() else { return };
+    let steps = 80;
+    let mut out = std::collections::HashMap::new();
+    for s in [Strategy::Bf16, Strategy::CollagePlus, Strategy::Fp32MasterWeights] {
+        let mut cfg = run_cfg(s, steps, 11);
+        cfg.beta2 = Some(0.999);
+        let mut tr = Trainer::new(rt.clone(), &manifest, cfg).unwrap();
+        let o = tr.run().unwrap();
+        out.insert(s, (o.train_ppl, o.edq_ratio, o.lost_frac));
+    }
+    let (ppl_a, edq_a, lost_a) = out[&Strategy::Bf16];
+    let (ppl_c, edq_c, lost_c) = out[&Strategy::CollagePlus];
+    let (ppl_d, edq_d, _) = out[&Strategy::Fp32MasterWeights];
+    assert!(edq_c > edq_a + 0.02, "EDQ plus {edq_c:.3} must beat A {edq_a:.3}");
+    assert!((edq_c - 1.0).abs() < 0.02, "plus EDQ should stay ~1, got {edq_c:.3}");
+    assert!((edq_d - 1.0).abs() < 1e-3, "D EDQ should be lossless, got {edq_d:.3}");
+    assert!(lost_c < lost_a, "lost plus {lost_c:.3} must be below A {lost_a:.3}");
+    assert!(ppl_c < ppl_a * 1.02, "plus ppl {ppl_c:.2} regressed vs A {ppl_a:.2}");
+    assert!(ppl_c < ppl_d * 1.10, "plus ppl {ppl_c:.2} far from D {ppl_d:.2}");
+}
+
+#[test]
+fn evaluate_is_stable() {
+    let Some((rt, manifest)) = setup() else { return };
+    let tr = Trainer::new(rt, &manifest, run_cfg(Strategy::Bf16, 5, 3)).unwrap();
+    let l1 = tr.evaluate().unwrap();
+    let l2 = tr.evaluate().unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits());
+}
+
+#[test]
+fn beta2_mismatch_artifact_is_error() {
+    let Some((rt, manifest)) = setup() else { return };
+    let mut cfg = run_cfg(Strategy::Bf16, 5, 3);
+    cfg.beta2 = Some(0.7777); // never exported
+    assert!(Trainer::new(rt, &manifest, cfg).is_err());
+}
