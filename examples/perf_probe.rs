@@ -1,18 +1,79 @@
-//! §Perf probe: old copy+validate path vs zero-copy hot path, plus a
-//! breakdown of upload/exec/download time per step.
+//! §Perf probe, two halves:
+//!
+//! 1. (always runs) fused optimizer kernels vs the two-pass scalar
+//!    reference, with worker-count scaling — the `optim::kernels` layer.
+//! 2. (needs `make artifacts`) old copy+validate HLO path vs the zero-copy
+//!    hot path, plus a breakdown of upload/exec/download time per step.
+//!
+//!     cargo run --release --example perf_probe [model] [iters]
 use collage::coordinator::config::RunConfig;
 use collage::coordinator::trainer::Trainer;
 use collage::data::batches::{BatchIterator, Split};
 use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
+use collage::numerics::expansion::rn_bf16;
+use collage::optim::adamw::AdamW;
+use collage::optim::state::OptimState;
 use collage::optim::strategy::Strategy;
 use collage::runtime::{Input, Manifest, Runtime};
+use collage::util::rng::Rng;
 use std::time::Instant;
 
+fn optimizer_kernel_probe() {
+    let n: usize = std::env::var("COLLAGE_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 21);
+    let mut rng = Rng::new(7, 0);
+    let theta: Vec<f32> = (0..n).map(|_| rn_bf16(rng.normal() as f32)).collect();
+    let g: Vec<f32> = (0..n).map(|_| rn_bf16(0.01 * rng.normal() as f32)).collect();
+    let opt = AdamW::default();
+    let iters = 20u64;
+    println!("== optimizer kernel probe: collage-plus, {n} params, {iters} iters ==");
+
+    let time_path = |label: &str, f: &mut dyn FnMut(&mut OptimState, u64, &mut Rng)| {
+        let mut state = OptimState::init(Strategy::CollagePlus, &theta);
+        let mut r = Rng::new(1, 1);
+        for t in 1..=3 {
+            f(&mut state, t, &mut r); // warmup
+        }
+        let t0 = Instant::now();
+        for t in 4..=(3 + iters) {
+            f(&mut state, t, &mut r);
+        }
+        let per_step = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("{label:<28} {:.3} ms/step", per_step * 1e3);
+        per_step
+    };
+
+    let t_ref = time_path("reference (two-pass)", &mut |st, t, r| {
+        opt.step_reference(st, &g, 1e-4, t, r);
+    });
+    let t_fused = time_path("fused w=1", &mut |st, t, r| {
+        opt.step(st, &g, 1e-4, t, r);
+    });
+    for w in [2usize, 4, 8] {
+        let t_w = time_path(&format!("fused w={w}"), &mut |st, t, r| {
+            opt.step_sharded(st, &g, 1e-4, t, r, w);
+        });
+        println!(
+            "    scaling vs w=1: {:.2}x (vs reference: {:.2}x)",
+            t_fused / t_w,
+            t_ref / t_w
+        );
+    }
+    println!("fused single-thread speedup vs reference: {:.2}x\n", t_ref / t_fused);
+}
+
 fn main() -> collage::Result<()> {
+    optimizer_kernel_probe();
+
     let model = std::env::args().nth(1).unwrap_or_else(|| "small".into());
     let iters: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        println!("(skipping HLO probe: run `make artifacts` first)");
+        return Ok(());
+    };
     let runtime = Runtime::cpu()?;
-    let manifest = Manifest::load("artifacts")?;
     let meta = manifest.model(&model)?.clone();
     let corpus = SyntheticCorpus::generate(CorpusConfig {
         vocab: meta.vocab, n_tokens: 1 << 16, seed: 3, ..Default::default()
@@ -32,9 +93,8 @@ fn main() -> collage::Result<()> {
     // Old path: owned inputs (clones) + per-step validation.
     let train_meta = manifest.train(&model, "collage-plus", None)?;
     let exe = runtime.load(&manifest, train_meta)?;
-    let state = collage::optim::state::OptimState::init(
-        Strategy::CollagePlus, &manifest.load_init(&model)?);
-    let run_old = |state: &collage::optim::state::OptimState| -> collage::Result<Vec<Vec<f32>>> {
+    let state = OptimState::init(Strategy::CollagePlus, &manifest.load_init(&model)?);
+    let run_old = |state: &OptimState| -> collage::Result<Vec<Vec<f32>>> {
         let mut inputs = vec![
             Input::I32(batch.tokens.clone(), vec![meta.micro_batch, meta.seq_len]),
             Input::I32(batch.targets.clone(), vec![meta.micro_batch, meta.seq_len]),

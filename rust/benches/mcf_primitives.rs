@@ -1,11 +1,14 @@
 //! Bench: MCF expansion-algebra primitives (Fast2Sum, TwoSum, TwoProd,
 //! Grow, Mul) — the Layer-1 building blocks, in both the generic-format
-//! and the bf16 fast-path forms.  Feeds the §Perf log in EXPERIMENTS.md.
+//! and the bf16 fast-path forms — plus the fused chunk kernels that chain
+//! them (`optim::kernels`).  Feeds the §Perf log in EXPERIMENTS.md.
 //!
 //!     cargo bench --bench mcf_primitives
 
 use collage::numerics::expansion as exp;
 use collage::numerics::format::BF16;
+use collage::optim::adamw::AdamW;
+use collage::optim::kernels::{self, StepScalars};
 use collage::util::bench::Bench;
 use collage::util::rng::Rng;
 
@@ -81,8 +84,43 @@ fn main() {
         acc
     });
 
+    // ---- fused chunk kernels (one CHUNK tile, hot in cache) ---------------
+    // The kernels chain ~10 primitives per element *and* stream the EDQ
+    // diagnostics; comparing their ns/elem against the raw primitives above
+    // shows the fusion overhead per element.
+    println!("\n== fused chunk kernels over one {}-element tile ==", kernels::CHUNK);
+    let opt = AdamW::default();
+    let s = StepScalars::new(&opt, 1e-4, 1);
+    let tile = kernels::CHUNK;
+    let gt: Vec<f32> = b[..tile].to_vec();
+    let mut theta: Vec<f32> = a[..tile].to_vec();
+    let mut m = vec![0.0f32; tile];
+    let mut v = vec![0.0f32; tile];
+    bench.case_items("kernel: step_chunk_bf16", tile as f64, || {
+        kernels::step_chunk_bf16(&s, &gt, &mut theta, &mut m, &mut v)
+    });
+
+    let mut theta: Vec<f32> = a[..tile].to_vec();
+    let mut dtheta_c = vec![0.0f32; tile];
+    let mut m = vec![0.0f32; tile];
+    let mut v = vec![0.0f32; tile];
+    let mut dv = vec![0.0f32; tile];
+    bench.case_items("kernel: step_chunk_collage_plus", tile as f64, || {
+        kernels::step_chunk_collage_plus(
+            &s, &gt, &mut theta, &mut dtheta_c, &mut m, &mut v, &mut dv,
+        )
+    });
+
+    let mut theta: Vec<f32> = a[..tile].to_vec();
+    let mut m = vec![0.0f32; tile];
+    let mut v = vec![0.0f32; tile];
+    let mut mw: Vec<f32> = a[..tile].to_vec();
+    bench.case_items("kernel: step_chunk_fp32_mw", tile as f64, || {
+        kernels::step_chunk_fp32_mw(&s, &gt, &mut theta, &mut m, &mut v, &mut mw)
+    });
+
     println!(
-        "\nnote: the fused optimizer kernels chain ~10 of these per element; \
-         see `cargo bench --bench optimizer_step` for the end-to-end cost."
+        "\nnote: `cargo bench --bench optimizer_step` measures the full \
+         fused step (all chunks + reduction) per strategy."
     );
 }

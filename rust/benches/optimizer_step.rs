@@ -2,12 +2,17 @@
 //! companion to paper Table 7 (relative training speed) at the layer where
 //! Collage's advantage originates: optimizer-state memory traffic.
 //!
-//! Two measurements per strategy:
-//!   1. the pure-Rust fused update over a 4M-element flat state (the
-//!      memory-bound regime; paper Table 7's ordering A > B > C > D must
-//!      reproduce), and
-//!   2. the full AOT HLO train step on the `small` config (end-to-end,
-//!      includes fwd/bwd — the realistic amortization).
+//! Three measurements per strategy over an `n`-element flat state
+//! (default 4M; `COLLAGE_BENCH_N` overrides):
+//!   1. `ref`   — the retained two-pass scalar oracle (`step_reference`),
+//!   2. `fused` — the single-pass fused kernels on one thread (`step`),
+//!   3. `w4`    — the fused kernels sharded over 4 workers
+//!      (`step_sharded`; override the count with `COLLAGE_BENCH_WORKERS`),
+//! plus the full AOT HLO train step on the `small` config when artifacts
+//! are present (end-to-end, includes fwd/bwd — the realistic amortization).
+//!
+//! Emits `BENCH_optimizer_step.json` (strategy → median ns/elem, speedup
+//! vs option D) so the perf trajectory is tracked across PRs.
 //!
 //!     cargo bench --bench optimizer_step
 
@@ -19,48 +24,127 @@ use collage::optim::state::OptimState;
 use collage::optim::strategy::{Strategy, PAPER_OPTIONS};
 use collage::runtime::{Manifest, Runtime};
 use collage::util::bench::Bench;
+use collage::util::json::{Obj, Value};
 use collage::util::rng::Rng;
 use collage::util::table::{fnum, Table};
+
+#[derive(Clone, Copy, Default)]
+struct StrategyTimes {
+    reference: f64, // median seconds/step
+    fused: f64,
+    sharded: f64,
+}
 
 fn main() {
     let n: usize = std::env::var("COLLAGE_BENCH_N")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1 << 22);
+    let shard_workers: usize = std::env::var("COLLAGE_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
     let mut bench = Bench::from_env();
     let mut rng = Rng::new(7, 0);
     let theta: Vec<f32> = (0..n).map(|_| rn_bf16(rng.normal() as f32)).collect();
     let g: Vec<f32> = (0..n).map(|_| rn_bf16(0.01 * rng.normal() as f32)).collect();
     let opt = AdamW::default();
 
-    println!("== pure-Rust fused optimizer step, {n} params ==");
+    println!("== pure-Rust optimizer step, {n} params ==");
     let mut times = Vec::new();
     for strategy in PAPER_OPTIONS {
+        let mut t = StrategyTimes::default();
+
         let mut state = OptimState::init(strategy, &theta);
-        let mut t = 0u64;
-        let r = bench.case_items(format!("opt/{}", strategy.option_str()), n as f64, || {
-            t += 1;
-            opt.step(&mut state, &g, 1e-4, t, &mut rng)
-        });
-        times.push((strategy, r.median));
+        let mut step = 0u64;
+        t.reference = bench
+            .case_items(format!("opt/{}/ref", strategy.option_str()), n as f64, || {
+                step += 1;
+                opt.step_reference(&mut state, &g, 1e-4, step, &mut rng)
+            })
+            .median
+            .as_secs_f64();
+
+        let mut state = OptimState::init(strategy, &theta);
+        let mut step = 0u64;
+        t.fused = bench
+            .case_items(format!("opt/{}/fused", strategy.option_str()), n as f64, || {
+                step += 1;
+                opt.step(&mut state, &g, 1e-4, step, &mut rng)
+            })
+            .median
+            .as_secs_f64();
+
+        let mut state = OptimState::init(strategy, &theta);
+        let mut step = 0u64;
+        t.sharded = bench
+            .case_items(
+                format!("opt/{}/w{shard_workers}", strategy.option_str()),
+                n as f64,
+                || {
+                    step += 1;
+                    opt.step_sharded(&mut state, &g, 1e-4, step, &mut rng, shard_workers)
+                },
+            )
+            .median
+            .as_secs_f64();
+
+        times.push((strategy, t));
     }
-    let d_time = times
+    let d_fused = times
         .iter()
         .find(|(s, _)| *s == Strategy::Fp32MasterWeights)
-        .unwrap()
-        .1;
+        .map(|(_, t)| t.fused)
+        .unwrap();
+
     let mut table = Table::new("Table 7 (optimizer-only): relative speed vs option D");
-    table.header(&["strategy", "median/step", "speedup vs D", "state B/param"]);
+    table.header(&[
+        "strategy",
+        "ref ns/elem",
+        "fused ns/elem",
+        &format!("w{shard_workers} ns/elem"),
+        "fused vs ref",
+        "speedup vs D",
+        "state B/param",
+    ]);
+    let per_elem = |secs: f64| secs * 1e9 / n as f64;
     for (s, t) in &times {
         table.row(vec![
             s.paper_name().to_string(),
-            format!("{:.2?}", t),
-            format!("{:.2}x", d_time.as_secs_f64() / t.as_secs_f64()),
+            fnum(per_elem(t.reference), 2),
+            fnum(per_elem(t.fused), 2),
+            fnum(per_elem(t.sharded), 2),
+            fnum(t.reference / t.fused, 2) + "x",
+            fnum(d_fused / t.fused, 2) + "x",
             s.state_bytes_per_param().to_string(),
         ]);
     }
     println!();
     table.print();
+
+    // Machine-readable trajectory: strategy → median ns/elem + speedups.
+    let mut summary = Obj::new();
+    summary.insert("n", n);
+    summary.insert("shard_workers", shard_workers);
+    let mut per_strategy = Obj::new();
+    for (s, t) in &times {
+        let mut o = Obj::new();
+        o.insert("ref_ns_per_elem", per_elem(t.reference));
+        o.insert("fused_ns_per_elem", per_elem(t.fused));
+        o.insert(format!("w{shard_workers}_ns_per_elem"), per_elem(t.sharded));
+        o.insert("fused_speedup_vs_ref", t.reference / t.fused);
+        o.insert("sharded_speedup_vs_fused", t.fused / t.sharded);
+        o.insert("speedup_vs_d", d_fused / t.fused);
+        o.insert("state_bytes_per_param", s.state_bytes_per_param());
+        per_strategy.insert(s.option_str(), Value::Obj(o));
+    }
+    summary.insert("strategies", Value::Obj(per_strategy));
+    if let Err(e) = bench.write_json(
+        "BENCH_optimizer_step.json",
+        [("table7".to_string(), Value::Obj(summary))],
+    ) {
+        eprintln!("could not write BENCH_optimizer_step.json: {e}");
+    }
 
     // ---- end-to-end HLO train step (includes fwd/bwd) ----------------------
     let manifest_dir = std::path::Path::new("artifacts");

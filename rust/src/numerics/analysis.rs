@@ -4,6 +4,31 @@
 
 use super::format::FloatFormat;
 
+/// Fixed block length for all f64 diagnostics reductions (and the chunk
+/// length of the fused optimizer kernels, `optim::kernels::CHUNK`).
+///
+/// Every Σ here accumulates sequentially *within* `ACCUM_CHUNK`-element
+/// blocks and combines the block partials in index order.  The block grid
+/// depends only on `n`, so the fused kernels — which produce exactly these
+/// partials, one per chunk, on any number of threads — reduce to
+/// bit-identical totals.  ~16K elements also keeps a block's working set
+/// inside L2, which is why the same constant serves as the kernel tile.
+pub const ACCUM_CHUNK: usize = 1 << 14;
+
+/// Σ xᵢ² over f64 values, reduced on the [`ACCUM_CHUNK`] grid (the
+/// parameter-norm reduction of the reference optimizer path).
+pub fn sum_sq_chunked(xs: &[f64]) -> f64 {
+    let mut total = 0.0f64;
+    for block in xs.chunks(ACCUM_CHUNK) {
+        let mut acc = 0.0f64;
+        for &x in block {
+            acc += x * x;
+        }
+        total += acc;
+    }
+    total
+}
+
 /// Def. 3.2: the operation `F(a ∘ b) = r` is *lost* if the result collapsed
 /// onto one of its operands, i.e. `|r - a| <= ulp(a)/2` (so `r == a`) or
 /// symmetric in b.
@@ -55,14 +80,27 @@ pub struct EdqReport {
 pub fn edq(theta_old: &[f32], theta_new: &[f32], dtheta: &[f32]) -> EdqReport {
     assert_eq!(theta_old.len(), theta_new.len());
     assert_eq!(theta_old.len(), dtheta.len());
+    // Chunked reduction on the ACCUM_CHUNK grid — see the constant's docs.
     let mut un2 = 0.0f64;
     let mut en2 = 0.0f64;
     let mut dot = 0.0f64;
-    for ((&o, &n), &d) in theta_old.iter().zip(theta_new).zip(dtheta) {
-        let eff = n as f64 - o as f64;
-        un2 += (d as f64) * (d as f64);
-        en2 += eff * eff;
-        dot += (d as f64) * eff;
+    for ((old_b, new_b), d_b) in theta_old
+        .chunks(ACCUM_CHUNK)
+        .zip(theta_new.chunks(ACCUM_CHUNK))
+        .zip(dtheta.chunks(ACCUM_CHUNK))
+    {
+        let mut p_un2 = 0.0f64;
+        let mut p_en2 = 0.0f64;
+        let mut p_dot = 0.0f64;
+        for ((&o, &n), &d) in old_b.iter().zip(new_b).zip(d_b) {
+            let eff = n as f64 - o as f64;
+            p_un2 += (d as f64) * (d as f64);
+            p_en2 += eff * eff;
+            p_dot += (d as f64) * eff;
+        }
+        un2 += p_un2;
+        en2 += p_en2;
+        dot += p_dot;
     }
     let update_norm = un2.sqrt();
     let effective_norm = en2.sqrt();
@@ -84,17 +122,27 @@ pub fn edq_expansion(
     dtheta: &[f32],
 ) -> EdqReport {
     let n = dtheta.len();
+    // Same ACCUM_CHUNK-grid reduction as `edq`, over expansion values.
     let mut un2 = 0.0f64;
     let mut en2 = 0.0f64;
     let mut dot = 0.0f64;
-    for i in 0..n {
-        let old = theta_old_hi[i] as f64 + theta_old_lo[i] as f64;
-        let new = theta_new_hi[i] as f64 + theta_new_lo[i] as f64;
-        let eff = new - old;
-        let d = dtheta[i] as f64;
-        un2 += d * d;
-        en2 += eff * eff;
-        dot += d * eff;
+    for start in (0..n).step_by(ACCUM_CHUNK) {
+        let end = (start + ACCUM_CHUNK).min(n);
+        let mut p_un2 = 0.0f64;
+        let mut p_en2 = 0.0f64;
+        let mut p_dot = 0.0f64;
+        for i in start..end {
+            let old = theta_old_hi[i] as f64 + theta_old_lo[i] as f64;
+            let new = theta_new_hi[i] as f64 + theta_new_lo[i] as f64;
+            let eff = new - old;
+            let d = dtheta[i] as f64;
+            p_un2 += d * d;
+            p_en2 += eff * eff;
+            p_dot += d * eff;
+        }
+        un2 += p_un2;
+        en2 += p_en2;
+        dot += p_dot;
     }
     let update_norm = un2.sqrt();
     EdqReport {

@@ -5,11 +5,21 @@
 //! Elementwise tensor math is emulated bf16 (f32 container + explicit
 //! round after every op); scalars (β₁, 1-β₂, bias corrections, lr, ε, λ)
 //! stay in high precision per the paper's rule of thumb (Sec. 4.2 / App. D).
+//!
+//! Two implementations share this contract:
+//!
+//! * [`AdamW::step`] / [`AdamW::step_sharded`] — the fused chunk kernels of
+//!   [`super::kernels`]: single pass, zero per-step heap allocation,
+//!   streamed diagnostics, optional multithreading.  This is the hot path.
+//! * [`AdamW::step_reference`] — the original two-pass scalar loop
+//!   (snapshot → update → diagnostics), kept as the bit-exact oracle the
+//!   equivalence tests (`tests/kernel_equivalence.rs`) compare against.
 
-use crate::numerics::analysis::{edq, edq_expansion, EdqReport};
+use crate::numerics::analysis::{edq, edq_expansion, sum_sq_chunked, EdqReport};
 use crate::numerics::expansion::{grow_bf16, mul_bf16, rn_bf16};
 use crate::util::rng::Rng;
 
+use super::kernels::{fused_step, sr_noise, sr_round};
 use super::state::OptimState;
 use super::strategy::Strategy;
 
@@ -69,7 +79,42 @@ impl AdamW {
     /// One optimizer step: consumes the (clipped, storage-rounded) gradient
     /// and advances `state` in place.  `t` is 1-based.  `rng` is only used
     /// by [`Strategy::StochasticRounding`].
+    ///
+    /// Runs the fused single-pass kernels on the calling thread; see
+    /// [`AdamW::step_sharded`] for the multicore variant (bit-identical
+    /// output) and [`AdamW::step_reference`] for the scalar oracle.
     pub fn step(
+        &self,
+        state: &mut OptimState,
+        g: &[f32],
+        lr: f32,
+        t: u64,
+        rng: &mut Rng,
+    ) -> StepStats {
+        fused_step(self, state, g, lr, t, rng, 1)
+    }
+
+    /// [`AdamW::step`] sharded over `workers` threads in fixed-size chunks.
+    /// Output (state vectors and [`StepStats`]) is bit-identical for every
+    /// worker count — see the determinism contract in [`super::kernels`].
+    pub fn step_sharded(
+        &self,
+        state: &mut OptimState,
+        g: &[f32],
+        lr: f32,
+        t: u64,
+        rng: &mut Rng,
+        workers: usize,
+    ) -> StepStats {
+        fused_step(self, state, g, lr, t, rng, workers)
+    }
+
+    /// The original two-pass scalar step, retained as the equivalence
+    /// oracle for the fused kernels: snapshot the effective parameter,
+    /// run the per-strategy update loop, then recompute the diagnostics
+    /// from the snapshots.  O(n) scratch allocations per call — use
+    /// [`AdamW::step`] anywhere performance matters.
+    pub fn step_reference(
         &self,
         state: &mut OptimState,
         g: &[f32],
@@ -92,6 +137,12 @@ impl AdamW {
         let one_m_beta1_hp = (1.0f64 - self.beta1) as f32;
         let one_m_beta2_hp = (1.0f64 - self.beta2) as f32;
         let n = state.n;
+        // One key per step; per-element noise is counter-derived so the
+        // stream is identical to the fused kernels' (see kernels::sr_noise).
+        let sr_key = match strategy {
+            Strategy::StochasticRounding => rng.next_u64(),
+            _ => 0,
+        };
 
         // Snapshot the effective parameter for EDQ (hi+lo or MW).
         let theta_old_hi: Vec<f32> = state.theta().to_vec();
@@ -100,46 +151,63 @@ impl AdamW {
 
         let mut dtheta = vec![0.0f32; n];
 
+        // Per-strategy update loops.  Each strategy owns its arm — the
+        // parameter-update branch is hoisted out of the inner loop.
         match strategy {
-            Strategy::Bf16 | Strategy::Kahan | Strategy::StochasticRounding => {
-                let vecs = state.vecs_mut();
-                // layout: Bf16/SR = [theta, m, v]; Kahan = [theta, c, m, v]
-                let (theta_i, c_i, m_i, v_i) = if strategy == Strategy::Kahan {
-                    (0, Some(1), 2, 3)
-                } else {
-                    (0, None, 1, 2)
-                };
+            Strategy::Bf16 => {
+                let vecs = state.vecs_mut(); // [theta, m, v]
                 for k in 0..n {
                     let gk = g[k];
-                    let m_new = rn_bf16(rn_bf16(vecs[m_i][k] * beta1_f)
-                        + rn_bf16(gk * one_m_beta1));
+                    let m_new = rn_bf16(rn_bf16(vecs[1][k] * beta1_f) + rn_bf16(gk * one_m_beta1));
                     let g2 = rn_bf16(gk * gk);
-                    let v_new =
-                        rn_bf16(rn_bf16(vecs[v_i][k] * b2hi) + rn_bf16(g2 * one_m_beta2));
+                    let v_new = rn_bf16(rn_bf16(vecs[2][k] * b2hi) + rn_bf16(g2 * one_m_beta2));
                     let vh = rn_bf16(v_new / bc2);
                     let dt = delta_theta_bf16(
-                        vecs[theta_i][k], m_new, vh, bc1, lr, self.eps, self.weight_decay,
+                        vecs[0][k], m_new, vh, bc1, lr, self.eps, self.weight_decay,
                     );
                     dtheta[k] = dt;
-                    vecs[m_i][k] = m_new;
-                    vecs[v_i][k] = v_new;
-                    match strategy {
-                        Strategy::Bf16 => {
-                            vecs[theta_i][k] = rn_bf16(vecs[theta_i][k] + dt);
-                        }
-                        Strategy::Kahan => {
-                            let ci = c_i.unwrap();
-                            let d = rn_bf16(dt + vecs[ci][k]);
-                            let th_new = rn_bf16(vecs[theta_i][k] + d);
-                            vecs[ci][k] = rn_bf16(d - rn_bf16(th_new - vecs[theta_i][k]));
-                            vecs[theta_i][k] = th_new;
-                        }
-                        Strategy::StochasticRounding => {
-                            let exact = vecs[theta_i][k] + dt;
-                            vecs[theta_i][k] = sr_bf16_bits(exact, rng);
-                        }
-                        _ => unreachable!(),
-                    }
+                    vecs[1][k] = m_new;
+                    vecs[2][k] = v_new;
+                    vecs[0][k] = rn_bf16(vecs[0][k] + dt);
+                }
+            }
+
+            Strategy::Kahan => {
+                let vecs = state.vecs_mut(); // [theta, c, m, v]
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new = rn_bf16(rn_bf16(vecs[2][k] * beta1_f) + rn_bf16(gk * one_m_beta1));
+                    let g2 = rn_bf16(gk * gk);
+                    let v_new = rn_bf16(rn_bf16(vecs[3][k] * b2hi) + rn_bf16(g2 * one_m_beta2));
+                    let vh = rn_bf16(v_new / bc2);
+                    let dt = delta_theta_bf16(
+                        vecs[0][k], m_new, vh, bc1, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    vecs[2][k] = m_new;
+                    vecs[3][k] = v_new;
+                    let d = rn_bf16(dt + vecs[1][k]);
+                    let th_new = rn_bf16(vecs[0][k] + d);
+                    vecs[1][k] = rn_bf16(d - rn_bf16(th_new - vecs[0][k]));
+                    vecs[0][k] = th_new;
+                }
+            }
+
+            Strategy::StochasticRounding => {
+                let vecs = state.vecs_mut(); // [theta, m, v]
+                for k in 0..n {
+                    let gk = g[k];
+                    let m_new = rn_bf16(rn_bf16(vecs[1][k] * beta1_f) + rn_bf16(gk * one_m_beta1));
+                    let g2 = rn_bf16(gk * gk);
+                    let v_new = rn_bf16(rn_bf16(vecs[2][k] * b2hi) + rn_bf16(g2 * one_m_beta2));
+                    let vh = rn_bf16(v_new / bc2);
+                    let dt = delta_theta_bf16(
+                        vecs[0][k], m_new, vh, bc1, lr, self.eps, self.weight_decay,
+                    );
+                    dtheta[k] = dt;
+                    vecs[1][k] = m_new;
+                    vecs[2][k] = v_new;
+                    vecs[0][k] = sr_round(vecs[0][k] + dt, sr_noise(sr_key, k));
                 }
             }
 
@@ -281,7 +349,7 @@ impl AdamW {
             .filter(|(&d, (o, n))| d != 0.0 && **o == **n)
             .count() as f64
             / n as f64;
-        let pn = new_eff.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        let pn = sum_sq_chunked(&new_eff).sqrt();
         StepStats { edq: report, lost_frac: lost, param_norm: pn }
     }
 }
@@ -289,7 +357,15 @@ impl AdamW {
 /// Δθ in emulated bf16 (Alg. 2 line 12 — weight decay *inside* the update,
 /// the paper's fix for the weight-decay lost-arithmetic issue).
 #[inline]
-fn delta_theta_bf16(theta: f32, m_new: f32, v_hat: f32, bc1: f32, lr: f32, eps: f32, wd: f32) -> f32 {
+pub(crate) fn delta_theta_bf16(
+    theta: f32,
+    m_new: f32,
+    v_hat: f32,
+    bc1: f32,
+    lr: f32,
+    eps: f32,
+    wd: f32,
+) -> f32 {
     let m_hat = rn_bf16(m_new / bc1);
     let denom = rn_bf16(rn_bf16(v_hat.sqrt()) + eps);
     let t1 = rn_bf16(m_hat / denom);
@@ -299,7 +375,8 @@ fn delta_theta_bf16(theta: f32, m_new: f32, v_hat: f32, bc1: f32, lr: f32, eps: 
 
 /// Δθ in plain fp32 (options D / D⁻ᴹᵂ / fp32).
 #[inline]
-fn delta_theta_fp32(
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn delta_theta_fp32(
     theta_ref: f32,
     m_new: f32,
     v_new: f32,
@@ -312,18 +389,6 @@ fn delta_theta_fp32(
     let m_hat = m_new / bc1;
     let v_hat = v_new / bc2;
     -lr * (m_hat / (v_hat.sqrt() + eps) + wd * theta_ref)
-}
-
-/// Stochastic rounding of an exact f32 sum to bf16 via the mantissa-noise
-/// bit trick (same construction as the `sr` train-step artifact; the RNG
-/// stream differs so results are statistically, not bitwise, comparable).
-#[inline]
-fn sr_bf16_bits(exact: f32, rng: &mut Rng) -> f32 {
-    if exact == 0.0 {
-        return exact;
-    }
-    let noise = (rng.next_u32() & 0xFFFF) as u32;
-    f32::from_bits(exact.to_bits().wrapping_add(noise) & 0xFFFF_0000)
 }
 
 #[cfg(test)]

@@ -1,0 +1,629 @@
+//! Fused optimizer-step chunk kernels — the repo's hottest loop, made
+//! allocation-free, single-pass and multicore.
+//!
+//! One monomorphized kernel per [`Strategy`] performs the bf16/MCF AdamW
+//! update **and** streams the Def. 3.3 diagnostics (EDQ dot/norms, the
+//! lost-update count of Def. 3.2, and the parameter-norm square) into a
+//! per-chunk [`ChunkAccum`] in the same pass over the state.  This replaces
+//! the reference path's five O(n) per-step snapshots and its second
+//! diagnostics pass; see [`AdamW::step_reference`] for the retained oracle.
+//!
+//! # Determinism contract
+//!
+//! * The state grid is split into fixed [`CHUNK`]-element chunks whose
+//!   boundaries depend only on `n` — never on the worker count.
+//! * Each chunk's f64 accumulators are summed element-by-element in index
+//!   order, and the per-chunk partials are combined in chunk order by the
+//!   single leader thread.
+//! * Stochastic rounding draws its noise from a counter-based hash of
+//!   `(step key, element index)` ([`sr_noise`]), not from a shared stream.
+//!
+//! Together these make every output — state vectors *and* [`StepStats`] —
+//! bit-identical across worker counts 1..∞, and bit-identical to the scalar
+//! reference path (whose diagnostics reduce over the same chunk grid; see
+//! `numerics::analysis::ACCUM_CHUNK`).  `tests/kernel_equivalence.rs`
+//! enforces both properties.
+
+use std::ops::Range;
+
+use crate::numerics::expansion::{grow_bf16, mul_bf16, rn_bf16};
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_chunks;
+
+use super::adamw::{delta_theta_bf16, delta_theta_fp32, AdamW, StepStats};
+use super::state::OptimState;
+use super::strategy::Strategy;
+
+/// Fixed kernel chunk length (elements).  Shared with the reference path's
+/// diagnostics reduction so the two agree bitwise; see the module docs.
+pub const CHUNK: usize = crate::numerics::analysis::ACCUM_CHUNK;
+
+// ---------------------------------------------------------------------------
+// Streaming diagnostics accumulator
+// ---------------------------------------------------------------------------
+
+/// Partial f64 diagnostics for one chunk: the Def. 3.3 EDQ sums, the
+/// Def. 3.2 lost-update count, and the squared parameter norm.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChunkAccum {
+    /// Σ Δθ² — intended-update norm square.
+    pub un2: f64,
+    /// Σ Δθ̂² — effective-update norm square.
+    pub en2: f64,
+    /// Σ Δθ·Δθ̂ — the EDQ dot product.
+    pub dot: f64,
+    /// Σ θ_eff² after the step.
+    pub pn2: f64,
+    /// Count of lost updates (Δθ ≠ 0 but θ_eff unchanged).
+    pub lost: u64,
+}
+
+impl ChunkAccum {
+    /// Fold `other` into `self`.  Callers combine partials in chunk-index
+    /// order (the determinism contract).
+    #[inline]
+    pub fn merge(&mut self, other: &ChunkAccum) {
+        self.un2 += other.un2;
+        self.en2 += other.en2;
+        self.dot += other.dot;
+        self.pn2 += other.pn2;
+        self.lost += other.lost;
+    }
+
+    /// Stream one element whose effective parameter is a plain f32 (the
+    /// bf16-θ strategies and fp32/master-weight values alike).
+    #[inline]
+    fn tally(&mut self, dt: f32, old_eff: f32, new_eff: f32) {
+        self.tally_f64(dt, old_eff as f64, new_eff as f64);
+    }
+
+    /// Stream one element with f64-evaluated effective parameters (the MCF
+    /// strategies evaluate hi + lo in f64, matching `edq_expansion`).
+    #[inline]
+    fn tally_f64(&mut self, dt: f32, old_eff: f64, new_eff: f64) {
+        let d = dt as f64;
+        let eff = new_eff - old_eff;
+        self.un2 += d * d;
+        self.en2 += eff * eff;
+        self.dot += d * eff;
+        self.pn2 += new_eff * new_eff;
+        self.lost += (dt != 0.0 && old_eff == new_eff) as u64;
+    }
+
+    /// Finish the reduction: the reference path's exact EDQ formulas.
+    fn finalize(&self, strategy: Strategy, n: usize) -> StepStats {
+        use crate::numerics::analysis::EdqReport;
+        let update_norm = self.un2.sqrt();
+        // The two reference reducers round their ratio differently:
+        // `edq` computes (dot/‖Δθ‖)/‖Δθ‖, `edq_expansion` dot/‖Δθ‖².
+        // Replicate each so the fused stats stay bit-identical.
+        let (edq, edq_ratio) = if update_norm > 0.0 {
+            let edq = self.dot / update_norm;
+            let ratio = if strategy.is_mcf_params() {
+                self.dot / (update_norm * update_norm)
+            } else {
+                edq / update_norm
+            };
+            (edq, ratio)
+        } else {
+            (0.0, 1.0)
+        };
+        StepStats {
+            edq: EdqReport {
+                update_norm,
+                effective_norm: self.en2.sqrt(),
+                edq,
+                edq_ratio,
+            },
+            lost_frac: self.lost as f64 / n as f64,
+            param_norm: self.pn2.sqrt(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-step scalar packet
+// ---------------------------------------------------------------------------
+
+/// All step-constant scalars, precomputed once with the exact narrowing
+/// semantics of the reference path (`ref.pack_scalars` on the Python side).
+#[derive(Debug, Clone, Copy)]
+pub struct StepScalars {
+    pub beta1_f: f32,
+    pub beta2_f: f32,
+    pub one_m_beta1: f32,
+    pub one_m_beta2: f32,
+    pub one_m_beta1_hp: f32,
+    pub one_m_beta2_hp: f32,
+    pub b2hi: f32,
+    pub b2lo: f32,
+    pub bc1: f32,
+    pub bc2: f32,
+    pub lr: f32,
+    pub eps: f32,
+    pub wd: f32,
+}
+
+impl StepScalars {
+    pub fn new(opt: &AdamW, lr: f32, t: u64) -> Self {
+        let (bc1, bc2) = opt.bias_corrections(t);
+        let (b2hi, b2lo) = opt.beta2_expansion();
+        let beta1_f = opt.beta1 as f32;
+        let beta2_f = opt.beta2 as f32;
+        StepScalars {
+            beta1_f,
+            beta2_f,
+            // bf16-path scalars: narrow to f32 first, subtract in f32.
+            one_m_beta1: 1.0f32 - beta1_f,
+            one_m_beta2: 1.0f32 - beta2_f,
+            // fp32-path scalars: `1.0 - beta` in f64, single-rounded.
+            one_m_beta1_hp: (1.0f64 - opt.beta1) as f32,
+            one_m_beta2_hp: (1.0f64 - opt.beta2) as f32,
+            b2hi,
+            b2lo,
+            bc1,
+            bc2,
+            lr,
+            eps: opt.eps,
+            wd: opt.weight_decay,
+        }
+    }
+
+    /// First-moment update m ← β₁m ⊕ (1-β₁)g, emulated bf16.
+    #[inline]
+    fn m_bf16(&self, m: f32, gk: f32) -> f32 {
+        rn_bf16(rn_bf16(m * self.beta1_f) + rn_bf16(gk * self.one_m_beta1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stochastic-rounding noise (counter-based, thread-count invariant)
+// ---------------------------------------------------------------------------
+
+/// 16-bit mantissa noise for element `k` of one step, derived from the
+/// step's key by a SplitMix64 finalizer.  A pure function of `(key, k)`, so
+/// any chunk/thread assignment produces the identical rounding decision.
+#[inline]
+pub fn sr_noise(key: u64, k: usize) -> u32 {
+    let mut z = key.wrapping_add((k as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    ((z ^ (z >> 31)) & 0xFFFF) as u32
+}
+
+/// Stochastic rounding of an exact f32 sum to bf16 via the mantissa-noise
+/// bit trick (same construction as the `sr` train-step artifact).
+#[inline]
+pub fn sr_round(exact: f32, noise: u32) -> f32 {
+    if exact == 0.0 {
+        return exact;
+    }
+    f32::from_bits(exact.to_bits().wrapping_add(noise) & 0xFFFF_0000)
+}
+
+// ---------------------------------------------------------------------------
+// Chunk kernels — one monomorphized function per strategy.  Each performs
+// the update for `g.len()` elements over matching state windows and streams
+// the diagnostics; no allocation, no per-element dispatch.
+// ---------------------------------------------------------------------------
+
+/// Option A: plain bf16 parameters and optimizer states.
+pub fn step_chunk_bf16(
+    s: &StepScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.m_bf16(m[k], gk);
+        let g2 = rn_bf16(gk * gk);
+        let v_new = rn_bf16(rn_bf16(v[k] * s.b2hi) + rn_bf16(g2 * s.one_m_beta2));
+        let vh = rn_bf16(v_new / s.bc2);
+        let th_old = theta[k];
+        let dt = delta_theta_bf16(th_old, m_new, vh, s.bc1, s.lr, s.eps, s.wd);
+        let th_new = rn_bf16(th_old + dt);
+        m[k] = m_new;
+        v[k] = v_new;
+        theta[k] = th_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// BF16 + Kahan-compensated parameter update.
+pub fn step_chunk_kahan(
+    s: &StepScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.m_bf16(m[k], gk);
+        let g2 = rn_bf16(gk * gk);
+        let v_new = rn_bf16(rn_bf16(v[k] * s.b2hi) + rn_bf16(g2 * s.one_m_beta2));
+        let vh = rn_bf16(v_new / s.bc2);
+        let th_old = theta[k];
+        let dt = delta_theta_bf16(th_old, m_new, vh, s.bc1, s.lr, s.eps, s.wd);
+        let d = rn_bf16(dt + c[k]);
+        let th_new = rn_bf16(th_old + d);
+        c[k] = rn_bf16(d - rn_bf16(th_new - th_old));
+        theta[k] = th_new;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// BF16 + stochastic rounding at the parameter update.  `base` is the
+/// chunk's global element offset (noise is indexed globally).
+pub fn step_chunk_sr(
+    s: &StepScalars,
+    key: u64,
+    base: usize,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.m_bf16(m[k], gk);
+        let g2 = rn_bf16(gk * gk);
+        let v_new = rn_bf16(rn_bf16(v[k] * s.b2hi) + rn_bf16(g2 * s.one_m_beta2));
+        let vh = rn_bf16(v_new / s.bc2);
+        let th_old = theta[k];
+        let dt = delta_theta_bf16(th_old, m_new, vh, s.bc1, s.lr, s.eps, s.wd);
+        let th_new = sr_round(th_old + dt, sr_noise(key, base + k));
+        m[k] = m_new;
+        v[k] = v_new;
+        theta[k] = th_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// Option B: Collage-light — MCF (θ, δθ), bf16 optimizer states.
+pub fn step_chunk_collage_light(
+    s: &StepScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.m_bf16(m[k], gk);
+        let g2 = rn_bf16(gk * gk);
+        let v_new = rn_bf16(rn_bf16(v[k] * s.b2hi) + rn_bf16(g2 * s.one_m_beta2));
+        let vh = rn_bf16(v_new / s.bc2);
+        let (hi_old, lo_old) = (theta[k], dtheta_c[k]);
+        let dt = delta_theta_bf16(hi_old, m_new, vh, s.bc1, s.lr, s.eps, s.wd);
+        let (th, dc) = grow_bf16(hi_old, lo_old, dt);
+        theta[k] = th;
+        dtheta_c[k] = dc;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally_f64(dt, hi_old as f64 + lo_old as f64, th as f64 + dc as f64);
+    }
+    acc
+}
+
+/// Option C: Collage-plus — MCF (θ, δθ) and MCF (v, δv), β₂ expansion.
+#[allow(clippy::too_many_arguments)]
+pub fn step_chunk_collage_plus(
+    s: &StepScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.m_bf16(m[k], gk);
+        let g2 = rn_bf16(gk * gk);
+        let incr = rn_bf16(g2 * s.one_m_beta2);
+        // (v, δv) ← Grow(Mul((v, δv), (β₂, δβ₂)), incr)
+        let (vx, ve) = mul_bf16(v[k], dv[k], s.b2hi, s.b2lo);
+        let (v_new, dv_new) = grow_bf16(vx, ve, incr);
+        let vh = rn_bf16((v_new + dv_new) / s.bc2);
+        let (hi_old, lo_old) = (theta[k], dtheta_c[k]);
+        let dt = delta_theta_bf16(hi_old, m_new, vh, s.bc1, s.lr, s.eps, s.wd);
+        let (th, dc) = grow_bf16(hi_old, lo_old, dt);
+        theta[k] = th;
+        dtheta_c[k] = dc;
+        m[k] = m_new;
+        v[k] = v_new;
+        dv[k] = dv_new;
+        acc.tally_f64(dt, hi_old as f64 + lo_old as f64, th as f64 + dc as f64);
+    }
+    acc
+}
+
+/// D⁻ᴹᵂ: bf16 parameters, fp32 optimizer states, no master weights.
+pub fn step_chunk_fp32_optim(
+    s: &StepScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.beta1_f * m[k] + s.one_m_beta1_hp * gk;
+        let v_new = s.beta2_f * v[k] + s.one_m_beta2_hp * (gk * gk);
+        let th_old = theta[k];
+        let dt = delta_theta_fp32(th_old, m_new, v_new, s.bc1, s.bc2, s.lr, s.eps, s.wd);
+        // fp32 math, bf16 storage: the final round is the leak.
+        let th_new = rn_bf16(th_old + dt);
+        m[k] = m_new;
+        v[k] = v_new;
+        theta[k] = th_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// Option D: bf16 working copy + fp32 optimizer states + fp32 master
+/// weights.  Diagnostics are measured on the master weights.
+pub fn step_chunk_fp32_mw(
+    s: &StepScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    mw: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.beta1_f * m[k] + s.one_m_beta1_hp * gk;
+        let v_new = s.beta2_f * v[k] + s.one_m_beta2_hp * (gk * gk);
+        let mw_old = mw[k];
+        let dt = delta_theta_fp32(mw_old, m_new, v_new, s.bc1, s.bc2, s.lr, s.eps, s.wd);
+        let mw_new = mw_old + dt; // master weights: nothing lost
+        m[k] = m_new;
+        v[k] = v_new;
+        mw[k] = mw_new;
+        theta[k] = rn_bf16(mw_new); // bf16 working copy
+        acc.tally(dt, mw_old, mw_new);
+    }
+    acc
+}
+
+/// Full fp32 reference.
+pub fn step_chunk_fp32(
+    s: &StepScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.beta1_f * m[k] + s.one_m_beta1_hp * gk;
+        let v_new = s.beta2_f * v[k] + s.one_m_beta2_hp * (gk * gk);
+        let th_old = theta[k];
+        let dt = delta_theta_fp32(th_old, m_new, v_new, s.bc1, s.bc2, s.lr, s.eps, s.wd);
+        let th_new = th_old + dt;
+        m[k] = m_new;
+        v[k] = v_new;
+        theta[k] = th_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher: shard the state across chunks/threads, combine in order.
+// ---------------------------------------------------------------------------
+
+/// Shared raw view of the state vectors, so worker threads can carve out
+/// disjoint `&mut` chunk windows (the ranges handed out by
+/// `parallel_chunks` never overlap).
+struct VecPtrs {
+    ptrs: [*mut f32; 5],
+    len: usize,
+    arity: usize,
+}
+
+// SAFETY: every dereference goes through `slice` with ranges that are
+// disjoint across concurrent calls (one chunk index per thread).
+unsafe impl Sync for VecPtrs {}
+
+impl VecPtrs {
+    fn new(vecs: &mut [Vec<f32>], len: usize) -> Self {
+        assert!(vecs.len() <= 5, "strategies carry at most 5 state vectors");
+        let mut ptrs = [std::ptr::null_mut(); 5];
+        for (p, v) in ptrs.iter_mut().zip(vecs.iter_mut()) {
+            debug_assert_eq!(v.len(), len);
+            *p = v.as_mut_ptr();
+        }
+        VecPtrs { ptrs, len, arity: vecs.len() }
+    }
+
+    /// SAFETY: callers must pass disjoint `r` across concurrent calls for
+    /// the same `i`, and keep the backing vectors alive and unmoved.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice(&self, i: usize, r: Range<usize>) -> &mut [f32] {
+        debug_assert!(i < self.arity && r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptrs[i].add(r.start), r.len())
+    }
+}
+
+/// One fused optimizer step: the bf16/MCF update and the streamed Def. 3.3
+/// diagnostics in a single pass, sharded over `workers` threads in fixed
+/// [`CHUNK`]-element chunks.  Bit-identical to [`AdamW::step_reference`]
+/// for every strategy and any worker count; performs no heap allocation
+/// (the chunk-accumulator scratch lives in [`OptimState`]).
+pub fn fused_step(
+    opt: &AdamW,
+    state: &mut OptimState,
+    g: &[f32],
+    lr: f32,
+    t: u64,
+    rng: &mut Rng,
+    workers: usize,
+) -> StepStats {
+    assert_eq!(g.len(), state.n, "gradient length mismatch");
+    let n = state.n;
+    let strategy = state.strategy;
+    let s = StepScalars::new(opt, lr, t);
+    // One key per step; per-element noise is counter-derived from it so
+    // the draw order cannot depend on chunk/thread assignment.
+    let sr_key = match strategy {
+        Strategy::StochasticRounding => rng.next_u64(),
+        _ => 0,
+    };
+
+    let mut scratch = state.take_accum_scratch();
+    {
+        let vecs = state.vecs_mut();
+        let p = VecPtrs::new(vecs, n);
+        let run = &mut scratch;
+        // SAFETY (all arms): `parallel_chunks` hands out non-overlapping
+        // ranges, each claimed by exactly one thread, so the `p.slice`
+        // windows are disjoint &mut views per vector.
+        match strategy {
+            Strategy::Bf16 => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                step_chunk_bf16(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r),
+                )
+            }),
+            Strategy::Kahan => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                step_chunk_kahan(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r),
+                )
+            }),
+            Strategy::StochasticRounding => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    step_chunk_sr(
+                        &s,
+                        sr_key,
+                        r.start,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r),
+                    )
+                })
+            }
+            Strategy::CollageLight => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                step_chunk_collage_light(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r),
+                )
+            }),
+            Strategy::CollagePlus => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                step_chunk_collage_plus(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r.clone()),
+                    p.slice(4, r),
+                )
+            }),
+            Strategy::Fp32Optim => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                step_chunk_fp32_optim(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r),
+                )
+            }),
+            Strategy::Fp32MasterWeights => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    step_chunk_fp32_mw(
+                        &s,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r),
+                    )
+                })
+            }
+            Strategy::Fp32 => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                step_chunk_fp32(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r),
+                )
+            }),
+        }
+    }
+
+    // Index-ordered combine — the other half of the determinism contract.
+    let mut total = ChunkAccum::default();
+    for part in &scratch {
+        total.merge(part);
+    }
+    state.put_accum_scratch(scratch);
+    total.finalize(strategy, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sr_noise_is_16_bit_and_counter_pure() {
+        for k in [0usize, 1, 5, 1 << 20] {
+            let a = sr_noise(0xDEADBEEF, k);
+            assert!(a <= 0xFFFF);
+            assert_eq!(a, sr_noise(0xDEADBEEF, k), "pure function of (key, k)");
+        }
+        assert_ne!(sr_noise(1, 0), sr_noise(2, 0), "key must matter");
+        assert_ne!(sr_noise(1, 0), sr_noise(1, 1), "index must matter");
+    }
+
+    #[test]
+    fn sr_round_zero_passthrough_and_truncation() {
+        assert_eq!(sr_round(0.0, 0xFFFF), 0.0);
+        let x = sr_round(1.2345678f32, 0);
+        // noise 0 truncates toward zero in the bf16 grid
+        assert_eq!(x, rn_bf16(x), "result must be bf16-representable");
+    }
+
+    #[test]
+    fn chunk_accum_merge_is_plain_sum() {
+        let mut a = ChunkAccum { un2: 1.0, en2: 2.0, dot: 3.0, pn2: 4.0, lost: 5 };
+        let b = ChunkAccum { un2: 10.0, en2: 20.0, dot: 30.0, pn2: 40.0, lost: 50 };
+        a.merge(&b);
+        assert_eq!((a.un2, a.en2, a.dot, a.pn2, a.lost), (11.0, 22.0, 33.0, 44.0, 55));
+    }
+
+    #[test]
+    fn finalize_zero_update_norm_defaults() {
+        let stats = ChunkAccum::default().finalize(Strategy::Bf16, 4);
+        assert_eq!(stats.edq.edq, 0.0);
+        assert_eq!(stats.edq.edq_ratio, 1.0);
+        assert_eq!(stats.lost_frac, 0.0);
+        assert_eq!(stats.param_norm, 0.0);
+    }
+}

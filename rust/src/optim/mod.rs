@@ -9,9 +9,38 @@
 //!      a model in the loop,
 //!   3. benchmark the optimizer-only cost per strategy (Table 7's
 //!      state-bytes argument).
+//!
+//! # The kernel layer
+//!
+//! [`kernels`] holds one monomorphized chunk kernel per [`Strategy`] that
+//! performs the update **and** streams the Def. 3.3 diagnostics (EDQ
+//! dot/norms, lost-update count, parameter-norm²) in a single pass —
+//! [`AdamW::step`] runs them on the calling thread, `AdamW::step_sharded`
+//! shards chunks across a scoped thread pool
+//! (`util::threadpool::parallel_chunks`), and `AdamW::step_reference`
+//! retains the original two-pass scalar loop as the equivalence oracle.
+//!
+//! ## Determinism contract
+//!
+//! * **Fixed chunk boundaries.**  The state is tiled into
+//!   [`kernels::CHUNK`]-element chunks determined only by `n`, never by the
+//!   worker count; chunks are claimed atomically but each writes a disjoint
+//!   window of the state vectors and its own accumulator slot.
+//! * **Index-ordered reduction.**  Per-chunk f64 partial accumulators are
+//!   combined by the leader in chunk-index order, and the scalar oracle's
+//!   diagnostics reduce over the same grid
+//!   (`numerics::analysis::ACCUM_CHUNK`), so state vectors *and*
+//!   [`StepStats`] are bit-identical across worker counts and bit-identical
+//!   between the fused and reference paths.  Stochastic rounding keeps this
+//!   property by hashing `(step key, element index)` instead of consuming a
+//!   sequential RNG stream.
+//!
+//! `tests/kernel_equivalence.rs` enforces the contract for every strategy,
+//! non-chunk-aligned lengths, and worker counts 1/2/8.
 
 pub mod adamw;
 pub mod generic;
+pub mod kernels;
 pub mod state;
 pub mod strategy;
 

@@ -3,6 +3,7 @@
 
 use anyhow::{bail, Result};
 
+use super::kernels::ChunkAccum;
 use super::strategy::Strategy;
 use crate::tensor::SemanticDtype;
 
@@ -14,6 +15,9 @@ pub struct OptimState {
     names: Vec<&'static str>,
     dtypes: Vec<SemanticDtype>,
     vecs: Vec<Vec<f32>>,
+    /// Reusable per-chunk diagnostics buffer for the fused step kernels —
+    /// grown once, so `AdamW::step` allocates nothing per step.
+    accum_scratch: Vec<ChunkAccum>,
 }
 
 impl OptimState {
@@ -34,6 +38,7 @@ impl OptimState {
             names: spec.iter().map(|(n, _)| *n).collect(),
             dtypes: spec.iter().map(|(_, d)| *d).collect(),
             vecs,
+            accum_scratch: Vec::new(),
         }
     }
 
@@ -57,7 +62,19 @@ impl OptimState {
             names: spec.iter().map(|(nm, _)| *nm).collect(),
             dtypes: spec.iter().map(|(_, d)| *d).collect(),
             vecs,
+            accum_scratch: Vec::new(),
         })
+    }
+
+    /// Detach the fused-kernel scratch buffer (see `optim::kernels`);
+    /// callers return it via [`OptimState::put_accum_scratch`] so its
+    /// capacity is reused across steps.
+    pub(crate) fn take_accum_scratch(&mut self) -> Vec<ChunkAccum> {
+        std::mem::take(&mut self.accum_scratch)
+    }
+
+    pub(crate) fn put_accum_scratch(&mut self, scratch: Vec<ChunkAccum>) {
+        self.accum_scratch = scratch;
     }
 
     pub fn names(&self) -> &[&'static str] {

@@ -9,6 +9,10 @@
 //! deterministically (see `allreduce`), and applies the precision-strategy
 //! optimizer — the bit-exact Rust mirror of the fused Pallas kernel
 //! (cross-validated against the HLO in `tests/hlo_cross_check.rs`).
+//! The optimizer step itself runs the fused chunk kernels sharded over the
+//! same worker count (`AdamW::step_sharded`); the kernel layer's
+//! determinism contract (`optim::kernels`) keeps the result bit-identical
+//! to a single-threaded step, so DP runs stay reproducible.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -199,7 +203,9 @@ impl DataParallel {
             }
         }
         self.step += 1;
-        let stats = self.opt.step(&mut self.state, &g, lr, self.step, &mut self.rng);
+        let stats =
+            self.opt
+                .step_sharded(&mut self.state, &g, lr, self.step, &mut self.rng, self.workers);
         Ok(DpStepResult {
             loss: losses.iter().sum::<f64>() / losses.len() as f64,
             grad_norm: gnorm,

@@ -1,8 +1,12 @@
 //! Micro-benchmark harness (no `criterion` offline): warmup + timed
-//! iterations with robust statistics, and a one-line report format shared
-//! by all `rust/benches/*.rs` targets.
+//! iterations with robust statistics, a one-line report format shared by
+//! all `rust/benches/*.rs` targets, and machine-readable JSON emission
+//! (`BENCH_*.json`) so the perf trajectory is tracked across PRs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use super::json::{Obj, Value};
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -172,6 +176,46 @@ impl Bench {
     pub fn median_of(&self, name: &str) -> Option<Duration> {
         self.results.iter().find(|r| r.name == name).map(|r| r.median)
     }
+
+    /// All recorded results as a JSON value: one object per case with raw
+    /// nanosecond statistics and, when a throughput denominator was
+    /// registered, the per-item cost.
+    pub fn to_json(&self) -> Value {
+        let mut arr = Vec::with_capacity(self.results.len());
+        for r in &self.results {
+            let mut o = Obj::new();
+            o.insert("name", r.name.as_str());
+            o.insert("iterations", r.iterations);
+            o.insert("mean_ns", r.mean.as_nanos() as f64);
+            o.insert("median_ns", r.median.as_nanos() as f64);
+            o.insert("p10_ns", r.p10.as_nanos() as f64);
+            o.insert("p90_ns", r.p90.as_nanos() as f64);
+            if let Some(items) = r.items_per_iter {
+                o.insert("items_per_iter", items);
+                o.insert("median_ns_per_item", r.median.as_nanos() as f64 / items);
+            }
+            arr.push(Value::Obj(o));
+        }
+        Value::Arr(arr)
+    }
+
+    /// Write a `BENCH_*.json` report: the raw per-case results plus any
+    /// caller-provided summary sections (e.g. a strategy → speedup map).
+    pub fn write_json(
+        &self,
+        path: impl AsRef<Path>,
+        extra: impl IntoIterator<Item = (String, Value)>,
+    ) -> std::io::Result<()> {
+        let mut root = Obj::new();
+        root.insert("results", self.to_json());
+        for (k, v) in extra {
+            root.insert(k, v);
+        }
+        let path = path.as_ref();
+        std::fs::write(path, Value::Obj(root).pretty(2) + "\n")?;
+        println!("wrote {}", path.display());
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -205,6 +249,21 @@ mod tests {
         };
         let r = b.case_items("t", 1000.0, || 1 + 1);
         assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(2),
+            budget: Duration::from_millis(10),
+            ..Default::default()
+        };
+        b.case_items("json-case", 100.0, || 2 + 2);
+        let v = b.to_json();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "json-case");
+        assert!(arr[0].get("median_ns_per_item").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

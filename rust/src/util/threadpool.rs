@@ -1,12 +1,49 @@
-//! Fixed-size thread pool with scoped parallel-map — the substrate for the
-//! data-parallel training runtime (`parallel::worker`).  Built on
+//! Fixed-size thread pool with scoped parallel-map and chunk-sharding — the
+//! substrate for the data-parallel training runtime (`parallel::worker`) and
+//! the fused optimizer kernels (`optim::kernels`).  Built on
 //! `std::thread::scope`, so closures may borrow stack data.
+//!
+//! Both entry points are deterministic by construction: [`parallel_map`]
+//! returns results in index order, and [`parallel_chunks`] writes one
+//! partial result per fixed-size chunk into a caller-provided buffer in
+//! chunk order, so any reduction the caller performs over that buffer is
+//! independent of worker count and thread scheduling.
 
+use std::cell::UnsafeCell;
+use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+
+/// Write-once result slots shared across worker threads.
+///
+/// Each slot is written at most once, by the single thread that claimed its
+/// index from the shared atomic counter; the `thread::scope` join provides
+/// the happens-before edge for the leader's subsequent reads.  No per-slot
+/// lock is taken (the previous implementation paid one `Mutex` per item).
+struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
+
+// SAFETY: distinct slots are written by distinct threads (unique claimed
+// indices) and read only after the scope join.
+unsafe impl<T: Send> Sync for Slots<T> {}
+
+impl<T> Slots<T> {
+    fn new(n: usize) -> Self {
+        Slots((0..n).map(|_| UnsafeCell::new(None)).collect())
+    }
+
+    /// SAFETY: callers must guarantee `i` is claimed by exactly one thread.
+    unsafe fn write(&self, i: usize, value: T) {
+        *self.0[i].get() = Some(value);
+    }
+
+    fn into_results(self) -> impl Iterator<Item = Option<T>> {
+        self.0.into_iter().map(|c| c.into_inner())
+    }
+}
 
 /// Run `f(i)` for `i in 0..n` on up to `workers` threads, returning results
-/// in index order.  Panics in workers propagate to the caller.
+/// in index order.  Indices are claimed in contiguous blocks to amortize
+/// the shared counter, and results land in lock-free write-once slots.
+/// Panics in workers propagate to the caller.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -17,24 +54,101 @@ where
         return Vec::new();
     }
     let workers = workers.min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    // Claim in blocks: coarse enough to keep counter traffic low, fine
+    // enough (≈4 blocks per worker) that uneven items still balance.
+    let block = (n / (workers * 4)).max(1);
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let slots = Slots::new(n);
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
+                let start = next.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
                     break;
                 }
-                let r = f(i);
-                *results[i].lock().unwrap() = Some(r);
+                let end = (start + block).min(n);
+                for i in start..end {
+                    let r = f(i);
+                    // SAFETY: `i` lies in a block claimed only by this
+                    // thread; the slot is written exactly once.
+                    unsafe { slots.write(i, r) };
+                }
             });
         }
     });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker did not produce a result"))
+    slots
+        .into_results()
+        .map(|r| r.expect("worker did not produce a result"))
         .collect()
+}
+
+/// Shard `0..n` into fixed-size chunks and run `f(chunk_index, range)` for
+/// every chunk on up to `workers` threads, writing the per-chunk results
+/// into `out` (cleared and resized to `n.div_ceil(chunk)`) in chunk order.
+///
+/// The chunk grid depends only on `n` and `chunk` — never on `workers` —
+/// so a reduction over `out` performed in index order yields bit-identical
+/// results for any worker count.  With `workers == 1` (or a single chunk)
+/// everything runs inline on the caller's thread with no spawn and no
+/// allocation beyond `out`'s (reusable) capacity.
+///
+/// `f` receives non-overlapping ranges, which is what makes it sound for
+/// callers to hand out disjoint `&mut` sub-slices of shared state from
+/// inside the closure (see `optim::kernels`).
+pub fn parallel_chunks<A, F>(n: usize, chunk: usize, workers: usize, out: &mut Vec<A>, f: F)
+where
+    A: Send + Default,
+    F: Fn(usize, Range<usize>) -> A + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    assert!(workers > 0, "worker count must be positive");
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    let chunks = n.div_ceil(chunk);
+    out.resize_with(chunks, A::default);
+    let range_of = |c: usize| c * chunk..((c + 1) * chunk).min(n);
+    if workers == 1 || chunks == 1 {
+        for (c, slot) in out.iter_mut().enumerate() {
+            *slot = f(c, range_of(c));
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let slots = SliceSlots(out.as_mut_ptr(), out.len());
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(chunks) {
+            scope.spawn(|| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= chunks {
+                    break;
+                }
+                let a = f(c, range_of(c));
+                // SAFETY: chunk index `c` is claimed by exactly one thread,
+                // so this write-once store aliases no other access; the
+                // scope join publishes it to the caller.
+                unsafe { slots.write(c, a) };
+            });
+        }
+    });
+}
+
+/// Raw write-once view over a pre-sized result buffer (chunk partials).
+struct SliceSlots<A>(*mut A, usize);
+
+// SAFETY: disjoint indices are written by distinct threads; see `write`.
+unsafe impl<A: Send> Sync for SliceSlots<A> {}
+
+impl<A> SliceSlots<A> {
+    /// SAFETY: `i < self.1` and each index written by at most one thread.
+    unsafe fn write(&self, i: usize, value: A) {
+        debug_assert!(i < self.1);
+        *self.0.add(i) = value;
+    }
 }
 
 /// Number of worker threads to default to (leave one core for the leader).
@@ -75,5 +189,85 @@ mod tests {
         let data = vec![10, 20, 30];
         let out = parallel_map(3, 2, |i| data[i] * 2);
         assert_eq!(out, vec![20, 40, 60]);
+    }
+
+    #[test]
+    fn large_map_all_slots_filled() {
+        // Block claiming must cover every index exactly once even when the
+        // item count is not divisible by the block size.
+        for n in [1usize, 7, 97, 1000, 1003] {
+            let out = parallel_map(n, 5, |i| i);
+            assert_eq!(out, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn chunks_cover_range_in_order() {
+        let mut out = Vec::new();
+        parallel_chunks(10, 4, 3, &mut out, |c, r| (c, r.start, r.end));
+        assert_eq!(out, vec![(0, 0, 4), (1, 4, 8), (2, 8, 10)]);
+    }
+
+    #[test]
+    fn chunks_empty_input() {
+        let mut out: Vec<usize> = vec![99];
+        parallel_chunks(0, 8, 4, &mut out, |_, r| r.len());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn chunk_partials_invariant_to_worker_count() {
+        // The per-chunk partial list (and hence any index-ordered
+        // reduction over it) must not depend on the worker count.
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let run = |workers: usize| {
+            let mut parts = Vec::new();
+            parallel_chunks(n, 4096, workers, &mut parts, |_, r| {
+                let mut acc = 0.0f64;
+                for &x in &xs[r] {
+                    acc += x;
+                }
+                acc
+            });
+            parts.iter().map(|p| p.to_bits()).collect::<Vec<_>>()
+        };
+        let p1 = run(1);
+        assert_eq!(p1.len(), n.div_ceil(4096));
+        assert_eq!(p1, run(2));
+        assert_eq!(p1, run(8));
+    }
+
+    #[test]
+    fn chunk_buffer_is_reused() {
+        let mut out = Vec::new();
+        parallel_chunks(64, 16, 2, &mut out, |c, _| c);
+        let cap = out.capacity();
+        parallel_chunks(64, 16, 4, &mut out, |c, _| c + 1);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert_eq!(out.capacity(), cap, "buffer should be reused, not regrown");
+    }
+
+    #[test]
+    fn disjoint_mut_sharding_pattern() {
+        // The optim::kernels usage pattern: hand each chunk a disjoint
+        // &mut window of one shared vector through a raw-pointer view.
+        struct Ptr(*mut f32, usize);
+        unsafe impl Sync for Ptr {}
+        let n = 10_000;
+        let mut data = vec![0.0f32; n];
+        let p = Ptr(data.as_mut_ptr(), n);
+        let mut parts = Vec::new();
+        parallel_chunks(n, 1024, 4, &mut parts, |_, r| {
+            assert!(r.end <= p.1);
+            // SAFETY: ranges from parallel_chunks are disjoint.
+            let s = unsafe { std::slice::from_raw_parts_mut(p.0.add(r.start), r.len()) };
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (r.start + i) as f32;
+            }
+            s.len()
+        });
+        assert_eq!(parts.iter().sum::<usize>(), n);
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as f32));
     }
 }

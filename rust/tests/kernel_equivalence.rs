@@ -1,0 +1,187 @@
+//! The kernel-layer determinism contract, enforced: the fused single-pass
+//! chunk kernels (`AdamW::step` / `AdamW::step_sharded`) must be
+//! **bitwise** identical to the retained two-pass scalar oracle
+//! (`AdamW::step_reference`) — state vectors *and* `StepStats` — for every
+//! strategy, for lengths that do and do not align with the chunk grid, and
+//! for any worker count.
+
+use collage::numerics::expansion::rn_bf16;
+use collage::optim::adamw::{AdamW, StepStats};
+use collage::optim::kernels::CHUNK;
+use collage::optim::state::OptimState;
+use collage::optim::strategy::{Strategy, ALL_STRATEGIES};
+use collage::util::rng::Rng;
+
+/// Sizes around the interesting boundaries: single elements, sub-chunk,
+/// power-of-two, off-by-one, and a multi-chunk length that exercises the
+/// index-ordered partial combine (40_000 > 2 × CHUNK).
+const SIZES: [usize; 6] = [1, 5, 1023, 4096, 4097, 40_000];
+
+fn gradient(rng: &mut Rng, n: usize, quantized: bool, zeros: bool) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            if zeros && i % 7 == 0 {
+                // exercise the Δθ = 0 / lost-update edge cases
+                0.0
+            } else {
+                let x = 0.01 * rng.normal() as f32;
+                if quantized {
+                    rn_bf16(x)
+                } else {
+                    x
+                }
+            }
+        })
+        .collect()
+}
+
+fn initial_state(strategy: Strategy, n: usize, seed: u64) -> OptimState {
+    let mut rng = Rng::new(seed, strategy as u64);
+    let theta: Vec<f32> = (0..n)
+        .map(|_| {
+            let x = rng.normal() as f32;
+            if strategy == Strategy::Fp32 {
+                x
+            } else {
+                rn_bf16(x)
+            }
+        })
+        .collect();
+    OptimState::init(strategy, &theta)
+}
+
+fn assert_states_bitwise(a: &OptimState, b: &OptimState, ctx: &str) {
+    assert_eq!(a.names(), b.names(), "{ctx}: state arity");
+    for (name, (va, vb)) in a.names().iter().zip(a.vecs().iter().zip(b.vecs())) {
+        assert_eq!(va.len(), vb.len(), "{ctx}: {name} length");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: state {name:?}[{i}] {x:e} != {y:e}"
+            );
+        }
+    }
+}
+
+fn assert_stats_bitwise(a: &StepStats, b: &StepStats, ctx: &str) {
+    let fields = [
+        ("update_norm", a.edq.update_norm, b.edq.update_norm),
+        ("effective_norm", a.edq.effective_norm, b.edq.effective_norm),
+        ("edq", a.edq.edq, b.edq.edq),
+        ("edq_ratio", a.edq.edq_ratio, b.edq.edq_ratio),
+        ("lost_frac", a.lost_frac, b.lost_frac),
+        ("param_norm", a.param_norm, b.param_norm),
+    ];
+    for (name, x, y) in fields {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: stats.{name} {x:e} != {y:e}");
+    }
+}
+
+/// Run `steps` steps through both paths with identical inputs and compare
+/// everything bitwise after every step.
+fn compare_paths(strategy: Strategy, n: usize, workers: usize, steps: u64) {
+    let ctx = format!("{strategy} n={n} workers={workers}");
+    let opt = AdamW::with_beta2(0.999); // β₂ → 1.0 in bf16: the hard regime
+    let mut st_ref = initial_state(strategy, n, 42);
+    let mut st_fused = initial_state(strategy, n, 42);
+    // Same seed → same per-step SR key draw in both paths.
+    let mut rng_ref = Rng::new(1234, 9);
+    let mut rng_fused = Rng::new(1234, 9);
+    let mut grad_rng = Rng::new(77, 0);
+    for t in 1..=steps {
+        let g = gradient(&mut grad_rng, n, strategy != Strategy::Fp32, t % 2 == 0);
+        let s_ref = opt.step_reference(&mut st_ref, &g, 1e-3, t, &mut rng_ref);
+        let s_fused = if workers == 1 {
+            opt.step(&mut st_fused, &g, 1e-3, t, &mut rng_fused)
+        } else {
+            opt.step_sharded(&mut st_fused, &g, 1e-3, t, &mut rng_fused, workers)
+        };
+        let ctx = format!("{ctx} t={t}");
+        assert_states_bitwise(&st_ref, &st_fused, &ctx);
+        assert_stats_bitwise(&s_ref, &s_fused, &ctx);
+    }
+}
+
+#[test]
+fn fused_matches_reference_all_strategies_all_sizes() {
+    for strategy in ALL_STRATEGIES {
+        for n in SIZES {
+            compare_paths(strategy, n, 1, 3);
+        }
+    }
+}
+
+#[test]
+fn sharded_matches_reference_workers_2() {
+    for strategy in ALL_STRATEGIES {
+        for n in [4097, 40_000] {
+            compare_paths(strategy, n, 2, 3);
+        }
+    }
+}
+
+#[test]
+fn sharded_matches_reference_workers_8() {
+    for strategy in ALL_STRATEGIES {
+        for n in [1, 1023, 40_000] {
+            compare_paths(strategy, n, 8, 3);
+        }
+    }
+}
+
+#[test]
+fn sharded_is_invariant_across_worker_counts() {
+    // Direct fused-vs-fused check (no oracle in the loop): the exact same
+    // trajectory for 1, 2 and 8 workers, including SR's counter-based
+    // noise and the multi-chunk diagnostics reduction.
+    for strategy in [Strategy::StochasticRounding, Strategy::CollagePlus] {
+        let n = 40_000;
+        let run = |workers: usize| {
+            let opt = AdamW::default();
+            let mut st = initial_state(strategy, n, 7);
+            let mut rng = Rng::new(5, 5);
+            let mut grad_rng = Rng::new(3, 3);
+            let mut last = StepStats::default();
+            for t in 1..=4 {
+                let g = gradient(&mut grad_rng, n, true, false);
+                last = opt.step_sharded(&mut st, &g, 1e-3, t, &mut rng, workers);
+            }
+            (st, last)
+        };
+        let (st1, stats1) = run(1);
+        for workers in [2, 8] {
+            let (stw, statsw) = run(workers);
+            let ctx = format!("{strategy} fused w=1 vs w={workers}");
+            assert_states_bitwise(&st1, &stw, &ctx);
+            assert_stats_bitwise(&stats1, &statsw, &ctx);
+        }
+    }
+}
+
+#[test]
+fn zero_gradient_diagnostics_defaults() {
+    // ‖Δθ‖ can be 0 (e.g. zero gradient, zero lr, zero weight decay):
+    // both paths must take the same edq=0 / ratio=1 branch.
+    let opt = AdamW { weight_decay: 0.0, ..Default::default() };
+    for strategy in ALL_STRATEGIES {
+        let mut st_ref = initial_state(strategy, 100, 11);
+        let mut st_fused = initial_state(strategy, 100, 11);
+        let g = vec![0.0f32; 100];
+        let mut r1 = Rng::new(0, 0);
+        let mut r2 = Rng::new(0, 0);
+        let a = opt.step_reference(&mut st_ref, &g, 0.0, 1, &mut r1);
+        let b = opt.step(&mut st_fused, &g, 0.0, 1, &mut r2);
+        assert_eq!(a.edq.edq_ratio, 1.0, "{strategy}");
+        assert_stats_bitwise(&a, &b, &format!("{strategy} zero-grad"));
+        assert_states_bitwise(&st_ref, &st_fused, &format!("{strategy} zero-grad"));
+    }
+}
+
+#[test]
+fn chunk_constant_sanity() {
+    // The multi-chunk sizes above must actually span multiple chunks, or
+    // the reduction-order tests test nothing.
+    assert!(40_000 > 2 * CHUNK, "bump the multi-chunk test size");
+    assert!(4097 < CHUNK, "single-chunk sizes should stay sub-chunk");
+}
