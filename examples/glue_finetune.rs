@@ -37,7 +37,7 @@ fn main() -> collage::Result<()> {
         println!("pretraining {} for {pre_steps} steps…", strategy.paper_name());
         let cfg = RunConfig {
             model: model.into(),
-            strategy,
+            plan: strategy.into(),
             steps: pre_steps,
             warmup: pre_steps / 10,
             lr: 1e-3,
@@ -55,7 +55,7 @@ fn main() -> collage::Result<()> {
             let task = GlueTask::new(kind, meta.vocab, meta.seq_len);
             let cfg = RunConfig {
                 model: model.into(),
-                strategy,
+                plan: strategy.into(),
                 steps: ft_steps,
                 warmup: 5,
                 lr: 5e-4,

@@ -82,7 +82,7 @@ fn main() -> collage::Result<()> {
         .batch_for_step(3, 1);
 
     // New hot path via Trainer.
-    let cfg = RunConfig { model: model.clone(), strategy: Strategy::CollagePlus,
+    let cfg = RunConfig { model: model.clone(), plan: Strategy::CollagePlus.into(),
         steps: u64::MAX, log_every: 0, corpus_tokens: 1 << 17, ..Default::default() };
     let mut tr = Trainer::new(runtime.clone(), &manifest, cfg)?;
     for _ in 0..5 { tr.train_step(&batch)?; }

@@ -41,7 +41,7 @@ fn main() -> collage::Result<()> {
         // needs; skip combos without artifacts instead of failing.
         let cfg = RunConfig {
             model: model.clone(),
-            strategy,
+            plan: strategy.into(),
             beta2,
             steps,
             warmup: steps / 10,

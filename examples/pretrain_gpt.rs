@@ -39,7 +39,7 @@ fn main() -> collage::Result<()> {
         println!("\n=== {} ===", strategy.paper_name());
         let cfg = RunConfig {
             model: model.clone(),
-            strategy,
+            plan: strategy.into(),
             steps,
             warmup: steps / 10,
             lr: 6e-4,

@@ -18,7 +18,7 @@ fn main() -> collage::Result<()> {
     // 2. A run configuration: tiny GPT, Collage-plus (Option C), 100 steps.
     let cfg = RunConfig {
         model: "tiny".into(),
-        strategy: Strategy::CollagePlus,
+        plan: Strategy::CollagePlus.into(),
         steps: 100,
         warmup: 10,
         lr: 1e-3,

@@ -11,15 +11,23 @@
 //! plus the full AOT HLO train step on the `small` config when artifacts
 //! are present (end-to-end, includes fwd/bwd — the realistic amortization).
 //!
+//! ... plus the format-generic kernel rows (FP16 / FP8-E4M3 / FP8-E5M2 ×
+//! plain/light/plus plans through the same fused `AdamW::step`).
+//!
 //! Emits `BENCH_optimizer_step.json` (strategy → median ns/elem, speedup
-//! vs option D) so the perf trajectory is tracked across PRs.
+//! vs option D; per-format generic-kernel rows under `generic_formats`) so
+//! the perf trajectory is tracked across PRs — `BENCH_baseline/` plus
+//! `scripts/check_bench_regression.py` turn it into a CI regression gate
+//! (refresh the baseline with `make bench-baseline`).
 //!
 //!     cargo bench --bench optimizer_step
 
 use collage::coordinator::config::RunConfig;
 use collage::coordinator::trainer::Trainer;
 use collage::numerics::expansion::rn_bf16;
+use collage::numerics::format::{FP16, FP8E4M3, FP8E5M2};
 use collage::optim::adamw::AdamW;
+use collage::optim::plan::{PrecisionPlan, Scheme};
 use collage::optim::state::OptimState;
 use collage::optim::strategy::{Strategy, PAPER_OPTIONS};
 use collage::runtime::{Manifest, Runtime};
@@ -139,9 +147,56 @@ fn main() {
         per_strategy.insert(s.option_str(), Value::Obj(o));
     }
     summary.insert("strategies", Value::Obj(per_strategy));
+
+    // ---- format-generic fused kernels (the non-bf16 plan rows) -------------
+    // Smaller n: the f64 software-rounding path is ~10× the bf16 bit trick
+    // and these rows gate relative regressions, not absolute throughput.
+    let gen_n = n.min(1 << 18);
+    let shard = shard_workers;
+    println!("\n== format-generic fused kernels, {gen_n} params ==");
+    let mut generic_obj = Obj::new();
+    for fmt in [FP16, FP8E4M3, FP8E5M2] {
+        for scheme in [Scheme::Plain, Scheme::CollageLight, Scheme::CollagePlus] {
+            let plan = PrecisionPlan::new(fmt, scheme);
+            let label = format!("{}@{}", scheme.name(), fmt.name);
+            let opt = AdamW::for_plan(plan, 0.95);
+            let theta_q: Vec<f32> = theta[..gen_n].iter().map(|&x| fmt.round_nearest(x)).collect();
+            let g_q: Vec<f32> = g[..gen_n].iter().map(|&x| fmt.round_nearest(x)).collect();
+
+            let mut state = OptimState::init_plan(plan, &theta_q);
+            let mut step = 0u64;
+            let fused = bench
+                .case_items(format!("opt/{label}/fused"), gen_n as f64, || {
+                    step += 1;
+                    opt.step(&mut state, &g_q, 1e-4, step, &mut rng)
+                })
+                .median
+                .as_secs_f64();
+
+            let mut state = OptimState::init_plan(plan, &theta_q);
+            let mut step = 0u64;
+            let sharded = bench
+                .case_items(format!("opt/{label}/w{shard}"), gen_n as f64, || {
+                    step += 1;
+                    opt.step_sharded(&mut state, &g_q, 1e-4, step, &mut rng, shard)
+                })
+                .median
+                .as_secs_f64();
+
+            let mut o = Obj::new();
+            o.insert("fused_ns_per_elem", fused * 1e9 / gen_n as f64);
+            o.insert(format!("w{shard}_ns_per_elem"), sharded * 1e9 / gen_n as f64);
+            o.insert("bytes_per_param", plan.bytes_per_param());
+            generic_obj.insert(label, Value::Obj(o));
+        }
+    }
+
     if let Err(e) = bench.write_json(
         "BENCH_optimizer_step.json",
-        [("table7".to_string(), Value::Obj(summary))],
+        [
+            ("table7".to_string(), Value::Obj(summary)),
+            ("generic_formats".to_string(), Value::Obj(generic_obj)),
+        ],
     ) {
         eprintln!("could not write BENCH_optimizer_step.json: {e}");
     }
@@ -178,7 +233,7 @@ fn main() {
     for strategy in PAPER_OPTIONS {
         let cfg = RunConfig {
             model: "small".into(),
-            strategy,
+            plan: strategy.into(),
             steps: u64::MAX,
             warmup: 10,
             log_every: 0,

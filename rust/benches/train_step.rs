@@ -30,7 +30,7 @@ fn main() {
         let meta = meta.clone();
         let cfg = RunConfig {
             model: model.into(),
-            strategy: Strategy::CollagePlus,
+            plan: Strategy::CollagePlus.into(),
             steps: u64::MAX,
             log_every: 0,
             corpus_tokens: 1 << 17,

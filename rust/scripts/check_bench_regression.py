@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Tolerant fused-kernel bench regression gate.
+
+Compares a candidate ``BENCH_optimizer_step.json`` against the committed
+baseline (``BENCH_baseline/optimizer_step.json``) and fails (exit 1) if any
+fused-kernel ns/elem regresses by more than ``--tolerance`` (default 25%)
+AND by more than ``--abs-floor`` nanoseconds (absolute slack that absorbs
+timer noise at small CI sizes).
+
+Only keys present in BOTH files are compared, so adding new strategies,
+formats or fields never breaks the gate.  Refresh the baseline on a quiet
+machine with ``make bench-baseline`` (see rust/Makefile).
+
+Usage:
+    python3 scripts/check_bench_regression.py BASELINE CANDIDATE \
+        [--tolerance 0.25] [--abs-floor 2.0]
+"""
+
+import argparse
+import json
+import sys
+
+
+def fused_rows(doc):
+    """Flatten {row-name: fused ns/elem} from the bench JSON."""
+    rows = {}
+    strategies = doc.get("table7", {}).get("strategies", {})
+    for name, obj in strategies.items():
+        v = obj.get("fused_ns_per_elem")
+        if isinstance(v, (int, float)):
+            rows[f"strategy/{name}"] = float(v)
+    for name, obj in doc.get("generic_formats", {}).items():
+        v = obj.get("fused_ns_per_elem")
+        if isinstance(v, (int, float)):
+            rows[f"format/{name}"] = float(v)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression threshold (0.25 = +25%%)")
+    ap.add_argument("--abs-floor", type=float, default=2.0,
+                    help="ignore regressions smaller than this many ns/elem")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = fused_rows(json.load(f))
+    with open(args.candidate) as f:
+        cand = fused_rows(json.load(f))
+
+    shared = sorted(set(base) & set(cand))
+    if not shared:
+        # Zero overlap means the bench JSON schema drifted (or the bench
+        # crashed early) — failing loudly here is the whole point of the
+        # gate; a silently-vacuous comparison must not pass CI.
+        print("bench gate: FAIL — no comparable fused-kernel rows between "
+              f"baseline ({len(base)} rows) and candidate ({len(cand)} rows).")
+        print("Did the bench JSON keys change? Refresh the baseline with "
+              "`make bench-baseline` alongside the schema change.")
+        return 2
+
+    regressions = []
+    width = max(len(k) for k in shared)
+    print(f"bench gate: tolerance +{args.tolerance:.0%}, "
+          f"abs floor {args.abs_floor} ns/elem")
+    for key in shared:
+        b, c = base[key], cand[key]
+        ratio = c / b if b > 0 else float("inf")
+        regressed = c > b * (1.0 + args.tolerance) and (c - b) > args.abs_floor
+        flag = "REGRESSION" if regressed else "ok"
+        print(f"  {key:<{width}}  base {b:8.2f}  cand {c:8.2f}  "
+              f"({ratio:5.2f}x)  {flag}")
+        if regressed:
+            regressions.append(key)
+
+    missing = sorted(set(base) - set(cand))
+    if missing:
+        print(f"  (skipped {len(missing)} baseline rows absent from candidate: "
+              f"{', '.join(missing)})")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} fused-kernel regression(s) "
+              f">{args.tolerance:.0%}: {', '.join(regressions)}")
+        print("If intentional (e.g. new baseline hardware), refresh with "
+              "`make bench-baseline` and commit the result.")
+        return 1
+    print("\nbench gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,8 +7,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::optim::plan::PrecisionPlan;
 use crate::optim::state::OptimState;
-use crate::optim::strategy::Strategy;
 use crate::util::json::{Obj, Value};
 
 const MAGIC: &[u8; 8] = b"COLLAGE1";
@@ -35,7 +35,9 @@ impl Checkpoint {
             let mut header = Obj::new();
             header.insert("step", self.step);
             header.insert("model", self.model.as_str());
-            header.insert("strategy", self.state.strategy.option_str());
+            // Single combined spelling — legacy option strings on the bf16
+            // row, "scheme@format" elsewhere; one parser reads both back.
+            header.insert("strategy", self.state.plan.to_string());
             header.insert("n", self.state.n);
             header.insert(
                 "vectors",
@@ -76,7 +78,7 @@ impl Checkpoint {
         let header = Value::parse(std::str::from_utf8(&hbytes)?)?;
         let step = header.get("step")?.as_i64()? as u64;
         let model = header.get("model")?.as_str()?.to_string();
-        let strategy = Strategy::parse(header.get("strategy")?.as_str()?)?;
+        let plan: PrecisionPlan = header.get("strategy")?.as_str()?.parse()?;
         let n_vectors = header.get("vectors")?.as_arr()?.len();
         let mut vecs = Vec::with_capacity(n_vectors);
         for _ in 0..n_vectors {
@@ -90,7 +92,7 @@ impl Checkpoint {
                     .collect(),
             );
         }
-        let state = OptimState::from_vecs(strategy, vecs)?;
+        let state = OptimState::from_vecs_plan(plan, vecs)?;
         Ok(Checkpoint { step, model, state })
     }
 }
@@ -98,6 +100,8 @@ impl Checkpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    use crate::optim::strategy::Strategy;
 
     #[test]
     fn roundtrip_bitexact() {
@@ -110,12 +114,29 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.step, 42);
         assert_eq!(back.model, "tiny");
-        assert_eq!(back.state.strategy, Strategy::CollagePlus);
+        assert_eq!(back.state.plan, PrecisionPlan::from(Strategy::CollagePlus));
         for (a, b) in ck.state.vecs().iter().zip(back.state.vecs()) {
             let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
             let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
             assert_eq!(ab, bb);
         }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_off_row_plan() {
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::Scheme;
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight);
+        let theta: Vec<f32> = (0..32).map(|i| FP8E4M3.round_nearest(i as f32 * 0.5)).collect();
+        let state = OptimState::init_plan(plan, &theta);
+        let ck = Checkpoint { step: 7, model: "proxy".into(), state };
+        let dir = std::env::temp_dir().join("collage_test_ckpt_fp8");
+        let path = dir.join("c.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.state.plan, plan);
+        assert_eq!(back.state.names(), ck.state.names());
         std::fs::remove_dir_all(dir).ok();
     }
 

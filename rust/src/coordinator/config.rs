@@ -6,6 +6,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::optim::plan::PrecisionPlan;
 use crate::optim::strategy::Strategy;
 use crate::util::json::{Obj, Value};
 
@@ -14,8 +15,9 @@ use crate::util::json::{Obj, Value};
 pub struct RunConfig {
     /// Model config name (must have artifacts: `tiny`, `small`, ...).
     pub model: String,
-    /// Precision strategy.
-    pub strategy: Strategy,
+    /// Precision plan (`{format, scheme}`; the legacy bf16 strategies are
+    /// the bf16 row — `plan: Strategy::CollagePlus.into()`).
+    pub plan: PrecisionPlan,
     /// Total optimizer steps.
     pub steps: u64,
     /// Linear warmup steps (paper: 200 for GPTs).
@@ -48,7 +50,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             model: "tiny".to_string(),
-            strategy: Strategy::CollagePlus,
+            plan: Strategy::CollagePlus.into(),
             steps: 200,
             warmup: 20,
             lr: 1e-3,
@@ -70,7 +72,11 @@ impl RunConfig {
     pub fn to_json(&self) -> Value {
         let mut o = Obj::new();
         o.insert("model", self.model.as_str());
-        o.insert("strategy", self.strategy.option_str());
+        // Legacy-compatible combined spelling plus the explicit
+        // {format, scheme} pair (all three round-trip via one parser).
+        o.insert("strategy", self.plan.to_string());
+        o.insert("format", self.plan.format.name);
+        o.insert("scheme", self.plan.scheme.name());
         o.insert("steps", self.steps);
         o.insert("warmup", self.warmup);
         o.insert("lr", self.lr);
@@ -95,9 +101,27 @@ impl RunConfig {
 
     pub fn from_json(v: &Value) -> Result<Self> {
         let d = RunConfig::default();
+        // Base plan from the combined "strategy" spelling (covers pre-plan
+        // config files), then apply explicit "format"/"scheme" keys as
+        // overrides — a lone "format" next to a bare strategy (the CLI
+        // flag pair mirrored into JSON) must not be dropped.
+        let mut plan: PrecisionPlan = match v.opt("strategy") {
+            Some(s) => s.as_str()?.parse()?,
+            None => {
+                let f = v.get("format")?.as_str()?.parse()?;
+                let s = v.get("scheme")?.as_str()?.parse()?;
+                PrecisionPlan::new(f, s)
+            }
+        };
+        if let Some(f) = v.opt("format") {
+            plan.format = f.as_str()?.parse()?;
+        }
+        if let Some(s) = v.opt("scheme") {
+            plan.scheme = s.as_str()?.parse()?;
+        }
         Ok(RunConfig {
             model: v.get("model")?.as_str()?.to_string(),
-            strategy: Strategy::parse(v.get("strategy")?.as_str()?)?,
+            plan,
             steps: v.get("steps")?.as_i64()? as u64,
             warmup: v.opt("warmup").map(|x| x.as_i64().unwrap_or(0) as u64).unwrap_or(d.warmup),
             lr: v.opt("lr").map(|x| x.as_f64().unwrap_or(d.lr)).unwrap_or(d.lr),
@@ -153,22 +177,55 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let mut cfg = RunConfig::default();
-        cfg.strategy = Strategy::CollageLight;
+        cfg.plan = Strategy::CollageLight.into();
         cfg.beta2 = Some(0.999);
         cfg.checkpoint_dir = Some("/tmp/ckpt".into());
         let v = cfg.to_json();
         let back = RunConfig::from_json(&v).unwrap();
-        assert_eq!(back.strategy, Strategy::CollageLight);
+        assert_eq!(back.plan, PrecisionPlan::from(Strategy::CollageLight));
         assert_eq!(back.beta2, Some(0.999));
         assert_eq!(back.checkpoint_dir.as_deref(), Some("/tmp/ckpt"));
         assert_eq!(back.steps, cfg.steps);
     }
 
     #[test]
+    fn json_roundtrip_off_row_plan() {
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::Scheme;
+        let mut cfg = RunConfig::default();
+        cfg.plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight);
+        let v = cfg.to_json();
+        assert_eq!(v.get("strategy").unwrap().as_str().unwrap(), "collage-light@fp8e4m3");
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(back.plan, cfg.plan);
+    }
+
+    #[test]
+    fn lone_format_key_overrides_strategy_storage() {
+        // The CLI flag pair mirrored into JSON: bare strategy + format,
+        // no scheme key — the format must apply, not be dropped.
+        let v = Value::parse(
+            r#"{"model": "tiny", "strategy": "collage-light", "format": "fp8e4m3", "steps": 3}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.plan.to_string(), "collage-light@fp8e4m3");
+        // Pure {format, scheme} form without a strategy key also works.
+        let v = Value::parse(
+            r#"{"model": "tiny", "format": "fp16", "scheme": "plain", "steps": 3}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.plan.to_string(), "plain@fp16");
+    }
+
+    #[test]
     fn missing_optionals_use_defaults() {
+        // Pre-plan config file: no format/scheme keys, legacy strategy str.
         let v = Value::parse(r#"{"model": "tiny", "strategy": "a", "steps": 7}"#).unwrap();
         let cfg = RunConfig::from_json(&v).unwrap();
         assert_eq!(cfg.steps, 7);
+        assert_eq!(cfg.plan, PrecisionPlan::from(Strategy::Bf16));
         assert_eq!(cfg.beta2, None);
         assert_eq!(cfg.eval_batches, RunConfig::default().eval_batches);
     }

@@ -4,10 +4,12 @@
 pub mod checkpoint;
 pub mod config;
 pub mod metrics;
+pub mod proxy;
 pub mod schedule;
 pub mod trainer;
 
 pub use config::RunConfig;
 pub use metrics::{MetricsLog, StepRow};
+pub use proxy::{ProxyConfig, ProxyOutcome};
 pub use schedule::LrSchedule;
 pub use trainer::{TrainOutcome, Trainer};

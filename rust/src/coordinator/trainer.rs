@@ -77,7 +77,16 @@ impl Trainer {
     /// initializes (or resumes) the optimizer state.
     pub fn new(runtime: Arc<Runtime>, manifest: &Manifest, cfg: RunConfig) -> Result<Self> {
         let model = manifest.model(&cfg.model)?.clone();
-        let train_meta = manifest.train(&cfg.model, cfg.strategy.option_str(), cfg.beta2)?;
+        // AOT artifacts exist only for the bf16 row of the plan space.
+        let Some(strategy) = cfg.plan.as_strategy() else {
+            bail!(
+                "no AOT artifacts for plan {} — sub-16-bit plans train on the \
+                 pure-Rust proxy path (`collage train` falls back automatically; \
+                 see also `collage experiment fp8`)",
+                cfg.plan
+            );
+        };
+        let train_meta = manifest.train(&cfg.model, strategy.option_str(), cfg.beta2)?;
         let eval_meta = manifest.find(&cfg.model, ArtifactKind::Eval)?;
         let train_exe = runtime.load(manifest, train_meta)?;
         let eval_exe = runtime.load(manifest, eval_meta)?;
@@ -107,14 +116,14 @@ impl Trainer {
             if ck.model != cfg.model {
                 bail!("checkpoint model {} != run model {}", ck.model, cfg.model);
             }
-            if ck.state.strategy != cfg.strategy {
-                bail!("checkpoint strategy mismatch");
+            if ck.state.plan != cfg.plan {
+                bail!("checkpoint plan mismatch");
             }
             step = ck.step;
             ck.state
         } else {
             let theta0 = manifest.load_init(&cfg.model)?;
-            OptimState::init(cfg.strategy, &theta0)
+            OptimState::init_unquantized(cfg.plan, &theta0)
         };
 
         let optim_meta = manifest.optim(&cfg.model)?;
@@ -164,7 +173,7 @@ impl Trainer {
         if theta.len() != self.state.n {
             bail!("theta length {} != state length {}", theta.len(), self.state.n);
         }
-        self.state = OptimState::init(self.cfg.strategy, theta);
+        self.state = OptimState::init_unquantized(self.cfg.plan, theta);
         Ok(())
     }
 

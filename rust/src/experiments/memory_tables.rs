@@ -5,7 +5,8 @@
 
 use crate::model::config::{find, PAPER_CONFIGS};
 use crate::model::memory::MemoryModel;
-use crate::numerics::format::ALL_FORMATS;
+use crate::numerics::format::{ALL_FORMATS, BF16, FP16, FP8E4M3, FP8E5M2};
+use crate::optim::plan::{PrecisionPlan, Scheme};
 use crate::optim::strategy::{Strategy, PAPER_OPTIONS};
 use crate::util::table::{fnum, Table};
 
@@ -33,6 +34,33 @@ pub fn table2() -> Table {
             extra.into(),
             s.bytes_per_param().to_string(),
         ]);
+    }
+    t
+}
+
+/// Table 2 generalized over the whole plan space: bytes/parameter for
+/// every storage format × scheme (the sub-16-bit rows the paper's §6
+/// sketches; same exact arithmetic as [`table2`] via `PrecisionPlan`).
+pub fn table2_formats() -> Table {
+    let mut t = Table::new(
+        "Table 2 (format-generalized) — bytes/parameter per {format × scheme} plan",
+    );
+    let schemes = [
+        Scheme::Plain,
+        Scheme::CollageLight,
+        Scheme::CollagePlus,
+        Scheme::Fp32Optim,
+        Scheme::Fp32MasterWeights,
+    ];
+    let mut header = vec!["Format".to_string()];
+    header.extend(schemes.iter().map(|s| s.name().to_string()));
+    t.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for fmt in [BF16, FP16, FP8E4M3, FP8E5M2] {
+        let mut row = vec![fmt.name.to_string()];
+        for scheme in schemes {
+            row.push(PrecisionPlan::new(fmt, scheme).bytes_per_param().to_string());
+        }
+        t.row(row);
     }
     t
 }
@@ -175,9 +203,26 @@ mod tests {
 
     #[test]
     fn tables_render_nonempty() {
-        for t in [table2(), table9(), table12(), table8(), table7_bytes_model()] {
+        for t in [
+            table2(),
+            table2_formats(),
+            table9(),
+            table12(),
+            table8(),
+            table7_bytes_model(),
+        ] {
             let s = t.render();
             assert!(s.lines().count() >= 4, "{s}");
+        }
+    }
+
+    #[test]
+    fn format_table_bf16_row_matches_legacy_table2() {
+        let s = table2_formats().render();
+        let bf16_row = s.lines().find(|l| l.trim_start().starts_with("bf16")).unwrap();
+        // A=8, B=10, C=12, D-MW=12, D=16 — the original Table 2 numbers.
+        for v in ["8", "10", "12", "16"] {
+            assert!(bf16_row.split_whitespace().any(|c| c == v), "{bf16_row}");
         }
     }
 

@@ -1,6 +1,7 @@
 //! Experiment drivers: one generator per table/figure of the paper.
 //! See DESIGN.md "Experiment index" for the mapping.
 
+pub mod lowprec;
 pub mod memory_tables;
 pub mod pretrain;
 pub mod registry;

@@ -60,7 +60,7 @@ impl Ctx {
     ) -> Result<TrainOutcome> {
         let cfg = RunConfig {
             model: model.to_string(),
-            strategy,
+            plan: strategy.into(),
             beta2,
             steps,
             warmup: (steps / 10).max(5),
@@ -162,7 +162,7 @@ pub fn table3(ctx: &Ctx) -> Result<Table> {
         // Phase 1.
         let cfg1 = RunConfig {
             model: "tiny".into(),
-            strategy: s,
+            plan: s.into(),
             beta2: Some(0.999),
             steps,
             warmup: steps / 10,
@@ -182,7 +182,7 @@ pub fn table3(ctx: &Ctx) -> Result<Table> {
         // sequence-length switch).
         let cfg2 = RunConfig {
             model: "tiny".into(),
-            strategy: s,
+            plan: s.into(),
             beta2: Some(0.999),
             steps: steps / 2,
             warmup: 5,
@@ -230,7 +230,7 @@ pub fn table4(ctx: &Ctx) -> Result<Table> {
         // Pretrain.
         let cfg = RunConfig {
             model: model.into(),
-            strategy: s,
+            plan: s.into(),
             beta2: Some(0.999),
             steps: pre_steps,
             warmup: pre_steps / 10,
@@ -251,7 +251,7 @@ pub fn table4(ctx: &Ctx) -> Result<Table> {
             let task = GlueTask::new(kind, meta.vocab, meta.seq_len);
             let cfg = RunConfig {
                 model: model.into(),
-                strategy: s,
+                plan: s.into(),
                 beta2: Some(0.999),
                 steps: ft_steps,
                 warmup: 5,

@@ -4,7 +4,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use super::{memory_tables, pretrain};
+use super::{lowprec, memory_tables, pretrain};
 use crate::util::table::Table;
 
 /// All experiment ids with one-line descriptions.
@@ -24,6 +24,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig4", "peak memory vs model size series (analytic)"),
     ("fig56", "β₂ = 0.95 vs 0.99 stability (ppl + grad norms)"),
     ("fig7to12", "EDQ/ppl grids over β₂ × batch (CSV; same runs as table6)"),
+    ("fp8", "EDQ/loss/lost-frac grid over formats × schemes (§6; no artifacts)"),
     ("all-analytic", "every experiment that needs no artifacts"),
 ];
 
@@ -78,8 +79,18 @@ pub fn run(id: &str, artifacts: &Path, out_dir: &Path, quick: bool) -> Result<()
             t.print();
             return Ok(());
         }
+        "fp8" => {
+            // Runs on the pure-Rust proxy objective — no artifacts needed.
+            let t = lowprec::fp8(out_dir, quick)?;
+            t.print();
+            let out = out_dir.join("fp8.txt");
+            std::fs::write(&out, t.render())?;
+            println!("wrote {}", out.display());
+            return Ok(());
+        }
         "all-analytic" => {
             memory_tables::table2().print();
+            memory_tables::table2_formats().print();
             memory_tables::table9().print();
             memory_tables::table8().print();
             memory_tables::table12().print();

@@ -1,29 +1,32 @@
 //! `collage` — the Layer-3 coordinator CLI.
 //!
 //! Subcommands:
-//!   train       pretrain a model under one precision strategy
+//!   train       pretrain a model under one precision plan (scheme × format)
 //!   eval        evaluate a checkpoint on the validation split
 //!   experiment  regenerate a paper table/figure (see --list)
-//!   memory      analytic peak-memory report for any (model, strategy)
+//!   memory      analytic peak-memory report for any (model, plan)
 //!   inspect     dump manifest/artifact information
 //!   dp-train    data-parallel training demo (threaded workers)
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use collage::coordinator::checkpoint::Checkpoint;
 use collage::coordinator::config::RunConfig;
+use collage::coordinator::proxy::{self, ProxyConfig};
 use collage::coordinator::trainer::Trainer;
 use collage::data::batches::{BatchIterator, Split};
 use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
 use collage::experiments;
 use collage::model::config as model_config;
 use collage::model::memory::MemoryModel;
+use collage::numerics::format::FloatFormat;
 use collage::optim::adamw::AdamW;
-use collage::optim::strategy::Strategy;
+use collage::optim::plan::{PrecisionPlan, ALL_SCHEMES};
 use collage::parallel::worker::DataParallel;
 use collage::runtime::{Manifest, Runtime};
-use collage::util::cli::ArgSpec;
+use collage::util::cli::{ArgSpec, Args};
 use collage::util::table::{fnum, Table};
 
 fn main() {
@@ -42,12 +45,14 @@ fn usage() -> String {
     "collage — Collage low-precision LLM-training framework (ICML 2024 reproduction)\n\n\
      USAGE:\n  collage <SUBCOMMAND> [OPTIONS]\n\n\
      SUBCOMMANDS:\n\
-       train        pretrain under one precision strategy\n\
+       train        pretrain under one precision plan (strategy × format)\n\
        eval         evaluate a checkpoint\n\
        experiment   regenerate a paper table/figure (--list to enumerate)\n\
-       memory       analytic peak-memory report\n\
+       memory       analytic peak-memory report (any plan; --format for fp8 rows)\n\
        inspect      show artifact manifest details\n\
        dp-train     threaded data-parallel training\n\n\
+     Plans combine a scheme (--strategy) with a storage format (--format):\n\
+       collage train --format fp8e4m3 --strategy collage-light\n\n\
      Run `collage <SUBCOMMAND> --help` for options.\n"
         .to_string()
 }
@@ -79,29 +84,33 @@ fn artifacts_opt(spec: ArgSpec) -> ArgSpec {
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let spec = artifacts_opt(
-        ArgSpec::new("collage train", "Pretrain a model under one precision strategy")
+        ArgSpec::new("collage train", "Pretrain a model under one precision plan")
             .opt("model", "small", "model config (tiny|tiny2x|small|medium|big)")
             .opt(
                 "strategy",
                 "collage-plus",
-                "precision strategy (a|collage-light|collage-plus|dmw|d|kahan|sr|fp32)",
+                "precision scheme (a|collage-light|collage-plus|dmw|d|kahan|sr|fp32, \
+                 or a combined scheme@format)",
             )
+            .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
             .opt("steps", "200", "optimizer steps")
             .opt("warmup", "20", "warmup steps")
             .opt("lr", "1e-3", "peak learning rate")
-            .opt("beta2", "", "β₂ override (needs a matching exported artifact)")
+            .opt("beta2", "", "β₂ override (artifact path needs a matching export)")
             .opt("seed", "1234", "rng seed")
             .opt("eval-every", "50", "eval cadence (0 = end only)")
             .opt("log-every", "10", "stdout cadence")
             .opt("corpus-tokens", "1048576", "synthetic corpus size")
             .opt("csv", "", "write per-step metrics CSV here")
             .opt("checkpoint-dir", "", "checkpoint directory (resume if present)")
-            .opt("checkpoint-every", "0", "checkpoint cadence"),
+            .opt("checkpoint-every", "0", "checkpoint cadence")
+            .opt("proxy-params", "8192", "parameter count for the proxy fallback path"),
     );
     let a = spec.parse(args)?;
+    let plan = PrecisionPlan::parse_with_format(a.get("strategy"), a.get("format"))?;
     let cfg = RunConfig {
         model: a.get("model").to_string(),
-        strategy: Strategy::parse(a.get("strategy"))?,
+        plan,
         steps: a.u64("steps")?,
         warmup: a.u64("warmup")?,
         lr: a.f64("lr")?,
@@ -114,15 +123,47 @@ fn cmd_train(args: &[String]) -> Result<()> {
         checkpoint_every: a.u64("checkpoint-every")?,
         ..Default::default()
     };
+    // AOT artifacts cover only the bf16 row of the plan space; every other
+    // plan — and any build without artifacts/PJRT — trains end-to-end on
+    // the pure-Rust proxy objective through the same fused plan kernels.
+    // Only *environment* failures (no PJRT backend / no artifact dir)
+    // trigger the fallback: errors from the actual training run — bad
+    // model names, checkpoint mismatches, CSV I/O — propagate.
+    if plan.as_strategy().is_some() {
+        match artifact_runtime(&a) {
+            Ok((runtime, manifest)) => return train_artifacts(runtime, manifest, &a, cfg),
+            Err(e) => eprintln!(
+                "artifact runtime unavailable ({e:#}); \
+                 falling back to the pure-Rust proxy trainer"
+            ),
+        }
+    }
+    train_proxy(&a, &cfg)
+}
+
+/// The fallible environment half of the artifact path: PJRT client +
+/// manifest.  Failure here (stub backend, missing `make artifacts`) is
+/// what legitimizes the proxy fallback.
+fn artifact_runtime(a: &Args) -> Result<(Arc<Runtime>, Manifest)> {
     let runtime = Runtime::cpu()?;
+    let manifest = Manifest::load(a.get("artifacts"))?;
+    Ok((runtime, manifest))
+}
+
+/// The original artifact-backed training path (bf16-row plans only).
+fn train_artifacts(
+    runtime: Arc<Runtime>,
+    manifest: Manifest,
+    a: &Args,
+    cfg: RunConfig,
+) -> Result<()> {
     println!(
-        "platform={} devices={} model={} strategy={}",
+        "platform={} devices={} model={} plan={}",
         runtime.platform(),
         runtime.device_count(),
         cfg.model,
-        cfg.strategy.paper_name()
+        cfg.plan.paper_name()
     );
-    let manifest = Manifest::load(a.get("artifacts"))?;
     let mut trainer = Trainer::new(runtime, &manifest, cfg)?;
     let outcome = trainer.run()?;
     println!(
@@ -143,6 +184,44 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Artifact-free training on the least-squares proxy objective: any plan,
+/// full per-step `StepStats` (EDQ + lost-frac) at the logging cadence.
+fn train_proxy(a: &Args, cfg: &RunConfig) -> Result<()> {
+    let pcfg = ProxyConfig {
+        plan: cfg.plan,
+        n: a.usize("proxy-params")?,
+        steps: cfg.steps,
+        warmup: cfg.warmup,
+        lr: cfg.lr,
+        beta2: cfg.beta2.unwrap_or(0.95),
+        seed: cfg.seed,
+        log_every: cfg.log_every,
+        ..Default::default()
+    };
+    println!(
+        "proxy-train: plan={} ({} B/param) n={} steps={} (least-squares teacher objective)",
+        cfg.plan,
+        cfg.plan.bytes_per_param(),
+        pcfg.n,
+        pcfg.steps
+    );
+    let o = proxy::run(&pcfg)?;
+    println!(
+        "done: steps={} final_loss={:.4e} edq_ratio={:.4} lost={:.2}% {:.2} ms/step",
+        o.steps,
+        o.final_loss,
+        o.edq_ratio,
+        o.lost_frac * 100.0,
+        o.step_time * 1e3
+    );
+    let csv = a.get("csv");
+    if !csv.is_empty() {
+        o.log.write_csv(Path::new(csv))?;
+        println!("metrics -> {csv}");
+    }
+    Ok(())
+}
+
 fn cmd_eval(args: &[String]) -> Result<()> {
     let spec = artifacts_opt(
         ArgSpec::new("collage eval", "Evaluate a checkpoint on the validation split")
@@ -157,7 +236,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     let manifest = Manifest::load(a.get("artifacts"))?;
     let cfg = RunConfig {
         model: ck.model.clone(),
-        strategy: ck.state.strategy,
+        plan: ck.state.plan,
         eval_batches: a.usize("eval-batches")?,
         seed: a.u64("seed")?,
         corpus_tokens: a.usize("corpus-tokens")?,
@@ -200,6 +279,7 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
 fn cmd_memory(args: &[String]) -> Result<()> {
     let spec = ArgSpec::new("collage memory", "Analytic peak-memory report")
         .opt("model", "gpt-6.7b", "model (paper sizes: gpt-125m..gpt-30b, openllama-7b)")
+        .opt("format", "", "storage format rows instead of the bf16 strategy zoo")
         .opt("micro-batch", "1", "micro batch size")
         .opt("seq-len", "2048", "sequence length")
         .opt("tp", "8", "tensor parallelism")
@@ -213,16 +293,24 @@ fn cmd_memory(args: &[String]) -> Result<()> {
     m.budget_per_gpu = a.f64("budget-gb")? * (1u64 << 30) as f64;
     let (ubs, seq, tp, pp) =
         (a.usize("micro-batch")?, a.usize("seq-len")?, a.usize("tp")?, a.usize("pp")?);
+    // Default rows: the legacy bf16 strategy zoo; with --format, the full
+    // scheme column at that storage format (Table 2/8/12 generalized).
+    let plans: Vec<PrecisionPlan> = if a.get("format").is_empty() {
+        collage::optim::strategy::ALL_STRATEGIES.iter().map(|&s| s.into()).collect()
+    } else {
+        let fmt: FloatFormat = a.get("format").parse()?;
+        ALL_SCHEMES.iter().map(|&sch| PrecisionPlan::new(fmt, sch)).collect()
+    };
     let mut t = Table::new(format!(
         "peak memory — {} (UBS={ubs}, seq={seq}, TP={tp}, PP={pp}, {} params)",
         cfg.name,
         cfg.n_params()
     ));
-    t.header(&["strategy", "state GB", "act GB", "total GB", "per-GPU GB", "fits?"]);
-    for s in collage::optim::strategy::ALL_STRATEGIES {
-        let p = m.peak(cfg, s, ubs, seq, tp, pp);
+    t.header(&["plan", "state GB", "act GB", "total GB", "per-GPU GB", "fits?"]);
+    for plan in plans {
+        let p = m.peak(cfg, plan, ubs, seq, tp, pp);
         t.row(vec![
-            s.paper_name().to_string(),
+            plan.paper_name(),
             fnum(p.state_bytes / 1073741824.0, 1),
             fnum(p.activation_bytes / 1073741824.0, 1),
             fnum(p.total_gb(), 1),
@@ -281,7 +369,8 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
              bit-exact Rust optimizer",
         )
         .opt("model", "tiny", "model config")
-        .opt("strategy", "collage-plus", "precision strategy")
+        .opt("strategy", "collage-plus", "precision scheme (or scheme@format)")
+        .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
         .opt("workers", "4", "data-parallel worker count")
         .opt("steps", "100", "global steps")
         .opt("lr", "1e-3", "peak learning rate")
@@ -292,7 +381,7 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
     let a = spec.parse(args)?;
     let manifest = Manifest::load(a.get("artifacts"))?;
     let model = a.get("model").to_string();
-    let strategy = Strategy::parse(a.get("strategy"))?;
+    let plan = PrecisionPlan::parse_with_format(a.get("strategy"), a.get("format"))?;
     let workers = a.usize("workers")?;
     let steps = a.u64("steps")?;
     let seed = a.u64("seed")?;
@@ -316,16 +405,16 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
         })
         .collect::<Result<_>>()?;
 
-    let opt = AdamW::with_beta2(a.f64("beta2")?);
-    let mut dp = DataParallel::new(&manifest, &model, strategy, workers, opt, seed)?;
+    let opt = AdamW::for_plan(plan, a.f64("beta2")?);
+    let mut dp = DataParallel::new(&manifest, &model, plan, workers, opt, seed)?;
     let schedule =
         collage::coordinator::schedule::LrSchedule::new(a.f64("lr")?, steps / 10, steps, 0.1);
     let log_every = a.u64("log-every")?;
     println!(
-        "dp-train: {workers} workers × micro-batch {} (global batch {}) strategy {}",
+        "dp-train: {workers} workers × micro-batch {} (global batch {}) plan {}",
         meta.micro_batch,
         workers * meta.micro_batch,
-        strategy.paper_name()
+        plan.paper_name()
     );
     let t0 = std::time::Instant::now();
     for step in 1..=steps {

@@ -12,6 +12,7 @@
 //! option D reproduces the paper's Table-8 OOM pattern on GPT-30B; they are
 //! *not* tuned per experiment.
 
+use crate::optim::plan::PrecisionPlan;
 use crate::optim::strategy::Strategy;
 
 use super::config::GptConfig;
@@ -74,9 +75,12 @@ impl Default for MemoryModel {
 
 impl MemoryModel {
     /// Training-state bytes (params + grads + optimizer state), total
-    /// across all shards — exact Table-2 arithmetic.
-    pub fn state_bytes(&self, cfg: &GptConfig, strategy: Strategy) -> f64 {
-        strategy.bytes_per_param() as f64 * cfg.n_params() as f64
+    /// across all shards — exact Table-2 arithmetic, generalized to any
+    /// [`PrecisionPlan`] (pass a legacy [`Strategy`] or a plan; both
+    /// convert).  At fp8 storage the same formula yields the sub-16-bit
+    /// rows of the extended Table 2.
+    pub fn state_bytes(&self, cfg: &GptConfig, plan: impl Into<PrecisionPlan>) -> f64 {
+        plan.into().bytes_per_param() as f64 * cfg.n_params() as f64
     }
 
     /// Activation bytes for one in-flight micro-batch set, total across
@@ -98,18 +102,18 @@ impl MemoryModel {
         per_mb * pp as f64 + logits
     }
 
-    /// Full peak-memory estimate.
+    /// Full peak-memory estimate for any plan.
     pub fn peak(
         &self,
         cfg: &GptConfig,
-        strategy: Strategy,
+        plan: impl Into<PrecisionPlan>,
         micro_batch: usize,
         seq_len: usize,
         tp: usize,
         pp: usize,
     ) -> PeakMemory {
         let n_gpus = tp * pp;
-        let state = self.state_bytes(cfg, strategy);
+        let state = self.state_bytes(cfg, plan);
         let act = self.activation_bytes(cfg, micro_batch, seq_len, pp);
         let overhead = self.overhead_per_gpu * n_gpus as f64;
         // Sharding is uniform across TP×PP in this model; the worst GPU
@@ -128,20 +132,23 @@ impl MemoryModel {
     pub fn fits(
         &self,
         cfg: &GptConfig,
-        strategy: Strategy,
+        plan: impl Into<PrecisionPlan>,
         micro_batch: usize,
         seq_len: usize,
         tp: usize,
         pp: usize,
     ) -> bool {
-        self.peak(cfg, strategy, micro_batch, seq_len, tp, pp).per_gpu_bytes
+        self.peak(cfg, plan, micro_batch, seq_len, tp, pp).per_gpu_bytes
             <= self.budget_per_gpu
     }
 
     /// Memory saved vs option D (Table 12 / Fig. 1-right): exact Table-2
-    /// arithmetic, independent of the activation calibration.
-    pub fn saved_vs_d(&self, cfg: &GptConfig, strategy: Strategy) -> f64 {
-        (Strategy::Fp32MasterWeights.bytes_per_param() - strategy.bytes_per_param()) as f64
+    /// arithmetic, independent of the activation calibration.  Off-row
+    /// plans save even more (an fp8 Collage-light plan stores 5 B/param
+    /// against D's 16).
+    pub fn saved_vs_d(&self, cfg: &GptConfig, plan: impl Into<PrecisionPlan>) -> f64 {
+        (Strategy::Fp32MasterWeights.bytes_per_param() as f64
+            - plan.into().bytes_per_param() as f64)
             * cfg.n_params() as f64
     }
 }
@@ -225,6 +232,26 @@ mod tests {
         assert!((0.15..0.35).contains(&al), "light avg saving {al}");
         assert!((0.10..0.25).contains(&ap), "plus avg saving {ap}");
         assert!(al > ap);
+    }
+
+    #[test]
+    fn fp8_plans_extend_table2_and_table8() {
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::{PrecisionPlan, Scheme};
+        let m = MemoryModel::default();
+        let cfg = find("gpt-30b").unwrap();
+        let light8 = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight);
+        // fp8 Collage-light: 4 state B + 1 grad B = 5 B/param — half of
+        // bf16 Collage-light's 10 (the §6 sub-16-bit promise in bytes).
+        assert_eq!(light8.bytes_per_param(), 5);
+        assert_eq!(m.state_bytes(cfg, light8), 5.0 * cfg.n_params() as f64);
+        // Anything bf16 fits on the Table-8 grid fits a fortiori at fp8.
+        for &(ubs, seq) in &[(1usize, 1024usize), (2, 2048)] {
+            if m.fits(cfg, Strategy::CollageLight, ubs, seq, 8, 2) {
+                assert!(m.fits(cfg, light8, ubs, seq, 8, 2));
+            }
+        }
+        assert!(m.saved_vs_d(cfg, light8) > m.saved_vs_d(cfg, Strategy::CollageLight));
     }
 
     #[test]

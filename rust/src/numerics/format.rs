@@ -3,7 +3,7 @@
 
 /// A binary floating-point format described by its exponent/mantissa split
 /// (IEEE-754 style, radix 2, with subnormals).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FloatFormat {
     pub name: &'static str,
     pub exp_bits: u32,
@@ -34,6 +34,38 @@ pub const FP32: FloatFormat =
 
 /// All formats the library knows about (Table 9 order).
 pub const ALL_FORMATS: [FloatFormat; 5] = [FP32, FP16, BF16, FP8E4M3, FP8E5M2];
+
+/// The canonical string → format mapping used by the CLI, `RunConfig` JSON
+/// and the artifact manifest (one parser for the whole repo; the satellite
+/// of the `PrecisionPlan` redesign).  Accepts the `name` of every entry in
+/// [`ALL_FORMATS`] plus a few common aliases.
+impl std::str::FromStr for FloatFormat {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        for f in ALL_FORMATS {
+            if f.name == s {
+                return Ok(f);
+            }
+        }
+        Ok(match s {
+            "f32" | "float32" => FP32,
+            "f16" | "half" | "float16" => FP16,
+            "bfloat16" => BF16,
+            "e4m3" | "fp8" => FP8E4M3,
+            "e5m2" => FP8E5M2,
+            other => anyhow::bail!(
+                "unknown float format {other:?} (fp32|fp16|bf16|fp8e4m3|fp8e5m2)"
+            ),
+        })
+    }
+}
+
+impl std::fmt::Display for FloatFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name)
+    }
+}
 
 impl FloatFormat {
     /// Exponent bias.
@@ -130,13 +162,40 @@ impl FloatFormat {
     }
 
     /// The next representable value above `x` (toward +inf).
+    ///
+    /// Correct across binade boundaries for both signs: going up from a
+    /// negative power of two enters a binade with half the spacing, which
+    /// a naive `x + ulp(x)` step (ulp measured on |x|) would overshoot.
     pub fn next_up(&self, x: f32) -> f32 {
+        if x < 0.0 {
+            return -self.next_down(-x);
+        }
+        // For non-negative x the spacing above x is exactly ulp(x).
         let u = self.ulp(x) as f32;
         let mut y = self.round_nearest(x + u);
         if y <= x {
             y = self.round_nearest(x + 2.0 * u);
         }
         y
+    }
+
+    /// The next representable value below `x` (toward -inf).
+    pub fn next_down(&self, x: f32) -> f32 {
+        if x < 0.0 {
+            return -self.next_up(-x);
+        }
+        if x == 0.0 {
+            return -(self.ulp(0.0) as f32); // largest negative subnormal
+        }
+        // Spacing below x is ulp(x), except just above a binade boundary
+        // (x = 2^e) where the grid below is twice as fine: try the half
+        // step first.  Both candidates are exact dyadics in f64 and f32.
+        let u = self.ulp(x);
+        let half = x as f64 - u / 2.0;
+        if self.representable(half as f32) && (half as f32) < x {
+            return half as f32;
+        }
+        (x as f64 - u) as f32
     }
 }
 
@@ -182,6 +241,15 @@ pub fn bf16_round(x: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn format_name_roundtrip() {
+        for f in ALL_FORMATS {
+            let back: FloatFormat = f.name.parse().unwrap();
+            assert_eq!(back, f, "{}", f.name);
+        }
+        assert!("fp12".parse::<FloatFormat>().is_err());
+    }
 
     #[test]
     fn table9_ulp_one() {
@@ -268,6 +336,58 @@ mod tests {
         assert_eq!(BF16.round_nearest(0.0).to_bits(), 0.0f32.to_bits());
         assert_eq!(BF16.round_nearest(-0.0).to_bits(), (-0.0f32).to_bits());
         assert!(BF16.round_nearest(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn next_up_down_at_binade_boundaries_both_signs() {
+        // e5m2 around 4.0: grid ... 3.0, 3.5, 4.0, 5.0 ... — the spacing
+        // halves below the boundary.
+        assert_eq!(FP8E5M2.next_up(4.0), 5.0);
+        assert_eq!(FP8E5M2.next_down(4.0), 3.5);
+        assert_eq!(FP8E5M2.next_up(3.5), 4.0);
+        assert_eq!(FP8E5M2.next_down(3.5), 3.0);
+        // Negative mirror: next_up(-4.0) must be the *adjacent* -3.5.
+        assert_eq!(FP8E5M2.next_up(-4.0), -3.5);
+        assert_eq!(FP8E5M2.next_down(-4.0), -5.0);
+        assert_eq!(FP8E5M2.next_up(-3.5), -3.0);
+        // Around zero: adjacent subnormals.
+        let minsub = FP8E5M2.ulp(0.0) as f32;
+        assert_eq!(FP8E5M2.next_up(0.0), minsub);
+        assert_eq!(FP8E5M2.next_down(0.0), -minsub);
+        assert_eq!(FP8E5M2.next_down(minsub), 0.0);
+        // bf16 spot check at a boundary: below 2.0 the spacing is 2⁻⁷.
+        assert_eq!(BF16.next_down(2.0), 2.0 - 2f32.powi(-7));
+        assert_eq!(BF16.next_up(-2.0), -(2.0 - 2f32.powi(-7)));
+    }
+
+    #[test]
+    fn prop_next_up_down_are_adjacent() {
+        // For random representable x: next_up(x) > x, next_down(x) < x,
+        // and nothing representable sits strictly between x and either
+        // neighbour (checked via the midpoint rounding to one of the two).
+        let mut rng = crate::util::rng::Rng::new(9, 0);
+        for fmt in [BF16, FP16, FP8E4M3, FP8E5M2] {
+            for _ in 0..2000 {
+                let x = fmt.round_nearest(
+                    (rng.normal() as f32) * 10f32.powi(rng.below(9) as i32 - 4),
+                );
+                if !x.is_finite() {
+                    continue;
+                }
+                let up = fmt.next_up(x);
+                if up.is_finite() && up > x {
+                    assert!(fmt.representable(up), "{} up({x:e})={up:e}", fmt.name);
+                    let mid = fmt.round_nearest_f64((x as f64 + up as f64) / 2.0);
+                    assert!(mid == x || mid == up, "{}: gap around {x:e}", fmt.name);
+                }
+                let down = fmt.next_down(x);
+                if down.is_finite() && down < x {
+                    assert!(fmt.representable(down), "{} down({x:e})={down:e}", fmt.name);
+                    let mid = fmt.round_nearest_f64((x as f64 + down as f64) / 2.0);
+                    assert!(mid == x || mid == down, "{}: gap around {x:e}", fmt.name);
+                }
+            }
+        }
     }
 
     #[test]

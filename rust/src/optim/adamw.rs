@@ -19,7 +19,9 @@ use crate::numerics::analysis::{edq, edq_expansion, sum_sq_chunked, EdqReport};
 use crate::numerics::expansion::{grow_bf16, mul_bf16, rn_bf16};
 use crate::util::rng::Rng;
 
+use super::generic::GenericAdamW;
 use super::kernels::{fused_step, sr_noise, sr_round};
+use super::plan::PrecisionPlan;
 use super::state::OptimState;
 use super::strategy::Strategy;
 
@@ -55,6 +57,13 @@ pub struct StepStats {
 impl AdamW {
     pub fn with_beta2(beta2: f64) -> Self {
         AdamW { beta2, ..Default::default() }
+    }
+
+    /// Hyper-parameters tuned for a plan's storage format: the paper's
+    /// defaults with ε lifted above the format's second-moment resolution
+    /// (see [`PrecisionPlan::default_eps`]; 1e-4 at fp8, 1e-8 elsewhere).
+    pub fn for_plan(plan: PrecisionPlan, beta2: f64) -> Self {
+        AdamW { beta2, eps: plan.default_eps(), ..Default::default() }
     }
 
     /// β₂ as its exact bf16 expansion (paper Table 1), computed through
@@ -114,6 +123,9 @@ impl AdamW {
     /// run the per-strategy update loop, then recompute the diagnostics
     /// from the snapshots.  O(n) scratch allocations per call — use
     /// [`AdamW::step`] anywhere performance matters.
+    ///
+    /// Plans off the bf16 row route to the format-generic scalar oracle
+    /// ([`GenericAdamW::step`]), so this is the reference for *every* plan.
     pub fn step_reference(
         &self,
         state: &mut OptimState,
@@ -123,7 +135,9 @@ impl AdamW {
         rng: &mut Rng,
     ) -> StepStats {
         assert_eq!(g.len(), state.n, "gradient length mismatch");
-        let strategy = state.strategy;
+        let Some(strategy) = state.plan.as_strategy() else {
+            return GenericAdamW::from_adamw(self, state.plan).step(state, g, lr, t, rng);
+        };
         let (bc1, bc2) = self.bias_corrections(t);
         let (b2hi, b2lo) = self.beta2_expansion();
         // bf16-path scalars: narrowed to f32 first, then subtracted in f32

@@ -1,12 +1,23 @@
 //! Fused optimizer-step chunk kernels — the repo's hottest loop, made
-//! allocation-free, single-pass and multicore.
+//! allocation-free, single-pass and multicore, for **every**
+//! [`super::plan::PrecisionPlan`].
 //!
-//! One monomorphized kernel per [`Strategy`] performs the bf16/MCF AdamW
-//! update **and** streams the Def. 3.3 diagnostics (EDQ dot/norms, the
-//! lost-update count of Def. 3.2, and the parameter-norm square) into a
-//! per-chunk [`ChunkAccum`] in the same pass over the state.  This replaces
-//! the reference path's five O(n) per-step snapshots and its second
-//! diagnostics pass; see [`AdamW::step_reference`] for the retained oracle.
+//! Two kernel families share one dispatcher ([`fused_step`]):
+//!
+//! * the **bf16 row** (`step_chunk_*`): one monomorphized kernel per legacy
+//!   [`Strategy`], bit-identical to the PR-1 kernels and to the AOT HLO
+//!   semantics — these are untouched by the plan redesign;
+//! * the **format-generic row** (`gstep_chunk_*`): one kernel per
+//!   [`Scheme`], parameterized by the plan's [`FloatFormat`] (FP16,
+//!   FP8-E4M3, FP8-E5M2, ...), bit-identical to the scalar oracle
+//!   `GenericAdamW::step`.
+//!
+//! Every kernel performs the AdamW update **and** streams the Def. 3.3
+//! diagnostics (EDQ dot/norms, the lost-update count of Def. 3.2, and the
+//! parameter-norm square) into a per-chunk [`ChunkAccum`] in the same pass
+//! over the state.  This replaces the reference paths' five O(n) per-step
+//! snapshots and their second diagnostics pass; see
+//! [`AdamW::step_reference`] for the retained oracles.
 //!
 //! # Determinism contract
 //!
@@ -26,11 +37,13 @@
 
 use std::ops::Range;
 
-use crate::numerics::expansion::{grow_bf16, mul_bf16, rn_bf16};
+use crate::numerics::expansion::{grow, grow_bf16, mul, mul_bf16, rn_bf16, Expansion};
+use crate::numerics::format::FloatFormat;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks;
 
 use super::adamw::{delta_theta_bf16, delta_theta_fp32, AdamW, StepStats};
+use super::plan::Scheme;
 use super::state::OptimState;
 use super::strategy::Strategy;
 
@@ -90,8 +103,10 @@ impl ChunkAccum {
         self.lost += (dt != 0.0 && old_eff == new_eff) as u64;
     }
 
-    /// Finish the reduction: the reference path's exact EDQ formulas.
-    fn finalize(&self, strategy: Strategy, n: usize) -> StepStats {
+    /// Finish the reduction: the reference paths' exact EDQ formulas.
+    /// `mcf_params` selects the expansion-parameter variant (Collage
+    /// light/plus at any format).
+    fn finalize(&self, mcf_params: bool, n: usize) -> StepStats {
         use crate::numerics::analysis::EdqReport;
         let update_norm = self.un2.sqrt();
         // The two reference reducers round their ratio differently:
@@ -99,7 +114,7 @@ impl ChunkAccum {
         // Replicate each so the fused stats stay bit-identical.
         let (edq, edq_ratio) = if update_norm > 0.0 {
             let edq = self.dot / update_norm;
-            let ratio = if strategy.is_mcf_params() {
+            let ratio = if mcf_params {
                 self.dot / (update_norm * update_norm)
             } else {
                 edq / update_norm
@@ -458,11 +473,12 @@ impl VecPtrs {
     }
 }
 
-/// One fused optimizer step: the bf16/MCF update and the streamed Def. 3.3
-/// diagnostics in a single pass, sharded over `workers` threads in fixed
-/// [`CHUNK`]-element chunks.  Bit-identical to [`AdamW::step_reference`]
-/// for every strategy and any worker count; performs no heap allocation
-/// (the chunk-accumulator scratch lives in [`OptimState`]).
+/// One fused optimizer step for **any** plan: the update and the streamed
+/// Def. 3.3 diagnostics in a single pass, sharded over `workers` threads in
+/// fixed [`CHUNK`]-element chunks.  Bit-identical to
+/// [`AdamW::step_reference`] (bf16-row plans) / `GenericAdamW::step`
+/// (format-generic plans) for any worker count; performs no heap
+/// allocation (the chunk-accumulator scratch lives in [`OptimState`]).
 pub fn fused_step(
     opt: &AdamW,
     state: &mut OptimState,
@@ -473,8 +489,11 @@ pub fn fused_step(
     workers: usize,
 ) -> StepStats {
     assert_eq!(g.len(), state.n, "gradient length mismatch");
+    let Some(strategy) = state.plan.as_strategy() else {
+        // Off the bf16 row: the format-generic kernel family.
+        return fused_step_generic(opt, state, g, lr, t, rng, workers);
+    };
     let n = state.n;
-    let strategy = state.strategy;
     let s = StepScalars::new(opt, lr, t);
     // One key per step; per-element noise is counter-derived from it so
     // the draw order cannot depend on chunk/thread assignment.
@@ -584,7 +603,442 @@ pub fn fused_step(
         total.merge(part);
     }
     state.put_accum_scratch(scratch);
-    total.finalize(strategy, n)
+    total.finalize(strategy.is_mcf_params(), n)
+}
+
+// ---------------------------------------------------------------------------
+// Format-generic kernel family: the same fused single pass for any
+// FloatFormat (FP16, FP8-E4M3, FP8-E5M2, ...).  Per-element math follows
+// the scalar oracle `GenericAdamW::step` op-for-op: tensor values round
+// into the storage format after every emulated op, while Δθ is computed in
+// f64 and rounded ONCE into the format — at 8-bit precision the
+// intermediate quantities (ε, v̂, 1/√v̂) fall below the format's subnormal
+// range and a naive low-precision chain divides by a rounded-to-zero
+// denominator (the paper's "scalar math in high precision" rule applied to
+// the inner update; the *storage* stays strictly low-precision).
+// ---------------------------------------------------------------------------
+
+/// Step-constant scalars for the format-generic kernels, computed with the
+/// exact narrowing semantics the scalar oracle uses.
+#[derive(Debug, Clone, Copy)]
+pub struct GenericScalars {
+    pub fmt: FloatFormat,
+    /// β₁ narrowed to f32.
+    pub beta1_f: f32,
+    /// β₂ narrowed to f32 (fp32-state schemes).
+    pub beta2_f: f32,
+    /// `1 - β` in f64, single-rounded to f32.
+    pub one_m_beta1: f32,
+    pub one_m_beta2: f32,
+    /// β₂ rounded into the storage format (plain/light v decay).
+    pub beta2_lp: f32,
+    /// β₂ as its exact format expansion (paper Table 1; collage-plus).
+    pub b2hi: f32,
+    pub b2lo: f32,
+    pub bc1: f32,
+    pub bc2: f32,
+    pub lr: f32,
+    pub eps: f32,
+    pub wd: f32,
+}
+
+impl GenericScalars {
+    pub fn new(fmt: FloatFormat, opt: &AdamW, lr: f32, t: u64) -> Self {
+        let beta1_f = opt.beta1 as f32;
+        let beta2_f = opt.beta2 as f32;
+        let b2 = Expansion::split_scalar(&fmt, opt.beta2);
+        let (bc1, bc2) = opt.bias_corrections(t);
+        GenericScalars {
+            fmt,
+            beta1_f,
+            beta2_f,
+            one_m_beta1: (1.0f64 - opt.beta1) as f32,
+            one_m_beta2: (1.0f64 - opt.beta2) as f32,
+            beta2_lp: fmt.round_nearest(beta2_f),
+            b2hi: b2.hi,
+            b2lo: b2.lo,
+            bc1,
+            bc2,
+            lr,
+            eps: opt.eps,
+            wd: opt.weight_decay,
+        }
+    }
+
+    /// First moment m ← β₁m ⊕ (1-β₁)g and g² in the storage format.
+    #[inline]
+    pub fn moments_m_g2(&self, m: f32, gk: f32) -> (f32, f32) {
+        let rn = |x: f64| self.fmt.round_nearest_f64(x);
+        let a = rn(m as f64 * self.beta1_f as f64);
+        let b = rn(gk as f64 * self.one_m_beta1 as f64);
+        let m_new = rn(a as f64 + b as f64);
+        let g2 = rn(gk as f64 * gk as f64);
+        (m_new, g2)
+    }
+
+    /// Plain second moment v ← β₂v ⊕ (1-β₂)g² in the storage format.
+    #[inline]
+    pub fn moment_v_plain(&self, v: f32, g2: f32) -> f32 {
+        let rn = |x: f64| self.fmt.round_nearest_f64(x);
+        let a = rn(v as f64 * self.beta2_lp as f64);
+        let b = rn(g2 as f64 * self.one_m_beta2 as f64);
+        rn(a as f64 + b as f64)
+    }
+
+    /// MCF second moment (v, δv) ← Grow(Mul((v, δv), (β₂, δβ₂)), incr).
+    #[inline]
+    pub fn moment_v_plus(&self, v: f32, dv: f32, g2: f32) -> Expansion {
+        let rn = |x: f64| self.fmt.round_nearest_f64(x);
+        let vx = mul(
+            &self.fmt,
+            Expansion::new(v, dv),
+            Expansion::new(self.b2hi, self.b2lo),
+        );
+        let incr = rn(g2 as f64 * self.one_m_beta2 as f64);
+        grow(&self.fmt, vx, incr)
+    }
+
+    /// The exact (f64) Δθ of Alg. 2 line 12 — weight decay inside the
+    /// update — before the single storage round.
+    #[inline]
+    pub fn delta_exact(&self, theta_ref: f32, m_new: f32, v_eval: f64) -> f64 {
+        let m_hat = m_new as f64 / self.bc1 as f64;
+        let v_hat = v_eval / self.bc2 as f64;
+        let t1 = m_hat / (v_hat.max(0.0).sqrt() + self.eps as f64);
+        let t2 = theta_ref as f64 * self.wd as f64;
+        -(self.lr as f64) * (t1 + t2)
+    }
+
+    /// Δθ rounded once into the storage format.
+    #[inline]
+    pub fn delta_theta(&self, theta_ref: f32, m_new: f32, v_eval: f64) -> f32 {
+        self.fmt.round_nearest_f64(self.delta_exact(theta_ref, m_new, v_eval))
+    }
+}
+
+/// Stochastic rounding of an exact f64 value onto an arbitrary format grid:
+/// pick the two *adjacent* bracketing representables (correct across binade
+/// boundaries — see `FloatFormat::next_up`/`next_down`) and round up with
+/// probability equal to the position between them, driven by the same
+/// counter-pure 16-bit [`sr_noise`] as the bf16 path (thread-count
+/// invariant by construction).
+pub fn sr_round_fmt(fmt: &FloatFormat, exact: f64, noise: u32) -> f32 {
+    if exact == 0.0 {
+        return 0.0;
+    }
+    let nearest = fmt.round_nearest_f64(exact);
+    if !nearest.is_finite() || nearest as f64 == exact {
+        return nearest;
+    }
+    let (lo, hi) = if (nearest as f64) <= exact {
+        (nearest, fmt.next_up(nearest))
+    } else {
+        (fmt.next_down(nearest), nearest)
+    };
+    if !lo.is_finite() || !hi.is_finite() || hi as f64 <= lo as f64 {
+        return nearest;
+    }
+    let frac = (exact - lo as f64) / (hi as f64 - lo as f64);
+    if (noise as f64) < frac * 65536.0 {
+        hi
+    } else {
+        lo
+    }
+}
+
+/// Plain scheme at any format (option-A analogue).
+pub fn gstep_chunk_plain(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let v_new = s.moment_v_plain(v[k], g2);
+        let th_old = theta[k];
+        let dt = s.delta_theta(th_old, m_new, v_new as f64);
+        let th_new = s.fmt.round_nearest_f64(th_old as f64 + dt as f64);
+        theta[k] = th_new;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// Collage-light at any format: MCF (θ, δθ), low-precision states.
+pub fn gstep_chunk_light(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let v_new = s.moment_v_plain(v[k], g2);
+        let (hi_old, lo_old) = (theta[k], dtheta_c[k]);
+        let dt = s.delta_theta(hi_old, m_new, v_new as f64);
+        let e = grow(&s.fmt, Expansion::new(hi_old, lo_old), dt);
+        theta[k] = e.hi;
+        dtheta_c[k] = e.lo;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally_f64(dt, hi_old as f64 + lo_old as f64, e.hi as f64 + e.lo as f64);
+    }
+    acc
+}
+
+/// Collage-plus at any format: MCF (θ, δθ) and MCF (v, δv), β₂ expansion.
+#[allow(clippy::too_many_arguments)]
+pub fn gstep_chunk_plus(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let ve = s.moment_v_plus(v[k], dv[k], g2);
+        let (hi_old, lo_old) = (theta[k], dtheta_c[k]);
+        let dt = s.delta_theta(hi_old, m_new, ve.value());
+        let e = grow(&s.fmt, Expansion::new(hi_old, lo_old), dt);
+        theta[k] = e.hi;
+        dtheta_c[k] = e.lo;
+        m[k] = m_new;
+        v[k] = ve.hi;
+        dv[k] = ve.lo;
+        acc.tally_f64(dt, hi_old as f64 + lo_old as f64, e.hi as f64 + e.lo as f64);
+    }
+    acc
+}
+
+/// Kahan-compensated update at any format.
+pub fn gstep_chunk_kahan(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let rn = |x: f64| s.fmt.round_nearest_f64(x);
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let v_new = s.moment_v_plain(v[k], g2);
+        let th_old = theta[k];
+        let dt = s.delta_theta(th_old, m_new, v_new as f64);
+        let d = rn(dt as f64 + c[k] as f64);
+        let th_new = rn(th_old as f64 + d as f64);
+        c[k] = rn(d as f64 - rn(th_new as f64 - th_old as f64) as f64);
+        theta[k] = th_new;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// Stochastic rounding at any format.  `base` is the chunk's global
+/// element offset (noise is indexed globally).
+pub fn gstep_chunk_sr(
+    s: &GenericScalars,
+    key: u64,
+    base: usize,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let v_new = s.moment_v_plain(v[k], g2);
+        let th_old = theta[k];
+        let dt = s.delta_theta(th_old, m_new, v_new as f64);
+        let th_new = sr_round_fmt(&s.fmt, th_old as f64 + dt as f64, sr_noise(key, base + k));
+        theta[k] = th_new;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// fp32 optimizer states, low-precision θ, no master weights (D⁻ᴹᵂ row).
+pub fn gstep_chunk_fp32_optim(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.beta1_f * m[k] + s.one_m_beta1 * gk;
+        let v_new = s.beta2_f * v[k] + s.one_m_beta2 * (gk * gk);
+        let th_old = theta[k];
+        let dt = s.delta_theta(th_old, m_new, v_new as f64);
+        // fp32 math, low-precision storage: the final round is the leak.
+        let th_new = s.fmt.round_nearest_f64(th_old as f64 + dt as f64);
+        theta[k] = th_new;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally(dt, th_old, th_new);
+    }
+    acc
+}
+
+/// fp32 states + fp32 master weights, low-precision working θ (D row).
+/// Diagnostics are measured on the master weights.
+pub fn gstep_chunk_fp32_mw(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    mw: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let m_new = s.beta1_f * m[k] + s.one_m_beta1 * gk;
+        let v_new = s.beta2_f * v[k] + s.one_m_beta2 * (gk * gk);
+        let mw_old = mw[k];
+        let dt = s.delta_exact(mw_old, m_new, v_new as f64) as f32;
+        let mw_new = mw_old + dt; // master weights: nothing lost
+        m[k] = m_new;
+        v[k] = v_new;
+        mw[k] = mw_new;
+        theta[k] = s.fmt.round_nearest(mw_new); // low-precision working copy
+        acc.tally(dt, mw_old, mw_new);
+    }
+    acc
+}
+
+/// The format-generic half of [`fused_step`]: same chunk grid, same
+/// index-ordered combine, same zero-allocation contract — dispatched by
+/// [`Scheme`] instead of legacy [`Strategy`].
+fn fused_step_generic(
+    opt: &AdamW,
+    state: &mut OptimState,
+    g: &[f32],
+    lr: f32,
+    t: u64,
+    rng: &mut Rng,
+    workers: usize,
+) -> StepStats {
+    let plan = state.plan;
+    let n = state.n;
+    let s = GenericScalars::new(plan.format, opt, lr, t);
+    // One key per step; per-element noise is counter-derived from it so
+    // the draw order cannot depend on chunk/thread assignment.
+    let sr_key = match plan.scheme {
+        Scheme::StochasticRounding => rng.next_u64(),
+        _ => 0,
+    };
+
+    let mut scratch = state.take_accum_scratch();
+    {
+        let vecs = state.vecs_mut();
+        let p = VecPtrs::new(vecs, n);
+        let run = &mut scratch;
+        // SAFETY (all arms): `parallel_chunks` hands out non-overlapping
+        // ranges, each claimed by exactly one thread, so the `p.slice`
+        // windows are disjoint &mut views per vector.
+        match plan.scheme {
+            Scheme::Plain => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_plain(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r),
+                )
+            }),
+            Scheme::CollageLight => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_light(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r),
+                )
+            }),
+            Scheme::CollagePlus => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_plus(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r.clone()),
+                    p.slice(4, r),
+                )
+            }),
+            Scheme::Kahan => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_kahan(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r),
+                )
+            }),
+            Scheme::StochasticRounding => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    gstep_chunk_sr(
+                        &s,
+                        sr_key,
+                        r.start,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r),
+                    )
+                })
+            }
+            Scheme::Fp32Optim => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_fp32_optim(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r),
+                )
+            }),
+            Scheme::Fp32MasterWeights => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    gstep_chunk_fp32_mw(
+                        &s,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r),
+                    )
+                })
+            }
+        }
+    }
+
+    let mut total = ChunkAccum::default();
+    for part in &scratch {
+        total.merge(part);
+    }
+    state.put_accum_scratch(scratch);
+    total.finalize(plan.is_mcf_params(), n)
 }
 
 #[cfg(test)]
@@ -611,6 +1065,40 @@ mod tests {
     }
 
     #[test]
+    fn sr_round_fmt_brackets_and_is_exact_on_grid() {
+        use crate::numerics::format::{FP8E4M3, FP8E5M2};
+        // On-grid values pass through for any noise.
+        for noise in [0u32, 1, 0x7FFF, 0xFFFF] {
+            assert_eq!(sr_round_fmt(&FP8E4M3, 16.0, noise), 16.0);
+            assert_eq!(sr_round_fmt(&FP8E4M3, 0.0, noise), 0.0);
+        }
+        // Off-grid values land on one of the two bracketing representables:
+        // 16 + 0.5 sits between 16 and 18 on the e4m3 grid (ulp(16) = 2).
+        for noise in [0u32, 1000, 0x8000, 0xFFFF] {
+            let r = sr_round_fmt(&FP8E4M3, 16.5, noise);
+            assert!(r == 16.0 || r == 18.0, "r={r}");
+        }
+        // P(round up) = frac: 16.5 has frac = 0.25, so noise 0 (< 0.25·2¹⁶)
+        // rounds up and max noise rounds down.
+        assert_eq!(sr_round_fmt(&FP8E4M3, 16.5, 0), 18.0);
+        assert_eq!(sr_round_fmt(&FP8E4M3, 16.5, 0xFFFF), 16.0);
+        // Saturating overflow never produces inf on e4m3.
+        assert!(sr_round_fmt(&FP8E4M3, 1e9, 0xFFFF).is_finite());
+        // Negative values bracket symmetrically.
+        let r = sr_round_fmt(&FP8E5M2, -3.3, 0x4000);
+        assert!(FP8E5M2.representable(r) && (-3.5..=-3.0).contains(&r), "r={r}");
+        // Binade boundary: 3.9 sits between 3.5 and 4.0 on the e5m2 grid
+        // (the spacing halves below 4.0) — the bracket must be adjacent,
+        // never the two-ulp-wide (3.0, 4.0) pair, for either sign.
+        for noise in [0u32, 0x3000, 0x8000, 0xE000, 0xFFFF] {
+            let r = sr_round_fmt(&FP8E5M2, 3.9, noise);
+            assert!(r == 3.5 || r == 4.0, "boundary bracket broke: {r}");
+            let r = sr_round_fmt(&FP8E5M2, -3.9, noise);
+            assert!(r == -3.5 || r == -4.0, "negative boundary bracket broke: {r}");
+        }
+    }
+
+    #[test]
     fn chunk_accum_merge_is_plain_sum() {
         let mut a = ChunkAccum { un2: 1.0, en2: 2.0, dot: 3.0, pn2: 4.0, lost: 5 };
         let b = ChunkAccum { un2: 10.0, en2: 20.0, dot: 30.0, pn2: 40.0, lost: 50 };
@@ -620,7 +1108,7 @@ mod tests {
 
     #[test]
     fn finalize_zero_update_norm_defaults() {
-        let stats = ChunkAccum::default().finalize(Strategy::Bf16, 4);
+        let stats = ChunkAccum::default().finalize(false, 4);
         assert_eq!(stats.edq.edq, 0.0);
         assert_eq!(stats.edq.edq_ratio, 1.0);
         assert_eq!(stats.lost_frac, 0.0);

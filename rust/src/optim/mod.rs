@@ -1,24 +1,52 @@
-//! Pure-Rust reference implementation of the paper's optimizer stack: every
-//! precision strategy of Table 2 as an AdamW variant over flat f32-container
-//! state vectors.
+//! Pure-Rust reference implementation of the paper's optimizer stack,
+//! unified behind **one precision API**: every optimizer configuration is a
+//! [`PrecisionPlan`] `{ format, scheme }`, and one pair of entry points —
+//! [`AdamW::step`] / `AdamW::step_sharded` — runs any plan with the same
+//! fused single-pass kernels, streamed Def. 3.3 diagnostics and
+//! bit-deterministic sharding.
 //!
-//! This is NOT the training hot path (that's the AOT HLO artifact executed
-//! by `runtime`); it exists to
+//! # The plan space
+//!
+//! ```text
+//!                    Scheme (state structure)
+//!             plain  light  plus  fp32-optim  fp32-mw  kahan  sr
+//!           ┌───────────────────────────────────────────────────┐
+//!   bf16    │ ← the legacy `Strategy` zoo (paper Table 2):      │
+//!           │   bf16 fast-path kernels, bit-identical to PR 1   │
+//!   fp16    │                                                   │
+//!   fp8e4m3 │ ← format-generic kernels (§6 "extend to 8-bit"):  │
+//!   fp8e5m2 │   same fused pass, FloatFormat-parameterized      │
+//!   fp32    │ (fp32 × plain = the full-precision reference)     │
+//!           └───────────────────────────────────────────────────┘
+//! ```
+//!
+//! [`Strategy`] survives as a thin constructor for the bf16 row
+//! (`PrecisionPlan::from(Strategy::CollageLight)`), and
+//! [`OptimState::init`] keeps its old signature; `GenericState` was folded
+//! into [`OptimState`] (format-tagged buffers, `bytes_per_param()` derived
+//! from the plan).
+//!
+//! This module is NOT the training hot path for the bf16 row (that's the
+//! AOT HLO artifact executed by `runtime`); it exists to
 //!   1. cross-validate the HLO train-step bitwise (integration tests),
-//!   2. drive the numerics experiments (Fig. 3, Table 6 ablations) without
-//!      a model in the loop,
-//!   3. benchmark the optimizer-only cost per strategy (Table 7's
-//!      state-bytes argument).
+//!   2. drive the numerics experiments (Fig. 3, Table 6 ablations, the
+//!      `fp8` format × scheme grid) without a model in the loop,
+//!   3. be the *only* path for sub-16-bit plans, which have no artifacts,
+//!   4. benchmark the optimizer-only cost per plan (Table 7 / the
+//!      `BENCH_optimizer_step.json` trajectory).
 //!
 //! # The kernel layer
 //!
-//! [`kernels`] holds one monomorphized chunk kernel per [`Strategy`] that
-//! performs the update **and** streams the Def. 3.3 diagnostics (EDQ
-//! dot/norms, lost-update count, parameter-norm²) in a single pass —
-//! [`AdamW::step`] runs them on the calling thread, `AdamW::step_sharded`
-//! shards chunks across a scoped thread pool
-//! (`util::threadpool::parallel_chunks`), and `AdamW::step_reference`
-//! retains the original two-pass scalar loop as the equivalence oracle.
+//! [`kernels`] holds one monomorphized chunk kernel per bf16-row
+//! [`Strategy`] **and** one per [`plan::Scheme`] parameterized by
+//! [`crate::numerics::format::FloatFormat`]; each performs the update and
+//! streams the Def. 3.3 diagnostics (EDQ dot/norms, lost-update count,
+//! parameter-norm²) in a single pass.  [`AdamW::step`] runs them on the
+//! calling thread, `AdamW::step_sharded` shards chunks across a scoped
+//! thread pool (`util::threadpool::parallel_chunks`), and two scalar
+//! oracles are retained for the equivalence suites:
+//! `AdamW::step_reference` (bf16 row) and [`GenericAdamW::step`] (every
+//! other cell).
 //!
 //! ## Determinism contract
 //!
@@ -27,24 +55,28 @@
 //!   worker count; chunks are claimed atomically but each writes a disjoint
 //!   window of the state vectors and its own accumulator slot.
 //! * **Index-ordered reduction.**  Per-chunk f64 partial accumulators are
-//!   combined by the leader in chunk-index order, and the scalar oracle's
+//!   combined by the leader in chunk-index order, and the scalar oracles'
 //!   diagnostics reduce over the same grid
 //!   (`numerics::analysis::ACCUM_CHUNK`), so state vectors *and*
 //!   [`StepStats`] are bit-identical across worker counts and bit-identical
 //!   between the fused and reference paths.  Stochastic rounding keeps this
-//!   property by hashing `(step key, element index)` instead of consuming a
-//!   sequential RNG stream.
+//!   property at every format by hashing `(step key, element index)`
+//!   instead of consuming a sequential RNG stream.
 //!
-//! `tests/kernel_equivalence.rs` enforces the contract for every strategy,
-//! non-chunk-aligned lengths, and worker counts 1/2/8.
+//! `tests/kernel_equivalence.rs` enforces the contract for the bf16 row;
+//! `tests/generic_kernel_equivalence.rs` enforces it for every
+//! format × scheme cell, non-chunk-aligned lengths, and worker counts
+//! 1/2/8.
 
 pub mod adamw;
 pub mod generic;
 pub mod kernels;
+pub mod plan;
 pub mod state;
 pub mod strategy;
 
 pub use adamw::{AdamW, StepStats};
-pub use generic::{GenericAdamW, GenericState, GenericStrategy};
+pub use generic::{GenericAdamW, GenericStrategy};
+pub use plan::{PrecisionPlan, Scheme, ALL_SCHEMES};
 pub use state::OptimState;
 pub use strategy::Strategy;

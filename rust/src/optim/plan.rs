@@ -1,0 +1,359 @@
+//! The precision-plan space — **one** API point naming every optimizer
+//! configuration the repo can train: a storage [`FloatFormat`] × a state
+//! [`Scheme`].
+//!
+//! ```text
+//!                     Scheme (state structure, format-independent)
+//!              plain  collage-light  collage-plus  fp32-optim  fp32-mw  kahan  sr
+//!            ┌──────┬──────────────┬─────────────┬───────────┬────────┬──────┬────┐
+//!   bf16     │  A   │      B       │      C      │   D⁻ᴹᵂ    │   D    │  K   │ SR │  ← `Strategy` (paper Table 2)
+//!   fp16     │  ·   │      ·       │      ·      │     ·     │   ·    │  ·   │ ·  │
+//!   fp8e4m3  │  ·   │      ·       │      ·      │     ·     │   ·    │  ·   │ ·  │  ← §6 "extend to 8-bit"
+//!   fp8e5m2  │  ·   │      ·       │      ·      │     ·     │   ·    │  ·   │ ·  │
+//!   fp32     │ FP32 │      ·       │      ·      │     ·     │   ·    │  ·   │ ·  │
+//!            └──────┴──────────────┴─────────────┴───────────┴────────┴──────┴────┘
+//! ```
+//!
+//! The historical [`Strategy`] enum is exactly the **bf16 row** (plus the
+//! `fp32/plain` cell) and survives as a thin constructor:
+//! `PrecisionPlan::from(Strategy::CollageLight)`.  Everything downstream —
+//! the fused chunk kernels, [`super::state::OptimState`], the trainer, the
+//! CLI, the memory model and the benches — speaks `PrecisionPlan`.
+//!
+//! String forms round-trip through a single [`FromStr`]: the bf16 row keeps
+//! its legacy option strings (`"a"`, `"collage-light"`, `"dmw"`, ...); any
+//! other cell prints as `"<scheme>@<format>"` (e.g. `collage-light@fp8e4m3`).
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Error, Result};
+
+use crate::numerics::format::{FloatFormat, BF16, FP32};
+use crate::tensor::SemanticDtype;
+
+use super::strategy::Strategy;
+
+/// Which parts of the optimizer state carry MCF expansions, Kahan
+/// compensation or fp32 sidecars — the paper's Table-2 row *structure*,
+/// independent of the storage format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Plain low-precision θ/m/v (option A at bf16).
+    Plain,
+    /// MCF (θ, δθ), low-precision optimizer states (Collage-light).
+    CollageLight,
+    /// MCF (θ, δθ) and MCF (v, δv) with the β₂ expansion (Collage-plus).
+    CollagePlus,
+    /// Low-precision θ, fp32 optimizer states, no master weights (D⁻ᴹᵂ).
+    Fp32Optim,
+    /// Low-precision working θ + fp32 states + fp32 master weights (D).
+    Fp32MasterWeights,
+    /// Kahan-compensated parameter update (Zamirai et al. 2020).
+    Kahan,
+    /// Stochastic rounding at the parameter update.
+    StochasticRounding,
+}
+
+/// Every scheme, in Table-2 column order.
+pub const ALL_SCHEMES: [Scheme; 7] = [
+    Scheme::Plain,
+    Scheme::CollageLight,
+    Scheme::CollagePlus,
+    Scheme::Fp32Optim,
+    Scheme::Fp32MasterWeights,
+    Scheme::Kahan,
+    Scheme::StochasticRounding,
+];
+
+impl Scheme {
+    /// Canonical format-independent name (`FromStr` parses it back).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Plain => "plain",
+            Scheme::CollageLight => "collage-light",
+            Scheme::CollagePlus => "collage-plus",
+            Scheme::Fp32Optim => "fp32-optim",
+            Scheme::Fp32MasterWeights => "fp32-mw",
+            Scheme::Kahan => "kahan",
+            Scheme::StochasticRounding => "sr",
+        }
+    }
+
+    /// Does the effective parameter live in an expansion (θ + δθ)?
+    pub fn is_mcf_params(&self) -> bool {
+        matches!(self, Scheme::CollageLight | Scheme::CollagePlus)
+    }
+}
+
+impl FromStr for Scheme {
+    type Err = Error;
+
+    /// Accepts the canonical names plus every legacy `Strategy` option
+    /// string ("a" → plain, "dmw" → fp32-optim, ...), so one parser serves
+    /// the CLI, `RunConfig` JSON and the checkpoint header.
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "plain" | "a" | "bf16" => Scheme::Plain,
+            "b" | "collage-light" | "light" => Scheme::CollageLight,
+            "c" | "collage-plus" | "plus" => Scheme::CollagePlus,
+            "dmw" | "fp32-optim" => Scheme::Fp32Optim,
+            "d" | "fp32-mw" | "mixed" => Scheme::Fp32MasterWeights,
+            "kahan" => Scheme::Kahan,
+            "sr" | "stochastic" => Scheme::StochasticRounding,
+            other => bail!(
+                "unknown scheme {other:?} \
+                 (plain|collage-light|collage-plus|fp32-optim|fp32-mw|kahan|sr)"
+            ),
+        })
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One point of the plan space: *how* the state is structured ([`Scheme`])
+/// and *what* the low-precision vectors are stored in ([`FloatFormat`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrecisionPlan {
+    pub format: FloatFormat,
+    pub scheme: Scheme,
+}
+
+impl PrecisionPlan {
+    pub fn new(format: FloatFormat, scheme: Scheme) -> Self {
+        PrecisionPlan { format, scheme }
+    }
+
+    /// The bf16 row — the paper's original Table-2 zoo.
+    pub fn bf16(scheme: Scheme) -> Self {
+        PrecisionPlan { format: BF16, scheme }
+    }
+
+    /// The legacy [`Strategy`] this plan corresponds to, if it lies on the
+    /// bf16 row (or is the fp32 reference cell).  `Some` means the fused
+    /// PR-1 bf16 kernels and the AOT HLO artifacts cover it; `None` routes
+    /// to the format-generic kernel path.
+    pub fn as_strategy(&self) -> Option<Strategy> {
+        if self.format == BF16 {
+            Some(match self.scheme {
+                Scheme::Plain => Strategy::Bf16,
+                Scheme::CollageLight => Strategy::CollageLight,
+                Scheme::CollagePlus => Strategy::CollagePlus,
+                Scheme::Fp32Optim => Strategy::Fp32Optim,
+                Scheme::Fp32MasterWeights => Strategy::Fp32MasterWeights,
+                Scheme::Kahan => Strategy::Kahan,
+                Scheme::StochasticRounding => Strategy::StochasticRounding,
+            })
+        } else if self.format == FP32 && self.scheme == Scheme::Plain {
+            Some(Strategy::Fp32)
+        } else {
+            None
+        }
+    }
+
+    /// Human-readable row label: the paper's table name on the bf16 row,
+    /// `scheme@format` elsewhere.
+    pub fn paper_name(&self) -> String {
+        match self.as_strategy() {
+            Some(s) => s.paper_name().to_string(),
+            None => self.to_string(),
+        }
+    }
+
+    /// State vectors (name, semantic dtype) in artifact I/O order — the
+    /// Table-2 row structure instantiated at this plan's storage format.
+    pub fn state_spec(&self) -> Vec<(&'static str, SemanticDtype)> {
+        let lp = SemanticDtype::of(self.format);
+        let f32_ = SemanticDtype::Fp32;
+        match self.scheme {
+            Scheme::Plain | Scheme::StochasticRounding => {
+                vec![("theta", lp), ("m", lp), ("v", lp)]
+            }
+            Scheme::CollageLight => {
+                vec![("theta", lp), ("dtheta_c", lp), ("m", lp), ("v", lp)]
+            }
+            Scheme::CollagePlus => {
+                vec![("theta", lp), ("dtheta_c", lp), ("m", lp), ("v", lp), ("dv", lp)]
+            }
+            Scheme::Fp32Optim => vec![("theta", lp), ("m", f32_), ("v", f32_)],
+            Scheme::Fp32MasterWeights => {
+                vec![("theta", lp), ("m", f32_), ("v", f32_), ("mw", f32_)]
+            }
+            Scheme::Kahan => vec![("theta", lp), ("c", lp), ("m", lp), ("v", lp)],
+        }
+    }
+
+    /// Training-state bytes per parameter **excluding** the gradient.
+    pub fn state_bytes_per_param(&self) -> usize {
+        self.state_spec().iter().map(|(_, d)| d.bytes()).sum()
+    }
+
+    /// Total bytes/parameter the way Table 2 counts them: parameter +
+    /// gradient + optimizer states + MCF/master-weight extras.  The
+    /// gradient is stored in the plan's format (2 B at bf16, 1 B at fp8,
+    /// 4 B for the fp32 reference).
+    pub fn bytes_per_param(&self) -> usize {
+        self.state_bytes_per_param() + self.format.bytes
+    }
+
+    /// Does the effective parameter live in an expansion (θ + δθ)?
+    pub fn is_mcf_params(&self) -> bool {
+        self.scheme.is_mcf_params()
+    }
+
+    /// Should gradients be rounded into the storage format before the
+    /// optimizer consumes them? (Everything but the fp32 reference.)
+    pub fn quantizes_grad(&self) -> bool {
+        self.format.mantissa_bits != 23
+    }
+
+    /// The paper's ε must sit above the format's second-moment resolution:
+    /// at 8-bit precision v decays through the subnormal range to exactly 0
+    /// while m can still hold ~1e-5, and ε = 1e-8 lets m̂/√v̂ explode (the
+    /// standard fp8-training adjustment; ≥10-bit-range formats keep 1e-8).
+    pub fn default_eps(&self) -> f32 {
+        if self.format.mantissa_bits <= 3 {
+            1e-4
+        } else {
+            1e-8
+        }
+    }
+
+    /// Parse a CLI pair: a strategy/scheme string plus an optional
+    /// `--format` override (empty string = no override).
+    pub fn parse_with_format(strategy: &str, format: &str) -> Result<Self> {
+        let base: PrecisionPlan = strategy.parse()?;
+        if format.is_empty() {
+            return Ok(base);
+        }
+        let fmt: FloatFormat = format.parse()?;
+        Ok(PrecisionPlan { format: fmt, scheme: base.scheme })
+    }
+}
+
+impl From<Strategy> for PrecisionPlan {
+    fn from(s: Strategy) -> Self {
+        match s {
+            Strategy::Bf16 => PrecisionPlan::bf16(Scheme::Plain),
+            Strategy::CollageLight => PrecisionPlan::bf16(Scheme::CollageLight),
+            Strategy::CollagePlus => PrecisionPlan::bf16(Scheme::CollagePlus),
+            Strategy::Fp32Optim => PrecisionPlan::bf16(Scheme::Fp32Optim),
+            Strategy::Fp32MasterWeights => PrecisionPlan::bf16(Scheme::Fp32MasterWeights),
+            Strategy::Kahan => PrecisionPlan::bf16(Scheme::Kahan),
+            Strategy::StochasticRounding => PrecisionPlan::bf16(Scheme::StochasticRounding),
+            Strategy::Fp32 => PrecisionPlan::new(FP32, Scheme::Plain),
+        }
+    }
+}
+
+impl FromStr for PrecisionPlan {
+    type Err = Error;
+
+    /// One parser for every spelling in the repo:
+    ///   * `"scheme@format"` — any plan-space cell,
+    ///   * a legacy `Strategy` option string (`"a"`, `"dmw"`, `"fp32"`, ...)
+    ///     — the bf16 row / fp32 cell,
+    ///   * a bare scheme name — that scheme at bf16 storage.
+    fn from_str(s: &str) -> Result<Self> {
+        if let Some((scheme, fmtname)) = s.split_once('@') {
+            let scheme: Scheme = scheme.parse()?;
+            let format: FloatFormat = fmtname.parse()?;
+            return Ok(PrecisionPlan { format, scheme });
+        }
+        if let Ok(strategy) = Strategy::parse(s) {
+            return Ok(strategy.into());
+        }
+        let scheme: Scheme = s.parse()?;
+        Ok(PrecisionPlan::bf16(scheme))
+    }
+}
+
+impl fmt::Display for PrecisionPlan {
+    /// Round-trips through [`FromStr`]: legacy option strings on the bf16
+    /// row (so existing configs, checkpoints and manifests keep working),
+    /// `scheme@format` everywhere else.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.as_strategy() {
+            Some(s) => f.write_str(s.option_str()),
+            None => write!(f, "{}@{}", self.scheme.name(), self.format.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::format::{ALL_FORMATS, FP16, FP8E4M3};
+    use crate::optim::strategy::ALL_STRATEGIES;
+
+    #[test]
+    fn every_plan_cell_roundtrips_through_one_parser() {
+        // The satellite: all 8 strategies and all 5 formats × 7 schemes go
+        // through the single FromStr and come back identical.
+        for strategy in ALL_STRATEGIES {
+            let plan = PrecisionPlan::from(strategy);
+            let back: PrecisionPlan = strategy.option_str().parse().unwrap();
+            assert_eq!(back, plan, "strategy {strategy}");
+            let back: PrecisionPlan = plan.to_string().parse().unwrap();
+            assert_eq!(back, plan, "plan display {plan}");
+        }
+        for format in ALL_FORMATS {
+            for scheme in ALL_SCHEMES {
+                let plan = PrecisionPlan::new(format, scheme);
+                let back: PrecisionPlan = plan.to_string().parse().unwrap();
+                assert_eq!(back, plan, "{plan}");
+            }
+        }
+        assert!("nope".parse::<PrecisionPlan>().is_err());
+        assert!("plain@fp12".parse::<PrecisionPlan>().is_err());
+    }
+
+    #[test]
+    fn bf16_row_is_the_strategy_zoo() {
+        for strategy in ALL_STRATEGIES {
+            let plan = PrecisionPlan::from(strategy);
+            assert_eq!(plan.as_strategy(), Some(strategy));
+            // The plan-derived layout and byte counts match the legacy ones.
+            assert_eq!(plan.state_spec(), strategy.state_spec(), "{strategy}");
+            assert_eq!(plan.bytes_per_param(), strategy.bytes_per_param());
+            assert_eq!(plan.is_mcf_params(), strategy.is_mcf_params());
+        }
+    }
+
+    #[test]
+    fn off_row_plans_have_no_strategy_and_scale_bytes() {
+        let p = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight);
+        assert_eq!(p.as_strategy(), None);
+        // 4 fp8 state words + 1 fp8 gradient word.
+        assert_eq!(p.bytes_per_param(), 5);
+        assert_eq!(p.to_string(), "collage-light@fp8e4m3");
+        let p = PrecisionPlan::new(FP16, Scheme::Fp32MasterWeights);
+        // fp16 θ (2) + 3×fp32 (12) + fp16 grad (2).
+        assert_eq!(p.bytes_per_param(), 16);
+        // collage-light@fp32 is off-row too (fp32 maps only to plain).
+        let p = PrecisionPlan::new(FP32, Scheme::CollageLight);
+        assert_eq!(p.as_strategy(), None);
+        assert_eq!(p.to_string(), "collage-light@fp32");
+    }
+
+    #[test]
+    fn parse_with_format_overrides_storage() {
+        let p = PrecisionPlan::parse_with_format("collage-light", "fp8e4m3").unwrap();
+        assert_eq!(p, PrecisionPlan::new(FP8E4M3, Scheme::CollageLight));
+        let p = PrecisionPlan::parse_with_format("collage-plus", "").unwrap();
+        assert_eq!(p, PrecisionPlan::from(Strategy::CollagePlus));
+        // A combined spelling plus an explicit --format: the flag wins.
+        let p = PrecisionPlan::parse_with_format("plain@fp16", "fp8e5m2").unwrap();
+        assert_eq!(p.format.name, "fp8e5m2");
+    }
+
+    #[test]
+    fn fp8_eps_adjustment() {
+        assert_eq!(PrecisionPlan::new(FP8E4M3, Scheme::Plain).default_eps(), 1e-4);
+        assert_eq!(PrecisionPlan::bf16(Scheme::Plain).default_eps(), 1e-8);
+    }
+}

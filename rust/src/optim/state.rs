@@ -1,16 +1,23 @@
-//! Optimizer state container: the named flat vectors a strategy carries
+//! Optimizer state container: the named flat vectors a plan carries
 //! between steps, stored exactly as the artifact I/O layout expects.
+//!
+//! Since the `PrecisionPlan` redesign the state is tagged with a full
+//! `{format, scheme}` plan, not just a bf16 `Strategy`; the same container
+//! serves the legacy bf16 zoo and the format-generic stack (`GenericState`
+//! was folded in here).
 
 use anyhow::{bail, Result};
 
 use super::kernels::ChunkAccum;
+use super::plan::{PrecisionPlan, Scheme};
 use super::strategy::Strategy;
 use crate::tensor::SemanticDtype;
 
-/// Flat optimizer state for one strategy: vectors in artifact I/O order.
+/// Flat optimizer state for one precision plan: vectors in artifact I/O
+/// order, each an f32 container holding values of its semantic dtype.
 #[derive(Debug, Clone)]
 pub struct OptimState {
-    pub strategy: Strategy,
+    pub plan: PrecisionPlan,
     pub n: usize,
     names: Vec<&'static str>,
     dtypes: Vec<SemanticDtype>,
@@ -21,10 +28,19 @@ pub struct OptimState {
 }
 
 impl OptimState {
-    /// Initialize from the initial parameter vector: θ (and the fp32 master
-    /// copy for option D) start at `theta0`, all other vectors at zero.
+    /// Initialize for a legacy bf16-row strategy (thin wrapper; callers of
+    /// the original API are unchanged).  `theta0` is copied verbatim — the
+    /// artifact init vectors are already storage-rounded.
     pub fn init(strategy: Strategy, theta0: &[f32]) -> Self {
-        let spec = strategy.state_spec();
+        Self::init_unquantized(strategy.into(), theta0)
+    }
+
+    /// Initialize for any plan, copying `theta0` verbatim: θ (and the fp32
+    /// master copy for fp32-mw schemes) start at `theta0`, all other
+    /// vectors at zero.  Use [`OptimState::init_plan`] when `theta0` is not
+    /// yet representable in the plan's storage format.
+    pub fn init_unquantized(plan: PrecisionPlan, theta0: &[f32]) -> Self {
+        let spec = plan.state_spec();
         let mut vecs = Vec::with_capacity(spec.len());
         for (name, _) in &spec {
             match *name {
@@ -33,7 +49,7 @@ impl OptimState {
             }
         }
         OptimState {
-            strategy,
+            plan,
             n: theta0.len(),
             names: spec.iter().map(|(n, _)| *n).collect(),
             dtypes: spec.iter().map(|(_, d)| *d).collect(),
@@ -42,12 +58,33 @@ impl OptimState {
         }
     }
 
+    /// Initialize for any plan with θ rounded into the plan's storage
+    /// format (the master-weight copy, when present, keeps full f32
+    /// precision — that is its whole point).
+    pub fn init_plan(plan: PrecisionPlan, theta0: &[f32]) -> Self {
+        let mut st = Self::init_unquantized(plan, theta0);
+        let fmt = plan.format;
+        if fmt.mantissa_bits != 23 {
+            if let Some(theta) = st.get_mut("theta") {
+                for x in theta.iter_mut() {
+                    *x = fmt.round_nearest(*x);
+                }
+            }
+        }
+        st
+    }
+
     /// Rebuild from raw vectors (checkpoint restore / artifact outputs).
     pub fn from_vecs(strategy: Strategy, vecs: Vec<Vec<f32>>) -> Result<Self> {
-        let spec = strategy.state_spec();
+        Self::from_vecs_plan(strategy.into(), vecs)
+    }
+
+    /// [`OptimState::from_vecs`] for any plan.
+    pub fn from_vecs_plan(plan: PrecisionPlan, vecs: Vec<Vec<f32>>) -> Result<Self> {
+        let spec = plan.state_spec();
         if vecs.len() != spec.len() {
             bail!(
-                "strategy {strategy} expects {} state vectors, got {}",
+                "plan {plan} expects {} state vectors, got {}",
                 spec.len(),
                 vecs.len()
             );
@@ -57,13 +94,19 @@ impl OptimState {
             bail!("state vectors have inconsistent lengths");
         }
         Ok(OptimState {
-            strategy,
+            plan,
             n,
             names: spec.iter().map(|(nm, _)| *nm).collect(),
             dtypes: spec.iter().map(|(_, d)| *d).collect(),
             vecs,
             accum_scratch: Vec::new(),
         })
+    }
+
+    /// The legacy strategy this state runs under, when it lies on the bf16
+    /// row of the plan space.
+    pub fn strategy(&self) -> Option<Strategy> {
+        self.plan.as_strategy()
     }
 
     /// Detach the fused-kernel scratch buffer (see `optim::kernels`);
@@ -112,35 +155,36 @@ impl OptimState {
             .map(move |i| &mut self.vecs[i])
     }
 
-    /// The parameter vector the *model* sees (bf16 hi component).
+    /// The parameter vector the *model* sees (low-precision hi component).
     pub fn theta(&self) -> &[f32] {
-        self.get("theta").expect("every strategy has theta")
+        self.get("theta").expect("every plan has theta")
     }
 
     /// The *effective* parameter in f64 (θ + δθ for MCF, master weights for
-    /// option D) — what EDQ and Fig. 2's parameter norm are measured on.
+    /// fp32-mw schemes) — what EDQ and Fig. 2's parameter norm are measured
+    /// on.
     pub fn theta_effective(&self) -> Vec<f64> {
-        match self.strategy {
-            Strategy::CollageLight | Strategy::CollagePlus => {
+        match self.plan.scheme {
+            Scheme::CollageLight | Scheme::CollagePlus => {
                 let hi = self.get("theta").unwrap();
                 let lo = self.get("dtheta_c").unwrap();
                 hi.iter().zip(lo).map(|(&h, &l)| h as f64 + l as f64).collect()
             }
-            Strategy::Fp32MasterWeights => {
+            Scheme::Fp32MasterWeights => {
                 self.get("mw").unwrap().iter().map(|&x| x as f64).collect()
             }
             _ => self.theta().iter().map(|&x| x as f64).collect(),
         }
     }
 
-    /// Semantic memory footprint in bytes (what real bf16/fp32 storage
+    /// Semantic memory footprint in bytes (what real bf16/fp8/fp32 storage
     /// would occupy — the Table 2 accounting, optimizer state only).
     pub fn semantic_bytes(&self) -> usize {
         self.dtypes.iter().map(|d| d.bytes() * self.n).sum()
     }
 
-    /// Check the f32-container invariant: every bf16-tagged vector holds
-    /// only bf16-representable values.
+    /// Check the f32-container invariant: every low-precision-tagged vector
+    /// holds only values representable in its semantic format.
     pub fn check_representable(&self) -> Result<()> {
         for ((name, dtype), vec) in self.names.iter().zip(&self.dtypes).zip(&self.vecs) {
             let fmt = dtype.format();
@@ -162,6 +206,7 @@ impl OptimState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::numerics::format::FP8E4M3;
 
     #[test]
     fn init_shapes_and_contents() {
@@ -170,6 +215,7 @@ mod tests {
         assert_eq!(st.names(), ["theta", "m", "v", "mw"]);
         assert_eq!(st.get("mw").unwrap(), &theta[..]);
         assert_eq!(st.get("m").unwrap(), &[0.0, 0.0, 0.0]);
+        assert_eq!(st.strategy(), Some(Strategy::Fp32MasterWeights));
     }
 
     #[test]
@@ -181,6 +227,10 @@ mod tests {
         // Option D: bf16 θ + 3 fp32 = 2 + 12 = 14 B/param.
         let st = OptimState::init(Strategy::Fp32MasterWeights, &theta);
         assert_eq!(st.semantic_bytes(), 14 * 1000);
+        // fp8 Collage-light: 4 fp8 vectors = 4 B/param.
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight);
+        let st = OptimState::init_plan(plan, &theta);
+        assert_eq!(st.semantic_bytes(), 4 * 1000);
     }
 
     #[test]
@@ -189,6 +239,19 @@ mod tests {
         assert!(st.check_representable().is_ok());
         st.get_mut("theta").unwrap()[0] = 0.1; // not bf16-representable
         assert!(st.check_representable().is_err());
+    }
+
+    #[test]
+    fn init_plan_quantizes_theta_keeps_master_weights() {
+        // fp8 plan: θ snaps onto the format grid, mw keeps full precision.
+        let theta = vec![0.1f32, 200.0];
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::Fp32MasterWeights);
+        let st = OptimState::init_plan(plan, &theta);
+        let th = st.get("theta").unwrap();
+        assert!(FP8E4M3.representable(th[0]) && FP8E4M3.representable(th[1]));
+        assert_eq!(st.get("mw").unwrap(), &theta[..]);
+        assert_eq!(st.strategy(), None);
+        st.check_representable().unwrap();
     }
 
     #[test]

@@ -1,8 +1,15 @@
 //! Precision strategies (paper Table 2 plus the Appendix-B baselines).
+//!
+//! Since the `PrecisionPlan` redesign this enum is a *thin alias* for the
+//! bf16 row of the plan space (plus the fp32 reference cell); the state
+//! layout and byte accounting live on [`PrecisionPlan`] and are delegated
+//! to here so the two can never drift.
 
 use anyhow::{bail, Result};
 
 use crate::tensor::SemanticDtype;
+
+use super::plan::PrecisionPlan;
 
 /// One precision strategy for the training loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -90,53 +97,44 @@ impl Strategy {
         })
     }
 
+    /// This strategy as a point of the plan space (the bf16 row).
+    pub fn plan(&self) -> PrecisionPlan {
+        PrecisionPlan::from(*self)
+    }
+
     /// State vectors (name, semantic dtype) in artifact I/O order; must
-    /// match `optim.STATE_SPECS` on the Python side.
+    /// match `optim.STATE_SPECS` on the Python side.  Delegates to the
+    /// format-generic layout on [`PrecisionPlan`].
     pub fn state_spec(&self) -> Vec<(&'static str, SemanticDtype)> {
-        use SemanticDtype::{Bf16, Fp32};
-        match self {
-            Strategy::Bf16 | Strategy::StochasticRounding => {
-                vec![("theta", Bf16), ("m", Bf16), ("v", Bf16)]
-            }
-            Strategy::CollageLight => {
-                vec![("theta", Bf16), ("dtheta_c", Bf16), ("m", Bf16), ("v", Bf16)]
-            }
-            Strategy::CollagePlus => vec![
-                ("theta", Bf16),
-                ("dtheta_c", Bf16),
-                ("m", Bf16),
-                ("v", Bf16),
-                ("dv", Bf16),
-            ],
-            Strategy::Fp32Optim => vec![("theta", Bf16), ("m", Fp32), ("v", Fp32)],
-            Strategy::Fp32MasterWeights => {
-                vec![("theta", Bf16), ("m", Fp32), ("v", Fp32), ("mw", Fp32)]
-            }
-            Strategy::Kahan => vec![("theta", Bf16), ("c", Bf16), ("m", Bf16), ("v", Bf16)],
-            Strategy::Fp32 => vec![("theta", Fp32), ("m", Fp32), ("v", Fp32)],
-        }
+        self.plan().state_spec()
     }
 
     /// Training-state bytes per parameter **excluding** the gradient
     /// (which is bf16×1 = 2 bytes for every option; Table 2 counts
     /// parameter+gradient as BF16×2).
     pub fn state_bytes_per_param(&self) -> usize {
-        self.state_spec().iter().map(|(_, d)| d.bytes()).sum()
+        self.plan().state_bytes_per_param()
     }
 
     /// Total bytes/parameter as the paper's Table 2 counts them:
     /// parameter + gradient + optimizer states + MCF/master-weight extras.
     pub fn bytes_per_param(&self) -> usize {
-        let grad = match self {
-            Strategy::Fp32 => 4,
-            _ => 2,
-        };
-        self.state_bytes_per_param() + grad
+        self.plan().bytes_per_param()
     }
 
     /// Does the effective parameter live in an expansion (θ + δθ)?
     pub fn is_mcf_params(&self) -> bool {
         matches!(self, Strategy::CollageLight | Strategy::CollagePlus)
+    }
+}
+
+/// The single string → strategy parser (same table as [`Strategy::parse`]),
+/// so `"a".parse::<Strategy>()` works anywhere `FromStr` is expected.
+impl std::str::FromStr for Strategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Strategy::parse(s)
     }
 }
 

@@ -1,15 +1,27 @@
 //! Gradient all-reduce for the data-parallel runtime.
 //!
-//! Implements ring-style chunked reduction over in-process "ranks"
-//! (threads).  The arithmetic is order-fixed (rank 0 → N-1 per chunk) so
-//! the reduced gradient is bit-deterministic regardless of thread timing —
-//! the property that makes DP runs reproducible and lets the leader's
-//! optimizer cross-check against single-process training.
+//! Implements chunked reduction over in-process "ranks" (threads) on the
+//! same substrate as the fused optimizer kernels:
+//! `util::threadpool::parallel_chunks`.  The chunk grid depends only on
+//! the gradient length — never on the worker count — and the arithmetic
+//! within each element is order-fixed (rank 0 → N-1), so the reduced
+//! gradient is bit-deterministic regardless of thread timing *and* of how
+//! many workers the pool runs — the same worker-count invariance the
+//! optimizer step guarantees, which is what keeps DP results reproducible
+//! across machines with different core counts.
 
-use crate::util::threadpool::parallel_map;
+use std::ops::Range;
+
+use crate::util::threadpool::{default_workers, parallel_chunks};
+
+/// Fixed reduction chunk length: ~64 KiB of f32s balances parallelism and
+/// cache locality, and (being a constant) keeps the grid independent of
+/// the worker count.
+const REDUCE_CHUNK: usize = 16_384;
 
 /// Mean-reduce `grads[rank][i]` over ranks into a single vector, in a
-/// fixed summation order (deterministic), parallelized over chunks.
+/// fixed summation order (rank 0, 1, 2, ... per element), parallelized
+/// over fixed-size chunks.
 pub fn allreduce_mean(grads: &[Vec<f32>]) -> Vec<f32> {
     assert!(!grads.is_empty());
     let n = grads[0].len();
@@ -18,34 +30,37 @@ pub fn allreduce_mean(grads: &[Vec<f32>]) -> Vec<f32> {
     if ranks == 1 {
         return grads[0].clone();
     }
-    let chunks = num_chunks(n);
-    let chunk_len = n.div_ceil(chunks);
     let scale = 1.0f32 / ranks as f32;
-    let parts = parallel_map(chunks, chunks.min(crate::util::threadpool::default_workers()), |c| {
-        let lo = c * chunk_len;
-        let hi = ((c + 1) * chunk_len).min(n);
-        let mut acc = vec![0.0f32; hi - lo];
-        // fixed order: rank 0, 1, 2, ... — deterministic f32 summation
-        for g in grads {
-            for (a, &x) in acc.iter_mut().zip(&g[lo..hi]) {
+    let mut out = vec![0.0f32; n];
+
+    /// Shared raw view so each chunk can write its disjoint window of the
+    /// output (the `optim::kernels::VecPtrs` pattern).
+    struct OutPtr(*mut f32, usize);
+    // SAFETY: `parallel_chunks` hands out non-overlapping ranges, each
+    // claimed by exactly one thread; the scope join publishes the writes.
+    unsafe impl Sync for OutPtr {}
+
+    let p = OutPtr(out.as_mut_ptr(), n);
+    let mut parts: Vec<()> = Vec::new();
+    parallel_chunks(n, REDUCE_CHUNK, default_workers(), &mut parts, |_, r: Range<usize>| {
+        debug_assert!(r.end <= p.1);
+        // SAFETY: disjoint window per chunk (see OutPtr).
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(p.0.add(r.start), r.len()) };
+        for (a, &x) in dst.iter_mut().zip(&grads[0][r.clone()]) {
+            *a = x;
+        }
+        // fixed order: rank 1, 2, ... — deterministic f32 summation
+        for g in &grads[1..] {
+            for (a, &x) in dst.iter_mut().zip(&g[r.clone()]) {
                 *a += x;
             }
         }
-        for a in acc.iter_mut() {
+        for a in dst.iter_mut() {
             *a *= scale;
         }
-        acc
     });
-    let mut out = Vec::with_capacity(n);
-    for p in parts {
-        out.extend_from_slice(&p);
-    }
     out
-}
-
-fn num_chunks(n: usize) -> usize {
-    // chunk to ~64KiB of f32s to balance parallelism and cache locality
-    (n / 16_384).clamp(1, 64)
 }
 
 #[cfg(test)]
@@ -75,6 +90,29 @@ mod tests {
         let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
         let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
         assert_eq!(ab, bb);
+    }
+
+    #[test]
+    fn matches_sequential_reduction_bitwise() {
+        // The parallel_chunks port must produce exactly the sequential
+        // rank-ordered sum — the property that makes DP runs worker-count
+        // invariant (each element's summation order is fixed by rank).
+        let mut rng = crate::util::rng::Rng::new(11, 0);
+        let ranks = 5;
+        let n = 50_001; // non-chunk-aligned
+        let grads: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let got = allreduce_mean(&grads);
+        let scale = 1.0f32 / ranks as f32;
+        for i in (0..n).step_by(977) {
+            let mut acc = 0.0f32;
+            for g in &grads {
+                acc += g[i];
+            }
+            acc *= scale;
+            assert_eq!(got[i].to_bits(), acc.to_bits(), "elem {i}");
+        }
     }
 
     #[test]

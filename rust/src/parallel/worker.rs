@@ -21,10 +21,9 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Context, Result};
 
 use crate::data::batches::Batch;
-use crate::numerics::expansion::rn_bf16;
 use crate::optim::adamw::{AdamW, StepStats};
+use crate::optim::plan::PrecisionPlan;
 use crate::optim::state::OptimState;
-use crate::optim::strategy::Strategy;
 use crate::runtime::{ArtifactKind, Input, Manifest, Runtime};
 use crate::util::rng::Rng;
 
@@ -71,15 +70,18 @@ pub struct DpStepResult {
 
 impl DataParallel {
     /// Spawn `workers` ranks.  Each rank creates its own PJRT CPU client
-    /// and compiles the grad artifact before the first step.
+    /// and compiles the grad artifact before the first step.  `plan`
+    /// accepts a legacy [`crate::optim::strategy::Strategy`] or any
+    /// [`PrecisionPlan`].
     pub fn new(
         manifest: &Manifest,
         model: &str,
-        strategy: Strategy,
+        plan: impl Into<PrecisionPlan>,
         workers: usize,
         opt: AdamW,
         seed: u64,
     ) -> Result<Self> {
+        let plan = plan.into();
         let workers = workers.max(1);
         let meta = manifest.find(model, ArtifactKind::Grad)?.clone();
         let m = manifest.model(model)?.clone();
@@ -134,7 +136,13 @@ impl DataParallel {
             workers_handles: handles,
             result_rx,
             workers,
-            state: OptimState::init(strategy, &theta0),
+            // bf16-row plans get the artifact-exact raw copy; off-row
+            // plans snap θ onto their storage grid first.
+            state: if plan.as_strategy().is_some() {
+                OptimState::init_unquantized(plan, &theta0)
+            } else {
+                OptimState::init_plan(plan, &theta0)
+            },
             opt,
             grad_clip: 1.0,
             step: 0,
@@ -191,15 +199,17 @@ impl DataParallel {
         // Collective: deterministic mean all-reduce.
         let mut g = super::allreduce::allreduce_mean(&grads);
 
-        // Leader: global-norm clip in f32, quantize to bf16 storage, then
-        // the strategy optimizer (bit-exact vs the fused kernel).
+        // Leader: global-norm clip in f32, quantize into the plan's
+        // storage format, then the plan optimizer (bit-exact vs the fused
+        // kernel; bf16 rounding here is the same bit-trick fast path).
         let gnorm = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
         let coef = (self.grad_clip as f64 / (gnorm + 1e-6)).min(1.0) as f32;
-        let quantize = self.state.strategy != Strategy::Fp32;
+        let plan = self.state.plan;
+        let quantize = plan.quantizes_grad();
         for x in g.iter_mut() {
             *x *= coef;
             if quantize {
-                *x = rn_bf16(*x);
+                *x = plan.format.round_nearest(*x);
             }
         }
         self.step += 1;

@@ -5,12 +5,17 @@
 
 use anyhow::{bail, Result};
 
-use crate::numerics::format::{FloatFormat, BF16, FP32};
+use crate::numerics::format::{FloatFormat, BF16, FP16, FP32, FP8E4M3, FP8E5M2};
 
-/// Semantic storage dtype of an f32-containerized tensor.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Semantic storage dtype of an f32-containerized tensor — one variant per
+/// [`FloatFormat`] the optimizer-state layer can store (the `PrecisionPlan`
+/// space: bf16 plus the §6 sub-16-bit extensions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SemanticDtype {
     Bf16,
+    Fp16,
+    Fp8E4M3,
+    Fp8E5M2,
     Fp32,
 }
 
@@ -18,7 +23,23 @@ impl SemanticDtype {
     pub fn format(&self) -> FloatFormat {
         match self {
             SemanticDtype::Bf16 => BF16,
+            SemanticDtype::Fp16 => FP16,
+            SemanticDtype::Fp8E4M3 => FP8E4M3,
+            SemanticDtype::Fp8E5M2 => FP8E5M2,
             SemanticDtype::Fp32 => FP32,
+        }
+    }
+
+    /// The dtype that stores values of `fmt` (inverse of
+    /// [`SemanticDtype::format`]; unknown formats fall back to fp32, the
+    /// container precision).
+    pub fn of(fmt: FloatFormat) -> Self {
+        match fmt.name {
+            "bf16" => SemanticDtype::Bf16,
+            "fp16" => SemanticDtype::Fp16,
+            "fp8e4m3" => SemanticDtype::Fp8E4M3,
+            "fp8e5m2" => SemanticDtype::Fp8E5M2,
+            _ => SemanticDtype::Fp32,
         }
     }
 
@@ -29,16 +50,16 @@ impl SemanticDtype {
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "bf16" => SemanticDtype::Bf16,
+            "fp16" | "f16" => SemanticDtype::Fp16,
+            "fp8e4m3" => SemanticDtype::Fp8E4M3,
+            "fp8e5m2" => SemanticDtype::Fp8E5M2,
             "fp32" | "f32" => SemanticDtype::Fp32,
             other => bail!("unknown semantic dtype {other:?}"),
         })
     }
 
     pub fn name(&self) -> &'static str {
-        match self {
-            SemanticDtype::Bf16 => "bf16",
-            SemanticDtype::Fp32 => "fp32",
-        }
+        self.format().name
     }
 }
 

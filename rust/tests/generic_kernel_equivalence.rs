@@ -1,0 +1,222 @@
+//! The kernel-layer determinism contract for the format-generic plan rows:
+//! the fused chunk kernels (`AdamW::step` / `AdamW::step_sharded` routed
+//! through the plan dispatcher) must be **bitwise** identical to the scalar
+//! oracle (`GenericAdamW::step`) — state vectors *and* `StepStats` — for
+//! every `FloatFormat` × `Scheme` cell off the bf16 row, for lengths that
+//! do and do not align with the chunk grid, and for any worker count.
+//!
+//! Companion of `kernel_equivalence.rs`, which enforces the same contract
+//! for the bf16 row against `AdamW::step_reference`.
+
+use collage::numerics::format::{FloatFormat, FP16, FP8E4M3, FP8E5M2};
+use collage::optim::adamw::{AdamW, StepStats};
+use collage::optim::generic::GenericAdamW;
+use collage::optim::plan::{PrecisionPlan, Scheme, ALL_SCHEMES};
+use collage::optim::state::OptimState;
+use collage::util::proptest::check_msg;
+use collage::util::rng::Rng;
+
+/// Sizes around the interesting boundaries: single element, sub-chunk,
+/// and off-by-one past a power of two (4097 < CHUNK keeps a single chunk;
+/// 40_000 spans multiple chunks and exercises the index-ordered combine).
+const SIZES: [usize; 3] = [1, 1023, 4097];
+
+const FORMATS: [FloatFormat; 3] = [FP16, FP8E4M3, FP8E5M2];
+
+fn gradient(fmt: FloatFormat, rng: &mut Rng, n: usize, zeros: bool) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            if zeros && i % 7 == 0 {
+                // exercise the Δθ = 0 / lost-update edge cases
+                0.0
+            } else {
+                fmt.round_nearest(0.01 * rng.normal() as f32)
+            }
+        })
+        .collect()
+}
+
+fn initial_state(plan: PrecisionPlan, n: usize, seed: u64) -> OptimState {
+    let mut rng = Rng::new(seed, plan.scheme as u64);
+    let theta: Vec<f32> = (0..n).map(|_| 2.0 * rng.normal() as f32).collect();
+    OptimState::init_plan(plan, &theta)
+}
+
+fn assert_states_bitwise(a: &OptimState, b: &OptimState, ctx: &str) {
+    assert_eq!(a.names(), b.names(), "{ctx}: state arity");
+    for (name, (va, vb)) in a.names().iter().zip(a.vecs().iter().zip(b.vecs())) {
+        assert_eq!(va.len(), vb.len(), "{ctx}: {name} length");
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: state {name:?}[{i}] {x:e} != {y:e}"
+            );
+        }
+    }
+}
+
+fn assert_stats_bitwise(a: &StepStats, b: &StepStats, ctx: &str) {
+    let fields = [
+        ("update_norm", a.edq.update_norm, b.edq.update_norm),
+        ("effective_norm", a.edq.effective_norm, b.edq.effective_norm),
+        ("edq", a.edq.edq, b.edq.edq),
+        ("edq_ratio", a.edq.edq_ratio, b.edq.edq_ratio),
+        ("lost_frac", a.lost_frac, b.lost_frac),
+        ("param_norm", a.param_norm, b.param_norm),
+    ];
+    for (name, x, y) in fields {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: stats.{name} {x:e} != {y:e}");
+    }
+}
+
+/// Run `steps` steps through the fused and oracle paths with identical
+/// inputs and compare everything bitwise after every step.
+fn compare_paths(plan: PrecisionPlan, n: usize, workers: usize, steps: u64) {
+    let ctx = format!("{plan} n={n} workers={workers}");
+    let opt = AdamW::for_plan(plan, 0.999); // β₂ → 1.0 in low precision: the hard regime
+    let oracle = GenericAdamW::from_adamw(&opt, plan);
+    let mut st_oracle = initial_state(plan, n, 42);
+    let mut st_fused = initial_state(plan, n, 42);
+    // Same seed → same per-step SR key draw in both paths.
+    let mut rng_oracle = Rng::new(1234, 9);
+    let mut rng_fused = Rng::new(1234, 9);
+    let mut grad_rng = Rng::new(77, 0);
+    for t in 1..=steps {
+        let g = gradient(plan.format, &mut grad_rng, n, t % 2 == 0);
+        let s_oracle = oracle.step(&mut st_oracle, &g, 1e-3, t, &mut rng_oracle);
+        let s_fused = if workers == 1 {
+            opt.step(&mut st_fused, &g, 1e-3, t, &mut rng_fused)
+        } else {
+            opt.step_sharded(&mut st_fused, &g, 1e-3, t, &mut rng_fused, workers)
+        };
+        let ctx = format!("{ctx} t={t}");
+        assert_states_bitwise(&st_oracle, &st_fused, &ctx);
+        assert_stats_bitwise(&s_oracle, &s_fused, &ctx);
+    }
+}
+
+#[test]
+fn fused_matches_oracle_every_format_scheme_size() {
+    for fmt in FORMATS {
+        for scheme in ALL_SCHEMES {
+            for n in SIZES {
+                compare_paths(PrecisionPlan::new(fmt, scheme), n, 1, 3);
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_matches_oracle_workers_2() {
+    for fmt in FORMATS {
+        for scheme in ALL_SCHEMES {
+            compare_paths(PrecisionPlan::new(fmt, scheme), 40_000, 2, 2);
+        }
+    }
+}
+
+#[test]
+fn sharded_matches_oracle_workers_8() {
+    for fmt in FORMATS {
+        for scheme in ALL_SCHEMES {
+            for n in [1usize, 1023] {
+                compare_paths(PrecisionPlan::new(fmt, scheme), n, 8, 2);
+            }
+        }
+    }
+}
+
+#[test]
+fn step_reference_routes_off_row_plans_to_the_oracle() {
+    // AdamW::step_reference is the one reference entry point for every
+    // plan: off the bf16 row it must agree with GenericAdamW bitwise.
+    let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollagePlus);
+    let opt = AdamW::for_plan(plan, 0.95);
+    let oracle = GenericAdamW::from_adamw(&opt, plan);
+    let mut st_a = initial_state(plan, 513, 5);
+    let mut st_b = initial_state(plan, 513, 5);
+    let mut r_a = Rng::new(2, 2);
+    let mut r_b = Rng::new(2, 2);
+    let mut grad_rng = Rng::new(3, 3);
+    for t in 1..=3 {
+        let g = gradient(plan.format, &mut grad_rng, 513, false);
+        let sa = opt.step_reference(&mut st_a, &g, 2e-3, t, &mut r_a);
+        let sb = oracle.step(&mut st_b, &g, 2e-3, t, &mut r_b);
+        assert_states_bitwise(&st_a, &st_b, "step_reference routing");
+        assert_stats_bitwise(&sa, &sb, "step_reference routing");
+    }
+}
+
+#[test]
+fn sharded_is_invariant_across_worker_counts() {
+    // Direct fused-vs-fused check (no oracle in the loop): the exact same
+    // trajectory for 1, 2 and 8 workers, including generic SR's
+    // counter-based noise and the multi-chunk diagnostics reduction.
+    for plan in [
+        PrecisionPlan::new(FP8E5M2, Scheme::StochasticRounding),
+        PrecisionPlan::new(FP16, Scheme::CollagePlus),
+    ] {
+        let n = 40_000;
+        let run = |workers: usize| {
+            let opt = AdamW::for_plan(plan, 0.95);
+            let mut st = initial_state(plan, n, 7);
+            let mut rng = Rng::new(5, 5);
+            let mut grad_rng = Rng::new(3, 3);
+            let mut last = StepStats::default();
+            for t in 1..=4 {
+                let g = gradient(plan.format, &mut grad_rng, n, false);
+                last = opt.step_sharded(&mut st, &g, 1e-3, t, &mut rng, workers);
+            }
+            (st, last)
+        };
+        let (st1, stats1) = run(1);
+        for workers in [2, 8] {
+            let (stw, statsw) = run(workers);
+            let ctx = format!("{plan} fused w=1 vs w={workers}");
+            assert_states_bitwise(&st1, &stw, &ctx);
+            assert_stats_bitwise(&stats1, &statsw, &ctx);
+        }
+    }
+}
+
+#[test]
+fn prop_fp8_e4m3_saturating_state_never_goes_inf() {
+    // E4M3 has no infinities (overflow saturates to ±448): no matter how
+    // violent the gradients or how large the parameters, every vector of
+    // an E4M3 plan's state must stay finite after stepping — including the
+    // fp32 sidecars, whose inputs are bounded by the format's max.
+    check_msg(
+        "fp8e4m3 state finite",
+        |rng| {
+            let scheme = ALL_SCHEMES[rng.below(ALL_SCHEMES.len() as u64) as usize];
+            let scale = 10f32.powi(rng.below(7) as i32); // 1 .. 1e6
+            let seed = rng.next_u64();
+            (scheme, scale, seed)
+        },
+        |&(scheme, scale, seed)| {
+            let plan = PrecisionPlan::new(FP8E4M3, scheme);
+            let opt = AdamW::for_plan(plan, 0.95);
+            let mut rng = Rng::new(seed, 0);
+            let n = 64;
+            let theta: Vec<f32> = (0..n).map(|_| scale * rng.normal() as f32).collect();
+            let mut st = OptimState::init_plan(plan, &theta);
+            let mut srng = Rng::new(seed, 1);
+            for t in 1..=5 {
+                let g: Vec<f32> = (0..n)
+                    .map(|_| FP8E4M3.round_nearest(scale * rng.normal() as f32))
+                    .collect();
+                opt.step(&mut st, &g, 0.1, t, &mut srng);
+            }
+            for (name, vec) in st.names().iter().zip(st.vecs()) {
+                if let Some(i) = vec.iter().position(|x| !x.is_finite()) {
+                    return Err(format!(
+                        "{scheme:?} scale={scale:e}: {name}[{i}] = {:e}",
+                        vec[i]
+                    ));
+                }
+            }
+            st.check_representable().map_err(|e| e.to_string())
+        },
+    );
+}
