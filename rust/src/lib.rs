@@ -16,9 +16,59 @@
 //! Python never runs on the training path: `make artifacts` lowers the HLO
 //! once; the `collage` binary is self-contained afterwards.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every table/figure of the paper to a generator in
-//! [`experiments`].
+//! # Architecture: modules ↔ paper sections
+//!
+//! The crate is organized bottom-up; each layer only depends on the ones
+//! above it in this table.
+//!
+//! | Module | Role | Paper anchor |
+//! |---|---|---|
+//! | [`numerics`] | [`numerics::format`]: format descriptors + the RN-even rounding contract with bit-parallel fast paths; [`numerics::round`]: directed/stochastic rounding; [`numerics::expansion`]: the MCF algebra (TwoSum, Fast2Sum, Grow, Mul); [`numerics::analysis`]: effective-descent-quality metrics | Table 9; App. B; §4.1 / App. C (MCF); Defs. 3.1–3.3 (EDQ, lost updates) |
+//! | [`tensor`] | semantic dtypes (storage format vs f32 container) | §2.2 |
+//! | [`optim`] | [`optim::plan`]: the `PrecisionPlan {format, scheme}` plan space and its string grammar; [`optim::strategy`]: the legacy bf16 row; [`optim::adamw`] + [`optim::kernels`]: fused single-pass AdamW chunk kernels (SIMD bf16 lanes, format-generic rows, streamed diagnostics, bit-deterministic sharding); [`optim::generic`]: the scalar oracle; [`optim::state`]: state vectors + checkpoint layout | Alg. 2; Table 2 (options A/B/C/D); §4.2 (β₂ expansion); §6 (8-bit extension) |
+//! | [`util`] | [`util::threadpool`]: persistent worker pool with deterministic fixed-grid sharding; RNG, JSON, tables, benches, property testing | — |
+//! | [`model`] | transformer shapes + the analytic memory model | Tables 2/8/12 |
+//! | [`data`] | synthetic + GLUE-style corpora, deterministic batch iterator | §5 setup |
+//! | [`runtime`] | PJRT client/executable wrappers + artifact manifest | — |
+//! | [`parallel`] | data-parallel runtime: per-rank workers, deterministic all-reduce ([`parallel::allreduce`]), sharded optimizer | §5 (training speed) |
+//! | [`coordinator`] | [`coordinator::trainer`]: the HLO train loop; [`coordinator::proxy`]: the artifact-free proxy trainer; configs, schedules, checkpoints, metrics | Figs. 1–3 pipelines |
+//! | [`experiments`] | regenerates the paper's tables/figures (`collage experiment --list`) | Tables 2–12, Figs. 1–7 |
+//!
+//! Numerics invariants worth knowing before touching anything:
+//!
+//! * Every quantizer follows the **rounding contract** in
+//!   [`numerics::format`] (RN-even, documented subnormal/overflow/NaN
+//!   behavior), and the bit-parallel fast paths are bitwise-identical to
+//!   the retained reference quantizer.
+//! * Every fused kernel is bitwise-identical to its scalar oracle, for any
+//!   worker count — the determinism contract in [`optim::kernels`],
+//!   enforced by `tests/kernel_equivalence.rs` and
+//!   `tests/generic_kernel_equivalence.rs`.
+//!
+//! # Quickstart
+//!
+//! ```text
+//! cd rust
+//! cargo build --release
+//!
+//! # Train the paper's Collage-light at FP8-E4M3 storage via the
+//! # artifact-free proxy objective (no Python, no HLO artifacts needed):
+//! ./target/release/collage train --format fp8e4m3 --strategy collage-light
+//!
+//! # The full plan grammar works everywhere a plan is accepted:
+//! ./target/release/collage train --strategy collage-plus@fp16
+//! ./target/release/collage memory --format fp8e4m3     # Table-2 rows at fp8
+//! ./target/release/collage experiment fp8 --quick      # §6 format × scheme grid
+//! ```
+//!
+//! With HLO artifacts built (`make artifacts`, needs the real `xla` crate
+//! instead of the in-tree stub), `collage train` runs the AOT-lowered
+//! transformer train step and `collage dp-train` the multi-rank
+//! data-parallel runtime.
+//!
+//! See `rust/README.md` for the same map with build/test instructions;
+//! `PAPER.md` at the repo root holds the paper abstract and `ROADMAP.md`
+//! the open items.
 
 pub mod coordinator;
 pub mod data;
@@ -30,10 +80,6 @@ pub mod parallel;
 pub mod runtime;
 pub mod tensor;
 pub mod util;
-
-// pub use coordinator::trainer::{TrainOutcome, Trainer};
-// pub use coordinator::config::RunConfig;
-// pub use optim::strategy::Strategy;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

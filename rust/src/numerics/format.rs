@@ -1,5 +1,42 @@
 //! Floating-point format descriptors (paper Appendix A, Table 9) and
 //! round-to-nearest-even quantization into each format.
+//!
+//! # The rounding contract
+//!
+//! Every quantizer in this module implements IEEE-754 **round to nearest,
+//! ties to even** onto the target format's grid, and all of them agree
+//! bitwise.  The contract, which every low-precision result in this repo
+//! leans on (surveys of low-precision training single out rounding-mode
+//! implementation detail as the first place reproductions diverge):
+//!
+//! * **Nearest / ties-to-even.**  A value exactly halfway between two
+//!   adjacent representables rounds to the one with an even mantissa
+//!   (e.g. `1 + 2⁻⁸` ties down to `1.0` in bf16).
+//! * **Subnormals.**  The grid extends below `2^e_min` with the fixed
+//!   quantum `2^(e_min − m)`; inputs under half the smallest subnormal
+//!   round to (signed) zero, and the zero's sign is preserved.
+//! * **Overflow.**  Values that round above [`FloatFormat::max_finite`]
+//!   become `±inf` — except on saturating formats (FP8-E4M3 per the OCP
+//!   spec has no infinities), where they clamp to `±max_finite`.  E4M3
+//!   additionally reclaims the all-ones exponent for finite values, so its
+//!   top binade is finite (`max_finite = 448`, the `1.875·2⁸` code point
+//!   being NaN).
+//! * **NaN** propagates as the canonical quiet `f32::NAN`.
+//!
+//! Two implementations provide the contract:
+//!
+//! * [`FloatFormat::round`] / [`FloatFormat::round_nearest_f64`] — the
+//!   **bit-parallel fast paths**: shift + round-to-even on the raw
+//!   mantissa (the [`bf16_round`] trick generalized to any
+//!   exponent/mantissa split), no `log2`/`floor`/`powi` in sight.
+//! * [`FloatFormat::round_nearest_f64_reference`] — the original
+//!   arithmetic quantizer (exponent via `log2`, scale, round, rescale),
+//!   retained as the executable specification.
+//!
+//! The fast paths are **bitwise identical** to the reference for every
+//! input: `tests/rounding_equivalence.rs` enforces this on seeded samples
+//! plus hand-picked boundary cases in tier 1, and exhaustively over all
+//! 2³² `f32` bit patterns behind `#[ignore]`.
 
 /// A binary floating-point format described by its exponent/mantissa split
 /// (IEEE-754 style, radix 2, with subnormals).
@@ -94,16 +131,36 @@ impl FloatFormat {
         frac * 2f64.powi(self.e_max())
     }
 
+    /// Largest finite value as an `f32` (exact for every format here),
+    /// built by bit construction — no `powi` on the hot path.
+    #[inline]
+    pub fn max_finite_f32(&self) -> f32 {
+        let m = self.mantissa_bits as i32;
+        let frac = if self.saturating {
+            2.0 - 2.0 * pow2f(-m) // E4M3: top mantissa code point is NaN
+        } else {
+            2.0 - pow2f(-m)
+        };
+        frac * pow2f(self.e_max())
+    }
+
     /// Unit in the last place of `x` (Def. 3.1):
     /// `ulp(x) = 2^(max(e, e_min) - mantissa_bits)`.
+    ///
+    /// The binade exponent comes straight from the `f64` exponent bits of
+    /// `|x|` (exact — `f32 → f64` widening is lossless and turns every f32
+    /// subnormal into a normal f64), replacing the previous
+    /// `log2().floor()` + fixup.  Non-finite `x` yields `+inf`.
     pub fn ulp(&self, x: f32) -> f64 {
+        let m = self.mantissa_bits as i32;
         if x == 0.0 {
-            return 2f64.powi(self.e_min() - self.mantissa_bits as i32);
+            return pow2f64(self.e_min() - m);
         }
-        let e = (x.abs() as f64).log2().floor() as i32;
-        // log2 can misround at exact powers of two boundaries; fix up.
-        let e = fixup_exponent(x.abs() as f64, e);
-        2f64.powi(e.max(self.e_min()) - self.mantissa_bits as i32)
+        if !x.is_finite() {
+            return f64::INFINITY;
+        }
+        let e = (((x.abs() as f64).to_bits() >> 52) & 0x7FF) as i32 - 1023;
+        pow2f64(e.max(self.e_min()) - m)
     }
 
     /// `ulp(1.0)` — the Table 9 column.
@@ -113,7 +170,93 @@ impl FloatFormat {
 
     /// Round an f64 to this format with round-to-nearest-even, returning an
     /// f32 container.  Handles zeros, subnormals, overflow and NaN.
+    ///
+    /// This is the bit-parallel fast path (see the module docs for the
+    /// rounding contract); it is bitwise identical to
+    /// [`FloatFormat::round_nearest_f64_reference`] for every input.
+    #[inline]
     pub fn round_nearest_f64(&self, x: f64) -> f32 {
+        if self.mantissa_bits == 23 && self.exp_bits == 8 {
+            return x as f32; // FP32: rust f64→f32 cast is RN-even
+        }
+        self.round_bits_f64(x)
+    }
+
+    /// Bit-parallel RN-even core: shift + round-to-even on the raw f64
+    /// mantissa (the [`bf16_round`] trick generalized to any
+    /// exponent/mantissa split), handling subnormals, signed zeros,
+    /// overflow-to-inf / E4M3 saturation, and NaN.
+    #[inline]
+    fn round_bits_f64(&self, x: f64) -> f32 {
+        let bits = x.to_bits();
+        let sign_bit = ((bits >> 63) as u32) << 31;
+        let biased = ((bits >> 52) & 0x7FF) as i32;
+        let man = bits & 0x000F_FFFF_FFFF_FFFF;
+        if biased == 0x7FF {
+            // NaN propagates canonically; ±inf overflows (or saturates).
+            return if man != 0 { f32::NAN } else { self.overflow_value(sign_bit) };
+        }
+        if biased == 0 {
+            // ±0, and f64 subnormals — far below every target's grid.
+            return f32::from_bits(sign_bit);
+        }
+        let e = biased - 1023; // binade exponent: 2^e <= |x| < 2^(e+1)
+        if e > self.e_max() {
+            return self.overflow_value(sign_bit);
+        }
+        let m = self.mantissa_bits as i32;
+        // Grid quantum 2^q; pinned at 2^(e_min − m) in the subnormal range.
+        let q = e.max(self.e_min()) - m;
+        // |x| = sig · 2^(e−52); rounding to a multiple of 2^q drops the low
+        // `shift` significand bits.
+        let shift = q - (e - 52);
+        if shift >= 54 {
+            return f32::from_bits(sign_bit); // |x| < quantum/2
+        }
+        let sig = man | (1u64 << 52); // implicit leading bit
+        let half = 1u64 << (shift - 1);
+        let rem = sig & ((half << 1) - 1);
+        let mut keep = sig >> shift;
+        if rem > half || (rem == half && keep & 1 == 1) {
+            keep += 1; // round up; a carry into the next binade is fine
+        }
+        if keep == 0 {
+            return f32::from_bits(sign_bit);
+        }
+        // Overflow is only reachable in the top binade (below it, even a
+        // carry to keep = 2^(m+1) lands on 2^(e+1) <= 2^e_max < max), where
+        // the largest in-range significand is 2^(m+1) − 1, minus one more
+        // code point on saturating formats (E4M3's top mantissa is NaN).
+        // An integer test keeps `max_finite` recomputation off the hot path.
+        if e == self.e_max() && keep > (1u64 << (m + 1)) - 1 - self.saturating as u64 {
+            return self.overflow_value(sign_bit);
+        }
+        // v = keep · 2^q, exact in f32: keep has ≤ m+2 significant bits and
+        // every grid point of our formats is f32-representable.  The split
+        // exponent keeps the construction exact when the grid dips into the
+        // f32 subnormal range (bf16 subnormals reach 2⁻¹³³ < 2⁻¹²⁶).
+        let q1 = q.max(-126);
+        let v = (keep as f32) * pow2f(q1) * pow2f(q - q1);
+        f32::from_bits(sign_bit | v.to_bits())
+    }
+
+    /// What an overflowing magnitude becomes: `±inf`, or `±max_finite` on
+    /// saturating formats (E4M3 has no infinities).
+    #[inline]
+    fn overflow_value(&self, sign_bit: u32) -> f32 {
+        let mag = if self.saturating {
+            self.max_finite_f32().to_bits()
+        } else {
+            0x7F80_0000 // +inf
+        };
+        f32::from_bits(sign_bit | mag)
+    }
+
+    /// The executable specification of the rounding contract: the original
+    /// arithmetic quantizer (exponent via `log2`, scale by the quantum,
+    /// round ties-to-even, rescale).  ~10× the cost of the bit-parallel
+    /// path — kept only as the oracle for `tests/rounding_equivalence.rs`.
+    pub fn round_nearest_f64_reference(&self, x: f64) -> f32 {
         if self.mantissa_bits == 23 && self.exp_bits == 8 {
             return x as f32; // FP32: rust f64→f32 cast is RN-even
         }
@@ -148,12 +291,48 @@ impl FloatFormat {
         (sign * v) as f32
     }
 
-    /// Round an f32 to this format with RN-even (fast path for bf16).
-    pub fn round_nearest(&self, x: f32) -> f32 {
-        if self.mantissa_bits == 7 && self.exp_bits == 8 {
-            return bf16_round(x);
+    /// Round an f32 into this format with RN-even — **the** quantization
+    /// entry point, dispatching to a bit-parallel fast path per format
+    /// (`u32` bit trick for bf16, identity for fp32, the generalized
+    /// mantissa shift of [`FloatFormat::round_nearest_f64`] for fp16/fp8;
+    /// the `f32 → f64` widening is exact, so no double rounding occurs).
+    ///
+    /// See the module docs for the full rounding contract.
+    ///
+    /// ```
+    /// use collage::numerics::format::{BF16, FP16, FP8E4M3, FP8E5M2};
+    /// // Ties round to even: 1 + 2⁻⁸ is halfway to the next bf16 grid point.
+    /// assert_eq!(BF16.round(1.0 + 2f32.powi(-8)), 1.0);
+    /// // fp16 overflows to inf above its max finite value (65504)...
+    /// assert_eq!(FP16.round(65504.0), 65504.0);
+    /// assert_eq!(FP16.round(65520.0), f32::INFINITY);
+    /// // ...E5M2 keeps inf too, but E4M3 saturates (the OCP spec has no inf).
+    /// assert_eq!(FP8E5M2.round(1e6), f32::INFINITY);
+    /// assert_eq!(FP8E4M3.round(1e6), 448.0);
+    /// // Subnormals: 2⁻²⁴ is fp16's smallest subnormal; half of it ties to 0.
+    /// assert_eq!(FP16.round(2f32.powi(-24)), 2f32.powi(-24));
+    /// assert_eq!(FP16.round(2f32.powi(-25)), 0.0);
+    /// // Signed zero survives.
+    /// assert!(FP8E4M3.round(-0.0).is_sign_negative());
+    /// ```
+    #[inline]
+    pub fn round(&self, x: f32) -> f32 {
+        if self.exp_bits == 8 {
+            if self.mantissa_bits == 23 {
+                return x;
+            }
+            if self.mantissa_bits == 7 {
+                return bf16_round(x);
+            }
         }
-        self.round_nearest_f64(x as f64)
+        self.round_bits_f64(x as f64)
+    }
+
+    /// Round an f32 to this format with RN-even.  Alias of
+    /// [`FloatFormat::round`], kept for the existing call sites.
+    #[inline]
+    pub fn round_nearest(&self, x: f32) -> f32 {
+        self.round(x)
     }
 
     /// True iff `x` is exactly representable in this format.
@@ -197,6 +376,20 @@ impl FloatFormat {
         }
         (x as f64 - u) as f32
     }
+}
+
+/// `2^q` as an f32 by direct bit construction (normal range only).
+#[inline]
+fn pow2f(q: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&q), "pow2f exponent {q} out of range");
+    f32::from_bits(((q + 127) as u32) << 23)
+}
+
+/// `2^q` as an f64 by direct bit construction (normal range only).
+#[inline]
+fn pow2f64(q: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&q), "pow2f64 exponent {q} out of range");
+    f64::from_bits(((q + 1023) as u64) << 52)
 }
 
 /// `log2().floor()` misrounds just below powers of two; nudge the exponent
@@ -252,6 +445,19 @@ mod tests {
     }
 
     #[test]
+    fn max_finite_f32_matches_f64_and_pow2_helpers() {
+        for f in ALL_FORMATS {
+            assert_eq!(f.max_finite_f32() as f64, f.max_finite(), "{}", f.name);
+        }
+        for q in [-126, -24, -1, 0, 1, 13, 127] {
+            assert_eq!(pow2f(q) as f64, 2f64.powi(q), "pow2f({q})");
+        }
+        for q in [-1022, -149, -133, -24, 0, 52, 1023] {
+            assert_eq!(pow2f64(q), 2f64.powi(q), "pow2f64({q})");
+        }
+    }
+
+    #[test]
     fn table9_ulp_one() {
         // Paper Table 9.
         assert_eq!(FP32.ulp_one(), 2f64.powi(-23));
@@ -282,7 +488,7 @@ mod tests {
                 continue;
             }
             let fast = bf16_round(x);
-            let slow = BF16.round_nearest_f64(x as f64);
+            let slow = BF16.round_nearest_f64_reference(x as f64);
             assert!(
                 fast == slow || (fast.is_infinite() && slow.is_infinite() && fast == slow),
                 "x={x:e} bits={:08x}: fast={fast:e} slow={slow:e}",

@@ -1,5 +1,30 @@
 //! Rounding modes beyond RN-even: stochastic rounding (paper Appendix B)
 //! and directed rounding helpers used by tests.
+//!
+//! Everything here derives from the RN-even contract documented in
+//! [`super::format`]: the directed modes bracket a value between the two
+//! adjacent grid points by re-rounding nudged inputs (correct across
+//! binade boundaries, where the grid spacing halves), and stochastic
+//! rounding picks between that same bracket with probability proportional
+//! to the position inside it.  All of them therefore ride the bit-parallel
+//! fast paths of [`FloatFormat::round_nearest_f64`] — no extra per-element
+//! `log2`/`powi` — and inherit its subnormal/overflow/NaN semantics.
+//!
+//! The optimizer kernels use the counter-based variant
+//! (`optim::kernels::sr_round_fmt`) so the draw is a pure function of
+//! `(step key, element index)`; the [`stochastic_round`] here draws from a
+//! caller-provided [`Rng`] stream and is the simpler reference form.
+//!
+//! ```
+//! use collage::numerics::format::FP8E4M3;
+//! use collage::numerics::round::{round_down, round_up};
+//! // 17 sits between the e4m3 grid points 16 and 18 (ulp(16) = 2).
+//! assert_eq!(round_down(&FP8E4M3, 17.0), 16.0);
+//! assert_eq!(round_up(&FP8E4M3, 17.0), 18.0);
+//! // On-grid values are fixed points of both directed modes.
+//! assert_eq!(round_down(&FP8E4M3, 18.0), 18.0);
+//! assert_eq!(round_up(&FP8E4M3, 18.0), 18.0);
+//! ```
 
 use crate::util::rng::Rng;
 

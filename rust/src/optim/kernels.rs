@@ -222,7 +222,42 @@ pub fn sr_round(exact: f32, noise: u32) -> f32 {
 // the diagnostics; no allocation, no per-element dispatch.
 // ---------------------------------------------------------------------------
 
+// ---------------------------------------------------------------------------
+// bf16 SIMD lanes.  `rn_bf16` is a handful of integer ops per element, but
+// its NaN guard is a branch, which blocks autovectorization of the scalar
+// loops.  The lane helpers below restate the same math over [`LANES`]
+// independent elements in branchless straight-line code (`u32x8`-style
+// manual lanes on stable Rust) that LLVM turns into vector instructions.
+// Lanes are independent elements, so the lane kernels are bit-identical to
+// the scalar ones — `tests/kernel_equivalence.rs` enforces it.  Only the
+// option-A kernel is lane-ized: the MCF kernels chain Fast2Sum sequences
+// whose length makes the scalar form competitive, and the fp32 kernels
+// already autovectorize.
+// ---------------------------------------------------------------------------
+
+/// Lane width of the bf16 chunk-kernel main loop (one AVX2 register of
+/// f32s; narrower targets simply unroll).
+const LANES: usize = 8;
+
+/// [`crate::numerics::format::bf16_round`] over [`LANES`] elements,
+/// branchless: the NaN select reproduces the scalar guard exactly
+/// (canonical quiet NaN out for any NaN in).
+#[inline]
+fn rn_bf16_x8(x: [f32; LANES]) -> [f32; LANES] {
+    std::array::from_fn(|l| {
+        let bits = x[l].to_bits();
+        let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
+        let is_nan = (bits & 0x7FFF_FFFF) > 0x7F80_0000;
+        f32::from_bits(if is_nan { f32::NAN.to_bits() } else { rounded })
+    })
+}
+
 /// Option A: plain bf16 parameters and optimizer states.
+///
+/// The main loop runs `LANES` (8) elements at a time through the
+/// branchless lane helpers; the tail reuses the scalar helpers.  Both
+/// apply the exact op sequence of [`AdamW::step_reference`]'s option-A
+/// arm, so the output is bit-identical to the scalar loop at any `n`.
 pub fn step_chunk_bf16(
     s: &StepScalars,
     g: &[f32],
@@ -230,8 +265,46 @@ pub fn step_chunk_bf16(
     m: &mut [f32],
     v: &mut [f32],
 ) -> ChunkAccum {
+    use std::array::from_fn;
     let mut acc = ChunkAccum::default();
-    for (k, &gk) in g.iter().enumerate() {
+    let n = g.len();
+    let mut k = 0;
+    while k + LANES <= n {
+        let gk: [f32; LANES] = g[k..k + LANES].try_into().unwrap();
+        let mk: [f32; LANES] = m[k..k + LANES].try_into().unwrap();
+        let vk: [f32; LANES] = v[k..k + LANES].try_into().unwrap();
+        let th: [f32; LANES] = theta[k..k + LANES].try_into().unwrap();
+        // m ← β₁m ⊕ (1-β₁)g   (lane-for-lane `StepScalars::m_bf16`)
+        let ma = rn_bf16_x8(from_fn(|l| mk[l] * s.beta1_f));
+        let mb = rn_bf16_x8(from_fn(|l| gk[l] * s.one_m_beta1));
+        let m_new = rn_bf16_x8(from_fn(|l| ma[l] + mb[l]));
+        // v ← β₂v ⊕ (1-β₂)g²
+        let g2 = rn_bf16_x8(from_fn(|l| gk[l] * gk[l]));
+        let va = rn_bf16_x8(from_fn(|l| vk[l] * s.b2hi));
+        let vb = rn_bf16_x8(from_fn(|l| g2[l] * s.one_m_beta2));
+        let v_new = rn_bf16_x8(from_fn(|l| va[l] + vb[l]));
+        let vh = rn_bf16_x8(from_fn(|l| v_new[l] / s.bc2));
+        // Δθ   (lane-for-lane `delta_theta_bf16`)
+        let m_hat = rn_bf16_x8(from_fn(|l| m_new[l] / s.bc1));
+        let root = rn_bf16_x8(from_fn(|l| vh[l].sqrt()));
+        let denom = rn_bf16_x8(from_fn(|l| root[l] + s.eps));
+        let t1 = rn_bf16_x8(from_fn(|l| m_hat[l] / denom[l]));
+        let t2 = rn_bf16_x8(from_fn(|l| th[l] * s.wd));
+        let t12 = rn_bf16_x8(from_fn(|l| t1[l] + t2[l]));
+        let dt = rn_bf16_x8(from_fn(|l| -s.lr * t12[l]));
+        let th_new = rn_bf16_x8(from_fn(|l| th[l] + dt[l]));
+        m[k..k + LANES].copy_from_slice(&m_new);
+        v[k..k + LANES].copy_from_slice(&v_new);
+        theta[k..k + LANES].copy_from_slice(&th_new);
+        // The diagnostics reduction stays scalar, in element order — the
+        // determinism contract fixes the f64 summation order.
+        for ((&d, &old), &new) in dt.iter().zip(&th).zip(&th_new) {
+            acc.tally(d, old, new);
+        }
+        k += LANES;
+    }
+    for k in k..n {
+        let gk = g[k];
         let m_new = s.m_bf16(m[k], gk);
         let g2 = rn_bf16(gk * gk);
         let v_new = rn_bf16(rn_bf16(v[k] * s.b2hi) + rn_bf16(g2 * s.one_m_beta2));

@@ -42,8 +42,9 @@
 //! [`crate::numerics::format::FloatFormat`]; each performs the update and
 //! streams the Def. 3.3 diagnostics (EDQ dot/norms, lost-update count,
 //! parameter-norm²) in a single pass.  [`AdamW::step`] runs them on the
-//! calling thread, `AdamW::step_sharded` shards chunks across a scoped
-//! thread pool (`util::threadpool::parallel_chunks`), and two scalar
+//! calling thread, `AdamW::step_sharded` shards chunks across the
+//! persistent worker pool (`util::threadpool::parallel_chunks` — parked
+//! threads, no per-step spawns), and two scalar
 //! oracles are retained for the equivalence suites:
 //! `AdamW::step_reference` (bf16 row) and [`GenericAdamW::step`] (every
 //! other cell).

@@ -20,9 +20,54 @@
 //! the fused chunk kernels, [`super::state::OptimState`], the trainer, the
 //! CLI, the memory model and the benches — speaks `PrecisionPlan`.
 //!
-//! String forms round-trip through a single [`FromStr`]: the bf16 row keeps
-//! its legacy option strings (`"a"`, `"collage-light"`, `"dmw"`, ...); any
-//! other cell prints as `"<scheme>@<format>"` (e.g. `collage-light@fp8e4m3`).
+//! # String grammar
+//!
+//! One [`FromStr`] serves every spelling in the repo — the CLI
+//! (`--strategy`/`--format`), `RunConfig` JSON, the checkpoint header and
+//! the artifact manifest all parse with it, so a plan string written in
+//! any of them round-trips through all of them:
+//!
+//! ```text
+//! plan    := scheme "@" format      # any cell, e.g. "collage-light@fp8e4m3"
+//!          | scheme                 # that scheme at bf16 storage
+//!          | legacy                 # the paper's Table-2 option strings
+//! scheme  := "plain" | "collage-light" | "collage-plus" | "fp32-optim"
+//!          | "fp32-mw" | "kahan" | "sr"          (+ aliases, see Scheme)
+//! format  := "fp32" | "fp16" | "bf16" | "fp8e4m3" | "fp8e5m2"
+//!          (+ aliases "f32", "half", "e4m3", "fp8", ... see FloatFormat)
+//! legacy  := "a" | "b" | "c" | "d" | "dmw" | "kahan" | "sr" | "fp32"
+//! ```
+//!
+//! [`fmt::Display`] is the inverse: bf16-row plans print their legacy
+//! option string (so existing configs, checkpoints and manifests keep
+//! working byte-for-byte), every other cell prints `scheme@format`.
+//!
+//! ```
+//! use collage::numerics::format::{BF16, FP8E4M3};
+//! use collage::optim::plan::{PrecisionPlan, Scheme};
+//!
+//! // Any cell of the plan space: "scheme@format".
+//! let p: PrecisionPlan = "collage-light@fp8e4m3".parse().unwrap();
+//! assert_eq!(p, PrecisionPlan::new(FP8E4M3, Scheme::CollageLight));
+//! // ...and Display round-trips it (what the checkpoint header stores).
+//! assert_eq!(p.to_string(), "collage-light@fp8e4m3");
+//! assert_eq!(p.to_string().parse::<PrecisionPlan>().unwrap(), p);
+//!
+//! // A bare scheme name means that scheme at bf16 storage...
+//! assert_eq!(
+//!     "kahan".parse::<PrecisionPlan>().unwrap(),
+//!     PrecisionPlan::new(BF16, Scheme::Kahan),
+//! );
+//! // ...and the paper's legacy option letters still work: "b" is
+//! // Collage-light at bf16, and prints back as its legacy spelling.
+//! let b: PrecisionPlan = "b".parse().unwrap();
+//! assert_eq!(b, PrecisionPlan::bf16(Scheme::CollageLight));
+//! assert_eq!(b.to_string(), "collage-light");
+//!
+//! // Unknown spellings are errors, not silent fallbacks.
+//! assert!("plain@fp12".parse::<PrecisionPlan>().is_err());
+//! assert!("nope".parse::<PrecisionPlan>().is_err());
+//! ```
 
 use std::fmt;
 use std::str::FromStr;

@@ -1,28 +1,219 @@
-//! Fixed-size thread pool with scoped parallel-map and chunk-sharding — the
-//! substrate for the data-parallel training runtime (`parallel::worker`) and
-//! the fused optimizer kernels (`optim::kernels`).  Built on
-//! `std::thread::scope`, so closures may borrow stack data.
+//! Fixed-grid parallel-map and chunk-sharding on a **persistent worker
+//! pool** — the substrate for the data-parallel training runtime
+//! (`parallel::worker`), gradient all-reduce (`parallel::allreduce`) and
+//! the fused optimizer kernels (`optim::kernels`).
 //!
 //! Both entry points are deterministic by construction: [`parallel_map`]
 //! returns results in index order, and [`parallel_chunks`] writes one
 //! partial result per fixed-size chunk into a caller-provided buffer in
 //! chunk order, so any reduction the caller performs over that buffer is
 //! independent of worker count and thread scheduling.
+//!
+//! # The pool
+//!
+//! Earlier revisions spawned a fresh `std::thread::scope` per call, paying
+//! an OS thread spawn + join per worker per optimizer step.  Helpers now
+//! come from a process-wide pool of persistent threads that park on a
+//! condvar between jobs (`run_with_helpers`, the private engine under
+//! both entry points):
+//!
+//! * a call **leases** idle workers (spawning new ones only when the idle
+//!   list is empty), hands each a borrowed job pointer, runs its own share
+//!   inline, and waits on a latch until every helper is done — so borrowed
+//!   stack data stays valid exactly as it did under `thread::scope`;
+//! * leased workers return to the idle list when the call completes, so
+//!   repeated `step_sharded`/all-reduce calls reuse the same threads: the
+//!   pool reaches the peak concurrent demand and **never grows past it**
+//!   ([`pool_threads_spawned`]; `tests/threadpool_reuse.rs` holds it flat
+//!   across 1000 steps);
+//! * concurrent leaders lease disjoint workers and nested calls lease
+//!   fresh ones, so there is no global job slot to deadlock on;
+//! * a panic in a helper is caught, parked with the latch, and re-raised
+//!   on the leader after all helpers finish (the worker thread itself
+//!   survives and returns to the pool);
+//! * determinism is untouched: the chunk grid and result slots depend only
+//!   on `n`, never on which pool thread runs which chunk, so outputs are
+//!   bit-identical across worker counts before and after pool warm-up.
 
+use std::any::Any;
 use std::cell::UnsafeCell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// A borrowed job, type- and lifetime-erased so it can cross into
+/// persistent worker threads.  The leader's join guard keeps the referent
+/// alive until every helper has arrived at the latch (see
+/// [`run_with_helpers`]), which is what justifies the `'static` here.
+struct JobPtr(*const (dyn Fn() + Sync + 'static));
+// SAFETY: the pointee is Sync and outlives the send (latch-guarded).
+unsafe impl Send for JobPtr {}
+
+/// Raw pointer to the leader's stack latch, valid for the same reason.
+struct LatchPtr(*const Latch);
+// SAFETY: as for JobPtr.
+unsafe impl Send for LatchPtr {}
+
+struct Task {
+    job: JobPtr,
+    latch: LatchPtr,
+}
+
+/// Completion latch: helpers count down; the leader blocks until zero.
+/// Also carries the first helper panic across the thread boundary.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { state: Mutex::new(LatchState { remaining: n, panic: None }), cv: Condvar::new() }
+    }
+
+    fn arrive(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<Box<dyn Any + Send>> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.panic.take()
+    }
+}
+
+/// One persistent worker's mailbox: `None` = idle (parked on `cv`).
+struct WorkerSlot {
+    task: Mutex<Option<Task>>,
+    cv: Condvar,
+}
+
+fn worker_main(slot: Arc<WorkerSlot>) {
+    loop {
+        let task = {
+            let mut t = slot.task.lock().unwrap();
+            loop {
+                if let Some(task) = t.take() {
+                    break task;
+                }
+                t = slot.cv.wait(t).unwrap();
+            }
+        };
+        // SAFETY: the leasing leader's join guard keeps both referents
+        // alive until `arrive` below has been observed by `Latch::wait`.
+        let job = unsafe { &*task.job.0 };
+        let latch = unsafe { &*task.latch.0 };
+        let panic = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).err();
+        latch.arrive(panic);
+    }
+}
+
+/// Idle persistent workers, parked on their slot condvars.
+static IDLE: Mutex<Vec<Arc<WorkerSlot>>> = Mutex::new(Vec::new());
+/// Total pool threads ever spawned (never shrinks; bounded by the peak
+/// concurrent helper demand — the no-leak property the reuse test pins).
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of persistent pool threads spawned so far in this process.
+/// Steady-state workloads hold this flat: leases reuse idle workers and
+/// only spawn when the idle list is empty.
+pub fn pool_threads_spawned() -> usize {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+fn lease(n: usize) -> Vec<Arc<WorkerSlot>> {
+    let mut out = {
+        let mut idle = IDLE.lock().unwrap();
+        let keep = idle.len() - n.min(idle.len());
+        idle.split_off(keep)
+    };
+    while out.len() < n {
+        let slot = Arc::new(WorkerSlot { task: Mutex::new(None), cv: Condvar::new() });
+        let worker_slot = Arc::clone(&slot);
+        let id = SPAWNED.fetch_add(1, Ordering::Relaxed);
+        std::thread::Builder::new()
+            .name(format!("collage-pool-{id}"))
+            .spawn(move || worker_main(worker_slot))
+            .expect("spawning pool worker thread");
+        out.push(slot);
+    }
+    out
+}
+
+/// Run `job` on the calling thread **and** `helpers` persistent pool
+/// threads; returns once every participant has finished.  A helper panic
+/// is re-raised on the caller.  The job closure may borrow stack data: the
+/// join guard waits for all helpers before this frame unwinds, even if the
+/// caller's own share panics.
+fn run_with_helpers(helpers: usize, job: &(dyn Fn() + Sync)) {
+    if helpers == 0 {
+        job();
+        return;
+    }
+    let latch = Latch::new(helpers);
+    struct Join<'a> {
+        latch: &'a Latch,
+        leased: Vec<Arc<WorkerSlot>>,
+    }
+    impl Drop for Join<'_> {
+        fn drop(&mut self) {
+            let payload = self.latch.wait();
+            IDLE.lock().unwrap().append(&mut self.leased);
+            if let Some(p) = payload {
+                if !std::thread::panicking() {
+                    std::panic::resume_unwind(p);
+                }
+            }
+        }
+    }
+    // SAFETY: lifetime erasure only — the join guard waits for every
+    // helper's latch arrival before this frame (and thus `job`'s referent)
+    // can unwind, so no helper dereferences a dead pointer.
+    let job_raw: *const (dyn Fn() + Sync + 'static) =
+        unsafe { std::mem::transmute(job as *const (dyn Fn() + Sync)) };
+    let guard = Join { latch: &latch, leased: lease(helpers) };
+    for slot in &guard.leased {
+        let mut t = slot.task.lock().unwrap();
+        *t = Some(Task { job: JobPtr(job_raw), latch: LatchPtr(&latch) });
+        slot.cv.notify_one();
+    }
+    job();
+    // `guard` drops here: waits for every helper, returns the workers to
+    // the idle list, then propagates any helper panic.
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic parallel primitives
+// ---------------------------------------------------------------------------
 
 /// Write-once result slots shared across worker threads.
 ///
 /// Each slot is written at most once, by the single thread that claimed its
-/// index from the shared atomic counter; the `thread::scope` join provides
-/// the happens-before edge for the leader's subsequent reads.  No per-slot
-/// lock is taken (the previous implementation paid one `Mutex` per item).
+/// index from the shared atomic counter; the leader's latch wait provides
+/// the happens-before edge for its subsequent reads.  No per-slot lock is
+/// taken (the previous implementation paid one `Mutex` per item).
 struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
 
 // SAFETY: distinct slots are written by distinct threads (unique claimed
-// indices) and read only after the scope join.
+// indices) and read only after the latch join.
 unsafe impl<T: Send> Sync for Slots<T> {}
 
 impl<T> Slots<T> {
@@ -40,10 +231,11 @@ impl<T> Slots<T> {
     }
 }
 
-/// Run `f(i)` for `i in 0..n` on up to `workers` threads, returning results
-/// in index order.  Indices are claimed in contiguous blocks to amortize
-/// the shared counter, and results land in lock-free write-once slots.
-/// Panics in workers propagate to the caller.
+/// Run `f(i)` for `i in 0..n` on up to `workers` threads (the caller plus
+/// `workers - 1` pool helpers), returning results in index order.  Indices
+/// are claimed in contiguous blocks to amortize the shared counter, and
+/// results land in lock-free write-once slots.  Panics in workers propagate
+/// to the caller.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -62,21 +254,17 @@ where
     let block = (n / (workers * 4)).max(1);
     let next = AtomicUsize::new(0);
     let slots = Slots::new(n);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let start = next.fetch_add(block, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + block).min(n);
-                for i in start..end {
-                    let r = f(i);
-                    // SAFETY: `i` lies in a block claimed only by this
-                    // thread; the slot is written exactly once.
-                    unsafe { slots.write(i, r) };
-                }
-            });
+    run_with_helpers(workers - 1, &|| loop {
+        let start = next.fetch_add(block, Ordering::Relaxed);
+        if start >= n {
+            break;
+        }
+        let end = (start + block).min(n);
+        for i in start..end {
+            let r = f(i);
+            // SAFETY: `i` lies in a block claimed only by this thread; the
+            // slot is written exactly once.
+            unsafe { slots.write(i, r) };
         }
     });
     slots
@@ -86,14 +274,15 @@ where
 }
 
 /// Shard `0..n` into fixed-size chunks and run `f(chunk_index, range)` for
-/// every chunk on up to `workers` threads, writing the per-chunk results
-/// into `out` (cleared and resized to `n.div_ceil(chunk)`) in chunk order.
+/// every chunk on up to `workers` threads (the caller plus pool helpers),
+/// writing the per-chunk results into `out` (cleared and resized to
+/// `n.div_ceil(chunk)`) in chunk order.
 ///
 /// The chunk grid depends only on `n` and `chunk` — never on `workers` —
 /// so a reduction over `out` performed in index order yields bit-identical
 /// results for any worker count.  With `workers == 1` (or a single chunk)
-/// everything runs inline on the caller's thread with no spawn and no
-/// allocation beyond `out`'s (reusable) capacity.
+/// everything runs inline on the caller's thread with no pool traffic and
+/// no allocation beyond `out`'s (reusable) capacity.
 ///
 /// `f` receives non-overlapping ranges, which is what makes it sound for
 /// callers to hand out disjoint `&mut` sub-slices of shared state from
@@ -120,20 +309,16 @@ where
     }
     let next = AtomicUsize::new(0);
     let slots = SliceSlots(out.as_mut_ptr(), out.len());
-    std::thread::scope(|scope| {
-        for _ in 0..workers.min(chunks) {
-            scope.spawn(|| loop {
-                let c = next.fetch_add(1, Ordering::Relaxed);
-                if c >= chunks {
-                    break;
-                }
-                let a = f(c, range_of(c));
-                // SAFETY: chunk index `c` is claimed by exactly one thread,
-                // so this write-once store aliases no other access; the
-                // scope join publishes it to the caller.
-                unsafe { slots.write(c, a) };
-            });
+    run_with_helpers(workers.min(chunks) - 1, &|| loop {
+        let c = next.fetch_add(1, Ordering::Relaxed);
+        if c >= chunks {
+            break;
         }
+        let a = f(c, range_of(c));
+        // SAFETY: chunk index `c` is claimed by exactly one thread, so this
+        // write-once store aliases no other access; the latch join
+        // publishes it to the caller.
+        unsafe { slots.write(c, a) };
     });
 }
 
@@ -269,5 +454,51 @@ mod tests {
         });
         assert_eq!(parts.iter().sum::<usize>(), n);
         assert!(data.iter().enumerate().all(|(i, &x)| x == i as f32));
+    }
+
+    #[test]
+    fn pool_workers_are_reused_across_calls() {
+        // Warm the pool, record the spawn count, then hammer it: repeated
+        // leases must reuse the parked workers, not spawn fresh threads.
+        let warm = parallel_map(64, 4, |i| i);
+        assert_eq!(warm.len(), 64);
+        let spawned = pool_threads_spawned();
+        assert!(spawned >= 3, "expected ≥3 pool helpers, saw {spawned}");
+        for round in 0..200 {
+            let out = parallel_map(64, 4, move |i| i + round);
+            assert_eq!(out[0], round);
+        }
+        // Other tests in this binary may lease concurrently, so allow the
+        // pool to have grown to their (bounded) demand — but a leak would
+        // add 3 threads per round here (600); see tests/threadpool_reuse.rs
+        // for the single-process exact-count version.
+        assert!(
+            pool_threads_spawned() <= spawned + 128,
+            "pool leaked threads: {spawned} -> {}",
+            pool_threads_spawned()
+        );
+    }
+
+    #[test]
+    fn helper_panic_propagates_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            parallel_map(100, 4, |i| {
+                if i == 57 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        });
+        assert!(result.is_err(), "helper panic must reach the caller");
+        // The pool must still be serviceable afterwards.
+        assert_eq!(parallel_map(10, 4, |i| i * 2), (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_parallel_calls_do_not_deadlock() {
+        // A job running on a pool helper may itself fan out: nested calls
+        // lease disjoint workers, so this must complete.
+        let out = parallel_map(4, 4, |i| parallel_map(8, 2, move |j| i * 8 + j).len());
+        assert_eq!(out, vec![8; 4]);
     }
 }

@@ -1,0 +1,161 @@
+//! The rounding-contract equivalence gate: the bit-parallel fast paths
+//! (`FloatFormat::round` on f32, `FloatFormat::round_nearest_f64` on f64)
+//! must be **bitwise** identical to the retained arithmetic reference
+//! quantizer (`FloatFormat::round_nearest_f64_reference`) for every input
+//! — ties-to-even, subnormals, signed zeros, E4M3 saturation vs E5M2/fp16
+//! overflow-to-inf, and NaN propagation alike.
+//!
+//! Tier 1 runs a seeded sample plus hand-picked boundary cases (mirroring
+//! the long-standing `bf16_fast_matches_generic` check).  The exhaustive
+//! sweep over all 2³² f32 bit patterns is `#[ignore]`d:
+//!
+//! ```sh
+//! cargo test --release --test rounding_equivalence -- --ignored
+//! ```
+
+use collage::numerics::format::{FloatFormat, BF16, FP16, FP8E4M3, FP8E5M2};
+use collage::util::rng::Rng;
+
+/// Every format with a non-trivial quantizer (fp32 is the identity).
+const FORMATS: [FloatFormat; 4] = [BF16, FP16, FP8E4M3, FP8E5M2];
+
+fn assert_f64_equiv(fmt: &FloatFormat, x: f64) {
+    let fast = fmt.round_nearest_f64(x);
+    let slow = fmt.round_nearest_f64_reference(x);
+    if fast.is_nan() || slow.is_nan() {
+        assert!(
+            fast.is_nan() && slow.is_nan(),
+            "{} x={x:e} ({:016x}): fast={fast:e} slow={slow:e}",
+            fmt.name,
+            x.to_bits()
+        );
+        return;
+    }
+    assert_eq!(
+        fast.to_bits(),
+        slow.to_bits(),
+        "{} x={x:e} ({:016x}): fast={fast:e} slow={slow:e}",
+        fmt.name,
+        x.to_bits()
+    );
+}
+
+fn assert_f32_equiv(fmt: &FloatFormat, x: f32) {
+    let fast = fmt.round(x);
+    let slow = fmt.round_nearest_f64_reference(x as f64); // exact widening
+    if fast.is_nan() || slow.is_nan() {
+        assert!(
+            fast.is_nan() && slow.is_nan(),
+            "{} x={x:e} ({:08x}): fast={fast:e} slow={slow:e}",
+            fmt.name,
+            x.to_bits()
+        );
+        return;
+    }
+    assert_eq!(
+        fast.to_bits(),
+        slow.to_bits(),
+        "{} x={x:e} ({:08x}): fast={fast:e} slow={slow:e}",
+        fmt.name,
+        x.to_bits()
+    );
+}
+
+#[test]
+fn boundary_cases_bitwise() {
+    for fmt in &FORMATS {
+        let minsub = fmt.ulp(0.0); // smallest positive subnormal
+        let max = fmt.max_finite();
+        // Zeros, subnormal threshold, overflow threshold, infinities.
+        let mut cases: Vec<f64> = vec![
+            0.0,
+            -0.0,
+            minsub,
+            minsub / 2.0,       // exact tie at half the smallest subnormal
+            minsub / 4.0,       // below the tie: rounds to zero
+            0.75 * minsub,      // above the tie: rounds to minsub
+            1.5 * minsub,       // tie between the two smallest subnormals
+            max,
+            -max,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MAX,
+            f64::MIN_POSITIVE,       // smallest normal f64
+            f64::MIN_POSITIVE / 8.0, // f64 subnormal
+        ];
+        // Every binade boundary of the format (plus one above/below), with
+        // quantum-fraction offsets hitting exact grid points, exact ties,
+        // and both near-neighbours of each tie.
+        for e in (fmt.e_min() - 2)..=(fmt.e_max() + 1) {
+            let b = 2f64.powi(e);
+            let u = fmt.ulp(b as f32);
+            let below = fmt.ulp((b * 0.75) as f32); // the finer grid below 2^e
+            for x in [
+                b,
+                b + u / 2.0,
+                b + u / 4.0,
+                b + 3.0 * u / 4.0,
+                b + u,
+                b - below / 2.0,
+                b - below / 4.0,
+                b - below,
+            ] {
+                cases.push(x);
+                cases.push(-x);
+            }
+        }
+        // The saturation/overflow neighbourhood: max, the half-step above
+        // (an exact tie with the would-be next value), and beyond.
+        let top_u = fmt.ulp((max * 0.99) as f32);
+        for x in [max - top_u, max + top_u / 2.0, max + top_u / 4.0, max + top_u, max * 2.0] {
+            cases.push(x);
+            cases.push(-x);
+        }
+        for x in cases {
+            assert_f64_equiv(fmt, x);
+            let xf = x as f32;
+            if xf as f64 == x || x.is_nan() {
+                assert_f32_equiv(fmt, xf); // only where the f32 carries x exactly
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_sample_bitwise() {
+    // Random f32 bit patterns (uniform over the encoding space: normals,
+    // subnormals, infs and NaNs all appear) against `round`, and random
+    // f64 bit patterns against `round_nearest_f64` — the kernels feed the
+    // f64 entry point with arbitrary intermediates.
+    let mut rng = Rng::new(0xC0117A6E, 0);
+    for fmt in &FORMATS {
+        for _ in 0..50_000 {
+            assert_f32_equiv(fmt, f32::from_bits(rng.next_u32()));
+        }
+        for _ in 0..50_000 {
+            assert_f64_equiv(fmt, f64::from_bits(rng.next_u64()));
+        }
+        // Magnitudes concentrated on the format's own dynamic range, where
+        // the subnormal/overflow edges actually live.
+        for _ in 0..20_000 {
+            let scale = rng.below(40) as i32 - 20;
+            assert_f64_equiv(fmt, rng.normal() * 2f64.powi(scale));
+        }
+    }
+}
+
+#[test]
+#[ignore = "exhaustive 2^32-pattern sweep (minutes per format); run with --release -- --ignored"]
+fn exhaustive_all_f32_bit_patterns() {
+    for fmt in &FORMATS {
+        let mut bits: u32 = 0;
+        loop {
+            assert_f32_equiv(fmt, f32::from_bits(bits));
+            bits = match bits.checked_add(1) {
+                Some(b) => b,
+                None => break,
+            };
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! The persistent-pool contract, end to end through the optimizer: pool
+//! warm-up must not perturb a single bit (`StepStats` and state vectors
+//! are identical across 1/2/8 workers, before and after the first lease),
+//! and steady-state stepping must not leak threads — the pool reaches the
+//! peak helper demand once and stays there.
+//!
+//! This file deliberately holds a single `#[test]` so it owns the process
+//! (integration-test binaries run one per file): `pool_threads_spawned`
+//! counts process-wide, and no concurrent test may lease workers while the
+//! exact no-leak equality below is asserted.
+
+use collage::optim::adamw::{AdamW, StepStats};
+use collage::optim::plan::PrecisionPlan;
+use collage::optim::state::OptimState;
+use collage::util::rng::Rng;
+use collage::util::threadpool::pool_threads_spawned;
+
+fn stats_bits(s: &StepStats) -> [u64; 6] {
+    [
+        s.edq.update_norm.to_bits(),
+        s.edq.effective_norm.to_bits(),
+        s.edq.edq.to_bits(),
+        s.edq.edq_ratio.to_bits(),
+        s.lost_frac.to_bits(),
+        s.param_norm.to_bits(),
+    ]
+}
+
+#[test]
+fn pool_reuse_is_bit_invariant_and_leak_free() {
+    // Spans many CHUNK-sized chunks so 8 workers genuinely shard.
+    let n = 200_000;
+    let plan: PrecisionPlan = "a".parse().unwrap();
+    let opt = AdamW::default();
+    let mut rng = Rng::new(41, 0);
+    let theta: Vec<f32> =
+        (0..n).map(|_| plan.format.round_nearest(rng.normal() as f32)).collect();
+    let g: Vec<f32> =
+        (0..n).map(|_| plan.format.round_nearest(0.01 * rng.normal() as f32)).collect();
+
+    let run = |workers: usize, steps: u64| -> (Vec<[u64; 6]>, Vec<u32>) {
+        let mut state = OptimState::init_plan(plan, &theta);
+        let mut r = Rng::new(7, 3);
+        let stats = (1..=steps)
+            .map(|t| stats_bits(&opt.step_sharded(&mut state, &g, 1e-3, t, &mut r, workers)))
+            .collect();
+        let theta_bits = state.theta().iter().map(|x| x.to_bits()).collect();
+        (stats, theta_bits)
+    };
+
+    // The very first sharded call in this process spawns the helpers: the
+    // cold-pool output is the baseline every later run must match.
+    let cold8 = run(8, 3);
+    assert_eq!(run(1, 3), cold8, "workers=1 differs from the cold 8-worker run");
+    assert_eq!(run(2, 3), cold8, "workers=2 differs from the cold 8-worker run");
+    assert_eq!(run(8, 3), cold8, "warm pool changed bits vs the cold run");
+
+    // Same invariance through the format-generic kernel family.
+    let gplan: PrecisionPlan = "collage-light@fp8e4m3".parse().unwrap();
+    let gopt = AdamW::for_plan(gplan, 0.95);
+    let gtheta: Vec<f32> =
+        theta[..40_000].iter().map(|&x| gplan.format.round_nearest(x)).collect();
+    let gg: Vec<f32> = g[..40_000].iter().map(|&x| gplan.format.round_nearest(x)).collect();
+    let grun = |workers: usize| -> (Vec<[u64; 6]>, Vec<u32>) {
+        let mut state = OptimState::init_plan(gplan, &gtheta);
+        let mut r = Rng::new(7, 5);
+        let stats = (1..=2u64)
+            .map(|t| stats_bits(&gopt.step_sharded(&mut state, &gg, 1e-3, t, &mut r, workers)))
+            .collect();
+        let theta_bits = state.theta().iter().map(|x| x.to_bits()).collect();
+        (stats, theta_bits)
+    };
+    let g8 = grun(8);
+    assert_eq!(grun(1), g8, "generic plan: workers=1 differs from workers=8");
+    assert_eq!(grun(2), g8, "generic plan: workers=2 differs from workers=8");
+
+    // No thread leak: warm up, then 1000 further sharded steps must not
+    // spawn a single extra pool thread.
+    let mut state = OptimState::init_plan(plan, &theta);
+    let mut r = Rng::new(7, 4);
+    for t in 1..=4 {
+        opt.step_sharded(&mut state, &g, 1e-3, t, &mut r, 8);
+    }
+    let spawned = pool_threads_spawned();
+    assert!(spawned >= 1, "sharded steps never touched the pool");
+    for t in 5..=1004 {
+        opt.step_sharded(&mut state, &g, 1e-3, t, &mut r, 8);
+    }
+    assert_eq!(
+        pool_threads_spawned(),
+        spawned,
+        "pool leaked threads across 1000 sharded steps"
+    );
+}
