@@ -160,7 +160,13 @@ fn main() {
     println!("\n== format-generic fused kernels, {gen_n} params ==");
     let mut generic_obj = Obj::new();
     for fmt in [FP16, FP8E4M3, FP8E5M2] {
-        for scheme in [Scheme::Plain, Scheme::CollageLight, Scheme::CollagePlus] {
+        for scheme in [
+            Scheme::Plain,
+            Scheme::CollageLight,
+            Scheme::CollageLight3,
+            Scheme::CollagePlus,
+            Scheme::CollagePlus3,
+        ] {
             let plan = PrecisionPlan::new(fmt, scheme);
             let label = format!("{}@{}", scheme.name(), fmt.name);
             let opt = AdamW::for_plan(plan, 0.95);

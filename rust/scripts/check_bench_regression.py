@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Tolerant fused-kernel bench regression gate.
+"""Fused-kernel bench regression gate.
 
 Compares a candidate ``BENCH_optimizer_step.json`` against the committed
 baseline (``BENCH_baseline/optimizer_step.json``) and fails (exit 1) if any
@@ -7,13 +7,17 @@ fused-kernel ns/elem regresses by more than ``--tolerance`` (default 25%)
 AND by more than ``--abs-floor`` nanoseconds (absolute slack that absorbs
 timer noise at small CI sizes).
 
-Only keys present in BOTH files are compared, so adding new strategies,
-formats or fields never breaks the gate.  Refresh the baseline on a quiet
-machine with ``make bench-baseline`` (see rust/Makefile).
+Every baseline row must appear in the candidate: a kernel silently dropped
+from the bench (or a renamed JSON key) fails the gate instead of shrinking
+its coverage — pass ``--allow-missing`` to tolerate it deliberately (e.g.
+while bisecting).  Candidate rows absent from the baseline are fine, so
+*adding* strategies/formats never breaks the gate; refresh the baseline on
+a quiet machine with ``make bench-baseline`` (see rust/Makefile) to start
+gating them.
 
 Usage:
     python3 scripts/check_bench_regression.py BASELINE CANDIDATE \
-        [--tolerance 0.25] [--abs-floor 2.0]
+        [--tolerance 0.25] [--abs-floor 2.0] [--allow-missing]
 """
 
 import argparse
@@ -44,6 +48,9 @@ def main():
                     help="relative regression threshold (0.25 = +25%%)")
     ap.add_argument("--abs-floor", type=float, default=2.0,
                     help="ignore regressions smaller than this many ns/elem")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="tolerate baseline rows absent from the candidate "
+                         "instead of failing")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -77,15 +84,30 @@ def main():
             regressions.append(key)
 
     missing = sorted(set(base) - set(cand))
+    extra = sorted(set(cand) - set(base))
+    if extra:
+        print(f"  ({len(extra)} candidate rows not yet in the baseline: "
+              f"{', '.join(extra)} — run `make bench-baseline` to gate them)")
     if missing:
-        print(f"  (skipped {len(missing)} baseline rows absent from candidate: "
+        verb = "skipped" if args.allow_missing else "MISSING"
+        print(f"  ({verb} {len(missing)} baseline rows absent from candidate: "
               f"{', '.join(missing)})")
 
+    failed = False
     if regressions:
         print(f"\nFAIL: {len(regressions)} fused-kernel regression(s) "
               f">{args.tolerance:.0%}: {', '.join(regressions)}")
         print("If intentional (e.g. new baseline hardware), refresh with "
               "`make bench-baseline` and commit the result.")
+        failed = True
+    if missing and not args.allow_missing:
+        print(f"\nFAIL: {len(missing)} baseline row(s) missing from the "
+              f"candidate: {', '.join(missing)}")
+        print("A kernel dropped out of the bench (or a JSON key was "
+              "renamed).  Either restore it, refresh the baseline with "
+              "`make bench-baseline`, or pass --allow-missing.")
+        failed = True
+    if failed:
         return 1
     print("\nbench gate: OK")
     return 0

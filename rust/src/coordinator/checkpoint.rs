@@ -141,6 +141,32 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_length3_delta_scale_plan() {
+        // The new schemes carry 7 state vectors and a delta-scale suffix in
+        // the header's combined spelling; both must survive save/load.
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::Scheme;
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollagePlus3)
+            .with_delta_scale(8)
+            .unwrap();
+        let theta: Vec<f32> = (0..32).map(|i| FP8E4M3.round_nearest(i as f32 * 0.5)).collect();
+        let state = OptimState::init_plan(plan, &theta);
+        assert_eq!(state.names().len(), 7);
+        let ck = Checkpoint { step: 9, model: "proxy".into(), state };
+        let dir = std::env::temp_dir().join("collage_test_ckpt_plus3");
+        let path = dir.join("c.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.state.plan, plan);
+        assert_eq!(back.state.plan.delta_scale, 8);
+        assert_eq!(
+            back.state.names(),
+            ["theta", "dtheta_c", "dtheta_c2", "m", "v", "dv", "dv2"]
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
     fn rejects_garbage() {
         let dir = std::env::temp_dir().join("collage_test_ckpt2");
         std::fs::create_dir_all(&dir).unwrap();

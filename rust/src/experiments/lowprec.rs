@@ -7,26 +7,70 @@
 //! 8-bit": the same EDQ/lost-update instrumentation the bf16 experiments
 //! stream, at every format, through the one `PrecisionPlan` API.  β₂ is
 //! 0.999 (the BERT setting where plain low-precision storage hurts most).
+//!
+//! The grid carries the **length-2 vs length-3** comparison head-to-head
+//! (`collage-light` / `collage-light-3`, `collage-plus` /
+//! `collage-plus-3`) plus loss-scaled δθ rows
+//! (`collage-light+delta-scale=8`) at the fp8 formats, so
+//! `collage experiment fp8 --quick` reproduces the freeze comparison from
+//! one command and lands it in `fp8_grid.csv`.
 
 use std::path::Path;
 
 use anyhow::Result;
 
 use crate::coordinator::proxy::{self, ProxyConfig};
-use crate::numerics::format::{BF16, FP16, FP8E4M3, FP8E5M2};
+use crate::numerics::format::{FloatFormat, BF16, FP16, FP8E4M3, FP8E5M2};
 use crate::optim::plan::{PrecisionPlan, Scheme};
 use crate::util::table::{fnum, Table};
 
 use super::memory_tables;
 
-/// Grid schemes: the three Collage rows plus the lossless fp32-mw
-/// reference (EDQ ≈ 1 at every format, the Fig. 3 anchor).
-const GRID_SCHEMES: [Scheme; 4] = [
+/// Grid schemes: the Collage rows at both expansion depths plus the
+/// lossless fp32-mw reference (EDQ ≈ 1 at every format, the Fig. 3
+/// anchor).
+const GRID_SCHEMES: [Scheme; 6] = [
     Scheme::Plain,
     Scheme::CollageLight,
+    Scheme::CollageLight3,
     Scheme::CollagePlus,
+    Scheme::CollagePlus3,
     Scheme::Fp32MasterWeights,
 ];
+
+/// Power-of-two δθ loss-scale exponent for the extra fp8 rows.
+const DS_EXP: u8 = 8;
+
+/// The plan column for one grid row: the scheme rows at `fmt`, plus — at
+/// the 8-bit formats, where the swamping/underflow regimes actually bite —
+/// the loss-scaled δθ variants.
+fn grid_plans(fmt: FloatFormat) -> Vec<PrecisionPlan> {
+    let mut plans: Vec<PrecisionPlan> =
+        GRID_SCHEMES.iter().map(|&s| PrecisionPlan::new(fmt, s)).collect();
+    if fmt.bytes == 1 {
+        plans.push(
+            PrecisionPlan::new(fmt, Scheme::CollageLight)
+                .with_delta_scale(DS_EXP)
+                .expect("light is MCF"),
+        );
+        plans.push(
+            PrecisionPlan::new(fmt, Scheme::CollageLight3)
+                .with_delta_scale(DS_EXP)
+                .expect("light-3 is MCF"),
+        );
+    }
+    plans
+}
+
+/// The scheme column label: the plan spelling minus its `@format` half
+/// (`collage-light-3`, `collage-light+delta-scale=8`, ...).
+fn scheme_label(plan: &PrecisionPlan) -> String {
+    let mut label = plan.scheme.name().to_string();
+    if plan.delta_scale != 0 {
+        label.push_str(&format!("+delta-scale={}", plan.delta_scale));
+    }
+    label
+}
 
 /// Run the grid; prints the format-generalized Table 2 first, then the
 /// measured grid, and writes `fp8_grid.csv` to `out_dir`.
@@ -39,12 +83,11 @@ pub fn fp8(out_dir: &Path, quick: bool) -> Result<Table> {
         String::from("format,scheme,bytes_per_param,final_loss,edq_ratio,lost_frac\n");
     let mut t = Table::new(format!(
         "fp8 — EDQ / loss / lost-arithmetic grid over formats × schemes \
-         (proxy task, n={n}, {steps} steps, β₂=0.999)"
+         (length-2 vs length-3 vs delta-scale; proxy task, n={n}, {steps} steps, β₂=0.999)"
     ));
     t.header(&["format", "scheme", "B/param", "final loss", "EDQ ratio", "lost %"]);
     for fmt in [BF16, FP16, FP8E4M3, FP8E5M2] {
-        for scheme in GRID_SCHEMES {
-            let plan = PrecisionPlan::new(fmt, scheme);
+        for plan in grid_plans(fmt) {
             let cfg = ProxyConfig {
                 plan,
                 n,
@@ -65,7 +108,7 @@ pub fn fp8(out_dir: &Path, quick: bool) -> Result<Table> {
             csv.push_str(&format!(
                 "{},{},{},{:.6e},{:.6},{:.6}\n",
                 fmt.name,
-                scheme.name(),
+                scheme_label(&plan),
                 plan.bytes_per_param(),
                 o.final_loss,
                 o.edq_ratio,
@@ -73,7 +116,7 @@ pub fn fp8(out_dir: &Path, quick: bool) -> Result<Table> {
             ));
             t.row(vec![
                 fmt.name.to_string(),
-                scheme.name().to_string(),
+                scheme_label(&plan),
                 plan.bytes_per_param().to_string(),
                 format!("{:.4e}", o.final_loss),
                 fnum(o.edq_ratio, 4),
@@ -97,11 +140,19 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let t = fp8(&dir, true).unwrap();
         let rendered = t.render();
-        // 4 formats × 4 schemes of data rows.
-        assert!(rendered.lines().count() >= 16, "{rendered}");
+        // 4 formats × 6 schemes + 2 delta-scale rows at each fp8 format.
+        let rows = 4 * GRID_SCHEMES.len() + 4;
+        assert!(rendered.lines().count() >= rows, "{rendered}");
         let csv = std::fs::read_to_string(dir.join("fp8_grid.csv")).unwrap();
-        assert_eq!(csv.lines().count(), 1 + 16, "csv:\n{csv}");
-        assert!(csv.contains("fp8e4m3,collage-light"));
+        assert_eq!(csv.lines().count(), 1 + rows, "csv:\n{csv}");
+        // The length-2 vs length-3 comparison rows land side by side...
+        assert!(csv.contains("fp8e4m3,collage-light,"));
+        assert!(csv.contains("fp8e4m3,collage-light-3,"));
+        assert!(csv.contains("fp8e4m3,collage-plus-3,"));
+        // ...and the loss-scaled rows only at the 8-bit formats.
+        assert!(csv.contains("fp8e4m3,collage-light+delta-scale=8,"));
+        assert!(csv.contains("fp8e5m2,collage-light-3+delta-scale=8,"));
+        assert!(!csv.contains("bf16,collage-light+delta-scale"));
         std::fs::remove_dir_all(dir).ok();
     }
 }

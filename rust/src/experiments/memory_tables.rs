@@ -48,7 +48,9 @@ pub fn table2_formats() -> Table {
     let schemes = [
         Scheme::Plain,
         Scheme::CollageLight,
+        Scheme::CollageLight3,
         Scheme::CollagePlus,
+        Scheme::CollagePlus3,
         Scheme::Fp32Optim,
         Scheme::Fp32MasterWeights,
     ];

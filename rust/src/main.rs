@@ -51,8 +51,10 @@ fn usage() -> String {
        memory       analytic peak-memory report (any plan; --format for fp8 rows)\n\
        inspect      show artifact manifest details\n\
        dp-train     threaded data-parallel training\n\n\
-     Plans combine a scheme (--strategy) with a storage format (--format):\n\
-       collage train --format fp8e4m3 --strategy collage-light\n\n\
+     Plans combine a scheme (--strategy) with a storage format (--format),\n\
+     optionally with loss-scaled δθ words (+delta-scale=<pow2>):\n\
+       collage train --format fp8e4m3 --strategy collage-light-3\n\
+       collage train --strategy collage-light@fp8e4m3+delta-scale=8\n\n\
      Run `collage <SUBCOMMAND> --help` for options.\n"
         .to_string()
 }
@@ -89,8 +91,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .opt(
                 "strategy",
                 "collage-plus",
-                "precision scheme (a|collage-light|collage-plus|dmw|d|kahan|sr|fp32, \
-                 or a combined scheme@format)",
+                "precision scheme (a|collage-light[-3]|collage-plus[-3]|dmw|d|kahan|sr|fp32, \
+                 a combined scheme@format, optionally +delta-scale=<pow2>)",
             )
             .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
             .opt("steps", "200", "optimizer steps")
@@ -369,7 +371,11 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
              bit-exact Rust optimizer",
         )
         .opt("model", "tiny", "model config")
-        .opt("strategy", "collage-plus", "precision scheme (or scheme@format)")
+        .opt(
+            "strategy",
+            "collage-plus",
+            "precision scheme (or scheme@format[+delta-scale=<pow2>])",
+        )
         .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
         .opt("workers", "4", "data-parallel worker count")
         .opt("steps", "100", "global steps")

@@ -153,6 +153,44 @@ pub fn edq_expansion(
     }
 }
 
+/// EDQ over pre-evaluated effective parameters (f64) — the MCF reducer for
+/// expansion plans of *any* component count (length-2 pairs, length-3
+/// expansions, loss-scaled δθ words alike): callers evaluate
+/// `θ_eff = hi + 2⁻ᵏ·Σδθᵢ` per element and this reduces exactly like
+/// [`edq_expansion`] (same `ACCUM_CHUNK` grid, same `dot/‖Δθ‖²` ratio), so
+/// for hi/lo pairs the two are bitwise interchangeable.
+pub fn edq_effective(old_eff: &[f64], new_eff: &[f64], dtheta: &[f32]) -> EdqReport {
+    let n = dtheta.len();
+    assert_eq!(old_eff.len(), n);
+    assert_eq!(new_eff.len(), n);
+    let mut un2 = 0.0f64;
+    let mut en2 = 0.0f64;
+    let mut dot = 0.0f64;
+    for start in (0..n).step_by(ACCUM_CHUNK) {
+        let end = (start + ACCUM_CHUNK).min(n);
+        let mut p_un2 = 0.0f64;
+        let mut p_en2 = 0.0f64;
+        let mut p_dot = 0.0f64;
+        for i in start..end {
+            let eff = new_eff[i] - old_eff[i];
+            let d = dtheta[i] as f64;
+            p_un2 += d * d;
+            p_en2 += eff * eff;
+            p_dot += d * eff;
+        }
+        un2 += p_un2;
+        en2 += p_en2;
+        dot += p_dot;
+    }
+    let update_norm = un2.sqrt();
+    EdqReport {
+        update_norm,
+        effective_norm: en2.sqrt(),
+        edq: if update_norm > 0.0 { dot / update_norm } else { 0.0 },
+        edq_ratio: if update_norm > 0.0 { dot / (update_norm * update_norm) } else { 1.0 },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +238,26 @@ mod tests {
         let r = edq(&old, &new, &d);
         assert!(r.edq > 0.0 && r.edq < r.update_norm);
         assert!((lost_fraction(&old, &new, &d) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edq_effective_bitwise_matches_edq_expansion_on_pairs() {
+        // The generalized reducer must be a drop-in for the hi/lo one.
+        let old_hi = [200.0f32, 1.0, -3.5, 0.25];
+        let old_lo = [0.0f32, 0.001953125, 0.0078125, 0.0];
+        let new_hi = [200.0f32, 1.0078125, -3.5, 0.25];
+        let new_lo = [0.099609375f32, 0.0, 0.0078125, -0.001953125];
+        let d = [0.1f32, 0.01, 0.0, -0.002];
+        let r1 = edq_expansion(&old_hi, &old_lo, &new_hi, &new_lo, &d);
+        let old_eff: Vec<f64> =
+            old_hi.iter().zip(&old_lo).map(|(&h, &l)| h as f64 + l as f64).collect();
+        let new_eff: Vec<f64> =
+            new_hi.iter().zip(&new_lo).map(|(&h, &l)| h as f64 + l as f64).collect();
+        let r2 = edq_effective(&old_eff, &new_eff, &d);
+        assert_eq!(r1.update_norm.to_bits(), r2.update_norm.to_bits());
+        assert_eq!(r1.effective_norm.to_bits(), r2.effective_norm.to_bits());
+        assert_eq!(r1.edq.to_bits(), r2.edq.to_bits());
+        assert_eq!(r1.edq_ratio.to_bits(), r2.edq_ratio.to_bits());
     }
 
     #[test]

@@ -125,6 +125,184 @@ pub fn mul(fmt: &FloatFormat, a: Expansion, b: Expansion) -> Expansion {
 }
 
 // ---------------------------------------------------------------------------
+// Length-N expansions (N ∈ {2, 3}) — the §6 extension lever.
+//
+// A length-2 expansion buys ≈ one extra word of precision; at 8 bits that
+// is not enough (the δθ word's own ulp swamps the update once |δθ| grows —
+// see `optim::generic`'s fp8 stall test).  `ExpansionN` generalizes the
+// pair algebra to N ordered, (weakly) non-overlapping components with
+// Priest-style renormalization: a bottom-up Fast2Sum accumulation pass
+// followed by an error-combine pass (`TwoSum`, valid for any ordering).
+// For N = 2 every algorithm below performs the *identical* op sequence as
+// its pair counterpart (`grow`/`scaling`/`mul`), so the two algebras are
+// bitwise interchangeable — `tests/expansion_n.rs` enforces it.
+// ---------------------------------------------------------------------------
+
+/// A length-`N` expansion: the unevaluated sum `c[0] + c[1] + ... + c[N-1]`
+/// with components ordered by decreasing magnitude.  Adjacent components
+/// are weakly non-overlapping after [`renormalize`]: `|c[i+1]| ≤ ulp(c[i])`
+/// (the double-double convention; strict `ulp/2` non-overlap holds for the
+/// bottom pair).  Saturating formats (E4M3) break the bound only when
+/// `c[0]` is pinned at `±max_finite`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpansionN<const N: usize> {
+    pub c: [f32; N],
+}
+
+impl<const N: usize> ExpansionN<N> {
+    pub fn new(c: [f32; N]) -> Self {
+        ExpansionN { c }
+    }
+
+    pub fn zero() -> Self {
+        ExpansionN { c: [0.0; N] }
+    }
+
+    /// The evaluated value — the exact unevaluated sum, in f64 (exact for
+    /// every format here as long as component exponents span < 53 binades,
+    /// which non-overlapping components of a ≤ 11-bit format always do).
+    pub fn value(&self) -> f64 {
+        let mut s = 0.0f64;
+        for &x in &self.c {
+            s += x as f64;
+        }
+        s
+    }
+
+    /// Exact length-N expansion of an f64 scalar in `fmt` — the Table 1
+    /// construction iterated: `c[i] = RN(x − Σ_{j<i} c[j])`.
+    /// For N = 2 this is exactly [`Expansion::split_scalar`].
+    pub fn split_scalar(fmt: &FloatFormat, x: f64) -> Self {
+        let mut c = [0.0f32; N];
+        let mut rem = x;
+        for ci in c.iter_mut() {
+            *ci = fmt.round_nearest_f64(rem);
+            rem -= *ci as f64;
+        }
+        ExpansionN { c }
+    }
+}
+
+impl From<Expansion> for ExpansionN<2> {
+    fn from(e: Expansion) -> Self {
+        ExpansionN { c: [e.hi, e.lo] }
+    }
+}
+
+impl From<ExpansionN<2>> for Expansion {
+    fn from(e: ExpansionN<2>) -> Self {
+        Expansion { hi: e.c[0], lo: e.c[1] }
+    }
+}
+
+/// Priest-style renormalization of `N` roughly-ordered terms into a
+/// (weakly) non-overlapping expansion: a bottom-up Fast2Sum accumulation
+/// (leading term + per-level errors), then the errors combined with
+/// [`two_sum`] (valid for any ordering, unlike Fast2Sum).  For N = 2 this
+/// is exactly one `fast2sum(t[0], t[1])` — the pair-algebra op.
+///
+/// One pass compacts fully when the leading term dominates; under
+/// catastrophic cancellation (`t[0] + t[1]` collapsing far below `t[0]`)
+/// the exact sum is still preserved but adjacent components may overlap by
+/// a bit until a later grow re-compacts them — the same single-pass
+/// behavior the pair algebra has always had.
+pub fn renormalize<const N: usize>(fmt: &FloatFormat, t: [f32; N]) -> ExpansionN<N> {
+    assert!(N >= 2, "expansions have at least two components");
+    let mut e = [0.0f32; N];
+    let mut s = t[N - 1];
+    for i in (0..N - 1).rev() {
+        let (x, y) = fast2sum(fmt, t[i], s);
+        s = x;
+        e[i + 1] = y;
+    }
+    // Error-combine chain over e[1..]: TwoSum pairs cascading down.  For
+    // N = 2 this is the identity on e[1]; for N = 3 one two_sum.
+    let mut out = [0.0f32; N];
+    out[0] = s;
+    let mut carry = e[1];
+    for i in 2..N {
+        let (x, y) = two_sum(fmt, carry, e[i]);
+        out[i - 1] = x;
+        carry = y;
+    }
+    out[N - 1] = carry;
+    ExpansionN { c: out }
+}
+
+/// Grow (Alg. 1 generalized): add float `a` to a length-N expansion,
+/// assuming `|e.c[0]| >= |a|`.  The increment cascades down through a
+/// Fast2Sum chain (each level absorbs the previous level's error), the
+/// bottom component takes the final carry with one rounded add, and the
+/// result is renormalized.  For N = 2 this performs exactly the op
+/// sequence of [`grow`].
+pub fn grow_n<const N: usize>(
+    fmt: &FloatFormat,
+    e: ExpansionN<N>,
+    a: f32,
+) -> ExpansionN<N> {
+    let mut t = [0.0f32; N];
+    let mut carry = a;
+    for i in 0..N - 1 {
+        let (x, y) = fast2sum(fmt, e.c[i], carry);
+        t[i] = x;
+        carry = y;
+    }
+    t[N - 1] = rn(fmt, e.c[N - 1] as f64 + carry as f64);
+    renormalize(fmt, t)
+}
+
+/// Scaling (Alg. 6 generalized): length-N expansion × float.  Each
+/// component contributes its exact product (TwoProdFMA); the product error
+/// of level `i` is absorbed into level `i + 1`; the bottom component keeps
+/// only its rounded product.  For N = 2: exactly [`scaling`].
+pub fn scaling_n<const N: usize>(
+    fmt: &FloatFormat,
+    a: ExpansionN<N>,
+    v: f32,
+) -> ExpansionN<N> {
+    let mut t = [0.0f32; N];
+    let (x, mut err) = two_prod(fmt, a.c[0], v);
+    t[0] = x;
+    for i in 1..N {
+        if i < N - 1 {
+            let (p, pe) = two_prod(fmt, a.c[i], v);
+            t[i] = rn(fmt, p as f64 + err as f64);
+            err = pe;
+        } else {
+            t[i] = rn(fmt, rn(fmt, a.c[i] as f64 * v as f64) as f64 + err as f64);
+        }
+    }
+    renormalize(fmt, t)
+}
+
+/// Mul (Alg. 7 generalized): length-N × length-N expansion.  Order-k terms
+/// (`Σ_{i+j=k} aᵢ·bⱼ`) land in component k; the head product's error term
+/// is absorbed into component 1; higher-order cross-product errors are
+/// dropped (the same truncation the pair algebra applies).  For N = 2:
+/// exactly [`mul`].
+pub fn mul_n<const N: usize>(
+    fmt: &FloatFormat,
+    a: ExpansionN<N>,
+    b: ExpansionN<N>,
+) -> ExpansionN<N> {
+    let mut t = [0.0f32; N];
+    let (x, e00) = two_prod(fmt, a.c[0], b.c[0]);
+    t[0] = x;
+    for k in 1..N {
+        let mut s = rn(fmt, a.c[0] as f64 * b.c[k] as f64);
+        for i in 1..=k {
+            s = rn(
+                fmt,
+                s as f64 + rn(fmt, a.c[i] as f64 * b.c[k - i] as f64) as f64,
+            );
+        }
+        // Only component 1 absorbs the head product's error term.
+        t[k] = if k == 1 { rn(fmt, e00 as f64 + s as f64) } else { s };
+    }
+    renormalize(fmt, t)
+}
+
+// ---------------------------------------------------------------------------
 // bf16 fast paths (f32 arithmetic + bit-trick rounding).  These are the
 // exact same functions specialized for the optimizer hot loop; tests assert
 // bitwise agreement with the generic versions.

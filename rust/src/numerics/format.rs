@@ -345,9 +345,27 @@ impl FloatFormat {
     /// Correct across binade boundaries for both signs: going up from a
     /// negative power of two enters a binade with half the spacing, which
     /// a naive `x + ulp(x)` step (ulp measured on |x|) would overshoot.
+    ///
+    /// At the top of the grid the behavior follows the format's overflow
+    /// semantics: `next_up(max_finite)` is `+inf` on IEEE-style formats
+    /// but **stays `max_finite` on saturating formats** (E4M3 per the OCP
+    /// spec has no infinities — stepping to inf would mint a value the
+    /// format cannot represent).  Inputs at or beyond `max_finite`
+    /// (including `+inf`) clamp the same way.
     pub fn next_up(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return x;
+        }
         if x < 0.0 {
             return -self.next_down(-x);
+        }
+        let max = self.max_finite_f32();
+        if x >= max {
+            // Top of the grid: saturate or overflow, never a finite value
+            // above max (the old arithmetic path happened to saturate for
+            // representable x but returned values *below* x for
+            // non-representable inputs beyond max).
+            return if self.saturating { max } else { f32::INFINITY };
         }
         // For non-negative x the spacing above x is exactly ulp(x).
         let u = self.ulp(x) as f32;
@@ -358,13 +376,22 @@ impl FloatFormat {
         y
     }
 
-    /// The next representable value below `x` (toward -inf).
+    /// The next representable value below `x` (toward -inf).  Inputs above
+    /// `max_finite` (including `+inf`) return `max_finite` — the largest
+    /// grid point below them.
     pub fn next_down(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return x;
+        }
         if x < 0.0 {
             return -self.next_up(-x);
         }
         if x == 0.0 {
             return -(self.ulp(0.0) as f32); // largest negative subnormal
+        }
+        let max = self.max_finite_f32();
+        if x > max {
+            return max;
         }
         // Spacing below x is ulp(x), except just above a binade boundary
         // (x = 2^e) where the grid below is twice as fine: try the half
@@ -564,6 +591,37 @@ mod tests {
         // bf16 spot check at a boundary: below 2.0 the spacing is 2⁻⁷.
         assert_eq!(BF16.next_down(2.0), 2.0 - 2f32.powi(-7));
         assert_eq!(BF16.next_up(-2.0), -(2.0 - 2f32.powi(-7)));
+    }
+
+    #[test]
+    fn next_up_down_at_e4m3_max_normal_boundary() {
+        // E4M3 saturates: there is no inf on its grid, so stepping up from
+        // max_finite (448) must stay at 448 — never mint an inf — for both
+        // signs, and the neighbour below max is the adjacent grid point
+        // (416; 480 is the NaN code point, 432 is the rejected midpoint).
+        assert_eq!(FP8E4M3.next_up(448.0), 448.0);
+        assert!(FP8E4M3.next_up(448.0).is_finite());
+        assert_eq!(FP8E4M3.next_down(448.0), 416.0);
+        assert_eq!(FP8E4M3.next_up(416.0), 448.0);
+        assert_eq!(FP8E4M3.next_down(-448.0), -448.0);
+        assert!(FP8E4M3.next_down(-448.0).is_finite());
+        assert_eq!(FP8E4M3.next_up(-448.0), -416.0);
+        // Inputs beyond the grid (the old arithmetic path returned
+        // non-representable values like 468 here) clamp to max_finite.
+        assert_eq!(FP8E4M3.next_up(1e9), 448.0);
+        assert_eq!(FP8E4M3.next_down(500.0), 448.0);
+        assert_eq!(FP8E4M3.next_down(f32::INFINITY), 448.0);
+        assert_eq!(FP8E4M3.next_up(f32::NEG_INFINITY), -448.0);
+        // Non-saturating formats keep their IEEE semantics: nextUp(max) is
+        // +inf and nextDown(+inf) is max.
+        assert_eq!(FP8E5M2.next_up(57344.0), f32::INFINITY);
+        assert_eq!(FP8E5M2.next_down(f32::INFINITY), 57344.0);
+        assert_eq!(FP16.next_up(65504.0), f32::INFINITY);
+        assert_eq!(FP16.next_down(f32::INFINITY), 65504.0);
+        assert_eq!(BF16.next_down(f32::INFINITY), BF16.max_finite_f32());
+        // NaN passes through both directions.
+        assert!(FP8E4M3.next_up(f32::NAN).is_nan());
+        assert!(FP8E4M3.next_down(f32::NAN).is_nan());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! format × scheme × worker count, exactly as `AdamW::step_reference` does
 //! for the bf16 row.
 
-use crate::numerics::analysis::{edq, edq_expansion, sum_sq_chunked};
+use crate::numerics::analysis::{edq, edq_effective, sum_sq_chunked};
 use crate::numerics::expansion::{grow, Expansion};
 use crate::numerics::format::FloatFormat;
 use crate::util::rng::Rng;
@@ -91,7 +91,7 @@ impl GenericAdamW {
             eps: self.eps,
             weight_decay: self.weight_decay,
         };
-        GenericScalars::new(self.plan.format, &opt, lr, t)
+        GenericScalars::new(self.plan, &opt, lr, t)
     }
 
     /// One scalar-oracle step; `g` must be format-representable.  `t` is
@@ -116,10 +116,17 @@ impl GenericAdamW {
             Scheme::StochasticRounding => rng.next_u64(),
             _ => 0,
         };
+        let scaled = plan.delta_scale != 0;
 
-        // Snapshot the effective parameter for EDQ (hi+lo or MW).
-        let theta_old_hi: Vec<f32> = state.theta().to_vec();
-        let theta_old_lo: Option<Vec<f32>> = state.get("dtheta_c").map(|v| v.to_vec());
+        // Snapshot the effective parameter for EDQ: the evaluated
+        // expansion for MCF schemes (any component count, delta-scale
+        // unapplied — the same per-element expression the fused kernels
+        // stream), raw θ / MW otherwise.  Each plan family snapshots only
+        // what its diagnostics actually read.
+        let theta_old_hi: Option<Vec<f32>> =
+            (!plan.scheme.is_mcf_params()).then(|| state.theta().to_vec());
+        let mcf_old_eff: Option<Vec<f64>> =
+            plan.scheme.is_mcf_params().then(|| state.theta_effective());
         let mw_old: Option<Vec<f32>> = state.get("mw").map(|v| v.to_vec());
 
         let mut dtheta = vec![0.0f32; n];
@@ -142,13 +149,36 @@ impl GenericAdamW {
                 for k in 0..n {
                     let (m_new, g2) = s.moments_m_g2(vecs[2][k], g[k]);
                     let v_new = s.moment_v_plain(vecs[3][k], g2);
-                    let dt = s.delta_theta(vecs[0][k], m_new, v_new as f64);
-                    dtheta[k] = dt;
-                    let e = grow(&fmt, Expansion::new(vecs[0][k], vecs[1][k]), dt);
-                    vecs[0][k] = e.hi;
-                    vecs[1][k] = e.lo;
+                    if scaled {
+                        let (hi, lo, dt) =
+                            s.apply_theta2_scaled(vecs[0][k], vecs[1][k], m_new, v_new as f64);
+                        dtheta[k] = dt;
+                        vecs[0][k] = hi;
+                        vecs[1][k] = lo;
+                    } else {
+                        let dt = s.delta_theta(vecs[0][k], m_new, v_new as f64);
+                        dtheta[k] = dt;
+                        let e = grow(&fmt, Expansion::new(vecs[0][k], vecs[1][k]), dt);
+                        vecs[0][k] = e.hi;
+                        vecs[1][k] = e.lo;
+                    }
                     vecs[2][k] = m_new;
                     vecs[3][k] = v_new;
+                }
+            }
+            Scheme::CollageLight3 => {
+                let vecs = state.vecs_mut(); // [theta, dtheta_c, dtheta_c2, m, v]
+                for k in 0..n {
+                    let (m_new, g2) = s.moments_m_g2(vecs[3][k], g[k]);
+                    let v_new = s.moment_v_plain(vecs[4][k], g2);
+                    let (hi, lo1, lo2, dt) =
+                        s.apply_theta3(vecs[0][k], vecs[1][k], vecs[2][k], m_new, v_new as f64);
+                    dtheta[k] = dt;
+                    vecs[0][k] = hi;
+                    vecs[1][k] = lo1;
+                    vecs[2][k] = lo2;
+                    vecs[3][k] = m_new;
+                    vecs[4][k] = v_new;
                 }
             }
             Scheme::CollagePlus => {
@@ -156,14 +186,39 @@ impl GenericAdamW {
                 for k in 0..n {
                     let (m_new, g2) = s.moments_m_g2(vecs[2][k], g[k]);
                     let ve = s.moment_v_plus(vecs[3][k], vecs[4][k], g2);
-                    let dt = s.delta_theta(vecs[0][k], m_new, ve.value());
-                    dtheta[k] = dt;
-                    let e = grow(&fmt, Expansion::new(vecs[0][k], vecs[1][k]), dt);
-                    vecs[0][k] = e.hi;
-                    vecs[1][k] = e.lo;
+                    if scaled {
+                        let (hi, lo, dt) =
+                            s.apply_theta2_scaled(vecs[0][k], vecs[1][k], m_new, ve.value());
+                        dtheta[k] = dt;
+                        vecs[0][k] = hi;
+                        vecs[1][k] = lo;
+                    } else {
+                        let dt = s.delta_theta(vecs[0][k], m_new, ve.value());
+                        dtheta[k] = dt;
+                        let e = grow(&fmt, Expansion::new(vecs[0][k], vecs[1][k]), dt);
+                        vecs[0][k] = e.hi;
+                        vecs[1][k] = e.lo;
+                    }
                     vecs[2][k] = m_new;
                     vecs[3][k] = ve.hi;
                     vecs[4][k] = ve.lo;
+                }
+            }
+            Scheme::CollagePlus3 => {
+                let vecs = state.vecs_mut(); // [theta, dtheta_c, dtheta_c2, m, v, dv, dv2]
+                for k in 0..n {
+                    let (m_new, g2) = s.moments_m_g2(vecs[3][k], g[k]);
+                    let ve = s.moment_v_plus3(vecs[4][k], vecs[5][k], vecs[6][k], g2);
+                    let (hi, lo1, lo2, dt) =
+                        s.apply_theta3(vecs[0][k], vecs[1][k], vecs[2][k], m_new, ve.value());
+                    dtheta[k] = dt;
+                    vecs[0][k] = hi;
+                    vecs[1][k] = lo1;
+                    vecs[2][k] = lo2;
+                    vecs[3][k] = m_new;
+                    vecs[4][k] = ve.c[0];
+                    vecs[5][k] = ve.c[1];
+                    vecs[6][k] = ve.c[2];
                 }
             }
             Scheme::Kahan => {
@@ -226,37 +281,24 @@ impl GenericAdamW {
         }
 
         // ---- diagnostics (the step_reference structure, plan-keyed) -------
-        let report = match plan.scheme {
-            Scheme::CollageLight | Scheme::CollagePlus => {
-                let lo_old = theta_old_lo.as_ref().unwrap();
-                edq_expansion(
-                    &theta_old_hi,
-                    lo_old,
-                    state.theta(),
-                    state.get("dtheta_c").unwrap(),
-                    &dtheta,
-                )
-            }
-            Scheme::Fp32MasterWeights => {
-                edq(mw_old.as_ref().unwrap(), state.get("mw").unwrap(), &dtheta)
-            }
-            _ => edq(&theta_old_hi, state.theta(), &dtheta),
-        };
-        let old_eff: Vec<f64> = match plan.scheme {
-            Scheme::CollageLight | Scheme::CollagePlus => {
-                let lo_old = theta_old_lo.as_ref().unwrap();
-                theta_old_hi
-                    .iter()
-                    .zip(lo_old)
-                    .map(|(&h, &l)| h as f64 + l as f64)
-                    .collect()
-            }
-            Scheme::Fp32MasterWeights => {
+        let new_eff = state.theta_effective();
+        let old_eff: Vec<f64> = match mcf_old_eff {
+            Some(eff) => eff,
+            None if plan.scheme == Scheme::Fp32MasterWeights => {
                 mw_old.as_ref().unwrap().iter().map(|&x| x as f64).collect()
             }
-            _ => theta_old_hi.iter().map(|&x| x as f64).collect(),
+            None => theta_old_hi.as_ref().unwrap().iter().map(|&x| x as f64).collect(),
         };
-        let new_eff = state.theta_effective();
+        let report = if plan.scheme.is_mcf_params() {
+            // Expansion plans of any component count: reduce over the
+            // evaluated effective parameters (bitwise-identical to the old
+            // `edq_expansion` for hi/lo pairs).
+            edq_effective(&old_eff, &new_eff, &dtheta)
+        } else if plan.scheme == Scheme::Fp32MasterWeights {
+            edq(mw_old.as_ref().unwrap(), state.get("mw").unwrap(), &dtheta)
+        } else {
+            edq(theta_old_hi.as_ref().unwrap(), state.theta(), &dtheta)
+        };
         let lost = dtheta
             .iter()
             .zip(old_eff.iter().zip(&new_eff))
@@ -378,6 +420,100 @@ mod tests {
         assert!(
             plus < plain * 0.85,
             "fp8 plus {plus:.4e} should improve on stalled plain {plain:.4e}"
+        );
+    }
+
+    #[test]
+    fn fp8_length3_unfreezes_where_length2_stalls() {
+        // The §6 answer this PR exists for: in the same stall regime as
+        // `fp8_plus_converges_where_plain_stalls` (θ ≈ 16..20 on a ulp = 2
+        // grid, Adam steps of ~lr = 0.02), a length-2 expansion improves on
+        // plain but freezes once the δθ word's own ulp swamps the update —
+        // while a length-3 expansion keeps absorbing it and converges to
+        // float-noise.  A single loss-scaled δθ word does NOT fix this
+        // (scaling shifts the window without adding relative precision);
+        // it targets the sub-subnormal-floor regime instead.
+        let mut rng = Rng::new(7, 0);
+        let fmt = FP8E4M3;
+        let n = 256;
+        let target: Vec<f32> = (0..n)
+            .map(|_| fmt.round_nearest(16.0 + 4.0 * rng.f32()))
+            .collect();
+        let theta0: Vec<f32> = target.iter().map(|&x| x + 1.3).collect();
+        let loss = |plan: PrecisionPlan| {
+            let opt = GenericAdamW::for_plan(plan, 0.95);
+            let mut st = OptimState::init_plan(plan, &theta0);
+            let mut srng = Rng::new(3, 3);
+            for t in 1..=600 {
+                let eff = st.theta_effective();
+                let g: Vec<f32> = eff
+                    .iter()
+                    .zip(&target)
+                    .map(|(&e, &tg)| fmt.round_nearest((e - tg as f64) as f32))
+                    .collect();
+                opt.step(&mut st, &g, 0.02, t, &mut srng);
+            }
+            st.theta_effective()
+                .iter()
+                .zip(&target)
+                .map(|(&e, &t)| (e - t as f64).powi(2))
+                .sum::<f64>()
+                / n as f64
+        };
+        let light = loss(PrecisionPlan::new(fmt, Scheme::CollageLight));
+        let light3 = loss(PrecisionPlan::new(fmt, Scheme::CollageLight3));
+        let plus3 = loss(PrecisionPlan::new(fmt, Scheme::CollagePlus3));
+        let light_ds = loss(
+            PrecisionPlan::new(fmt, Scheme::CollageLight).with_delta_scale(8).unwrap(),
+        );
+        let light3_ds = loss(
+            PrecisionPlan::new(fmt, Scheme::CollageLight3).with_delta_scale(8).unwrap(),
+        );
+        // Length-2 freezes well short of convergence (simulated ≈ 2.25)...
+        assert!(light > 1.0, "length-2 should stall, got {light:.4e}");
+        // ...length-3 converges ~5 orders of magnitude further (≈ 3e-5).
+        assert!(light3 < 1e-2, "length-3 failed to unfreeze: {light3:.4e}");
+        assert!(plus3 < 1e-2, "plus-3 failed to unfreeze: {plus3:.4e}");
+        assert!(
+            light3 < light * 1e-2,
+            "length-3 ({light3:.4e}) should beat length-2 ({light:.4e}) by >100x"
+        );
+        // Loss-scaling alone does not cure swamping (it cures underflow):
+        // a scaled length-2 word stays frozen in this regime.
+        assert!(light_ds > 1.0, "scaled length-2 should still stall, got {light_ds:.4e}");
+        // Scaled length-3 is at least as good as unscaled length-3.
+        assert!(light3_ds < 1e-2, "scaled length-3 regressed: {light3_ds:.4e}");
+    }
+
+    #[test]
+    fn fp8_delta_scale_rescues_sub_floor_updates() {
+        // The complementary regime: updates below E4M3's subnormal floor
+        // 2^(e_min − m) = 2⁻⁹ round to zero before any expansion sees
+        // them, so even length-3 freezes — but the loss-scaled δθ word
+        // receives the *exact* update on a 2^k-finer grid and accumulates.
+        let fmt = FP8E4M3;
+        let plan_plain = PrecisionPlan::new(fmt, Scheme::CollageLight);
+        let plan_ds =
+            PrecisionPlan::new(fmt, Scheme::CollageLight).with_delta_scale(12).unwrap();
+        let run = |plan: PrecisionPlan| {
+            let opt = GenericAdamW::for_plan(plan, 0.95);
+            let mut st = OptimState::init_plan(plan, &[16.0; 32]);
+            let mut srng = Rng::new(1, 1);
+            // Constant gradient of 0.5: m̂/√v̂ ≈ 1, so Δθ ≈ -lr = -1e-4 —
+            // below half the smallest subnormal 2⁻¹⁰ ≈ 9.8e-4, i.e. the
+            // format-rounded update is exactly zero every step.
+            let g = vec![fmt.round_nearest(0.5); 32];
+            for t in 1..=400 {
+                opt.step(&mut st, &g, 1e-4, t, &mut srng);
+            }
+            st.theta_effective()[0]
+        };
+        let frozen = run(plan_plain);
+        let scaled = run(plan_ds);
+        assert_eq!(frozen, 16.0, "unscaled δθ should lose every sub-floor update");
+        assert!(
+            scaled < 16.0 - 1e-3,
+            "delta-scale failed to capture sub-floor updates: θ_eff = {scaled}"
         );
     }
 

@@ -37,15 +37,37 @@
 
 use std::ops::Range;
 
-use crate::numerics::expansion::{grow, grow_bf16, mul, mul_bf16, rn_bf16, Expansion};
+use crate::numerics::expansion::{
+    grow, grow_bf16, grow_n, mul, mul_bf16, mul_n, rn_bf16, Expansion, ExpansionN,
+};
 use crate::numerics::format::FloatFormat;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks;
 
 use super::adamw::{delta_theta_bf16, delta_theta_fp32, AdamW, StepStats};
-use super::plan::Scheme;
+use super::plan::{PrecisionPlan, Scheme};
 use super::state::OptimState;
 use super::strategy::Strategy;
+
+/// Largest state-vector arity any plan carries (collage-plus-3: θ + two δθ
+/// words + m + v + two δv words).  The kernel dispatcher's shared state
+/// view and [`OptimState`] are generic up to this count.
+pub const MAX_STATE_VECS: usize = 7;
+
+/// The effective parameter of a 2-component expansion plan, as the fused
+/// kernels, the scalar oracle and `OptimState::theta_effective` all
+/// evaluate it (`inv` = 2^-delta_scale; 1.0 when scaling is off — the
+/// multiply is exact, so unscaled plans keep their historical bits).
+#[inline]
+pub(crate) fn eff_theta2(hi: f32, lo: f32, inv: f64) -> f64 {
+    hi as f64 + lo as f64 * inv
+}
+
+/// [`eff_theta2`] for 3-component expansion plans.
+#[inline]
+pub(crate) fn eff_theta3(hi: f32, lo1: f32, lo2: f32, inv: f64) -> f64 {
+    hi as f64 + (lo1 as f64 + lo2 as f64) * inv
+}
 
 /// Fixed kernel chunk length (elements).  Shared with the reference path's
 /// diagnostics reduction so the two agree bitwise; see the module docs.
@@ -517,7 +539,7 @@ pub fn step_chunk_fp32(
 /// disjoint `&mut` chunk windows (the ranges handed out by
 /// `parallel_chunks` never overlap).
 struct VecPtrs {
-    ptrs: [*mut f32; 5],
+    ptrs: [*mut f32; MAX_STATE_VECS],
     len: usize,
     arity: usize,
 }
@@ -528,8 +550,11 @@ unsafe impl Sync for VecPtrs {}
 
 impl VecPtrs {
     fn new(vecs: &mut [Vec<f32>], len: usize) -> Self {
-        assert!(vecs.len() <= 5, "strategies carry at most 5 state vectors");
-        let mut ptrs = [std::ptr::null_mut(); 5];
+        assert!(
+            vecs.len() <= MAX_STATE_VECS,
+            "plans carry at most {MAX_STATE_VECS} state vectors"
+        );
+        let mut ptrs = [std::ptr::null_mut(); MAX_STATE_VECS];
         for (p, v) in ptrs.iter_mut().zip(vecs.iter_mut()) {
             debug_assert_eq!(v.len(), len);
             *p = v.as_mut_ptr();
@@ -706,21 +731,33 @@ pub struct GenericScalars {
     /// β₂ rounded into the storage format (plain/light v decay).
     pub beta2_lp: f32,
     /// β₂ as its exact format expansion (paper Table 1; collage-plus).
+    /// `b2lo2` is the third component of the length-3 split
+    /// (collage-plus-3); for length-2 consumers it is simply unused.
     pub b2hi: f32,
     pub b2lo: f32,
+    pub b2lo2: f32,
     pub bc1: f32,
     pub bc2: f32,
     pub lr: f32,
     pub eps: f32,
     pub wd: f32,
+    /// `2^delta_scale` for the plan's loss-scaled δθ words (1.0 = off) and
+    /// its exact reciprocal.
+    pub ds_scale: f64,
+    pub ds_inv: f64,
 }
 
 impl GenericScalars {
-    pub fn new(fmt: FloatFormat, opt: &AdamW, lr: f32, t: u64) -> Self {
+    /// Step-constant scalars for `plan` (the storage format picks the
+    /// emulated-op rounding; the plan's `delta_scale` configures the
+    /// loss-scaled δθ path).
+    pub fn new(plan: PrecisionPlan, opt: &AdamW, lr: f32, t: u64) -> Self {
+        let fmt = plan.format;
         let beta1_f = opt.beta1 as f32;
         let beta2_f = opt.beta2 as f32;
-        let b2 = Expansion::split_scalar(&fmt, opt.beta2);
+        let b2 = ExpansionN::<3>::split_scalar(&fmt, opt.beta2);
         let (bc1, bc2) = opt.bias_corrections(t);
+        let ds_scale = plan.delta_scale_factor();
         GenericScalars {
             fmt,
             beta1_f,
@@ -728,13 +765,16 @@ impl GenericScalars {
             one_m_beta1: (1.0f64 - opt.beta1) as f32,
             one_m_beta2: (1.0f64 - opt.beta2) as f32,
             beta2_lp: fmt.round_nearest(beta2_f),
-            b2hi: b2.hi,
-            b2lo: b2.lo,
+            b2hi: b2.c[0],
+            b2lo: b2.c[1],
+            b2lo2: b2.c[2],
             bc1,
             bc2,
             lr,
             eps: opt.eps,
             wd: opt.weight_decay,
+            ds_scale,
+            ds_inv: 1.0 / ds_scale,
         }
     }
 
@@ -771,6 +811,63 @@ impl GenericScalars {
         grow(&self.fmt, vx, incr)
     }
 
+    /// Length-3 MCF second moment:
+    /// (v, δv₁, δv₂) ← Grow₃(Mul₃((v, δv₁, δv₂), β₂-split₃), incr).
+    #[inline]
+    pub fn moment_v_plus3(&self, v: f32, dv: f32, dv2: f32, g2: f32) -> ExpansionN<3> {
+        let rn = |x: f64| self.fmt.round_nearest_f64(x);
+        let vx = mul_n(
+            &self.fmt,
+            ExpansionN::new([v, dv, dv2]),
+            ExpansionN::new([self.b2hi, self.b2lo, self.b2lo2]),
+        );
+        let incr = rn(g2 as f64 * self.one_m_beta2 as f64);
+        grow_n(&self.fmt, vx, incr)
+    }
+
+    /// Loss-scaled δθ update (delta-scale plans): the δθ word(s) store
+    /// `2^k ×` their true value, so the *exact* f64 update — never
+    /// pre-rounded into the format, where sub-subnormal-floor steps would
+    /// vanish — lands on a grid 2^k finer than the parameter's.  Returns
+    /// the new hi word and the K scaled low words; the value identity is
+    /// `hi' + 2^-k·Σlo'ᵢ ≈ hi + 2^-k·Σloᵢ + dt_exact`, exact up to one
+    /// format-rounding of `hi'` and the residual rounds of the low words.
+    #[inline]
+    pub fn theta_grow_scaled<const K: usize>(
+        &self,
+        hi: f32,
+        lo: [f32; K],
+        dt_exact: f64,
+    ) -> (f32, [f32; K]) {
+        let mut lo_sum = 0.0f64;
+        for &w in &lo {
+            lo_sum += w as f64;
+        }
+        let total = hi as f64 + lo_sum * self.ds_inv + dt_exact;
+        let hi_new = self.fmt.round_nearest_f64(total);
+        if !hi_new.is_finite() {
+            return (hi_new, [0.0; K]);
+        }
+        // total − hi_new is exact (the operands are within one format-ulp
+        // of each other); rescaled into δθ space and peeled word by word.
+        // A scaled word saturates at ±max_finite instead of overflowing:
+        // the residual can legitimately reach ulp(hi)/2, and for large k
+        // `ulp(hi)/2 · 2^k` exceeds the format's range — clamping drops
+        // the out-of-range mass (the E4M3 semantics applied to every
+        // format) rather than minting an inf that would poison θ forever.
+        let mut r = (total - hi_new as f64) * self.ds_scale;
+        let mut lo_new = [0.0f32; K];
+        for w in lo_new.iter_mut() {
+            let mut word = self.fmt.round_nearest_f64(r);
+            if word.is_infinite() {
+                word = self.fmt.max_finite_f32().copysign(word);
+            }
+            *w = word;
+            r -= *w as f64;
+        }
+        (hi_new, lo_new)
+    }
+
     /// The exact (f64) Δθ of Alg. 2 line 12 — weight decay inside the
     /// update — before the single storage round.
     #[inline]
@@ -786,6 +883,47 @@ impl GenericScalars {
     #[inline]
     pub fn delta_theta(&self, theta_ref: f32, m_new: f32, v_eval: f64) -> f32 {
         self.fmt.round_nearest_f64(self.delta_exact(theta_ref, m_new, v_eval))
+    }
+
+    /// Parameter update for 3-component plans: the format-rounded Δθ grows
+    /// the length-3 expansion through the Fast2Sum chain, or — on
+    /// delta-scale plans — the *exact* Δθ lands in the loss-scaled words.
+    /// Returns the new components plus the Δθ streamed into the
+    /// diagnostics (the f32 cast of the exact update on scaled plans,
+    /// where the format-rounded value could be a spurious zero).
+    #[inline]
+    pub fn apply_theta3(
+        &self,
+        hi: f32,
+        lo1: f32,
+        lo2: f32,
+        m_new: f32,
+        v_eval: f64,
+    ) -> (f32, f32, f32, f32) {
+        if self.ds_scale == 1.0 {
+            let dt = self.delta_theta(hi, m_new, v_eval);
+            let e = grow_n(&self.fmt, ExpansionN::new([hi, lo1, lo2]), dt);
+            (e.c[0], e.c[1], e.c[2], dt)
+        } else {
+            let dtx = self.delta_exact(hi, m_new, v_eval);
+            let (h, lo) = self.theta_grow_scaled(hi, [lo1, lo2], dtx);
+            (h, lo[0], lo[1], dtx as f32)
+        }
+    }
+
+    /// [`GenericScalars::apply_theta3`] for 2-component **delta-scale**
+    /// plans (unscaled length-2 plans keep their historical kernels).
+    #[inline]
+    pub fn apply_theta2_scaled(
+        &self,
+        hi: f32,
+        lo: f32,
+        m_new: f32,
+        v_eval: f64,
+    ) -> (f32, f32, f32) {
+        let dtx = self.delta_exact(hi, m_new, v_eval);
+        let (h, lo_n) = self.theta_grow_scaled(hi, [lo], dtx);
+        (h, lo_n[0], dtx as f32)
     }
 }
 
@@ -891,6 +1029,127 @@ pub fn gstep_chunk_plus(
         v[k] = ve.hi;
         dv[k] = ve.lo;
         acc.tally_f64(dt, hi_old as f64 + lo_old as f64, e.hi as f64 + e.lo as f64);
+    }
+    acc
+}
+
+/// Collage-light-3 at any format: length-3 MCF (θ, δθ₁, δθ₂), plain
+/// low-precision m/v — the §6 depth lever.  Delta-scale plans route the
+/// exact Δθ into the loss-scaled words instead (see
+/// [`GenericScalars::apply_theta3`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gstep_chunk_light3(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let v_new = s.moment_v_plain(v[k], g2);
+        let (hi, lo1, lo2) = (theta[k], dtheta_c[k], dtheta_c2[k]);
+        let old_eff = eff_theta3(hi, lo1, lo2, s.ds_inv);
+        let (hi_n, lo1_n, lo2_n, dt) = s.apply_theta3(hi, lo1, lo2, m_new, v_new as f64);
+        theta[k] = hi_n;
+        dtheta_c[k] = lo1_n;
+        dtheta_c2[k] = lo2_n;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally_f64(dt, old_eff, eff_theta3(hi_n, lo1_n, lo2_n, s.ds_inv));
+    }
+    acc
+}
+
+/// Collage-plus-3 at any format: length-3 MCF (θ, δθ₁, δθ₂) **and**
+/// length-3 MCF (v, δv₁, δv₂) with the length-3 β₂ expansion.
+#[allow(clippy::too_many_arguments)]
+pub fn gstep_chunk_plus3(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    dv2: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let ve = s.moment_v_plus3(v[k], dv[k], dv2[k], g2);
+        let (hi, lo1, lo2) = (theta[k], dtheta_c[k], dtheta_c2[k]);
+        let old_eff = eff_theta3(hi, lo1, lo2, s.ds_inv);
+        let (hi_n, lo1_n, lo2_n, dt) = s.apply_theta3(hi, lo1, lo2, m_new, ve.value());
+        theta[k] = hi_n;
+        dtheta_c[k] = lo1_n;
+        dtheta_c2[k] = lo2_n;
+        m[k] = m_new;
+        v[k] = ve.c[0];
+        dv[k] = ve.c[1];
+        dv2[k] = ve.c[2];
+        acc.tally_f64(dt, old_eff, eff_theta3(hi_n, lo1_n, lo2_n, s.ds_inv));
+    }
+    acc
+}
+
+/// Collage-light with loss-scaled δθ (`…+delta-scale=k` plans): same state
+/// layout as light, but the δθ word stores `2^k ×` its true value and the
+/// update never pre-rounds into the format.
+pub fn gstep_chunk_light_ds(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let v_new = s.moment_v_plain(v[k], g2);
+        let (hi, lo) = (theta[k], dtheta_c[k]);
+        let old_eff = eff_theta2(hi, lo, s.ds_inv);
+        let (hi_n, lo_n, dt) = s.apply_theta2_scaled(hi, lo, m_new, v_new as f64);
+        theta[k] = hi_n;
+        dtheta_c[k] = lo_n;
+        m[k] = m_new;
+        v[k] = v_new;
+        acc.tally_f64(dt, old_eff, eff_theta2(hi_n, lo_n, s.ds_inv));
+    }
+    acc
+}
+
+/// Collage-plus with loss-scaled δθ: MCF (v, δv) stays unscaled (the
+/// second moment has no swamping problem — it only decays), the δθ word is
+/// loss-scaled like [`gstep_chunk_light_ds`].
+#[allow(clippy::too_many_arguments)]
+pub fn gstep_chunk_plus_ds(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    for (k, &gk) in g.iter().enumerate() {
+        let (m_new, g2) = s.moments_m_g2(m[k], gk);
+        let ve = s.moment_v_plus(v[k], dv[k], g2);
+        let (hi, lo) = (theta[k], dtheta_c[k]);
+        let old_eff = eff_theta2(hi, lo, s.ds_inv);
+        let (hi_n, lo_n, dt) = s.apply_theta2_scaled(hi, lo, m_new, ve.value());
+        theta[k] = hi_n;
+        dtheta_c[k] = lo_n;
+        m[k] = m_new;
+        v[k] = ve.hi;
+        dv[k] = ve.lo;
+        acc.tally_f64(dt, old_eff, eff_theta2(hi_n, lo_n, s.ds_inv));
     }
     acc
 }
@@ -1012,7 +1271,8 @@ fn fused_step_generic(
 ) -> StepStats {
     let plan = state.plan;
     let n = state.n;
-    let s = GenericScalars::new(plan.format, opt, lr, t);
+    let s = GenericScalars::new(plan, opt, lr, t);
+    let scaled = plan.delta_scale != 0;
     // One key per step; per-element noise is counter-derived from it so
     // the draw order cannot depend on chunk/thread assignment.
     let sr_key = match plan.scheme {
@@ -1038,8 +1298,20 @@ fn fused_step_generic(
                     p.slice(2, r),
                 )
             }),
+            Scheme::CollageLight if !scaled => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    gstep_chunk_light(
+                        &s,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r),
+                    )
+                })
+            }
             Scheme::CollageLight => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_light(
+                gstep_chunk_light_ds(
                     &s,
                     &g[r.clone()],
                     p.slice(0, r.clone()),
@@ -1048,8 +1320,8 @@ fn fused_step_generic(
                     p.slice(3, r),
                 )
             }),
-            Scheme::CollagePlus => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_plus(
+            Scheme::CollageLight3 => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_light3(
                     &s,
                     &g[r.clone()],
                     p.slice(0, r.clone()),
@@ -1057,6 +1329,43 @@ fn fused_step_generic(
                     p.slice(2, r.clone()),
                     p.slice(3, r.clone()),
                     p.slice(4, r),
+                )
+            }),
+            Scheme::CollagePlus if !scaled => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    gstep_chunk_plus(
+                        &s,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r.clone()),
+                        p.slice(4, r),
+                    )
+                })
+            }
+            Scheme::CollagePlus => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_plus_ds(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r.clone()),
+                    p.slice(4, r),
+                )
+            }),
+            Scheme::CollagePlus3 => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                gstep_chunk_plus3(
+                    &s,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r.clone()),
+                    p.slice(3, r.clone()),
+                    p.slice(4, r.clone()),
+                    p.slice(5, r.clone()),
+                    p.slice(6, r),
                 )
             }),
             Scheme::Kahan => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
@@ -1169,6 +1478,31 @@ mod tests {
             let r = sr_round_fmt(&FP8E5M2, -3.9, noise);
             assert!(r == -3.5 || r == -4.0, "negative boundary bracket broke: {r}");
         }
+    }
+
+    #[test]
+    fn theta_grow_scaled_saturates_instead_of_minting_inf() {
+        use crate::numerics::format::{FP8E5M2, FP16};
+        use crate::optim::plan::{PrecisionPlan, Scheme};
+        // fp16, delta-scale 24, θ = 16: a residual just below
+        // ulp(16)/2 = 2⁻⁷ leaves hi at 16, and 0.9·2⁻⁷·2²⁴ ≈ 1.2e5 > 65504
+        // — the scaled word must clamp to ±max_finite, never become inf.
+        let plan = PrecisionPlan::new(FP16, Scheme::CollageLight)
+            .with_delta_scale(24)
+            .unwrap();
+        let opt = AdamW { weight_decay: 0.0, ..AdamW::default() };
+        let s = GenericScalars::new(plan, &opt, 1e-3, 1);
+        let (hi, lo) = s.theta_grow_scaled(16.0f32, [0.0f32], 2f64.powi(-7) * 0.9);
+        assert_eq!(hi, 16.0);
+        assert!(lo[0].is_finite(), "lo={:e}", lo[0]);
+        assert_eq!(lo[0], FP16.max_finite_f32(), "must clamp at +max_finite");
+        // Same on e5m2, both words of a length-3 plan.
+        let plan = PrecisionPlan::new(FP8E5M2, Scheme::CollageLight3)
+            .with_delta_scale(20)
+            .unwrap();
+        let s = GenericScalars::new(plan, &opt, 1e-3, 1);
+        let (hi, lo) = s.theta_grow_scaled(16.0f32, [0.0f32, 0.0f32], 0.49);
+        assert!(hi.is_finite() && lo.iter().all(|w| w.is_finite()), "{hi:e} {lo:?}");
     }
 
     #[test]

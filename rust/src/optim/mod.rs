@@ -9,16 +9,26 @@
 //!
 //! ```text
 //!                    Scheme (state structure)
-//!             plain  light  plus  fp32-optim  fp32-mw  kahan  sr
-//!           ┌───────────────────────────────────────────────────┐
-//!   bf16    │ ← the legacy `Strategy` zoo (paper Table 2):      │
-//!           │   bf16 fast-path kernels, bit-identical to PR 1   │
-//!   fp16    │                                                   │
-//!   fp8e4m3 │ ← format-generic kernels (§6 "extend to 8-bit"):  │
-//!   fp8e5m2 │   same fused pass, FloatFormat-parameterized      │
-//!   fp32    │ (fp32 × plain = the full-precision reference)     │
-//!           └───────────────────────────────────────────────────┘
+//!             plain  light  light-3  plus  plus-3  fp32-optim  fp32-mw  kahan  sr
+//!           ┌─────────────────────────────────────────────────────────────────────┐
+//!   bf16    │ ← the legacy `Strategy` zoo (paper Table 2):                        │
+//!           │   bf16 fast-path kernels, bit-identical to PR 1                     │
+//!   fp16    │                                                                     │
+//!   fp8e4m3 │ ← format-generic kernels (§6 "extend to 8-bit"):                    │
+//!   fp8e5m2 │   same fused pass, FloatFormat-parameterized                        │
+//!   fp32    │ (fp32 × plain = the full-precision reference)                       │
+//!           └─────────────────────────────────────────────────────────────────────┘
+//!           + an optional per-plan `+delta-scale=<pow2>` suffix: the MCF δθ
+//!             word(s) stored loss-scaled by 2^pow2 (underflow rescue)
 //! ```
+//!
+//! The `-3` columns carry **length-3** MCF expansions
+//! ([`crate::numerics::expansion::ExpansionN`]) for θ (and, for plus-3,
+//! for v) — the §6 depth lever that unfreezes fp8 where a length-2 δθ
+//! word's own ulp swamps the update.  They are the first schemes whose
+//! state is not a hi/lo pair, so [`OptimState`]'s layout and the kernel
+//! dispatcher are component-count-generic
+//! (`kernels::MAX_STATE_VECS` = 7: collage-plus-3's θ×3 + m + v×3).
 //!
 //! [`Strategy`] survives as a thin constructor for the bf16 row
 //! (`PrecisionPlan::from(Strategy::CollageLight)`), and

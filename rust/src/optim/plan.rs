@@ -28,19 +28,56 @@
 //! any of them round-trips through all of them:
 //!
 //! ```text
-//! plan    := scheme "@" format      # any cell, e.g. "collage-light@fp8e4m3"
+//! plan    := base ["+delta-scale=" pow2]   # loss-scaled δθ words (MCF only)
+//! base    := scheme "@" format      # any cell, e.g. "collage-light@fp8e4m3"
 //!          | scheme                 # that scheme at bf16 storage
 //!          | legacy                 # the paper's Table-2 option strings
-//! scheme  := "plain" | "collage-light" | "collage-plus" | "fp32-optim"
-//!          | "fp32-mw" | "kahan" | "sr"          (+ aliases, see Scheme)
+//! scheme  := "plain" | "collage-light" | "collage-light-3" | "collage-plus"
+//!          | "collage-plus-3" | "fp32-optim" | "fp32-mw" | "kahan" | "sr"
+//!          (+ aliases, see Scheme)
 //! format  := "fp32" | "fp16" | "bf16" | "fp8e4m3" | "fp8e5m2"
 //!          (+ aliases "f32", "half", "e4m3", "fp8", ... see FloatFormat)
 //! legacy  := "a" | "b" | "c" | "d" | "dmw" | "kahan" | "sr" | "fp32"
+//! pow2    := integer exponent 1..=24 — δθ words are stored ×2^pow2
 //! ```
 //!
 //! [`fmt::Display`] is the inverse: bf16-row plans print their legacy
 //! option string (so existing configs, checkpoints and manifests keep
-//! working byte-for-byte), every other cell prints `scheme@format`.
+//! working byte-for-byte), every other cell prints `scheme@format`, and a
+//! non-zero `delta_scale` appends its `+delta-scale=<pow2>` suffix.
+//!
+//! ## Length-3 expansions and loss-scaled δθ words (the §6 levers)
+//!
+//! * `collage-light-3` / `collage-plus-3` carry the parameter (and, for
+//!   plus-3, the second moment) as **length-3** MCF expansions
+//!   ([`crate::numerics::expansion::ExpansionN`]) — one extra
+//!   low-precision word that unfreezes the fp8 regime where a length-2
+//!   δθ word's own ulp swamps the update.
+//! * `+delta-scale=<k>` stores the δθ word(s) of any MCF scheme scaled by
+//!   `2^k` (the loss-scaling trick applied to the parameter sidecar):
+//!   updates below the format's subnormal floor `2^(e_min − m)`, which
+//!   round to zero before the expansion ever sees them, survive in the
+//!   scaled words.  The effective parameter is `θ + 2^−k·Σδθᵢ`.
+//!
+//! ```
+//! use collage::numerics::format::FP8E4M3;
+//! use collage::optim::plan::{PrecisionPlan, Scheme};
+//!
+//! let p: PrecisionPlan = "collage-light-3@fp8e4m3".parse().unwrap();
+//! assert_eq!(p.scheme, Scheme::CollageLight3);
+//! assert_eq!(p.scheme.theta_components(), 3);
+//!
+//! // The delta-scale suffix round-trips through Display/FromStr (and so
+//! // through RunConfig JSON and the checkpoint header, which store the
+//! // combined spelling).
+//! let p: PrecisionPlan = "collage-light@fp8e4m3+delta-scale=8".parse().unwrap();
+//! assert_eq!(p.delta_scale, 8);
+//! assert_eq!(p.to_string(), "collage-light@fp8e4m3+delta-scale=8");
+//! assert_eq!(p.to_string().parse::<PrecisionPlan>().unwrap(), p);
+//!
+//! // delta-scale is only meaningful for MCF δθ words.
+//! assert!("plain@fp16+delta-scale=4".parse::<PrecisionPlan>().is_err());
+//! ```
 //!
 //! ```
 //! use collage::numerics::format::{BF16, FP8E4M3};
@@ -88,8 +125,14 @@ pub enum Scheme {
     Plain,
     /// MCF (θ, δθ), low-precision optimizer states (Collage-light).
     CollageLight,
+    /// Length-3 MCF (θ, δθ₁, δθ₂), low-precision optimizer states — the §6
+    /// depth lever for the fp8 regime.
+    CollageLight3,
     /// MCF (θ, δθ) and MCF (v, δv) with the β₂ expansion (Collage-plus).
     CollagePlus,
+    /// Length-3 MCF (θ, δθ₁, δθ₂) and length-3 MCF (v, δv₁, δv₂) with the
+    /// length-3 β₂ expansion.
+    CollagePlus3,
     /// Low-precision θ, fp32 optimizer states, no master weights (D⁻ᴹᵂ).
     Fp32Optim,
     /// Low-precision working θ + fp32 states + fp32 master weights (D).
@@ -100,11 +143,14 @@ pub enum Scheme {
     StochasticRounding,
 }
 
-/// Every scheme, in Table-2 column order.
-pub const ALL_SCHEMES: [Scheme; 7] = [
+/// Every scheme, in Table-2 column order (length-3 variants next to their
+/// length-2 rows).
+pub const ALL_SCHEMES: [Scheme; 9] = [
     Scheme::Plain,
     Scheme::CollageLight,
+    Scheme::CollageLight3,
     Scheme::CollagePlus,
+    Scheme::CollagePlus3,
     Scheme::Fp32Optim,
     Scheme::Fp32MasterWeights,
     Scheme::Kahan,
@@ -117,7 +163,9 @@ impl Scheme {
         match self {
             Scheme::Plain => "plain",
             Scheme::CollageLight => "collage-light",
+            Scheme::CollageLight3 => "collage-light-3",
             Scheme::CollagePlus => "collage-plus",
+            Scheme::CollagePlus3 => "collage-plus-3",
             Scheme::Fp32Optim => "fp32-optim",
             Scheme::Fp32MasterWeights => "fp32-mw",
             Scheme::Kahan => "kahan",
@@ -125,9 +173,28 @@ impl Scheme {
         }
     }
 
-    /// Does the effective parameter live in an expansion (θ + δθ)?
+    /// Does the effective parameter live in an expansion (θ + δθ…)?
     pub fn is_mcf_params(&self) -> bool {
-        matches!(self, Scheme::CollageLight | Scheme::CollagePlus)
+        self.theta_components() > 1
+    }
+
+    /// Number of expansion components the parameter carries (1 = plain
+    /// low-precision θ; 2 = hi + δθ; 3 = hi + δθ₁ + δθ₂).
+    pub fn theta_components(&self) -> usize {
+        match self {
+            Scheme::CollageLight | Scheme::CollagePlus => 2,
+            Scheme::CollageLight3 | Scheme::CollagePlus3 => 3,
+            _ => 1,
+        }
+    }
+
+    /// Number of expansion components the second moment carries.
+    pub fn v_components(&self) -> usize {
+        match self {
+            Scheme::CollagePlus => 2,
+            Scheme::CollagePlus3 => 3,
+            _ => 1,
+        }
     }
 }
 
@@ -141,14 +208,16 @@ impl FromStr for Scheme {
         Ok(match s {
             "plain" | "a" | "bf16" => Scheme::Plain,
             "b" | "collage-light" | "light" => Scheme::CollageLight,
+            "collage-light-3" | "light-3" => Scheme::CollageLight3,
             "c" | "collage-plus" | "plus" => Scheme::CollagePlus,
+            "collage-plus-3" | "plus-3" => Scheme::CollagePlus3,
             "dmw" | "fp32-optim" => Scheme::Fp32Optim,
             "d" | "fp32-mw" | "mixed" => Scheme::Fp32MasterWeights,
             "kahan" => Scheme::Kahan,
             "sr" | "stochastic" => Scheme::StochasticRounding,
             other => bail!(
                 "unknown scheme {other:?} \
-                 (plain|collage-light|collage-plus|fp32-optim|fp32-mw|kahan|sr)"
+                 (plain|collage-light[-3]|collage-plus[-3]|fp32-optim|fp32-mw|kahan|sr)"
             ),
         })
     }
@@ -160,39 +229,73 @@ impl fmt::Display for Scheme {
     }
 }
 
-/// One point of the plan space: *how* the state is structured ([`Scheme`])
-/// and *what* the low-precision vectors are stored in ([`FloatFormat`]).
+/// One point of the plan space: *how* the state is structured ([`Scheme`]),
+/// *what* the low-precision vectors are stored in ([`FloatFormat`]), and an
+/// optional power-of-two **loss scale for the δθ words** (`delta_scale` —
+/// δθᵢ vectors hold `2^delta_scale ×` their true value; 0 = off).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PrecisionPlan {
     pub format: FloatFormat,
     pub scheme: Scheme,
+    /// Power-of-two exponent the δθ word(s) are scaled by (MCF schemes
+    /// only; 0 disables).  See the module docs' grammar section.
+    pub delta_scale: u8,
 }
+
+/// Largest accepted `delta_scale` exponent.  Scaled δθ words saturate at
+/// the format's ±max_finite rather than overflowing, so a large `k`
+/// trades top-end headroom (residuals near `ulp(θ)/2 · 2^k` clip) for
+/// bottom-end resolution; pick `k` so that
+/// `ulp(θ)/2 · 2^k ≲ max_finite` for the θ magnitudes being trained.
+pub const MAX_DELTA_SCALE: u8 = 24;
 
 impl PrecisionPlan {
     pub fn new(format: FloatFormat, scheme: Scheme) -> Self {
-        PrecisionPlan { format, scheme }
+        PrecisionPlan { format, scheme, delta_scale: 0 }
     }
 
     /// The bf16 row — the paper's original Table-2 zoo.
     pub fn bf16(scheme: Scheme) -> Self {
-        PrecisionPlan { format: BF16, scheme }
+        Self::new(BF16, scheme)
+    }
+
+    /// This plan with its δθ words loss-scaled by `2^k` (builder form;
+    /// errors like the parser does on non-MCF schemes or out-of-range k).
+    pub fn with_delta_scale(self, k: u8) -> Result<Self> {
+        if k > 0 && !self.scheme.is_mcf_params() {
+            bail!("delta-scale requires an MCF scheme, got {}", self.scheme);
+        }
+        if k > MAX_DELTA_SCALE {
+            bail!("delta-scale exponent {k} out of range (1..={MAX_DELTA_SCALE})");
+        }
+        Ok(PrecisionPlan { delta_scale: k, ..self })
+    }
+
+    /// `2^delta_scale` as an exact f64 (1.0 when scaling is off).
+    pub fn delta_scale_factor(&self) -> f64 {
+        f64::from_bits((self.delta_scale as u64 + 1023) << 52)
     }
 
     /// The legacy [`Strategy`] this plan corresponds to, if it lies on the
     /// bf16 row (or is the fp32 reference cell).  `Some` means the fused
     /// PR-1 bf16 kernels and the AOT HLO artifacts cover it; `None` routes
-    /// to the format-generic kernel path.
+    /// to the format-generic kernel path.  Length-3 and delta-scaled plans
+    /// are never legacy strategies, whatever their format.
     pub fn as_strategy(&self) -> Option<Strategy> {
+        if self.delta_scale != 0 {
+            return None;
+        }
         if self.format == BF16 {
-            Some(match self.scheme {
-                Scheme::Plain => Strategy::Bf16,
-                Scheme::CollageLight => Strategy::CollageLight,
-                Scheme::CollagePlus => Strategy::CollagePlus,
-                Scheme::Fp32Optim => Strategy::Fp32Optim,
-                Scheme::Fp32MasterWeights => Strategy::Fp32MasterWeights,
-                Scheme::Kahan => Strategy::Kahan,
-                Scheme::StochasticRounding => Strategy::StochasticRounding,
-            })
+            match self.scheme {
+                Scheme::Plain => Some(Strategy::Bf16),
+                Scheme::CollageLight => Some(Strategy::CollageLight),
+                Scheme::CollagePlus => Some(Strategy::CollagePlus),
+                Scheme::Fp32Optim => Some(Strategy::Fp32Optim),
+                Scheme::Fp32MasterWeights => Some(Strategy::Fp32MasterWeights),
+                Scheme::Kahan => Some(Strategy::Kahan),
+                Scheme::StochasticRounding => Some(Strategy::StochasticRounding),
+                Scheme::CollageLight3 | Scheme::CollagePlus3 => None,
+            }
         } else if self.format == FP32 && self.scheme == Scheme::Plain {
             Some(Strategy::Fp32)
         } else {
@@ -211,6 +314,9 @@ impl PrecisionPlan {
 
     /// State vectors (name, semantic dtype) in artifact I/O order — the
     /// Table-2 row structure instantiated at this plan's storage format.
+    /// Expansion-carrying schemes contribute one vector per component
+    /// (`dtheta_c`, `dtheta_c2`, … / `dv`, `dv2`, …), so the layout is
+    /// component-count-generic, not hardwired to pairs.
     pub fn state_spec(&self) -> Vec<(&'static str, SemanticDtype)> {
         let lp = SemanticDtype::of(self.format);
         let f32_ = SemanticDtype::Fp32;
@@ -221,9 +327,25 @@ impl PrecisionPlan {
             Scheme::CollageLight => {
                 vec![("theta", lp), ("dtheta_c", lp), ("m", lp), ("v", lp)]
             }
+            Scheme::CollageLight3 => vec![
+                ("theta", lp),
+                ("dtheta_c", lp),
+                ("dtheta_c2", lp),
+                ("m", lp),
+                ("v", lp),
+            ],
             Scheme::CollagePlus => {
                 vec![("theta", lp), ("dtheta_c", lp), ("m", lp), ("v", lp), ("dv", lp)]
             }
+            Scheme::CollagePlus3 => vec![
+                ("theta", lp),
+                ("dtheta_c", lp),
+                ("dtheta_c2", lp),
+                ("m", lp),
+                ("v", lp),
+                ("dv", lp),
+                ("dv2", lp),
+            ],
             Scheme::Fp32Optim => vec![("theta", lp), ("m", f32_), ("v", f32_)],
             Scheme::Fp32MasterWeights => {
                 vec![("theta", lp), ("m", f32_), ("v", f32_), ("mw", f32_)]
@@ -276,7 +398,7 @@ impl PrecisionPlan {
             return Ok(base);
         }
         let fmt: FloatFormat = format.parse()?;
-        Ok(PrecisionPlan { format: fmt, scheme: base.scheme })
+        Ok(PrecisionPlan { format: fmt, ..base })
     }
 }
 
@@ -302,30 +424,46 @@ impl FromStr for PrecisionPlan {
     ///   * `"scheme@format"` — any plan-space cell,
     ///   * a legacy `Strategy` option string (`"a"`, `"dmw"`, `"fp32"`, ...)
     ///     — the bf16 row / fp32 cell,
-    ///   * a bare scheme name — that scheme at bf16 storage.
+    ///   * a bare scheme name — that scheme at bf16 storage,
+    ///   * any of the above with a `"+delta-scale=<pow2>"` suffix
+    ///     (MCF schemes only).
     fn from_str(s: &str) -> Result<Self> {
-        if let Some((scheme, fmtname)) = s.split_once('@') {
+        let (s, delta_scale) = match s.split_once("+delta-scale=") {
+            Some((base, k)) => {
+                let k: u8 = k
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad delta-scale exponent {k:?}"))?;
+                (base, k)
+            }
+            None => (s, 0),
+        };
+        let base = if let Some((scheme, fmtname)) = s.split_once('@') {
             let scheme: Scheme = scheme.parse()?;
             let format: FloatFormat = fmtname.parse()?;
-            return Ok(PrecisionPlan { format, scheme });
-        }
-        if let Ok(strategy) = Strategy::parse(s) {
-            return Ok(strategy.into());
-        }
-        let scheme: Scheme = s.parse()?;
-        Ok(PrecisionPlan::bf16(scheme))
+            PrecisionPlan::new(format, scheme)
+        } else if let Ok(strategy) = Strategy::parse(s) {
+            strategy.into()
+        } else {
+            PrecisionPlan::bf16(s.parse::<Scheme>()?)
+        };
+        base.with_delta_scale(delta_scale)
     }
 }
 
 impl fmt::Display for PrecisionPlan {
     /// Round-trips through [`FromStr`]: legacy option strings on the bf16
     /// row (so existing configs, checkpoints and manifests keep working),
-    /// `scheme@format` everywhere else.
+    /// `scheme@format` everywhere else, plus the `+delta-scale=<k>` suffix
+    /// when the δθ words are loss-scaled.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self.as_strategy() {
-            Some(s) => f.write_str(s.option_str()),
-            None => write!(f, "{}@{}", self.scheme.name(), self.format.name),
+            Some(s) => f.write_str(s.option_str())?,
+            None => write!(f, "{}@{}", self.scheme.name(), self.format.name)?,
         }
+        if self.delta_scale != 0 {
+            write!(f, "+delta-scale={}", self.delta_scale)?;
+        }
+        Ok(())
     }
 }
 
@@ -355,6 +493,60 @@ mod tests {
         }
         assert!("nope".parse::<PrecisionPlan>().is_err());
         assert!("plain@fp12".parse::<PrecisionPlan>().is_err());
+    }
+
+    #[test]
+    fn delta_scale_suffix_roundtrips_and_validates() {
+        for spelling in [
+            "collage-light@fp8e4m3+delta-scale=8",
+            "collage-plus-3@fp8e5m2+delta-scale=6",
+            "collage-light-3@fp16+delta-scale=10",
+            "collage-light+delta-scale=4", // bare scheme (bf16 storage)
+            "b+delta-scale=4",             // legacy spelling + suffix
+        ] {
+            let p: PrecisionPlan = spelling.parse().unwrap();
+            assert!(p.delta_scale > 0, "{spelling}");
+            let back: PrecisionPlan = p.to_string().parse().unwrap();
+            assert_eq!(back, p, "{spelling} -> {p}");
+            // Delta-scaled plans never route to the legacy bf16 kernels.
+            assert_eq!(p.as_strategy(), None, "{spelling}");
+        }
+        // The scale factor is the exact power of two.
+        let p: PrecisionPlan = "collage-light@fp8e4m3+delta-scale=8".parse().unwrap();
+        assert_eq!(p.delta_scale_factor(), 256.0);
+        assert_eq!(PrecisionPlan::bf16(Scheme::Plain).delta_scale_factor(), 1.0);
+        // Non-MCF schemes and out-of-range exponents are rejected.
+        assert!("plain@fp16+delta-scale=4".parse::<PrecisionPlan>().is_err());
+        assert!("sr+delta-scale=2".parse::<PrecisionPlan>().is_err());
+        assert!("kahan+delta-scale=1".parse::<PrecisionPlan>().is_err());
+        assert!("collage-light+delta-scale=99".parse::<PrecisionPlan>().is_err());
+        assert!("collage-light+delta-scale=x".parse::<PrecisionPlan>().is_err());
+        // "+delta-scale=0" normalizes to no scaling (prints without suffix).
+        let p: PrecisionPlan = "collage-light+delta-scale=0".parse().unwrap();
+        assert_eq!(p, PrecisionPlan::bf16(Scheme::CollageLight));
+        assert_eq!(p.to_string(), "collage-light");
+    }
+
+    #[test]
+    fn length3_schemes_layout_and_bytes() {
+        let p = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3);
+        assert_eq!(p.as_strategy(), None);
+        assert_eq!(p.scheme.theta_components(), 3);
+        assert_eq!(p.scheme.v_components(), 1);
+        // 5 fp8 state words + 1 fp8 gradient word.
+        assert_eq!(p.bytes_per_param(), 6);
+        assert_eq!(p.to_string(), "collage-light-3@fp8e4m3");
+        let p = PrecisionPlan::new(FP8E4M3, Scheme::CollagePlus3);
+        assert_eq!(p.scheme.v_components(), 3);
+        // 7 fp8 state words + 1 fp8 gradient word.
+        assert_eq!(p.bytes_per_param(), 8);
+        let spec = p.state_spec();
+        let names: Vec<&str> = spec.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["theta", "dtheta_c", "dtheta_c2", "m", "v", "dv", "dv2"]);
+        // Length-3 at bf16 storage is NOT a legacy strategy either.
+        assert_eq!(PrecisionPlan::bf16(Scheme::CollageLight3).as_strategy(), None);
+        assert!(Scheme::CollageLight3.is_mcf_params());
+        assert!(Scheme::CollagePlus3.is_mcf_params());
     }
 
     #[test]

@@ -160,17 +160,31 @@ impl OptimState {
         self.get("theta").expect("every plan has theta")
     }
 
-    /// The *effective* parameter in f64 (θ + δθ for MCF, master weights for
-    /// fp32-mw schemes) — what EDQ and Fig. 2's parameter norm are measured
-    /// on.
+    /// The *effective* parameter in f64 (θ + 2⁻ᵏ·Σδθᵢ for MCF — any
+    /// component count, with the plan's delta-scale unapplied — and master
+    /// weights for fp32-mw schemes) — what EDQ and Fig. 2's parameter norm
+    /// are measured on.  The per-element expression is the exact one the
+    /// fused kernels stream into their diagnostics accumulator, so the two
+    /// agree bitwise.
     pub fn theta_effective(&self) -> Vec<f64> {
-        match self.plan.scheme {
-            Scheme::CollageLight | Scheme::CollagePlus => {
+        use super::kernels::{eff_theta2, eff_theta3};
+        let inv = 1.0 / self.plan.delta_scale_factor();
+        match self.plan.scheme.theta_components() {
+            2 => {
                 let hi = self.get("theta").unwrap();
                 let lo = self.get("dtheta_c").unwrap();
-                hi.iter().zip(lo).map(|(&h, &l)| h as f64 + l as f64).collect()
+                hi.iter().zip(lo).map(|(&h, &l)| eff_theta2(h, l, inv)).collect()
             }
-            Scheme::Fp32MasterWeights => {
+            3 => {
+                let hi = self.get("theta").unwrap();
+                let lo1 = self.get("dtheta_c").unwrap();
+                let lo2 = self.get("dtheta_c2").unwrap();
+                hi.iter()
+                    .zip(lo1.iter().zip(lo2))
+                    .map(|(&h, (&l1, &l2))| eff_theta3(h, l1, l2, inv))
+                    .collect()
+            }
+            _ if self.plan.scheme == Scheme::Fp32MasterWeights => {
                 self.get("mw").unwrap().iter().map(|&x| x as f64).collect()
             }
             _ => self.theta().iter().map(|&x| x as f64).collect(),
@@ -231,6 +245,33 @@ mod tests {
         let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight);
         let st = OptimState::init_plan(plan, &theta);
         assert_eq!(st.semantic_bytes(), 4 * 1000);
+        // Length-3 rows: one extra fp8 word per δ expansion.
+        let st = OptimState::init_plan(PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3), &theta);
+        assert_eq!(st.semantic_bytes(), 5 * 1000);
+        let st = OptimState::init_plan(PrecisionPlan::new(FP8E4M3, Scheme::CollagePlus3), &theta);
+        assert_eq!(st.semantic_bytes(), 7 * 1000);
+    }
+
+    #[test]
+    fn effective_theta_length3_and_delta_scale() {
+        // Length-3: all δθ components contribute.
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3);
+        let st = OptimState::from_vecs_plan(
+            plan,
+            vec![vec![16.0], vec![0.5], vec![0.015625], vec![0.0], vec![0.0]],
+        )
+        .unwrap();
+        assert_eq!(st.theta_effective(), vec![16.515625]);
+        // Delta-scale: the stored words are 2^k x the true contribution.
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+            .with_delta_scale(4)
+            .unwrap();
+        let st = OptimState::from_vecs_plan(
+            plan,
+            vec![vec![16.0], vec![8.0], vec![0.0], vec![0.0]],
+        )
+        .unwrap();
+        assert_eq!(st.theta_effective(), vec![16.5]);
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Property suite for the length-N expansion algebra
+//! (`numerics::expansion::ExpansionN`):
+//!
+//! 1. **N = 2 is the pair algebra, bitwise.**  `grow_n`/`scaling_n`/`mul_n`
+//!    /`split_scalar` at N = 2 perform the identical op sequence as the
+//!    historical `grow`/`scaling`/`mul`/`Expansion::split_scalar`, so the
+//!    two algebras are interchangeable without disturbing any existing
+//!    plan's bits.
+//! 2. **Renormalization invariants at N = 3.**  Components come out
+//!    ordered by magnitude and (weakly) non-overlapping
+//!    (`|c[i+1]| ≤ ulp(c[i])`) away from saturation.
+//! 3. **`value()` exactness.**  Growing a length-3 expansion loses at most
+//!    ~one ulp of the *bottom* component versus the exact f64 sum —
+//!    a factor 2^m tighter than the pair algebra's bound.
+
+use collage::numerics::expansion::{
+    grow, grow_n, mul, mul_n, renormalize, scaling, scaling_n, Expansion, ExpansionN,
+};
+use collage::numerics::format::{FloatFormat, BF16, FP16, FP8E4M3, FP8E5M2};
+use collage::util::proptest::check_msg;
+use collage::util::rng::Rng;
+
+const FORMATS: [FloatFormat; 4] = [BF16, FP16, FP8E4M3, FP8E5M2];
+
+/// "Interesting" representable floats in `fmt`: normals, powers of two,
+/// tiny/huge magnitudes and zeros (the corners where rounding bugs live).
+fn gen_interesting(fmt: &FloatFormat, rng: &mut Rng) -> f32 {
+    let v = match rng.below(8) {
+        0 => 0.0f32,
+        1 => rng.normal() as f32,
+        2 => (rng.normal() as f32) * 1e-3,
+        3 => (rng.normal() as f32) * 1e3,
+        4 => 2.0f32.powi(rng.below(40) as i32 - 20),
+        5 => -(2.0f32.powi(rng.below(40) as i32 - 20)),
+        6 => (rng.normal() as f32) * 1e-20,
+        _ => rng.range_f32(-1.0, 1.0),
+    };
+    fmt.round_nearest(v)
+}
+
+/// A plausible near-normalized (hi, lo1, lo2) triple: each component about
+/// one word below the previous.
+fn gen_triple(fmt: &FloatFormat, rng: &mut Rng) -> (f32, f32, f32) {
+    let hi = gen_interesting(fmt, rng);
+    let down = 2.0f32.powi(-(fmt.mantissa_bits as i32) - 1);
+    let lo1 = fmt.round_nearest(hi * down * (2.0 * rng.f32() - 1.0));
+    let lo2 = fmt.round_nearest(lo1 * down * (2.0 * rng.f32() - 1.0));
+    (hi, lo1, lo2)
+}
+
+fn fmt_and_rng(rng: &mut Rng) -> (FloatFormat, u64) {
+    (FORMATS[rng.below(4) as usize], rng.next_u64())
+}
+
+/// Saturating formats pin `c[0]` at ±max_finite when the value exceeds the
+/// grid; no ordering/exactness claim survives there.
+fn saturated(fmt: &FloatFormat, e: &ExpansionN<3>) -> bool {
+    !e.c[0].is_finite() || e.c[0].abs() as f64 >= fmt.max_finite()
+}
+
+#[test]
+fn prop_n2_grow_bitwise_matches_pair_grow() {
+    check_msg(
+        "grow_n::<2> == grow",
+        fmt_and_rng,
+        |&(fmt, seed)| {
+            let mut rng = Rng::new(seed, 0);
+            let (mut hi, mut lo) = (gen_interesting(&fmt, &mut rng), gen_interesting(&fmt, &mut rng));
+            if lo.abs() > hi.abs() {
+                std::mem::swap(&mut hi, &mut lo);
+            }
+            let a = gen_interesting(&fmt, &mut rng);
+            if !(hi + lo + a).is_finite() {
+                return Ok(());
+            }
+            let pair = grow(&fmt, Expansion::new(hi, lo), a);
+            let n2 = grow_n(&fmt, ExpansionN::new([hi, lo]), a);
+            if pair.hi.to_bits() == n2.c[0].to_bits() && pair.lo.to_bits() == n2.c[1].to_bits() {
+                Ok(())
+            } else {
+                Err(format!("{} grow({hi:e},{lo:e},{a:e}): pair {pair:?} != n {n2:?}", fmt.name))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_n2_scaling_and_mul_bitwise_match_pair_algebra() {
+    check_msg(
+        "scaling_n/mul_n::<2> == scaling/mul",
+        fmt_and_rng,
+        |&(fmt, seed)| {
+            let mut rng = Rng::new(seed, 1);
+            let (mut hi, mut lo) = (gen_interesting(&fmt, &mut rng), gen_interesting(&fmt, &mut rng));
+            if lo.abs() > hi.abs() {
+                std::mem::swap(&mut hi, &mut lo);
+            }
+            let v = gen_interesting(&fmt, &mut rng);
+            let s_pair = scaling(&fmt, Expansion::new(hi, lo), v);
+            let s_n = scaling_n(&fmt, ExpansionN::new([hi, lo]), v);
+            let nan = s_pair.hi.is_nan() || s_n.c[0].is_nan();
+            if !nan
+                && (s_pair.hi.to_bits() != s_n.c[0].to_bits()
+                    || s_pair.lo.to_bits() != s_n.c[1].to_bits())
+            {
+                return Err(format!(
+                    "{} scaling({hi:e},{lo:e};{v:e}): pair {s_pair:?} != n {s_n:?}",
+                    fmt.name
+                ));
+            }
+            let (mut bh, mut bl) =
+                (gen_interesting(&fmt, &mut rng), gen_interesting(&fmt, &mut rng));
+            if bl.abs() > bh.abs() {
+                std::mem::swap(&mut bh, &mut bl);
+            }
+            let m_pair = mul(&fmt, Expansion::new(hi, lo), Expansion::new(bh, bl));
+            let m_n = mul_n(&fmt, ExpansionN::new([hi, lo]), ExpansionN::new([bh, bl]));
+            let nan = m_pair.hi.is_nan() || m_n.c[0].is_nan();
+            if !nan
+                && (m_pair.hi.to_bits() != m_n.c[0].to_bits()
+                    || m_pair.lo.to_bits() != m_n.c[1].to_bits())
+            {
+                return Err(format!(
+                    "{} mul(({hi:e},{lo:e}),({bh:e},{bl:e})): pair {m_pair:?} != n {m_n:?}",
+                    fmt.name
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn split_scalar_n2_matches_pair_split() {
+    for fmt in &FORMATS {
+        for x in [0.999f64, 0.95, 0.9997, -0.123, 200.1, 1e-5, 0.0] {
+            let pair = Expansion::split_scalar(fmt, x);
+            let n2 = ExpansionN::<2>::split_scalar(fmt, x);
+            assert_eq!(pair.hi.to_bits(), n2.c[0].to_bits(), "{} split({x})", fmt.name);
+            assert_eq!(pair.lo.to_bits(), n2.c[1].to_bits(), "{} split({x})", fmt.name);
+            // The Expansion <-> ExpansionN<2> conversions are the identity.
+            let e: ExpansionN<2> = pair.into();
+            let back: Expansion = e.into();
+            assert_eq!(back, pair, "{} conversion roundtrip", fmt.name);
+        }
+        // The length-3 split captures strictly more of the scalar.
+        let s2 = ExpansionN::<2>::split_scalar(fmt, 0.9997);
+        let s3 = ExpansionN::<3>::split_scalar(fmt, 0.9997);
+        assert!(
+            (s3.value() - 0.9997).abs() <= (s2.value() - 0.9997).abs(),
+            "{}: len-3 split worse than len-2",
+            fmt.name
+        );
+    }
+}
+
+#[test]
+fn prop_grow3_components_ordered_and_nonoverlapping() {
+    check_msg(
+        "grow_n::<3> nonoverlap",
+        fmt_and_rng,
+        |&(fmt, seed)| {
+            let mut rng = Rng::new(seed, 2);
+            let (hi, lo1, lo2) = gen_triple(&fmt, &mut rng);
+            let mut a = gen_interesting(&fmt, &mut rng);
+            if a.abs() > hi.abs() {
+                a = fmt.round_nearest(hi * 0.25);
+            }
+            let e = grow_n(&fmt, ExpansionN::new([hi, lo1, lo2]), a);
+            if saturated(&fmt, &e) || e.c[0] == 0.0 {
+                return Ok(());
+            }
+            // Catastrophic cancellation (hi + a collapsing to a much
+            // smaller value) can leave the old low words one grow away
+            // from fully compacted — a one-pass-renorm limitation shared
+            // with the pair algebra.  The value stays exact (the
+            // exactness property below covers these inputs); the
+            // nonoverlap claim holds when the leading term survives.
+            if (e.c[0].abs() as f64) < hi.abs() as f64 / 8.0 {
+                return Ok(());
+            }
+            for i in 0..2 {
+                if e.c[i] != 0.0 && e.c[i + 1].abs() as f64 > fmt.ulp(e.c[i]) {
+                    return Err(format!(
+                        "{}: overlap c[{i}]={:e} c[{}]={:e} ulp={:e} (in {hi:e},{lo1:e},{lo2:e} + {a:e})",
+                        fmt.name,
+                        e.c[i],
+                        i + 1,
+                        e.c[i + 1],
+                        fmt.ulp(e.c[i])
+                    ));
+                }
+                if e.c[i].abs() < e.c[i + 1].abs() {
+                    return Err(format!("{}: order broken {:?}", fmt.name, e.c));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grow3_value_exact_to_bottom_word() {
+    // The whole point of a third component: Grow's unrecovered rounding
+    // drops from ~ulp(hi) (pair algebra) to ~ulp of the *bottom* word —
+    // measured bound ulp(c0)·2^(−m−2), asserted with 8x headroom.
+    check_msg(
+        "grow_n::<3> exactness",
+        fmt_and_rng,
+        |&(fmt, seed)| {
+            let mut rng = Rng::new(seed, 3);
+            let (hi, lo1, lo2) = gen_triple(&fmt, &mut rng);
+            let mut a = gen_interesting(&fmt, &mut rng);
+            if a.abs() > hi.abs() {
+                a = fmt.round_nearest(hi * 0.25);
+            }
+            let e = grow_n(&fmt, ExpansionN::new([hi, lo1, lo2]), a);
+            if saturated(&fmt, &e) || e.c[0] == 0.0 {
+                return Ok(());
+            }
+            let truth = hi as f64 + lo1 as f64 + lo2 as f64 + a as f64;
+            let err = (e.value() - truth).abs();
+            let bound = fmt.ulp(e.c[0]) * 2f64.powi(-(fmt.mantissa_bits as i32) + 1);
+            if err <= bound.max(truth.abs() * 1e-7) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{}: err {err:e} > bound {bound:e} (truth {truth:e}, e {:?})",
+                    fmt.name, e.c
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn renormalize_absorbs_overlapping_inputs() {
+    // Feed deliberately overlapping terms; the output must satisfy the
+    // ordering invariant and preserve the exact sum where f64 is exact.
+    for fmt in &FORMATS {
+        let one = fmt.round_nearest(1.0);
+        let u = fmt.ulp(one) as f32;
+        let t = [one, one, u]; // wildly overlapping
+        let e = renormalize(fmt, t);
+        assert!(
+            (e.value() - (2.0 + u as f64)).abs() <= fmt.ulp(e.c[0]),
+            "{}: renorm value {} != {}",
+            fmt.name,
+            e.value(),
+            2.0 + u as f64
+        );
+        assert!(e.c[0].abs() >= e.c[1].abs() && e.c[1].abs() >= e.c[2].abs());
+    }
+}
+
+#[test]
+fn grow3_accumulates_where_pair_freezes() {
+    // The fp8 headline (mirrors the paper's 200 + 0.1 bf16 example one
+    // level deeper): θ = 16 on E4M3's ulp = 2 grid, updates of 0.02.  The
+    // pair's δθ word freezes near 0.5 (its own ulp outgrows the update);
+    // the length-3 expansion keeps absorbing into δθ₂.
+    let fmt = FP8E4M3;
+    let dt = fmt.round_nearest(0.02);
+    let mut pair = Expansion::new(16.0, 0.0);
+    let mut three = ExpansionN::<3>::new([16.0, 0.0, 0.0]);
+    for _ in 0..600 {
+        pair = grow(&fmt, pair, dt);
+        three = grow_n(&fmt, three, dt);
+    }
+    let truth = 16.0 + 600.0 * dt as f64;
+    assert!(
+        (pair.value() - truth).abs() > 5.0,
+        "pair unexpectedly tracked the sum: {} vs {truth}",
+        pair.value()
+    );
+    assert!(
+        (three.value() - truth).abs() < 0.1,
+        "length-3 drifted: {} vs {truth}",
+        three.value()
+    );
+}

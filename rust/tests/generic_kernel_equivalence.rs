@@ -128,6 +128,53 @@ fn sharded_matches_oracle_workers_8() {
 }
 
 #[test]
+fn length3_and_delta_scale_fused_match_oracle_all_sizes_and_workers() {
+    // The new rows of the plan space get the full matrix: every size that
+    // stresses the chunk grid × every worker count, for length-3 schemes
+    // and loss-scaled δθ plans (including scaled length-3) — fused kernels
+    // bitwise-equal to the scalar oracle throughout.
+    let plans = [
+        PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3),
+        PrecisionPlan::new(FP8E5M2, Scheme::CollagePlus3),
+        PrecisionPlan::new(FP16, Scheme::CollageLight3),
+        PrecisionPlan::new(FP8E4M3, Scheme::CollageLight).with_delta_scale(8).unwrap(),
+        PrecisionPlan::new(FP8E4M3, Scheme::CollagePlus).with_delta_scale(6).unwrap(),
+        PrecisionPlan::new(FP8E5M2, Scheme::CollageLight3).with_delta_scale(8).unwrap(),
+    ];
+    for plan in plans {
+        for n in [1usize, 1023, 4097] {
+            for workers in [1usize, 2, 8] {
+                compare_paths(plan, n, workers, 2);
+            }
+        }
+    }
+    // The multi-chunk size (exercises the index-ordered combine) for a
+    // representative of each new kernel family.
+    for plan in [
+        PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3),
+        PrecisionPlan::new(FP16, Scheme::CollagePlus3),
+        PrecisionPlan::new(FP8E4M3, Scheme::CollageLight).with_delta_scale(8).unwrap(),
+        PrecisionPlan::new(FP8E5M2, Scheme::CollagePlus).with_delta_scale(6).unwrap(),
+    ] {
+        for workers in [1usize, 2, 8] {
+            compare_paths(plan, 40_000, workers, 2);
+        }
+    }
+}
+
+#[test]
+fn length3_bf16_row_routes_to_generic_kernels_and_matches_oracle() {
+    // Length-3 schemes have no legacy bf16 Strategy: at bf16 storage they
+    // must route through the format-generic path and still match the
+    // oracle bitwise (kernel_equivalence.rs stays untouched because no
+    // legacy plan changed).
+    use collage::numerics::format::BF16;
+    let plan = PrecisionPlan::new(BF16, Scheme::CollagePlus3);
+    assert_eq!(plan.as_strategy(), None);
+    compare_paths(plan, 4097, 4, 3);
+}
+
+#[test]
 fn step_reference_routes_off_row_plans_to_the_oracle() {
     // AdamW::step_reference is the one reference entry point for every
     // plan: off the bf16 row it must agree with GenericAdamW bitwise.
