@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Self-test for the bench regression gate (check_bench_regression.py).
+
+The gate protects every PR's fused-kernel performance; this suite protects
+the gate.  It commits the five hand-verified scenarios from the gate's
+original review as executable checks, run in CI via
+``python3 -m unittest discover -s scripts`` — so a behavior change in the
+gate fails the build instead of silently weakening (or over-tightening)
+the kernel gate.
+
+Scenarios:
+  1. identical baseline/candidate          -> OK (exit 0)
+  2. regression beyond tolerance+abs-floor -> FAIL (exit 1)
+  3. small absolute regression under floor -> OK (the noise allowance)
+  4. baseline row missing from candidate   -> FAIL; --allow-missing -> OK
+  5. zero row overlap (schema drift)       -> distinct failure (exit 2)
+plus: candidate-only rows never fail the gate (adding kernels is free).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "check_bench_regression.py")
+
+
+def bench_doc(strategies=None, formats=None):
+    """Build a minimal bench JSON document in the gate's schema."""
+    doc = {"table7": {"strategies": {}}, "generic_formats": {}}
+    for name, ns in (strategies or {}).items():
+        doc["table7"]["strategies"][name] = {"fused_ns_per_elem": ns}
+    for name, ns in (formats or {}).items():
+        doc["generic_formats"][name] = {"fused_ns_per_elem": ns}
+    return doc
+
+
+class GateTest(unittest.TestCase):
+    def run_gate(self, baseline, candidate, *args):
+        """Write the two docs to temp files and run the gate; returns
+        (exit_code, stdout+stderr)."""
+        with tempfile.TemporaryDirectory() as td:
+            bpath = os.path.join(td, "baseline.json")
+            cpath = os.path.join(td, "candidate.json")
+            with open(bpath, "w") as f:
+                json.dump(baseline, f)
+            with open(cpath, "w") as f:
+                json.dump(candidate, f)
+            proc = subprocess.run(
+                [sys.executable, SCRIPT, bpath, cpath, *args],
+                capture_output=True, text=True)
+        return proc.returncode, proc.stdout + proc.stderr
+
+    def test_identical_runs_pass(self):
+        doc = bench_doc({"collage-plus": 8.0, "bf16": 3.0},
+                        {"fp8e4m3/light": 12.0})
+        code, out = self.run_gate(doc, doc)
+        self.assertEqual(code, 0, out)
+        self.assertIn("bench gate: OK", out)
+
+    def test_large_regression_fails(self):
+        base = bench_doc({"collage-plus": 8.0})
+        cand = bench_doc({"collage-plus": 20.0})  # +150%, +12 ns
+        code, out = self.run_gate(base, cand, "--tolerance", "0.25")
+        self.assertEqual(code, 1, out)
+        self.assertIn("REGRESSION", out)
+        self.assertIn("collage-plus", out)
+
+    def test_small_absolute_regression_is_noise(self):
+        # +100% relative but only +1 ns absolute: under the default 2 ns
+        # floor this is CI-timer noise, not a regression.
+        base = bench_doc({"bf16": 1.0})
+        cand = bench_doc({"bf16": 2.0})
+        code, out = self.run_gate(base, cand, "--tolerance", "0.25")
+        self.assertEqual(code, 0, out)
+        # ...but an explicit lower floor must catch the same delta.
+        code, out = self.run_gate(base, cand, "--tolerance", "0.25",
+                                  "--abs-floor", "0.5")
+        self.assertEqual(code, 1, out)
+
+    def test_missing_row_fails_unless_allowed(self):
+        base = bench_doc({"collage-plus": 8.0, "bf16": 3.0})
+        cand = bench_doc({"collage-plus": 8.0})
+        code, out = self.run_gate(base, cand)
+        self.assertEqual(code, 1, out)
+        self.assertIn("MISSING", out)
+        code, out = self.run_gate(base, cand, "--allow-missing")
+        self.assertEqual(code, 0, out)
+        self.assertIn("skipped", out)
+
+    def test_zero_overlap_is_a_distinct_failure(self):
+        # Schema drift (all keys renamed) must fail loudly with its own
+        # exit code, never pass as a vacuous comparison.
+        base = bench_doc({"collage-plus": 8.0})
+        cand = bench_doc(formats={"fp8e4m3/light": 8.0})
+        code, out = self.run_gate(base, cand)
+        self.assertEqual(code, 2, out)
+        self.assertIn("no comparable", out)
+
+    def test_candidate_only_rows_never_fail(self):
+        # Adding kernels (new strategies/formats in the bench) must not
+        # break the gate — they are reported, then gated once the baseline
+        # is refreshed.
+        base = bench_doc({"collage-plus": 8.0})
+        cand = bench_doc({"collage-plus": 8.0,
+                          "collage-light+delta-scale=auto": 9.0})
+        code, out = self.run_gate(base, cand)
+        self.assertEqual(code, 0, out)
+        self.assertIn("not yet in the baseline", out)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -45,6 +45,15 @@ impl Checkpoint {
                     self.state.names().iter().map(|&n| Value::Str(n.to_string())).collect(),
                 ),
             );
+            // Adaptive delta-scale controller state (auto plans only): the
+            // live exponent + clean-step counter, so resume is
+            // bit-identical to an uninterrupted run.
+            if let Some(ctrl) = self.state.delta_ctrl() {
+                let mut c = Obj::new();
+                c.insert("k", ctrl.k as u64);
+                c.insert("good_steps", ctrl.good_steps as u64);
+                header.insert("delta_ctrl", Value::Obj(c));
+            }
             let header_text = Value::Obj(header).dump();
             f.write_all(MAGIC)?;
             f.write_all(&(header_text.len() as u64).to_le_bytes())?;
@@ -92,7 +101,18 @@ impl Checkpoint {
                     .collect(),
             );
         }
-        let state = OptimState::from_vecs_plan(plan, vecs)?;
+        let mut state = OptimState::from_vecs_plan(plan, vecs)?;
+        if let Some(c) = header.opt("delta_ctrl") {
+            // Range-check before narrowing: a truncating `as` cast would
+            // let a corrupt header (k = 261 → 5) slip past the policy
+            // bounds validation and reinterpret the stored δθ words
+            // through the wrong exponent.
+            let k = u8::try_from(c.get("k")?.as_i64()?)
+                .map_err(|_| anyhow::anyhow!("corrupt delta_ctrl.k in {path:?}"))?;
+            let good_steps = u32::try_from(c.get("good_steps")?.as_i64()?)
+                .map_err(|_| anyhow::anyhow!("corrupt delta_ctrl.good_steps in {path:?}"))?;
+            state.restore_delta_ctrl(k, good_steps)?;
+        }
         Ok(Checkpoint { step, model, state })
     }
 }
@@ -163,6 +183,41 @@ mod tests {
             back.state.names(),
             ["theta", "dtheta_c", "dtheta_c2", "m", "v", "dv", "dv2"]
         );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_auto_plan_controller_state() {
+        // Auto plans persist the live controller state (k, good_steps) in
+        // the header; load must restore it exactly — even mid-backoff,
+        // when k differs from the plan's k0.
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::Scheme;
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3)
+            .with_auto_delta_scale(8)
+            .unwrap();
+        let theta: Vec<f32> = (0..16).map(|i| FP8E4M3.round_nearest(i as f32)).collect();
+        let mut state = OptimState::init_plan(plan, &theta);
+        state.restore_delta_ctrl(5, 13).unwrap();
+        let ck = Checkpoint { step: 60, model: "proxy".into(), state };
+        let dir = std::env::temp_dir().join("collage_test_ckpt_auto");
+        let path = dir.join("c.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.state.plan, plan);
+        assert!(back.state.plan.delta_auto);
+        let ctrl = back.state.delta_ctrl().expect("auto plan must restore a controller");
+        assert_eq!((ctrl.k, ctrl.good_steps), (5, 13));
+        assert_eq!(back.state.delta_k(), 5);
+        // A plan without a controller keeps None (no delta_ctrl header).
+        let plain = Checkpoint {
+            step: 1,
+            model: "proxy".into(),
+            state: OptimState::init(Strategy::CollageLight, &theta),
+        };
+        let p2 = dir.join("p.ckpt");
+        plain.save(&p2).unwrap();
+        assert!(Checkpoint::load(&p2).unwrap().state.delta_ctrl().is_none());
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -238,6 +238,31 @@ mod tests {
     }
 
     #[test]
+    fn json_roundtrip_auto_delta_scale_plans() {
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::Scheme;
+        let mut cfg = RunConfig::default();
+        cfg.plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3)
+            .with_auto_delta_scale(8)
+            .unwrap();
+        let v = cfg.to_json();
+        assert_eq!(
+            v.get("strategy").unwrap().as_str().unwrap(),
+            "collage-light-3@fp8e4m3+delta-scale=auto"
+        );
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(back.plan, cfg.plan);
+        assert!(back.plan.delta_auto);
+        // Pinned k0 spelling round-trips too.
+        cfg.plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+            .with_auto_delta_scale(3)
+            .unwrap();
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.plan, cfg.plan);
+        assert_eq!((back.plan.delta_auto, back.plan.delta_scale), (true, 3));
+    }
+
+    #[test]
     fn missing_optionals_use_defaults() {
         // Pre-plan config file: no format/scheme keys, legacy strategy str.
         let v = Value::parse(r#"{"model": "tiny", "strategy": "a", "steps": 7}"#).unwrap();

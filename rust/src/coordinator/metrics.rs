@@ -25,6 +25,13 @@ pub struct StepRow {
     pub val_loss: f64,
     /// Wall-clock seconds for this step.
     pub step_time: f64,
+    /// Delta-scale exponent in effect for this step (0 = scaling off; the
+    /// adaptive controller's live k on `+delta-scale=auto` plans).
+    pub delta_k: u8,
+    /// Scaled δθ words that clipped at ±max_finite this step.
+    pub delta_saturated: u64,
+    /// Exact Δθ that rounded to zero before the expansion saw it.
+    pub delta_underflow: u64,
 }
 
 impl StepRow {
@@ -47,7 +54,8 @@ impl StepRow {
 }
 
 pub const CSV_HEADER: &str = "step,loss,ppl,lr,grad_norm,param_norm,update_norm,\
-eff_update_norm,edq,edq_ratio,lost_frac,clip_coef,val_loss,val_ppl,step_time";
+eff_update_norm,edq,edq_ratio,lost_frac,clip_coef,val_loss,val_ppl,step_time,\
+delta_k,delta_saturated,delta_underflow";
 
 /// Accumulating metrics log.
 #[derive(Debug, Default, Clone)]
@@ -144,7 +152,7 @@ impl MetricsLog {
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{:.6},{:.4},{:.3e},{:.4},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.3},{:.6},{:.4},{:.4}",
+                "{},{:.6},{:.4},{:.3e},{:.4},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.3},{:.6},{:.4},{:.4},{},{},{}",
                 r.step,
                 r.loss,
                 r.perplexity(),
@@ -160,6 +168,9 @@ impl MetricsLog {
                 r.val_loss,
                 r.val_perplexity(),
                 r.step_time,
+                r.delta_k,
+                r.delta_saturated,
+                r.delta_underflow,
             )?;
         }
         Ok(())

@@ -137,10 +137,16 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
             clip_coef: 1.0,
             val_loss: f64::NAN,
             step_time: t0.elapsed().as_secs_f64(),
+            delta_k: stats.delta_k,
+            delta_saturated: stats.delta_saturated,
+            delta_underflow: stats.delta_underflow,
         };
         if cfg.log_every > 0 && t % cfg.log_every == 0 {
+            // Delta-scaled plans log the controller's view every logged
+            // step: the exponent in effect + the two counters driving it.
+            let ds = stats.delta_log_suffix();
             println!(
-                "[{t}/{}] loss={:.4e} lr={:.2e} edq={:.4} lost={:.1}% ‖θ‖={:.3}",
+                "[{t}/{}] loss={:.4e} lr={:.2e} edq={:.4} lost={:.1}% ‖θ‖={:.3}{ds}",
                 cfg.steps,
                 row.loss,
                 row.lr,

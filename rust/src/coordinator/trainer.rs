@@ -226,6 +226,11 @@ impl Trainer {
             clip_coef: metrics[metric_idx::CLIP_COEF] as f64,
             val_loss: f64::NAN,
             step_time: t0.elapsed().as_secs_f64(),
+            // The AOT artifacts cover only the bf16 row, which never
+            // carries a delta scale.
+            delta_k: 0,
+            delta_saturated: 0,
+            delta_underflow: 0,
         };
         Ok(row)
     }

@@ -10,8 +10,10 @@
 //!
 //! The grid carries the **length-2 vs length-3** comparison head-to-head
 //! (`collage-light` / `collage-light-3`, `collage-plus` /
-//! `collage-plus-3`) plus loss-scaled δθ rows
-//! (`collage-light+delta-scale=8`) at the fp8 formats, so
+//! `collage-plus-3`) plus loss-scaled δθ rows at the fp8 formats — both
+//! the static exponent (`collage-light+delta-scale=8`) and the adaptive
+//! controller (`collage-light+delta-scale=auto`), demonstrating that the
+//! self-tuning exponent matches the hand-tuned one — so
 //! `collage experiment fp8 --quick` reproduces the freeze comparison from
 //! one command and lands it in `fp8_grid.csv`.
 
@@ -43,7 +45,8 @@ const DS_EXP: u8 = 8;
 
 /// The plan column for one grid row: the scheme rows at `fmt`, plus — at
 /// the 8-bit formats, where the swamping/underflow regimes actually bite —
-/// the loss-scaled δθ variants.
+/// the loss-scaled δθ variants (static exponent AND the adaptive
+/// controller, side by side).
 fn grid_plans(fmt: FloatFormat) -> Vec<PrecisionPlan> {
     let mut plans: Vec<PrecisionPlan> =
         GRID_SCHEMES.iter().map(|&s| PrecisionPlan::new(fmt, s)).collect();
@@ -58,18 +61,25 @@ fn grid_plans(fmt: FloatFormat) -> Vec<PrecisionPlan> {
                 .with_delta_scale(DS_EXP)
                 .expect("light-3 is MCF"),
         );
+        plans.push(
+            PrecisionPlan::new(fmt, Scheme::CollageLight)
+                .with_auto_delta_scale(DS_EXP)
+                .expect("light is MCF"),
+        );
+        plans.push(
+            PrecisionPlan::new(fmt, Scheme::CollageLight3)
+                .with_auto_delta_scale(DS_EXP)
+                .expect("light-3 is MCF"),
+        );
     }
     plans
 }
 
 /// The scheme column label: the plan spelling minus its `@format` half
-/// (`collage-light-3`, `collage-light+delta-scale=8`, ...).
+/// (`collage-light-3`, `collage-light+delta-scale=8`,
+/// `collage-light+delta-scale=auto`, ...).
 fn scheme_label(plan: &PrecisionPlan) -> String {
-    let mut label = plan.scheme.name().to_string();
-    if plan.delta_scale != 0 {
-        label.push_str(&format!("+delta-scale={}", plan.delta_scale));
-    }
-    label
+    format!("{}{}", plan.scheme.name(), plan.delta_suffix())
 }
 
 /// Run the grid; prints the format-generalized Table 2 first, then the
@@ -140,8 +150,9 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let t = fp8(&dir, true).unwrap();
         let rendered = t.render();
-        // 4 formats × 6 schemes + 2 delta-scale rows at each fp8 format.
-        let rows = 4 * GRID_SCHEMES.len() + 4;
+        // 4 formats × 6 schemes + 4 delta-scale rows (2 static + 2 auto)
+        // at each fp8 format.
+        let rows = 4 * GRID_SCHEMES.len() + 8;
         assert!(rendered.lines().count() >= rows, "{rendered}");
         let csv = std::fs::read_to_string(dir.join("fp8_grid.csv")).unwrap();
         assert_eq!(csv.lines().count(), 1 + rows, "csv:\n{csv}");
@@ -149,9 +160,14 @@ mod tests {
         assert!(csv.contains("fp8e4m3,collage-light,"));
         assert!(csv.contains("fp8e4m3,collage-light-3,"));
         assert!(csv.contains("fp8e4m3,collage-plus-3,"));
-        // ...and the loss-scaled rows only at the 8-bit formats.
+        // ...and the loss-scaled rows only at the 8-bit formats — static
+        // exponent and the adaptive controller side by side.
         assert!(csv.contains("fp8e4m3,collage-light+delta-scale=8,"));
         assert!(csv.contains("fp8e5m2,collage-light-3+delta-scale=8,"));
+        assert!(csv.contains("fp8e4m3,collage-light+delta-scale=auto,"));
+        assert!(csv.contains("fp8e4m3,collage-light-3+delta-scale=auto,"));
+        assert!(csv.contains("fp8e5m2,collage-light+delta-scale=auto,"));
+        assert!(csv.contains("fp8e5m2,collage-light-3+delta-scale=auto,"));
         assert!(!csv.contains("bf16,collage-light+delta-scale"));
         std::fs::remove_dir_all(dir).ok();
     }

@@ -25,7 +25,7 @@
 //! |---|---|---|
 //! | [`numerics`] | [`numerics::format`]: format descriptors + the RN-even rounding contract with bit-parallel fast paths; [`numerics::round`]: directed/stochastic rounding; [`numerics::expansion`]: the MCF algebra (TwoSum, Fast2Sum, Grow, Mul); [`numerics::analysis`]: effective-descent-quality metrics | Table 9; App. B; §4.1 / App. C (MCF); Defs. 3.1–3.3 (EDQ, lost updates) |
 //! | [`tensor`] | semantic dtypes (storage format vs f32 container) | §2.2 |
-//! | [`optim`] | [`optim::plan`]: the `PrecisionPlan {format, scheme}` plan space and its string grammar; [`optim::strategy`]: the legacy bf16 row; [`optim::adamw`] + [`optim::kernels`]: fused single-pass AdamW chunk kernels (SIMD bf16 lanes, format-generic rows, streamed diagnostics, bit-deterministic sharding); [`optim::generic`]: the scalar oracle; [`optim::state`]: state vectors + checkpoint layout | Alg. 2; Table 2 (options A/B/C/D); §4.2 (β₂ expansion); §6 (8-bit extension) |
+//! | [`optim`] | [`optim::plan`]: the `PrecisionPlan {format, scheme}` plan space and its string grammar; [`optim::strategy`]: the legacy bf16 row; [`optim::adamw`] + [`optim::kernels`]: fused single-pass AdamW chunk kernels (SIMD bf16 lanes, format-generic rows, streamed diagnostics incl. delta-scale saturation/underflow telemetry, bit-deterministic sharding); [`optim::delta_ctrl`]: the adaptive delta-scale controller (`+delta-scale=auto`); [`optim::generic`]: the scalar oracle; [`optim::state`]: state vectors + checkpoint layout | Alg. 2; Table 2 (options A/B/C/D); §4.2 (β₂ expansion); §6 (8-bit extension) |
 //! | [`util`] | [`util::threadpool`]: persistent worker pool with deterministic fixed-grid sharding; RNG, JSON, tables, benches, property testing | — |
 //! | [`model`] | transformer shapes + the analytic memory model | Tables 2/8/12 |
 //! | [`data`] | synthetic + GLUE-style corpora, deterministic batch iterator | §5 setup |

@@ -52,9 +52,13 @@ fn usage() -> String {
        inspect      show artifact manifest details\n\
        dp-train     threaded data-parallel training\n\n\
      Plans combine a scheme (--strategy) with a storage format (--format),\n\
-     optionally with loss-scaled δθ words (+delta-scale=<pow2>):\n\
+     optionally with loss-scaled δθ words — a static exponent\n\
+     (+delta-scale=<pow2>) or the adaptive controller (+delta-scale=auto,\n\
+     +delta-scale=auto:<k0>), which backs k off on saturation and grows it\n\
+     while updates underflow:\n\
        collage train --format fp8e4m3 --strategy collage-light-3\n\
-       collage train --strategy collage-light@fp8e4m3+delta-scale=8\n\n\
+       collage train --strategy collage-light@fp8e4m3+delta-scale=8\n\
+       collage train --strategy collage-light-3@fp8e4m3+delta-scale=auto\n\n\
      Run `collage <SUBCOMMAND> --help` for options.\n"
         .to_string()
 }
@@ -92,7 +96,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 "strategy",
                 "collage-plus",
                 "precision scheme (a|collage-light[-3]|collage-plus[-3]|dmw|d|kahan|sr|fp32, \
-                 a combined scheme@format, optionally +delta-scale=<pow2>)",
+                 a combined scheme@format, optionally +delta-scale=<pow2>|auto[:<k0>])",
             )
             .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
             .opt("steps", "200", "optimizer steps")
@@ -374,7 +378,7 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
         .opt(
             "strategy",
             "collage-plus",
-            "precision scheme (or scheme@format[+delta-scale=<pow2>])",
+            "precision scheme (or scheme@format[+delta-scale=<pow2>|auto[:<k0>]])",
         )
         .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
         .opt("workers", "4", "data-parallel worker count")
@@ -427,8 +431,9 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
         let shards: Vec<_> = iters.iter_mut().map(|it| it.next_batch()).collect();
         let r = dp.step(&shards, schedule.at(step) as f32)?;
         if log_every > 0 && step % log_every == 0 {
+            let ds = r.stats.delta_log_suffix();
             println!(
-                "[{step}/{steps}] loss={:.4} ppl={:.3} gnorm={:.3} edq={:.3} lost={:.1}%",
+                "[{step}/{steps}] loss={:.4} ppl={:.3} gnorm={:.3} edq={:.3} lost={:.1}%{ds}",
                 r.loss,
                 r.loss.exp(),
                 r.grad_norm,

@@ -52,6 +52,33 @@ pub struct StepStats {
     pub lost_frac: f64,
     /// ‖θ_eff‖₂ after the step (Fig. 2 left).
     pub param_norm: f64,
+    /// Scaled δθ words that clipped at ±max_finite this step (delta-scale
+    /// plans only; the adaptive controller's back-off signal).  Reduced on
+    /// the fixed `ACCUM_CHUNK` grid → bit-deterministic across workers.
+    pub delta_saturated: u64,
+    /// Elements whose exact Δθ ≠ 0 rounded to zero before the expansion
+    /// saw it (on scaled plans: even on the 2^k-finer δθ grid) — the
+    /// controller's grow signal.
+    pub delta_underflow: u64,
+    /// Delta-scale exponent in effect for this step (0 = scaling off).
+    pub delta_k: u8,
+}
+
+impl StepStats {
+    /// The ` k=… sat=… uflow=…` suffix delta-scaled runs append to their
+    /// progress lines (empty when scaling is off) — one definition shared
+    /// by the proxy trainer and `collage dp-train`, so their logs cannot
+    /// drift.  `delta_k` is ≥ 1 whenever a static or `auto` scale is
+    /// active (`auto` clamps k to ≥ 1).
+    pub fn delta_log_suffix(&self) -> String {
+        if self.delta_k == 0 {
+            return String::new();
+        }
+        format!(
+            " k={} sat={} uflow={}",
+            self.delta_k, self.delta_saturated, self.delta_underflow
+        )
+    }
 }
 
 impl AdamW {
@@ -364,7 +391,8 @@ impl AdamW {
             .count() as f64
             / n as f64;
         let pn = sum_sq_chunked(&new_eff).sqrt();
-        StepStats { edq: report, lost_frac: lost, param_norm: pn }
+        // bf16-row plans never carry a delta scale: counters stay zero.
+        StepStats { edq: report, lost_frac: lost, param_norm: pn, ..Default::default() }
     }
 }
 

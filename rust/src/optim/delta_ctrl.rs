@@ -1,0 +1,223 @@
+//! Adaptive delta-scale controller — dynamic-loss-scaling-style policy for
+//! the `+delta-scale=auto[:k0]` plans (the paper's §6 fp8 regime, made
+//! self-tuning).
+//!
+//! PR 4 showed a *static* `+delta-scale=<pow2>` suffix rescues the
+//! sub-subnormal-floor fp8 regime, but the right exponent depends on the
+//! run's update magnitudes, which drift over training.  This module closes
+//! the loop with the standard mixed-precision mechanism (Micikevicius et
+//! al., "Mixed Precision Training"): **back off** `k` when the scaled δθ
+//! words clip at the format's ±max_finite (the `delta_saturated` counter
+//! streamed by the fused kernels), **grow** `k` after a run of clean steps
+//! while exact updates still round to zero (`delta_underflow`).
+//!
+//! # Determinism contract
+//!
+//! The controller is part of the optimizer state and must never fork
+//! across resharding or checkpoint resume:
+//!
+//! * All state is integer (`k`, `good_steps`) and every decision compares
+//!   exact integer counters against exact integer thresholds
+//!   (`count × 1_000_000 > n × ppm` — no floating-point fractions).
+//! * The counters it consumes are reduced on the kernels' fixed
+//!   `ACCUM_CHUNK` grid, so they are bit-identical for any worker count,
+//!   and in data-parallel runs the leader steps one global state from
+//!   all-reduced gradients — every replica of the decision sees the same
+//!   inputs.
+//! * On a `k` transition the stored δθ words are rescaled **exactly** by
+//!   the power of two (elementwise, order-independent;
+//!   `OptimState::rescale_delta_words`), with the same
+//!   saturate-at-±max_finite semantics as the kernels' scaled store.
+//! * A grow is **vetoed** when doubling would clip any stored word — the
+//!   rescale would otherwise destroy captured update mass.  The veto scans
+//!   state that is itself bit-deterministic, so it cannot fork either.
+//!
+//! `k`, `good_steps` are persisted in the checkpoint header
+//! (`coordinator::checkpoint`), so an interrupted + resumed run follows
+//! the bit-identical trajectory of an uninterrupted one
+//! (`tests/delta_ctrl_checkpoint.rs`).
+
+use super::plan::MAX_DELTA_SCALE;
+use super::state::OptimState;
+
+/// Thresholds and bounds of the adaptation policy.  All comparisons are
+/// exact integer arithmetic (see the module docs' determinism contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeltaCtrlPolicy {
+    /// Smallest exponent the controller will back off to (≥ 1: `auto`
+    /// plans always keep the scaled-word kernels engaged).
+    pub k_min: u8,
+    /// Largest exponent growth may reach (the plan-grammar maximum).
+    pub k_max: u8,
+    /// Back off when `delta_saturated × 1_000_000 > n × sat_ppm`, where
+    /// `n` is the element count and `delta_saturated` counts clipped
+    /// *words* — so on multi-δθ-word schemes (length-3) each element can
+    /// contribute more than one count, backing off proportionally more
+    /// eagerly (more clipped words = more dropped update mass).  Default
+    /// 1000 ppm ≈ 0.1% of elements clipping one word each.
+    pub sat_ppm: u64,
+    /// Growth additionally requires
+    /// `delta_underflow × 1_000_000 > n × uflow_ppm` (default 0: any
+    /// persisting underflow at all justifies a finer grid).
+    pub uflow_ppm: u64,
+    /// Consecutive saturation-free steps before a grow is attempted
+    /// (the dynamic-loss-scaling "growth interval").
+    pub growth_interval: u32,
+}
+
+impl Default for DeltaCtrlPolicy {
+    fn default() -> Self {
+        DeltaCtrlPolicy {
+            k_min: 1,
+            k_max: MAX_DELTA_SCALE,
+            sat_ppm: 1_000,
+            uflow_ppm: 0,
+            growth_interval: 25,
+        }
+    }
+}
+
+/// Live controller state: the exponent in effect plus the clean-step
+/// counter.  Exactly this pair is persisted in checkpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeltaScaleCtrl {
+    /// Current delta-scale exponent (δθ words hold `2^k ×` their value).
+    pub k: u8,
+    /// Consecutive steps without a saturation trip.
+    pub good_steps: u32,
+    pub policy: DeltaCtrlPolicy,
+}
+
+/// One decided exponent change (`old_k` → `new_k`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transition {
+    pub old_k: u8,
+    pub new_k: u8,
+}
+
+impl DeltaScaleCtrl {
+    /// Fresh controller starting at `k0` (clamped into the policy bounds).
+    pub fn new(k0: u8) -> Self {
+        let policy = DeltaCtrlPolicy::default();
+        DeltaScaleCtrl {
+            k: k0.clamp(policy.k_min, policy.k_max),
+            good_steps: 0,
+            policy,
+        }
+    }
+
+    /// Consume one step's counters (`n` elements, `saturated` clipped δθ
+    /// words, `underflow` vanished exact updates) and decide whether `k`
+    /// changes for the *next* step.  Pure integer arithmetic; the caller
+    /// applies any returned [`Transition`] to the stored δθ words.
+    pub fn observe(&mut self, n: u64, saturated: u64, underflow: u64) -> Option<Transition> {
+        debug_assert!(n > 0, "observe needs the element count");
+        if saturated * 1_000_000 > n * self.policy.sat_ppm {
+            // Clipping: the scaled words are out of headroom — halve the
+            // scale (one exponent per step, the loss-scaling backoff).
+            self.good_steps = 0;
+            if self.k > self.policy.k_min {
+                let old_k = self.k;
+                self.k -= 1;
+                return Some(Transition { old_k, new_k: self.k });
+            }
+            return None;
+        }
+        self.good_steps = self.good_steps.saturating_add(1);
+        if self.good_steps >= self.policy.growth_interval
+            && underflow * 1_000_000 > n * self.policy.uflow_ppm
+        {
+            // A clean interval with updates still vanishing below the
+            // scaled grid: buy a finer grid.
+            self.good_steps = 0;
+            if self.k < self.policy.k_max {
+                let old_k = self.k;
+                self.k += 1;
+                return Some(Transition { old_k, new_k: self.k });
+            }
+        }
+        None
+    }
+}
+
+/// Post-step controller hook shared by the fused dispatcher
+/// (`kernels::fused_step`) and the scalar oracle (`GenericAdamW::step`):
+/// feed the step's counters to the state's controller (if the plan is
+/// `auto`) and apply any decided transition to the stored δθ words.
+/// A grow whose exact ×2 rescale would clip a stored word is vetoed
+/// (`k` reverts; the clean-step counter stays reset, so the attempt
+/// naturally retries a growth interval later).
+pub(crate) fn post_step(state: &mut OptimState, n: u64, saturated: u64, underflow: u64) {
+    let transition = match state.delta_ctrl_mut() {
+        Some(ctrl) => ctrl.observe(n, saturated, underflow),
+        None => return,
+    };
+    let Some(t) = transition else { return };
+    if t.new_k > t.old_k && state.delta_rescale_would_clip(t.old_k, t.new_k) {
+        state
+            .delta_ctrl_mut()
+            .expect("transition came from this controller")
+            .k = t.old_k;
+        return;
+    }
+    state.rescale_delta_words(t.old_k, t.new_k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_on_saturation_growth_on_persistent_underflow() {
+        let mut c = DeltaScaleCtrl::new(8);
+        // Clean steps with no underflow: nothing changes.
+        for _ in 0..100 {
+            assert_eq!(c.observe(1000, 0, 0), None);
+        }
+        assert_eq!(c.k, 8);
+        // Saturation above threshold: one exponent per trip, counter reset.
+        assert_eq!(c.observe(1000, 10, 0), Some(Transition { old_k: 8, new_k: 7 }));
+        assert_eq!(c.good_steps, 0);
+        // Below threshold (0.1% of 100_000 = 100; 1 word is clean).
+        assert_eq!(c.observe(100_000, 1, 0), None);
+        assert_eq!(c.k, 7);
+        // Persistent underflow: grows after exactly growth_interval clean
+        // steps (one was already banked by the clean observe above).
+        let interval = c.policy.growth_interval;
+        let mut grew_at = None;
+        for step in 1..=interval {
+            if let Some(t) = c.observe(1000, 0, 5) {
+                grew_at = Some((step, t));
+                break;
+            }
+        }
+        assert_eq!(grew_at, Some((interval - 1, Transition { old_k: 7, new_k: 8 })));
+        assert_eq!(c.good_steps, 0);
+    }
+
+    #[test]
+    fn k_clamps_at_policy_bounds() {
+        let mut c = DeltaScaleCtrl::new(1);
+        assert_eq!(c.k, 1); // k_min
+        assert_eq!(c.observe(10, 10, 0), None, "already at k_min");
+        assert_eq!(c.k, 1);
+        let mut c = DeltaScaleCtrl::new(MAX_DELTA_SCALE);
+        for _ in 0..(c.policy.growth_interval * 3) {
+            c.observe(10, 0, 10);
+        }
+        assert_eq!(c.k, MAX_DELTA_SCALE, "must not exceed k_max");
+        // Out-of-range k0 clamps instead of panicking.
+        assert_eq!(DeltaScaleCtrl::new(0).k, 1);
+        assert_eq!(DeltaScaleCtrl::new(200).k, MAX_DELTA_SCALE);
+    }
+
+    #[test]
+    fn decisions_are_exact_integer_ratios() {
+        // Exactly at the threshold is clean; one past it trips — no
+        // floating-point fraction anywhere near the boundary.
+        let mut c = DeltaScaleCtrl::new(8);
+        // sat_ppm = 1000: threshold is sat/n > 1/1000.
+        assert_eq!(c.observe(1_000_000, 1000, 0), None, "exactly 1000 ppm is clean");
+        assert!(c.observe(1_000_000, 1001, 0).is_some(), "1001 ppm trips");
+    }
+}

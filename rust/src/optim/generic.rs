@@ -17,7 +17,8 @@ use crate::numerics::format::FloatFormat;
 use crate::util::rng::Rng;
 
 use super::adamw::{AdamW, StepStats};
-use super::kernels::{sr_noise, sr_round_fmt, GenericScalars};
+use super::delta_ctrl;
+use super::kernels::{sr_noise, sr_round_fmt, DeltaTally, GenericScalars};
 use super::plan::{PrecisionPlan, Scheme};
 use super::state::OptimState;
 
@@ -84,14 +85,14 @@ impl GenericAdamW {
         }
     }
 
-    fn scalars(&self, lr: f32, t: u64) -> GenericScalars {
+    fn scalars_with_k(&self, lr: f32, t: u64, k: u8) -> GenericScalars {
         let opt = AdamW {
             beta1: self.beta1,
             beta2: self.beta2,
             eps: self.eps,
             weight_decay: self.weight_decay,
         };
-        GenericScalars::new(self.plan, &opt, lr, t)
+        GenericScalars::new_with_k(self.plan, &opt, lr, t, k)
     }
 
     /// One scalar-oracle step; `g` must be format-representable.  `t` is
@@ -109,14 +110,18 @@ impl GenericAdamW {
         debug_assert_eq!(plan, self.plan, "state plan mismatch");
         let n = state.n;
         assert_eq!(g.len(), n, "gradient length mismatch");
-        let s = self.scalars(lr, t);
+        // The delta-scale exponent in effect: the controller's live k for
+        // `auto` plans — exactly what the fused dispatcher injects.
+        let k_ds = state.delta_k();
+        let s = self.scalars_with_k(lr, t, k_ds);
         let fmt = plan.format;
         let rn = |x: f64| fmt.round_nearest_f64(x);
         let sr_key = match plan.scheme {
             Scheme::StochasticRounding => rng.next_u64(),
             _ => 0,
         };
-        let scaled = plan.delta_scale != 0;
+        let scaled = k_ds != 0;
+        let mut tally = DeltaTally::default();
 
         // Snapshot the effective parameter for EDQ: the evaluated
         // expansion for MCF schemes (any component count, delta-scale
@@ -150,13 +155,20 @@ impl GenericAdamW {
                     let (m_new, g2) = s.moments_m_g2(vecs[2][k], g[k]);
                     let v_new = s.moment_v_plain(vecs[3][k], g2);
                     if scaled {
-                        let (hi, lo, dt) =
-                            s.apply_theta2_scaled(vecs[0][k], vecs[1][k], m_new, v_new as f64);
+                        let (hi, lo, dt) = s.apply_theta2_scaled(
+                            vecs[0][k],
+                            vecs[1][k],
+                            m_new,
+                            v_new as f64,
+                            &mut tally,
+                        );
                         dtheta[k] = dt;
                         vecs[0][k] = hi;
                         vecs[1][k] = lo;
                     } else {
-                        let dt = s.delta_theta(vecs[0][k], m_new, v_new as f64);
+                        let dtx = s.delta_exact(vecs[0][k], m_new, v_new as f64);
+                        let dt = fmt.round_nearest_f64(dtx);
+                        tally.underflow += (dtx != 0.0 && dt == 0.0) as u64;
                         dtheta[k] = dt;
                         let e = grow(&fmt, Expansion::new(vecs[0][k], vecs[1][k]), dt);
                         vecs[0][k] = e.hi;
@@ -171,8 +183,14 @@ impl GenericAdamW {
                 for k in 0..n {
                     let (m_new, g2) = s.moments_m_g2(vecs[3][k], g[k]);
                     let v_new = s.moment_v_plain(vecs[4][k], g2);
-                    let (hi, lo1, lo2, dt) =
-                        s.apply_theta3(vecs[0][k], vecs[1][k], vecs[2][k], m_new, v_new as f64);
+                    let (hi, lo1, lo2, dt) = s.apply_theta3(
+                        vecs[0][k],
+                        vecs[1][k],
+                        vecs[2][k],
+                        m_new,
+                        v_new as f64,
+                        &mut tally,
+                    );
                     dtheta[k] = dt;
                     vecs[0][k] = hi;
                     vecs[1][k] = lo1;
@@ -187,13 +205,20 @@ impl GenericAdamW {
                     let (m_new, g2) = s.moments_m_g2(vecs[2][k], g[k]);
                     let ve = s.moment_v_plus(vecs[3][k], vecs[4][k], g2);
                     if scaled {
-                        let (hi, lo, dt) =
-                            s.apply_theta2_scaled(vecs[0][k], vecs[1][k], m_new, ve.value());
+                        let (hi, lo, dt) = s.apply_theta2_scaled(
+                            vecs[0][k],
+                            vecs[1][k],
+                            m_new,
+                            ve.value(),
+                            &mut tally,
+                        );
                         dtheta[k] = dt;
                         vecs[0][k] = hi;
                         vecs[1][k] = lo;
                     } else {
-                        let dt = s.delta_theta(vecs[0][k], m_new, ve.value());
+                        let dtx = s.delta_exact(vecs[0][k], m_new, ve.value());
+                        let dt = fmt.round_nearest_f64(dtx);
+                        tally.underflow += (dtx != 0.0 && dt == 0.0) as u64;
                         dtheta[k] = dt;
                         let e = grow(&fmt, Expansion::new(vecs[0][k], vecs[1][k]), dt);
                         vecs[0][k] = e.hi;
@@ -209,8 +234,14 @@ impl GenericAdamW {
                 for k in 0..n {
                     let (m_new, g2) = s.moments_m_g2(vecs[3][k], g[k]);
                     let ve = s.moment_v_plus3(vecs[4][k], vecs[5][k], vecs[6][k], g2);
-                    let (hi, lo1, lo2, dt) =
-                        s.apply_theta3(vecs[0][k], vecs[1][k], vecs[2][k], m_new, ve.value());
+                    let (hi, lo1, lo2, dt) = s.apply_theta3(
+                        vecs[0][k],
+                        vecs[1][k],
+                        vecs[2][k],
+                        m_new,
+                        ve.value(),
+                        &mut tally,
+                    );
                     dtheta[k] = dt;
                     vecs[0][k] = hi;
                     vecs[1][k] = lo1;
@@ -306,7 +337,19 @@ impl GenericAdamW {
             .count() as f64
             / n as f64;
         let pn = sum_sq_chunked(&new_eff).sqrt();
-        StepStats { edq: report, lost_frac: lost, param_norm: pn }
+        let stats = StepStats {
+            edq: report,
+            lost_frac: lost,
+            param_norm: pn,
+            delta_saturated: tally.saturated,
+            delta_underflow: tally.underflow,
+            delta_k: k_ds,
+        };
+        // The same between-steps controller hook the fused dispatcher runs
+        // (no-op unless the plan is `+delta-scale=auto`) — keeping the two
+        // paths bit-identical through k transitions.
+        delta_ctrl::post_step(state, n as u64, tally.saturated, tally.underflow);
+        stats
     }
 }
 
@@ -515,6 +558,147 @@ mod tests {
             scaled < 16.0 - 1e-3,
             "delta-scale failed to capture sub-floor updates: θ_eff = {scaled}"
         );
+    }
+
+    /// The PR-4 stall regime (θ ≈ 16..20 on E4M3's ulp-2 grid, Adam steps
+    /// ~lr = 0.02): final mean-squared error after 600 steps under `plan`.
+    fn stall_regime_loss(plan: PrecisionPlan) -> (f64, OptimState) {
+        let mut rng = Rng::new(7, 0);
+        let fmt = plan.format;
+        let n = 256;
+        let target: Vec<f32> = (0..n)
+            .map(|_| fmt.round_nearest(16.0 + 4.0 * rng.f32()))
+            .collect();
+        let theta0: Vec<f32> = target.iter().map(|&x| x + 1.3).collect();
+        let opt = GenericAdamW::for_plan(plan, 0.95);
+        let mut st = OptimState::init_plan(plan, &theta0);
+        let mut srng = Rng::new(3, 3);
+        for t in 1..=600 {
+            let eff = st.theta_effective();
+            let g: Vec<f32> = eff
+                .iter()
+                .zip(&target)
+                .map(|(&e, &tg)| fmt.round_nearest((e - tg as f64) as f32))
+                .collect();
+            opt.step(&mut st, &g, 0.02, t, &mut srng);
+        }
+        let loss = st
+            .theta_effective()
+            .iter()
+            .zip(&target)
+            .map(|(&e, &t)| (e - t as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        (loss, st)
+    }
+
+    /// The PR-4 sub-subnormal-floor regime (Δθ ≈ −1e-4, below E4M3's
+    /// scaled-grid floor until k is large enough): final θ_eff[0] after
+    /// 400 steps (16.0 = fully frozen).
+    fn sub_floor_regime_theta(plan: PrecisionPlan) -> (f64, OptimState) {
+        let fmt = plan.format;
+        let opt = GenericAdamW::for_plan(plan, 0.95);
+        let mut st = OptimState::init_plan(plan, &[16.0; 32]);
+        let mut srng = Rng::new(1, 1);
+        let g = vec![fmt.round_nearest(0.5); 32];
+        for t in 1..=400 {
+            opt.step(&mut st, &g, 1e-4, t, &mut srng);
+        }
+        let theta = st.theta_effective()[0];
+        (theta, st)
+    }
+
+    #[test]
+    fn fp8_auto_delta_scale_grows_k_to_rescue_sub_floor_updates() {
+        // Start the controller from a deliberately-too-small k0 = 2: the
+        // exact update still vanishes on the 2²-finer grid, so underflow
+        // persists, and after each clean growth interval the controller
+        // steps k up until the updates register — no hand-tuning.
+        let fmt = FP8E4M3;
+        let plan = PrecisionPlan::new(fmt, Scheme::CollageLight)
+            .with_auto_delta_scale(2)
+            .unwrap();
+        let (theta, st) = sub_floor_regime_theta(plan);
+        let ctrl = st.delta_ctrl().expect("auto plan carries a controller");
+        assert!(ctrl.k > 2, "controller never grew: k = {}", ctrl.k);
+        assert!(
+            theta < 16.0 - 1e-3,
+            "auto delta-scale failed to capture sub-floor updates: θ_eff = {theta}"
+        );
+    }
+
+    #[test]
+    fn fp8_auto_delta_scale_matches_best_static_k_on_both_regimes() {
+        // The acceptance claim: the adaptive rows converge at least as
+        // well as the best hand-tuned static exponent on both PR-4
+        // regimes.
+        let fmt = FP8E4M3;
+        // Stall (swamping) regime — length-3 is the cure; the static k=8
+        // row was PR-4's best overall.  The controller starts at the same
+        // default and has no reason to move until convergence, so it must
+        // land in the same loss decade.
+        let static_plan = PrecisionPlan::new(fmt, Scheme::CollageLight3)
+            .with_delta_scale(8)
+            .unwrap();
+        let auto_plan = PrecisionPlan::new(fmt, Scheme::CollageLight3)
+            .with_auto_delta_scale(8)
+            .unwrap();
+        let (static_loss, _) = stall_regime_loss(static_plan);
+        let (auto_loss, _) = stall_regime_loss(auto_plan);
+        assert!(auto_loss < 1e-2, "auto stalled: {auto_loss:.4e}");
+        assert!(
+            auto_loss <= static_loss * 1.5 + 1e-12,
+            "auto ({auto_loss:.4e}) worse than best static ({static_loss:.4e})"
+        );
+        // Sub-floor regime — static k=12 was PR-4's hand-tuned rescue.
+        // Both capture updates until the single scaled word swamps; the
+        // stall displacement is scale-invariant, so auto must match it.
+        let static_plan = PrecisionPlan::new(fmt, Scheme::CollageLight)
+            .with_delta_scale(12)
+            .unwrap();
+        let auto_plan = PrecisionPlan::new(fmt, Scheme::CollageLight)
+            .with_auto_delta_scale(8)
+            .unwrap();
+        let (static_theta, _) = sub_floor_regime_theta(static_plan);
+        let (auto_theta, _) = sub_floor_regime_theta(auto_plan);
+        let static_drop = 16.0 - static_theta;
+        let auto_drop = 16.0 - auto_theta;
+        assert!(auto_theta < 16.0 - 1e-3, "auto frozen: θ_eff = {auto_theta}");
+        assert!(
+            auto_drop >= static_drop * 0.5,
+            "auto captured {auto_drop:.4e} vs static-12's {static_drop:.4e}"
+        );
+    }
+
+    #[test]
+    fn fp8_auto_delta_scale_backs_off_from_oversized_k0() {
+        // Start from a pathologically large k0 = 24 in the stall regime:
+        // every scaled word clips (0.02 × 2²⁴ ≫ 448), so the controller
+        // must walk k down one exponent per saturated step until the words
+        // fit — rescuing a configuration whose static spelling would clip
+        // away update mass forever.
+        let fmt = FP8E4M3;
+        let auto_plan = PrecisionPlan::new(fmt, Scheme::CollageLight3)
+            .with_auto_delta_scale(24)
+            .unwrap();
+        let (auto_loss, st) = stall_regime_loss(auto_plan);
+        let ctrl = st.delta_ctrl().unwrap();
+        assert!(
+            ctrl.k < 24,
+            "controller never backed off from the clipping regime"
+        );
+        st.check_representable().unwrap();
+        // The static k=24 spelling keeps clipping and stays far from
+        // convergence; adaptive must do strictly better.
+        let static_plan = PrecisionPlan::new(fmt, Scheme::CollageLight3)
+            .with_delta_scale(24)
+            .unwrap();
+        let (static_loss, _) = stall_regime_loss(static_plan);
+        assert!(
+            auto_loss < static_loss * 0.5,
+            "auto ({auto_loss:.4e}) should beat clipping static-24 ({static_loss:.4e})"
+        );
+        assert!(auto_loss < 1.0, "auto never recovered: {auto_loss:.4e}");
     }
 
     #[test]

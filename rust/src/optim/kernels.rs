@@ -77,8 +77,23 @@ pub const CHUNK: usize = crate::numerics::analysis::ACCUM_CHUNK;
 // Streaming diagnostics accumulator
 // ---------------------------------------------------------------------------
 
+/// Delta-scale telemetry streamed per element by the MCF kernels (and the
+/// scalar oracle): the adaptive controller's two input counters.  Exact
+/// integer sums — order-free, so any chunk/thread combine yields the same
+/// totals.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaTally {
+    /// Scaled δθ words that clipped at ±max_finite (back-off signal).
+    pub saturated: u64,
+    /// Elements whose exact Δθ ≠ 0 rounded to zero before the expansion
+    /// saw it — on scaled plans, even on the 2^k-finer δθ grid (grow
+    /// signal).
+    pub underflow: u64,
+}
+
 /// Partial f64 diagnostics for one chunk: the Def. 3.3 EDQ sums, the
-/// Def. 3.2 lost-update count, and the squared parameter norm.
+/// Def. 3.2 lost-update count, the squared parameter norm, and the
+/// delta-scale saturation/underflow counters.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ChunkAccum {
     /// Σ Δθ² — intended-update norm square.
@@ -91,6 +106,8 @@ pub struct ChunkAccum {
     pub pn2: f64,
     /// Count of lost updates (Δθ ≠ 0 but θ_eff unchanged).
     pub lost: u64,
+    /// Delta-scale saturation/underflow counters (MCF kernels only).
+    pub delta: DeltaTally,
 }
 
 impl ChunkAccum {
@@ -103,6 +120,8 @@ impl ChunkAccum {
         self.dot += other.dot;
         self.pn2 += other.pn2;
         self.lost += other.lost;
+        self.delta.saturated += other.delta.saturated;
+        self.delta.underflow += other.delta.underflow;
     }
 
     /// Stream one element whose effective parameter is a plain f32 (the
@@ -127,8 +146,9 @@ impl ChunkAccum {
 
     /// Finish the reduction: the reference paths' exact EDQ formulas.
     /// `mcf_params` selects the expansion-parameter variant (Collage
-    /// light/plus at any format).
-    fn finalize(&self, mcf_params: bool, n: usize) -> StepStats {
+    /// light/plus at any format); `delta_k` is the delta-scale exponent
+    /// that was in effect for the step (reported, not computed here).
+    fn finalize(&self, mcf_params: bool, n: usize, delta_k: u8) -> StepStats {
         use crate::numerics::analysis::EdqReport;
         let update_norm = self.un2.sqrt();
         // The two reference reducers round their ratio differently:
@@ -154,6 +174,9 @@ impl ChunkAccum {
             },
             lost_frac: self.lost as f64 / n as f64,
             param_norm: self.pn2.sqrt(),
+            delta_saturated: self.delta.saturated,
+            delta_underflow: self.delta.underflow,
+            delta_k,
         }
     }
 }
@@ -701,7 +724,8 @@ pub fn fused_step(
         total.merge(part);
     }
     state.put_accum_scratch(scratch);
-    total.finalize(strategy.is_mcf_params(), n)
+    // bf16-row plans never carry a delta scale (as_strategy() rejects it).
+    total.finalize(strategy.is_mcf_params(), n, 0)
 }
 
 // ---------------------------------------------------------------------------
@@ -750,14 +774,22 @@ pub struct GenericScalars {
 impl GenericScalars {
     /// Step-constant scalars for `plan` (the storage format picks the
     /// emulated-op rounding; the plan's `delta_scale` configures the
-    /// loss-scaled δθ path).
+    /// loss-scaled δθ path).  `auto` plans must go through
+    /// [`GenericScalars::new_with_k`] with the controller's live exponent.
     pub fn new(plan: PrecisionPlan, opt: &AdamW, lr: f32, t: u64) -> Self {
+        Self::new_with_k(plan, opt, lr, t, plan.delta_scale)
+    }
+
+    /// [`GenericScalars::new`] with an explicit delta-scale exponent `k`
+    /// overriding the plan's — how the dispatcher and the scalar oracle
+    /// inject the adaptive controller's current exponent.
+    pub fn new_with_k(plan: PrecisionPlan, opt: &AdamW, lr: f32, t: u64, k: u8) -> Self {
         let fmt = plan.format;
         let beta1_f = opt.beta1 as f32;
         let beta2_f = opt.beta2 as f32;
         let b2 = ExpansionN::<3>::split_scalar(&fmt, opt.beta2);
         let (bc1, bc2) = opt.bias_corrections(t);
-        let ds_scale = plan.delta_scale_factor();
+        let ds_scale = crate::optim::plan::pow2_factor(k);
         GenericScalars {
             fmt,
             beta1_f,
@@ -829,7 +861,8 @@ impl GenericScalars {
     /// `2^k ×` their true value, so the *exact* f64 update — never
     /// pre-rounded into the format, where sub-subnormal-floor steps would
     /// vanish — lands on a grid 2^k finer than the parameter's.  Returns
-    /// the new hi word and the K scaled low words; the value identity is
+    /// the new hi word, the K scaled low words, and the number of words
+    /// that clipped; the value identity is
     /// `hi' + 2^-k·Σlo'ᵢ ≈ hi + 2^-k·Σloᵢ + dt_exact`, exact up to one
     /// format-rounding of `hi'` and the residual rounds of the low words.
     #[inline]
@@ -838,7 +871,7 @@ impl GenericScalars {
         hi: f32,
         lo: [f32; K],
         dt_exact: f64,
-    ) -> (f32, [f32; K]) {
+    ) -> (f32, [f32; K], u64) {
         let mut lo_sum = 0.0f64;
         for &w in &lo {
             lo_sum += w as f64;
@@ -846,7 +879,9 @@ impl GenericScalars {
         let total = hi as f64 + lo_sum * self.ds_inv + dt_exact;
         let hi_new = self.fmt.round_nearest_f64(total);
         if !hi_new.is_finite() {
-            return (hi_new, [0.0; K]);
+            // θ itself overflowed — not a δθ clip, but the words are
+            // zeroed, so report it on the saturation channel too.
+            return (hi_new, [0.0; K], K as u64);
         }
         // total − hi_new is exact (the operands are within one format-ulp
         // of each other); rescaled into δθ space and peeled word by word.
@@ -855,17 +890,27 @@ impl GenericScalars {
         // `ulp(hi)/2 · 2^k` exceeds the format's range — clamping drops
         // the out-of-range mass (the E4M3 semantics applied to every
         // format) rather than minting an inf that would poison θ forever.
+        // Each clip is counted: it is exactly the adaptive controller's
+        // back-off signal (`StepStats::delta_saturated`).
+        let mut clipped = 0u64;
         let mut r = (total - hi_new as f64) * self.ds_scale;
         let mut lo_new = [0.0f32; K];
         for w in lo_new.iter_mut() {
             let mut word = self.fmt.round_nearest_f64(r);
             if word.is_infinite() {
                 word = self.fmt.max_finite_f32().copysign(word);
+                clipped += 1;
+            } else if self.fmt.saturating && word.abs() == self.fmt.max_finite_f32() {
+                // Saturating formats (E4M3) clamp inside round_nearest_f64;
+                // detect the clip by the residual overshooting max_finite.
+                if r.abs() > self.fmt.max_finite() {
+                    clipped += 1;
+                }
             }
             *w = word;
             r -= *w as f64;
         }
-        (hi_new, lo_new)
+        (hi_new, lo_new, clipped)
     }
 
     /// The exact (f64) Δθ of Alg. 2 line 12 — weight decay inside the
@@ -885,10 +930,20 @@ impl GenericScalars {
         self.fmt.round_nearest_f64(self.delta_exact(theta_ref, m_new, v_eval))
     }
 
+    /// Did the exact update `dtx` round to zero on the grid the expansion
+    /// actually receives it on (the storage grid, or the 2^k-finer scaled
+    /// grid)?  The `delta_underflow` telemetry predicate, shared by every
+    /// MCF kernel and the scalar oracle so the counters agree exactly.
+    #[inline]
+    pub fn delta_underflowed(&self, dtx: f64) -> bool {
+        dtx != 0.0 && self.fmt.round_nearest_f64(dtx * self.ds_scale) == 0.0
+    }
+
     /// Parameter update for 3-component plans: the format-rounded Δθ grows
     /// the length-3 expansion through the Fast2Sum chain, or — on
     /// delta-scale plans — the *exact* Δθ lands in the loss-scaled words.
-    /// Returns the new components plus the Δθ streamed into the
+    /// Streams the saturation/underflow telemetry into `tally`, and
+    /// returns the new components plus the Δθ streamed into the
     /// diagnostics (the f32 cast of the exact update on scaled plans,
     /// where the format-rounded value could be a spurious zero).
     #[inline]
@@ -899,14 +954,19 @@ impl GenericScalars {
         lo2: f32,
         m_new: f32,
         v_eval: f64,
+        tally: &mut DeltaTally,
     ) -> (f32, f32, f32, f32) {
         if self.ds_scale == 1.0 {
-            let dt = self.delta_theta(hi, m_new, v_eval);
+            let dtx = self.delta_exact(hi, m_new, v_eval);
+            let dt = self.fmt.round_nearest_f64(dtx);
+            tally.underflow += (dtx != 0.0 && dt == 0.0) as u64;
             let e = grow_n(&self.fmt, ExpansionN::new([hi, lo1, lo2]), dt);
             (e.c[0], e.c[1], e.c[2], dt)
         } else {
             let dtx = self.delta_exact(hi, m_new, v_eval);
-            let (h, lo) = self.theta_grow_scaled(hi, [lo1, lo2], dtx);
+            tally.underflow += self.delta_underflowed(dtx) as u64;
+            let (h, lo, clipped) = self.theta_grow_scaled(hi, [lo1, lo2], dtx);
+            tally.saturated += clipped;
             (h, lo[0], lo[1], dtx as f32)
         }
     }
@@ -920,9 +980,12 @@ impl GenericScalars {
         lo: f32,
         m_new: f32,
         v_eval: f64,
+        tally: &mut DeltaTally,
     ) -> (f32, f32, f32) {
         let dtx = self.delta_exact(hi, m_new, v_eval);
-        let (h, lo_n) = self.theta_grow_scaled(hi, [lo], dtx);
+        tally.underflow += self.delta_underflowed(dtx) as u64;
+        let (h, lo_n, clipped) = self.theta_grow_scaled(hi, [lo], dtx);
+        tally.saturated += clipped;
         (h, lo_n[0], dtx as f32)
     }
 }
@@ -994,7 +1057,11 @@ pub fn gstep_chunk_light(
         let (m_new, g2) = s.moments_m_g2(m[k], gk);
         let v_new = s.moment_v_plain(v[k], g2);
         let (hi_old, lo_old) = (theta[k], dtheta_c[k]);
-        let dt = s.delta_theta(hi_old, m_new, v_new as f64);
+        // Same bits as the historical delta_theta call (round ∘ exact),
+        // restructured so the underflow telemetry sees the exact Δθ.
+        let dtx = s.delta_exact(hi_old, m_new, v_new as f64);
+        let dt = s.fmt.round_nearest_f64(dtx);
+        acc.delta.underflow += (dtx != 0.0 && dt == 0.0) as u64;
         let e = grow(&s.fmt, Expansion::new(hi_old, lo_old), dt);
         theta[k] = e.hi;
         dtheta_c[k] = e.lo;
@@ -1021,7 +1088,9 @@ pub fn gstep_chunk_plus(
         let (m_new, g2) = s.moments_m_g2(m[k], gk);
         let ve = s.moment_v_plus(v[k], dv[k], g2);
         let (hi_old, lo_old) = (theta[k], dtheta_c[k]);
-        let dt = s.delta_theta(hi_old, m_new, ve.value());
+        let dtx = s.delta_exact(hi_old, m_new, ve.value());
+        let dt = s.fmt.round_nearest_f64(dtx);
+        acc.delta.underflow += (dtx != 0.0 && dt == 0.0) as u64;
         let e = grow(&s.fmt, Expansion::new(hi_old, lo_old), dt);
         theta[k] = e.hi;
         dtheta_c[k] = e.lo;
@@ -1053,7 +1122,8 @@ pub fn gstep_chunk_light3(
         let v_new = s.moment_v_plain(v[k], g2);
         let (hi, lo1, lo2) = (theta[k], dtheta_c[k], dtheta_c2[k]);
         let old_eff = eff_theta3(hi, lo1, lo2, s.ds_inv);
-        let (hi_n, lo1_n, lo2_n, dt) = s.apply_theta3(hi, lo1, lo2, m_new, v_new as f64);
+        let (hi_n, lo1_n, lo2_n, dt) =
+            s.apply_theta3(hi, lo1, lo2, m_new, v_new as f64, &mut acc.delta);
         theta[k] = hi_n;
         dtheta_c[k] = lo1_n;
         dtheta_c2[k] = lo2_n;
@@ -1084,7 +1154,8 @@ pub fn gstep_chunk_plus3(
         let ve = s.moment_v_plus3(v[k], dv[k], dv2[k], g2);
         let (hi, lo1, lo2) = (theta[k], dtheta_c[k], dtheta_c2[k]);
         let old_eff = eff_theta3(hi, lo1, lo2, s.ds_inv);
-        let (hi_n, lo1_n, lo2_n, dt) = s.apply_theta3(hi, lo1, lo2, m_new, ve.value());
+        let (hi_n, lo1_n, lo2_n, dt) =
+            s.apply_theta3(hi, lo1, lo2, m_new, ve.value(), &mut acc.delta);
         theta[k] = hi_n;
         dtheta_c[k] = lo1_n;
         dtheta_c2[k] = lo2_n;
@@ -1114,7 +1185,7 @@ pub fn gstep_chunk_light_ds(
         let v_new = s.moment_v_plain(v[k], g2);
         let (hi, lo) = (theta[k], dtheta_c[k]);
         let old_eff = eff_theta2(hi, lo, s.ds_inv);
-        let (hi_n, lo_n, dt) = s.apply_theta2_scaled(hi, lo, m_new, v_new as f64);
+        let (hi_n, lo_n, dt) = s.apply_theta2_scaled(hi, lo, m_new, v_new as f64, &mut acc.delta);
         theta[k] = hi_n;
         dtheta_c[k] = lo_n;
         m[k] = m_new;
@@ -1143,7 +1214,7 @@ pub fn gstep_chunk_plus_ds(
         let ve = s.moment_v_plus(v[k], dv[k], g2);
         let (hi, lo) = (theta[k], dtheta_c[k]);
         let old_eff = eff_theta2(hi, lo, s.ds_inv);
-        let (hi_n, lo_n, dt) = s.apply_theta2_scaled(hi, lo, m_new, ve.value());
+        let (hi_n, lo_n, dt) = s.apply_theta2_scaled(hi, lo, m_new, ve.value(), &mut acc.delta);
         theta[k] = hi_n;
         dtheta_c[k] = lo_n;
         m[k] = m_new;
@@ -1271,8 +1342,13 @@ fn fused_step_generic(
 ) -> StepStats {
     let plan = state.plan;
     let n = state.n;
-    let s = GenericScalars::new(plan, opt, lr, t);
-    let scaled = plan.delta_scale != 0;
+    // The delta-scale exponent in effect: the adaptive controller's live k
+    // for `auto` plans (== plan.delta_scale for static/off plans).  Auto
+    // plans always keep k ≥ 1, so kernel routing is stable across
+    // transitions.
+    let k = state.delta_k();
+    let s = GenericScalars::new_with_k(plan, opt, lr, t, k);
+    let scaled = k != 0;
     // One key per step; per-element noise is counter-derived from it so
     // the draw order cannot depend on chunk/thread assignment.
     let sr_key = match plan.scheme {
@@ -1420,7 +1496,14 @@ fn fused_step_generic(
         total.merge(part);
     }
     state.put_accum_scratch(scratch);
-    total.finalize(plan.is_mcf_params(), n)
+    let stats = total.finalize(plan.is_mcf_params(), n, k);
+    // Between steps: feed the counters to the adaptive controller (no-op
+    // unless the plan is `+delta-scale=auto`), rescaling the stored δθ
+    // words exactly on a k transition.  The counters are already the
+    // full-state totals, so every worker count — and every DP shard
+    // stepping from all-reduced gradients — decides identically.
+    super::delta_ctrl::post_step(state, n as u64, stats.delta_saturated, stats.delta_underflow);
+    stats
 }
 
 #[cfg(test)]
@@ -1492,33 +1575,105 @@ mod tests {
             .unwrap();
         let opt = AdamW { weight_decay: 0.0, ..AdamW::default() };
         let s = GenericScalars::new(plan, &opt, 1e-3, 1);
-        let (hi, lo) = s.theta_grow_scaled(16.0f32, [0.0f32], 2f64.powi(-7) * 0.9);
+        let (hi, lo, clipped) = s.theta_grow_scaled(16.0f32, [0.0f32], 2f64.powi(-7) * 0.9);
         assert_eq!(hi, 16.0);
         assert!(lo[0].is_finite(), "lo={:e}", lo[0]);
         assert_eq!(lo[0], FP16.max_finite_f32(), "must clamp at +max_finite");
+        // The clip is the controller's back-off signal: it must be counted.
+        assert_eq!(clipped, 1, "clamped word must report saturation");
         // Same on e5m2, both words of a length-3 plan.
         let plan = PrecisionPlan::new(FP8E5M2, Scheme::CollageLight3)
             .with_delta_scale(20)
             .unwrap();
         let s = GenericScalars::new(plan, &opt, 1e-3, 1);
-        let (hi, lo) = s.theta_grow_scaled(16.0f32, [0.0f32, 0.0f32], 0.49);
+        let (hi, lo, clipped) = s.theta_grow_scaled(16.0f32, [0.0f32, 0.0f32], 0.49);
         assert!(hi.is_finite() && lo.iter().all(|w| w.is_finite()), "{hi:e} {lo:?}");
+        assert!(clipped >= 1, "overshooting both words must report saturation");
+        // An in-range update clips nothing.
+        let plan = PrecisionPlan::new(FP8E5M2, Scheme::CollageLight)
+            .with_delta_scale(8)
+            .unwrap();
+        let s = GenericScalars::new(plan, &opt, 1e-3, 1);
+        let (_, _, clipped) = s.theta_grow_scaled(16.0f32, [0.0f32], 1e-3);
+        assert_eq!(clipped, 0);
+    }
+
+    #[test]
+    fn saturating_format_counts_scaled_word_clips() {
+        // E4M3 has no inf: round_nearest_f64 clamps internally, so the
+        // clip must be detected from the residual overshooting max_finite.
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::{PrecisionPlan, Scheme};
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+            .with_delta_scale(24)
+            .unwrap();
+        let opt = AdamW { weight_decay: 0.0, ..AdamW::default() };
+        let s = GenericScalars::new(plan, &opt, 1e-3, 1);
+        // 0.3 · 2²⁴ ≈ 5e6 ≫ 448: the single scaled word must clamp + count.
+        let (hi, lo, clipped) = s.theta_grow_scaled(16.0f32, [0.0f32], 0.3);
+        assert_eq!(hi, 16.0);
+        assert_eq!(lo[0], FP8E4M3.max_finite_f32());
+        assert_eq!(clipped, 1);
+        // A representable scaled residual counts nothing.
+        let (_, _, clipped) = s.theta_grow_scaled(16.0f32, [0.0f32], 1e-5);
+        assert_eq!(clipped, 0);
+    }
+
+    #[test]
+    fn delta_underflow_predicate_uses_the_scaled_grid() {
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::{PrecisionPlan, Scheme};
+        let opt = AdamW { weight_decay: 0.0, ..AdamW::default() };
+        // Unscaled: anything below half the smallest subnormal (2⁻¹⁰)
+        // vanishes.
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight);
+        let s = GenericScalars::new(plan, &opt, 1e-3, 1);
+        assert!(s.delta_underflowed(-1e-4));
+        assert!(!s.delta_underflowed(-1e-2));
+        assert!(!s.delta_underflowed(0.0), "a zero update is not underflow");
+        // Scaled by 2¹²: the same −1e-4 lands on the finer grid.
+        let s = GenericScalars::new(plan.with_delta_scale(12).unwrap(), &opt, 1e-3, 1);
+        assert!(!s.delta_underflowed(-1e-4));
+        assert!(s.delta_underflowed(-1e-7), "still vanishes even ×2¹²");
     }
 
     #[test]
     fn chunk_accum_merge_is_plain_sum() {
-        let mut a = ChunkAccum { un2: 1.0, en2: 2.0, dot: 3.0, pn2: 4.0, lost: 5 };
-        let b = ChunkAccum { un2: 10.0, en2: 20.0, dot: 30.0, pn2: 40.0, lost: 50 };
+        let mut a = ChunkAccum {
+            un2: 1.0,
+            en2: 2.0,
+            dot: 3.0,
+            pn2: 4.0,
+            lost: 5,
+            delta: DeltaTally { saturated: 6, underflow: 7 },
+        };
+        let b = ChunkAccum {
+            un2: 10.0,
+            en2: 20.0,
+            dot: 30.0,
+            pn2: 40.0,
+            lost: 50,
+            delta: DeltaTally { saturated: 60, underflow: 70 },
+        };
         a.merge(&b);
         assert_eq!((a.un2, a.en2, a.dot, a.pn2, a.lost), (11.0, 22.0, 33.0, 44.0, 55));
+        assert_eq!(a.delta, DeltaTally { saturated: 66, underflow: 77 });
     }
 
     #[test]
     fn finalize_zero_update_norm_defaults() {
-        let stats = ChunkAccum::default().finalize(false, 4);
+        let stats = ChunkAccum::default().finalize(false, 4, 0);
         assert_eq!(stats.edq.edq, 0.0);
         assert_eq!(stats.edq.edq_ratio, 1.0);
         assert_eq!(stats.lost_frac, 0.0);
         assert_eq!(stats.param_norm, 0.0);
+        assert_eq!((stats.delta_saturated, stats.delta_underflow, stats.delta_k), (0, 0, 0));
+        // The counters and exponent pass through finalize untouched.
+        let acc = ChunkAccum {
+            delta: DeltaTally { saturated: 3, underflow: 9 },
+            ..Default::default()
+        };
+        let stats = acc.finalize(true, 4, 8);
+        assert_eq!((stats.delta_saturated, stats.delta_underflow, stats.delta_k), (3, 9, 8));
     }
 }

@@ -20,6 +20,9 @@
 //!           └─────────────────────────────────────────────────────────────────────┘
 //!           + an optional per-plan `+delta-scale=<pow2>` suffix: the MCF δθ
 //!             word(s) stored loss-scaled by 2^pow2 (underflow rescue)
+//!           + `+delta-scale=auto[:k0]`: the exponent self-tunes via the
+//!             [`delta_ctrl`] controller — back off on saturation, grow
+//!             while updates underflow (dynamic loss scaling for δθ)
 //! ```
 //!
 //! The `-3` columns carry **length-3** MCF expansions
@@ -78,8 +81,23 @@
 //! `tests/generic_kernel_equivalence.rs` enforces it for every
 //! format × scheme cell, non-chunk-aligned lengths, and worker counts
 //! 1/2/8.
+//!
+//! # Adaptive delta-scale
+//!
+//! Every MCF kernel streams two additional exact counters into
+//! [`adamw::StepStats`] on the same chunk grid: `delta_saturated` (scaled
+//! δθ words that clipped at ±max_finite) and `delta_underflow` (exact Δθ
+//! that rounded to zero before the expansion saw it).  On
+//! `+delta-scale=auto` plans the [`delta_ctrl`] controller consumes them
+//! between steps — backing the exponent off under saturation, growing it
+//! after a clean interval while underflow persists — and the stored δθ
+//! words are rescaled exactly by the power of two on every transition.
+//! Controller state (`k`, `good_steps`) lives in [`state::OptimState`],
+//! is persisted in checkpoints, and is integer-exact, so resharding and
+//! resume cannot fork it (`tests/delta_ctrl_checkpoint.rs`).
 
 pub mod adamw;
+pub mod delta_ctrl;
 pub mod generic;
 pub mod kernels;
 pub mod plan;

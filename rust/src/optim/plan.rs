@@ -28,7 +28,7 @@
 //! any of them round-trips through all of them:
 //!
 //! ```text
-//! plan    := base ["+delta-scale=" pow2]   # loss-scaled δθ words (MCF only)
+//! plan    := base ["+delta-scale=" ds]     # loss-scaled δθ words (MCF only)
 //! base    := scheme "@" format      # any cell, e.g. "collage-light@fp8e4m3"
 //!          | scheme                 # that scheme at bf16 storage
 //!          | legacy                 # the paper's Table-2 option strings
@@ -38,7 +38,12 @@
 //! format  := "fp32" | "fp16" | "bf16" | "fp8e4m3" | "fp8e5m2"
 //!          (+ aliases "f32", "half", "e4m3", "fp8", ... see FloatFormat)
 //! legacy  := "a" | "b" | "c" | "d" | "dmw" | "kahan" | "sr" | "fp32"
-//! pow2    := integer exponent 1..=24 — δθ words are stored ×2^pow2
+//! ds      := pow2                   # static: δθ words stored ×2^pow2
+//!          | "auto"                 # adaptive k, default initial exponent
+//!          | "auto:" pow2           # adaptive k starting from pow2
+//! pow2    := integer exponent 1..=24  (an explicit "0" is rejected: it
+//!            would be a no-op suffix Display never emits, breaking
+//!            parse∘display symmetry — drop the suffix instead)
 //! ```
 //!
 //! [`fmt::Display`] is the inverse: bf16-row plans print their legacy
@@ -58,6 +63,37 @@
 //!   updates below the format's subnormal floor `2^(e_min − m)`, which
 //!   round to zero before the expansion ever sees them, survive in the
 //!   scaled words.  The effective parameter is `θ + 2^−k·Σδθᵢ`.
+//! * `+delta-scale=auto` (optionally `auto:<k0>`) hands the exponent to
+//!   the **adaptive controller** ([`super::delta_ctrl`]): dynamic-loss-
+//!   scaling-style policy that backs `k` off when the scaled words clip at
+//!   ±max_finite and grows it after a run of clean steps while exact
+//!   updates still underflow — driven by the `delta_saturated` /
+//!   `delta_underflow` counters the fused kernels stream into
+//!   [`super::adamw::StepStats`].  The plan stores only the *mode* and the
+//!   initial exponent `k0`; the live exponent is optimizer state
+//!   (persisted in checkpoints, so resume is bit-identical).
+//!
+//! ```
+//! use collage::optim::plan::{PrecisionPlan, DEFAULT_AUTO_DELTA_SCALE};
+//!
+//! // Adaptive delta-scale: "auto" starts from the default exponent...
+//! let p: PrecisionPlan = "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap();
+//! assert!(p.delta_auto);
+//! assert_eq!(p.delta_scale, DEFAULT_AUTO_DELTA_SCALE);
+//! assert_eq!(p.to_string(), "collage-light-3@fp8e4m3+delta-scale=auto");
+//!
+//! // ...and "auto:<k0>" pins the starting exponent; both round-trip.
+//! let p: PrecisionPlan = "collage-light@fp8e4m3+delta-scale=auto:6".parse().unwrap();
+//! assert_eq!((p.delta_auto, p.delta_scale), (true, 6));
+//! assert_eq!(p.to_string(), "collage-light@fp8e4m3+delta-scale=auto:6");
+//! assert_eq!(p.to_string().parse::<PrecisionPlan>().unwrap(), p);
+//!
+//! // auto needs an MCF scheme, like the static suffix.
+//! assert!("plain@fp8e4m3+delta-scale=auto".parse::<PrecisionPlan>().is_err());
+//! // An explicit zero exponent is rejected, not silently dropped.
+//! assert!("collage-light+delta-scale=0".parse::<PrecisionPlan>().is_err());
+//! assert!("collage-light+delta-scale=auto:0".parse::<PrecisionPlan>().is_err());
+//! ```
 //!
 //! ```
 //! use collage::numerics::format::FP8E4M3;
@@ -232,14 +268,21 @@ impl fmt::Display for Scheme {
 /// One point of the plan space: *how* the state is structured ([`Scheme`]),
 /// *what* the low-precision vectors are stored in ([`FloatFormat`]), and an
 /// optional power-of-two **loss scale for the δθ words** (`delta_scale` —
-/// δθᵢ vectors hold `2^delta_scale ×` their true value; 0 = off).
+/// δθᵢ vectors hold `2^delta_scale ×` their true value; 0 = off), either
+/// static or managed by the adaptive controller (`delta_auto`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PrecisionPlan {
     pub format: FloatFormat,
     pub scheme: Scheme,
     /// Power-of-two exponent the δθ word(s) are scaled by (MCF schemes
-    /// only; 0 disables).  See the module docs' grammar section.
+    /// only; 0 disables).  With `delta_auto` set this is only the *initial*
+    /// exponent k₀ — the live exponent is optimizer state
+    /// ([`super::delta_ctrl::DeltaScaleCtrl`]).  See the module docs'
+    /// grammar section.
     pub delta_scale: u8,
+    /// `+delta-scale=auto[:k0]`: the exponent is adapted per-run by the
+    /// saturation/underflow controller instead of staying fixed.
+    pub delta_auto: bool,
 }
 
 /// Largest accepted `delta_scale` exponent.  Scaled δθ words saturate at
@@ -249,9 +292,21 @@ pub struct PrecisionPlan {
 /// `ulp(θ)/2 · 2^k ≲ max_finite` for the θ magnitudes being trained.
 pub const MAX_DELTA_SCALE: u8 = 24;
 
+/// Initial exponent the bare `+delta-scale=auto` spelling starts from —
+/// the measured sweet spot of the fp8 grid's static rows (large enough to
+/// rescue E4M3's sub-subnormal-floor regime from step one, small enough
+/// that δθ residuals near ulp(θ)/2 do not clip).
+pub const DEFAULT_AUTO_DELTA_SCALE: u8 = 8;
+
+/// `2^k` as an exact f64 (`k ≤ MAX_DELTA_SCALE ≪ 1024`, so the biased
+/// exponent never overflows).
+pub fn pow2_factor(k: u8) -> f64 {
+    f64::from_bits((k as u64 + 1023) << 52)
+}
+
 impl PrecisionPlan {
     pub fn new(format: FloatFormat, scheme: Scheme) -> Self {
-        PrecisionPlan { format, scheme, delta_scale: 0 }
+        PrecisionPlan { format, scheme, delta_scale: 0, delta_auto: false }
     }
 
     /// The bf16 row — the paper's original Table-2 zoo.
@@ -268,12 +323,44 @@ impl PrecisionPlan {
         if k > MAX_DELTA_SCALE {
             bail!("delta-scale exponent {k} out of range (1..={MAX_DELTA_SCALE})");
         }
-        Ok(PrecisionPlan { delta_scale: k, ..self })
+        Ok(PrecisionPlan { delta_scale: k, delta_auto: false, ..self })
     }
 
-    /// `2^delta_scale` as an exact f64 (1.0 when scaling is off).
+    /// This plan with the **adaptive** delta-scale controller enabled,
+    /// starting from exponent `k0` (the `+delta-scale=auto:<k0>` spelling;
+    /// `k0 = DEFAULT_AUTO_DELTA_SCALE` is the bare `auto`).
+    pub fn with_auto_delta_scale(self, k0: u8) -> Result<Self> {
+        if !self.scheme.is_mcf_params() {
+            bail!("delta-scale=auto requires an MCF scheme, got {}", self.scheme);
+        }
+        if k0 == 0 || k0 > MAX_DELTA_SCALE {
+            bail!("delta-scale=auto exponent {k0} out of range (1..={MAX_DELTA_SCALE})");
+        }
+        Ok(PrecisionPlan { delta_scale: k0, delta_auto: true, ..self })
+    }
+
+    /// `2^delta_scale` as an exact f64 (1.0 when scaling is off).  For
+    /// `auto` plans this is the *initial* factor — the live one comes from
+    /// the optimizer state's controller
+    /// (`OptimState::delta_k` → [`pow2_factor`]).
     pub fn delta_scale_factor(&self) -> f64 {
-        f64::from_bits((self.delta_scale as u64 + 1023) << 52)
+        pow2_factor(self.delta_scale)
+    }
+
+    /// The `+delta-scale=…` suffix this plan prints (empty when scaling is
+    /// off) — shared by [`fmt::Display`] and the experiment row labels.
+    pub fn delta_suffix(&self) -> String {
+        if self.delta_auto {
+            if self.delta_scale == DEFAULT_AUTO_DELTA_SCALE {
+                "+delta-scale=auto".to_string()
+            } else {
+                format!("+delta-scale=auto:{}", self.delta_scale)
+            }
+        } else if self.delta_scale != 0 {
+            format!("+delta-scale={}", self.delta_scale)
+        } else {
+            String::new()
+        }
     }
 
     /// The legacy [`Strategy`] this plan corresponds to, if it lies on the
@@ -282,7 +369,7 @@ impl PrecisionPlan {
     /// to the format-generic kernel path.  Length-3 and delta-scaled plans
     /// are never legacy strategies, whatever their format.
     pub fn as_strategy(&self) -> Option<Strategy> {
-        if self.delta_scale != 0 {
+        if self.delta_scale != 0 || self.delta_auto {
             return None;
         }
         if self.format == BF16 {
@@ -425,17 +512,15 @@ impl FromStr for PrecisionPlan {
     ///   * a legacy `Strategy` option string (`"a"`, `"dmw"`, `"fp32"`, ...)
     ///     — the bf16 row / fp32 cell,
     ///   * a bare scheme name — that scheme at bf16 storage,
-    ///   * any of the above with a `"+delta-scale=<pow2>"` suffix
-    ///     (MCF schemes only).
+    ///   * any of the above with a `"+delta-scale=<pow2>"`,
+    ///     `"+delta-scale=auto"` or `"+delta-scale=auto:<pow2>"` suffix
+    ///     (MCF schemes only; an explicit `0` exponent is rejected —
+    ///     `Display` never emits it, so accepting it would break
+    ///     parse∘display symmetry).
     fn from_str(s: &str) -> Result<Self> {
-        let (s, delta_scale) = match s.split_once("+delta-scale=") {
-            Some((base, k)) => {
-                let k: u8 = k
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad delta-scale exponent {k:?}"))?;
-                (base, k)
-            }
-            None => (s, 0),
+        let (s, suffix) = match s.split_once("+delta-scale=") {
+            Some((base, spec)) => (base, Some(spec)),
+            None => (s, None),
         };
         let base = if let Some((scheme, fmtname)) = s.split_once('@') {
             let scheme: Scheme = scheme.parse()?;
@@ -446,24 +531,42 @@ impl FromStr for PrecisionPlan {
         } else {
             PrecisionPlan::bf16(s.parse::<Scheme>()?)
         };
-        base.with_delta_scale(delta_scale)
+        match suffix {
+            None => Ok(base),
+            Some("auto") => base.with_auto_delta_scale(DEFAULT_AUTO_DELTA_SCALE),
+            Some(spec) => {
+                if let Some(k0) = spec.strip_prefix("auto:") {
+                    let k0: u8 = k0.parse().map_err(|_| {
+                        anyhow::anyhow!("bad delta-scale=auto exponent {k0:?}")
+                    })?;
+                    return base.with_auto_delta_scale(k0);
+                }
+                let k: u8 = spec
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad delta-scale exponent {spec:?}"))?;
+                if k == 0 {
+                    bail!(
+                        "delta-scale=0 is a no-op suffix Display never emits — \
+                         drop the suffix (or use delta-scale=auto)"
+                    );
+                }
+                base.with_delta_scale(k)
+            }
+        }
     }
 }
 
 impl fmt::Display for PrecisionPlan {
     /// Round-trips through [`FromStr`]: legacy option strings on the bf16
     /// row (so existing configs, checkpoints and manifests keep working),
-    /// `scheme@format` everywhere else, plus the `+delta-scale=<k>` suffix
-    /// when the δθ words are loss-scaled.
+    /// `scheme@format` everywhere else, plus the `+delta-scale=…` suffix
+    /// (static exponent or `auto[:k0]`) when the δθ words are loss-scaled.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self.as_strategy() {
             Some(s) => f.write_str(s.option_str())?,
             None => write!(f, "{}@{}", self.scheme.name(), self.format.name)?,
         }
-        if self.delta_scale != 0 {
-            write!(f, "+delta-scale={}", self.delta_scale)?;
-        }
-        Ok(())
+        f.write_str(&self.delta_suffix())
     }
 }
 
@@ -521,10 +624,87 @@ mod tests {
         assert!("kahan+delta-scale=1".parse::<PrecisionPlan>().is_err());
         assert!("collage-light+delta-scale=99".parse::<PrecisionPlan>().is_err());
         assert!("collage-light+delta-scale=x".parse::<PrecisionPlan>().is_err());
-        // "+delta-scale=0" normalizes to no scaling (prints without suffix).
-        let p: PrecisionPlan = "collage-light+delta-scale=0".parse().unwrap();
+        // "+delta-scale=0" is rejected: Display never emits the suffix for
+        // an unscaled plan, so accepting it would let a spelling survive
+        // parsing that can never round-trip (the PR-4 asymmetry bugfix).
+        assert!("collage-light+delta-scale=0".parse::<PrecisionPlan>().is_err());
+        // The programmatic builder still treats 0 as "off".
+        let p = PrecisionPlan::bf16(Scheme::CollageLight).with_delta_scale(0).unwrap();
         assert_eq!(p, PrecisionPlan::bf16(Scheme::CollageLight));
         assert_eq!(p.to_string(), "collage-light");
+    }
+
+    #[test]
+    fn auto_delta_scale_roundtrips_and_validates() {
+        // Bare "auto" = controller mode at the default initial exponent.
+        let p: PrecisionPlan = "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap();
+        assert!(p.delta_auto);
+        assert_eq!(p.delta_scale, DEFAULT_AUTO_DELTA_SCALE);
+        assert_eq!(p.to_string(), "collage-light-3@fp8e4m3+delta-scale=auto");
+        assert_eq!(p.to_string().parse::<PrecisionPlan>().unwrap(), p);
+        // "auto:<k0>" pins the start.
+        let p: PrecisionPlan = "collage-light@fp8e5m2+delta-scale=auto:6".parse().unwrap();
+        assert_eq!((p.delta_auto, p.delta_scale), (true, 6));
+        assert_eq!(p.to_string(), "collage-light@fp8e5m2+delta-scale=auto:6");
+        assert_eq!(p.to_string().parse::<PrecisionPlan>().unwrap(), p);
+        // auto:<default> prints back as the bare spelling (still one plan).
+        assert_eq!(DEFAULT_AUTO_DELTA_SCALE, 8, "update the spelling below on change");
+        let q: PrecisionPlan = "collage-light@fp8e5m2+delta-scale=auto:8".parse().unwrap();
+        assert_eq!(q.to_string(), "collage-light@fp8e5m2+delta-scale=auto");
+        // Auto plans never route to the legacy bf16 kernels, and differ
+        // from their static-k sibling.
+        assert_eq!(p.as_strategy(), None);
+        assert_ne!(
+            p,
+            PrecisionPlan::new(p.format, p.scheme).with_delta_scale(6).unwrap()
+        );
+        // Validation mirrors the static suffix.
+        assert!("plain@fp8e4m3+delta-scale=auto".parse::<PrecisionPlan>().is_err());
+        assert!("sr+delta-scale=auto:4".parse::<PrecisionPlan>().is_err());
+        assert!("collage-light+delta-scale=auto:0".parse::<PrecisionPlan>().is_err());
+        assert!("collage-light+delta-scale=auto:99".parse::<PrecisionPlan>().is_err());
+        assert!("collage-light+delta-scale=auto:x".parse::<PrecisionPlan>().is_err());
+        // Builder form.
+        let b = PrecisionPlan::new(FP8E4M3, Scheme::CollagePlus3)
+            .with_auto_delta_scale(4)
+            .unwrap();
+        assert_eq!(b.to_string(), "collage-plus-3@fp8e4m3+delta-scale=auto:4");
+        assert!(PrecisionPlan::bf16(Scheme::Plain).with_auto_delta_scale(4).is_err());
+        assert!(PrecisionPlan::bf16(Scheme::CollageLight).with_auto_delta_scale(0).is_err());
+    }
+
+    #[test]
+    fn full_grammar_roundtrip_property() {
+        // Exhaustive display∘parse round-trip over the entire plan space:
+        // every format × scheme × delta-scale mode (off, every static k,
+        // every auto k0).  Stronger than a sampled property test — the
+        // grammar is small enough to sweep.
+        let mut checked = 0usize;
+        let mut check = |plan: PrecisionPlan| {
+            let s = plan.to_string();
+            let back: PrecisionPlan = match s.parse() {
+                Ok(p) => p,
+                Err(e) => panic!("{plan:?} printed {s:?} which failed to parse: {e}"),
+            };
+            assert_eq!(back, plan, "round-trip through {s:?}");
+            // Display is a fixpoint: parse(display(parse(s))) == parse(s).
+            assert_eq!(back.to_string(), s, "display fixpoint for {s:?}");
+            checked += 1;
+        };
+        for format in ALL_FORMATS {
+            for scheme in ALL_SCHEMES {
+                let base = PrecisionPlan::new(format, scheme);
+                check(base);
+                if scheme.is_mcf_params() {
+                    for k in 1..=MAX_DELTA_SCALE {
+                        check(base.with_delta_scale(k).unwrap());
+                        check(base.with_auto_delta_scale(k).unwrap());
+                    }
+                }
+            }
+        }
+        // 5 formats × (9 schemes + 4 MCF schemes × 24 k × 2 modes).
+        assert_eq!(checked, 5 * (9 + 4 * 24 * 2));
     }
 
     #[test]

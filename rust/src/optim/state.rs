@@ -8,8 +8,9 @@
 
 use anyhow::{bail, Result};
 
+use super::delta_ctrl::DeltaScaleCtrl;
 use super::kernels::ChunkAccum;
-use super::plan::{PrecisionPlan, Scheme};
+use super::plan::{pow2_factor, PrecisionPlan, Scheme};
 use super::strategy::Strategy;
 use crate::tensor::SemanticDtype;
 
@@ -25,6 +26,11 @@ pub struct OptimState {
     /// Reusable per-chunk diagnostics buffer for the fused step kernels —
     /// grown once, so `AdamW::step` allocates nothing per step.
     accum_scratch: Vec<ChunkAccum>,
+    /// Adaptive delta-scale controller — `Some` exactly for
+    /// `+delta-scale=auto` plans.  Part of the training state: cloned,
+    /// checkpointed and restored with the vectors, so resume is
+    /// bit-identical (see `optim::delta_ctrl`).
+    delta_ctrl: Option<DeltaScaleCtrl>,
 }
 
 impl OptimState {
@@ -55,6 +61,7 @@ impl OptimState {
             dtypes: spec.iter().map(|(_, d)| *d).collect(),
             vecs,
             accum_scratch: Vec::new(),
+            delta_ctrl: plan.delta_auto.then(|| DeltaScaleCtrl::new(plan.delta_scale)),
         }
     }
 
@@ -100,6 +107,7 @@ impl OptimState {
             dtypes: spec.iter().map(|(_, d)| *d).collect(),
             vecs,
             accum_scratch: Vec::new(),
+            delta_ctrl: plan.delta_auto.then(|| DeltaScaleCtrl::new(plan.delta_scale)),
         })
     }
 
@@ -107,6 +115,86 @@ impl OptimState {
     /// row of the plan space.
     pub fn strategy(&self) -> Option<Strategy> {
         self.plan.as_strategy()
+    }
+
+    /// The delta-scale exponent in effect for the next step: the
+    /// controller's live `k` for `auto` plans, the plan's static exponent
+    /// otherwise (0 = scaling off).
+    pub fn delta_k(&self) -> u8 {
+        match &self.delta_ctrl {
+            Some(ctrl) => ctrl.k,
+            None => self.plan.delta_scale,
+        }
+    }
+
+    /// The adaptive controller (`Some` exactly for `auto` plans).
+    pub fn delta_ctrl(&self) -> Option<&DeltaScaleCtrl> {
+        self.delta_ctrl.as_ref()
+    }
+
+    pub(crate) fn delta_ctrl_mut(&mut self) -> Option<&mut DeltaScaleCtrl> {
+        self.delta_ctrl.as_mut()
+    }
+
+    /// Restore persisted controller state (checkpoint resume).  Errors on
+    /// non-`auto` plans: a checkpoint carrying controller state for a plan
+    /// without one is corrupt, not ignorable.
+    pub fn restore_delta_ctrl(&mut self, k: u8, good_steps: u32) -> Result<()> {
+        let Some(ctrl) = self.delta_ctrl.as_mut() else {
+            bail!(
+                "plan {} has no delta-scale controller to restore into",
+                self.plan
+            );
+        };
+        if k < ctrl.policy.k_min || k > ctrl.policy.k_max {
+            bail!("restored delta-scale exponent {k} outside policy bounds");
+        }
+        ctrl.k = k;
+        ctrl.good_steps = good_steps;
+        Ok(())
+    }
+
+    /// Exact power-of-two rescale of the stored δθ words on a controller
+    /// `k` transition: every word becomes `round(word × 2^(new_k−old_k))`
+    /// with the kernels' saturate-at-±max_finite overflow semantics.
+    /// Elementwise and order-independent, hence deterministic for any
+    /// worker count.
+    pub fn rescale_delta_words(&mut self, old_k: u8, new_k: u8) {
+        if old_k == new_k {
+            return;
+        }
+        let factor = 2f64.powi(new_k as i32 - old_k as i32);
+        let fmt = self.plan.format;
+        for name in ["dtheta_c", "dtheta_c2"] {
+            if let Some(v) = self.get_mut(name) {
+                for w in v.iter_mut() {
+                    let mut r = fmt.round_nearest_f64(*w as f64 * factor);
+                    if r.is_infinite() {
+                        r = fmt.max_finite_f32().copysign(r);
+                    }
+                    *w = r;
+                }
+            }
+        }
+    }
+
+    /// Would [`OptimState::rescale_delta_words`]`(old_k, new_k)` clip any
+    /// stored δθ word at ±max_finite?  Used to veto controller grows that
+    /// would destroy captured update mass.
+    pub fn delta_rescale_would_clip(&self, old_k: u8, new_k: u8) -> bool {
+        if new_k <= old_k {
+            return false;
+        }
+        let factor = 2f64.powi(new_k as i32 - old_k as i32);
+        let max = self.plan.format.max_finite_f32() as f64;
+        for name in ["dtheta_c", "dtheta_c2"] {
+            if let Some(v) = self.get(name) {
+                if v.iter().any(|&w| (w as f64 * factor).abs() > max) {
+                    return true;
+                }
+            }
+        }
+        false
     }
 
     /// Detach the fused-kernel scratch buffer (see `optim::kernels`);
@@ -168,7 +256,9 @@ impl OptimState {
     /// agree bitwise.
     pub fn theta_effective(&self) -> Vec<f64> {
         use super::kernels::{eff_theta2, eff_theta3};
-        let inv = 1.0 / self.plan.delta_scale_factor();
+        // The live exponent: controller k for auto plans (the stored words
+        // are rescaled in lockstep with it), static plan k otherwise.
+        let inv = 1.0 / pow2_factor(self.delta_k());
         match self.plan.scheme.theta_components() {
             2 => {
                 let hi = self.get("theta").unwrap();
@@ -272,6 +362,75 @@ mod tests {
         )
         .unwrap();
         assert_eq!(st.theta_effective(), vec![16.5]);
+    }
+
+    #[test]
+    fn auto_plan_carries_controller_and_rescales_exactly() {
+        use crate::numerics::format::FP16;
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+            .with_auto_delta_scale(4)
+            .unwrap();
+        let mut st = OptimState::from_vecs_plan(
+            plan,
+            vec![vec![16.0], vec![8.0], vec![0.0], vec![0.0]],
+        )
+        .unwrap();
+        assert_eq!(st.delta_k(), 4);
+        // θ_eff interprets the stored word through the LIVE exponent.
+        assert_eq!(st.theta_effective(), vec![16.5]);
+        // Growing k doubles the stored word exactly; θ_eff is preserved.
+        st.rescale_delta_words(4, 5);
+        assert_eq!(st.get("dtheta_c").unwrap(), &[16.0]);
+        st.delta_ctrl_mut().unwrap().k = 5;
+        assert_eq!(st.theta_effective(), vec![16.5]);
+        // Backing off halves it.
+        st.rescale_delta_words(5, 3);
+        assert_eq!(st.get("dtheta_c").unwrap(), &[4.0]);
+        st.delta_ctrl_mut().unwrap().k = 3;
+        assert_eq!(st.theta_effective(), vec![16.5]);
+        // Static plans carry no controller.
+        let st2 = OptimState::init_plan(
+            PrecisionPlan::new(FP8E4M3, Scheme::CollageLight).with_delta_scale(4).unwrap(),
+            &[1.0],
+        );
+        assert!(st2.delta_ctrl().is_none());
+        assert_eq!(st2.delta_k(), 4);
+        // The clip veto predicate: doubling 300 at e4m3 would exceed 448.
+        let st3 = OptimState::from_vecs_plan(
+            plan,
+            vec![vec![16.0], vec![320.0], vec![0.0], vec![0.0]],
+        )
+        .unwrap();
+        assert!(st3.delta_rescale_would_clip(4, 5));
+        assert!(!st3.delta_rescale_would_clip(4, 4));
+        assert!(!st3.delta_rescale_would_clip(5, 4), "backoff never clips");
+        // Rescale overflow saturates at ±max_finite instead of minting inf
+        // (fp16 has infinities; the clamp must catch them).
+        let plan16 = PrecisionPlan::new(FP16, Scheme::CollageLight)
+            .with_auto_delta_scale(4)
+            .unwrap();
+        let mut st4 = OptimState::from_vecs_plan(
+            plan16,
+            vec![vec![16.0], vec![-60000.0], vec![0.0], vec![0.0]],
+        )
+        .unwrap();
+        st4.rescale_delta_words(4, 5);
+        assert_eq!(st4.get("dtheta_c").unwrap(), &[-FP16.max_finite_f32()]);
+    }
+
+    #[test]
+    fn restore_delta_ctrl_validates() {
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+            .with_auto_delta_scale(8)
+            .unwrap();
+        let mut st = OptimState::init_plan(plan, &[1.0]);
+        st.restore_delta_ctrl(5, 7).unwrap();
+        let ctrl = st.delta_ctrl().unwrap();
+        assert_eq!((ctrl.k, ctrl.good_steps), (5, 7));
+        assert!(st.restore_delta_ctrl(0, 0).is_err(), "k below policy floor");
+        assert!(st.restore_delta_ctrl(200, 0).is_err(), "k above policy cap");
+        let mut st2 = OptimState::init(Strategy::CollageLight, &[1.0]);
+        assert!(st2.restore_delta_ctrl(5, 7).is_err(), "no controller to restore");
     }
 
     #[test]

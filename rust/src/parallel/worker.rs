@@ -13,6 +13,13 @@
 //! same worker count (`AdamW::step_sharded`); the kernel layer's
 //! determinism contract (`optim::kernels`) keeps the result bit-identical
 //! to a single-threaded step, so DP runs stay reproducible.
+//!
+//! `+delta-scale=auto` plans stay consistent here by construction: the
+//! leader steps one global state from the **all-reduced** gradient, so the
+//! saturation/underflow counters the adaptive controller consumes are the
+//! global totals (reduced on the fixed chunk grid, worker-count
+//! invariant), and the resulting k transition is applied once to the one
+//! state every rank trains against — no shard can ever disagree on k.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -154,6 +161,13 @@ impl DataParallel {
 
     pub fn current_step(&self) -> u64 {
         self.step
+    }
+
+    /// The delta-scale exponent currently in effect (the adaptive
+    /// controller's live k on `auto` plans; the plan's static exponent —
+    /// possibly 0 — otherwise).
+    pub fn delta_k(&self) -> u8 {
+        self.state.delta_k()
     }
 
     pub fn micro_batch(&self) -> usize {

@@ -1,0 +1,204 @@
+//! Checkpoint round-trip contract for the adaptive delta-scale controller:
+//! saving mid-run (including mid-backoff, with the live exponent away from
+//! the plan's k0 and a partially-accumulated clean-step counter),
+//! restoring, and continuing must be **bit-identical** to an uninterrupted
+//! run — state vectors, controller state AND per-step `StepStats` — for
+//! worker counts 1/2/8.
+
+use std::path::PathBuf;
+
+use collage::coordinator::checkpoint::Checkpoint;
+use collage::numerics::format::{FloatFormat, FP8E4M3};
+use collage::optim::adamw::{AdamW, StepStats};
+use collage::optim::plan::{PrecisionPlan, Scheme};
+use collage::optim::state::OptimState;
+use collage::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("collage_dctrl_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_states_bitwise(a: &OptimState, b: &OptimState, ctx: &str) {
+    assert_eq!(a.names(), b.names(), "{ctx}: state arity");
+    for (name, (va, vb)) in a.names().iter().zip(a.vecs().iter().zip(b.vecs())) {
+        for (i, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{ctx}: state {name:?}[{i}] {x:e} != {y:e}"
+            );
+        }
+    }
+    assert_eq!(a.delta_ctrl(), b.delta_ctrl(), "{ctx}: controller state");
+    assert_eq!(a.delta_k(), b.delta_k(), "{ctx}: live exponent");
+}
+
+fn assert_stats_bitwise(a: &StepStats, b: &StepStats, ctx: &str) {
+    assert_eq!(a.edq.update_norm.to_bits(), b.edq.update_norm.to_bits(), "{ctx}: update_norm");
+    assert_eq!(
+        a.edq.effective_norm.to_bits(),
+        b.edq.effective_norm.to_bits(),
+        "{ctx}: effective_norm"
+    );
+    assert_eq!(a.edq.edq.to_bits(), b.edq.edq.to_bits(), "{ctx}: edq");
+    assert_eq!(a.lost_frac.to_bits(), b.lost_frac.to_bits(), "{ctx}: lost_frac");
+    assert_eq!(a.param_norm.to_bits(), b.param_norm.to_bits(), "{ctx}: param_norm");
+    assert_eq!(a.delta_saturated, b.delta_saturated, "{ctx}: delta_saturated");
+    assert_eq!(a.delta_underflow, b.delta_underflow, "{ctx}: delta_underflow");
+    assert_eq!(a.delta_k, b.delta_k, "{ctx}: delta_k");
+}
+
+/// Deterministic gradient for step `t`: the constant sub-floor teacher pull
+/// plus a tiny step-keyed ripple so consecutive steps are not identical.
+fn grad(fmt: FloatFormat, n: usize, t: u64, base: f32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let ripple = ((t as usize + i) % 3) as f32 * 0.01;
+            fmt.round_nearest(base + ripple)
+        })
+        .collect()
+}
+
+/// Run `plan` for `total` steps at `workers`, optionally checkpointing at
+/// `split` and resuming from disk.  Returns the final state plus the stats
+/// of every step after `split` (the segment that must match bitwise).
+fn run(
+    plan: PrecisionPlan,
+    theta0: &[f32],
+    lr: f32,
+    base_grad: f32,
+    total: u64,
+    split: Option<(u64, &PathBuf)>,
+    workers: usize,
+) -> (OptimState, Vec<StepStats>) {
+    let fmt = plan.format;
+    let opt = AdamW { weight_decay: 0.0, ..AdamW::for_plan(plan, 0.95) };
+    let mut st = OptimState::init_plan(plan, theta0);
+    let mut rng = Rng::new(11, 11);
+    let mut tail = Vec::new();
+    let split_at = split.as_ref().map(|(s, _)| *s).unwrap_or(u64::MAX);
+    for t in 1..=total {
+        let g = grad(fmt, st.n, t, base_grad);
+        let stats = opt.step_sharded(&mut st, &g, lr, t, &mut rng, workers);
+        if t > split_at {
+            tail.push(stats);
+        }
+        if t == split_at {
+            let (_, path) = split.as_ref().unwrap();
+            Checkpoint { step: t, model: "proxy".into(), state: st.clone() }
+                .save(path)
+                .unwrap();
+            // Drop the live state entirely and reload from disk: resume
+            // must reconstruct everything (vectors + controller) from the
+            // file alone.
+            st = Checkpoint::load(path).unwrap().state;
+        }
+    }
+    (st, tail)
+}
+
+#[test]
+fn auto_ctrl_resume_is_bit_identical_mid_growth_across_workers() {
+    // The sub-floor regime from k0 = 2 at lr = 5e-5: Δθ vanishes on the
+    // scaled grid at k = 2 AND k = 3, so the controller grows k at steps
+    // 25 and 50.  Splitting at step 40 lands BETWEEN the two transitions
+    // with a partially-accumulated clean-step counter — exactly the state
+    // that must survive the checkpoint for steps 41.. to match.
+    let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+        .with_auto_delta_scale(2)
+        .unwrap();
+    let theta0 = vec![16.0f32; 700];
+    let dir = tmp_dir("growth");
+    for workers in [1usize, 2, 8] {
+        let path = dir.join(format!("g{workers}.ckpt"));
+        let (st_a, tail_a) = run(plan, &theta0, 5e-5, 0.5, 80, None, workers);
+        let (st_b, tail_b) =
+            run(plan, &theta0, 5e-5, 0.5, 80, Some((40, &path)), workers);
+        // Sanity: the saved checkpoint really was mid-adaptation (k had
+        // already grown once, clean steps were mid-count).
+        let saved = Checkpoint::load(&path).unwrap();
+        let ctrl = saved.state.delta_ctrl().unwrap();
+        assert_eq!(ctrl.k, 3, "split must land between the two growths");
+        assert!(ctrl.good_steps > 0, "split must land mid-interval");
+        let ctx = format!("growth workers={workers}");
+        assert_states_bitwise(&st_a, &st_b, &ctx);
+        assert_eq!(tail_a.len(), tail_b.len());
+        for (i, (a, b)) in tail_a.iter().zip(&tail_b).enumerate() {
+            assert_stats_bitwise(a, b, &format!("{ctx} tail step {i}"));
+        }
+        // The run must actually have adapted (at least) twice by the end.
+        // (Not pinned exactly: at k = 4 the scaled update sits within a
+        // hair of the rounds-to-zero floor, so whether a third grow fires
+        // is a knife-edge — the bitwise A≡B comparison above is the
+        // contract either way.)
+        assert!(st_a.delta_ctrl().unwrap().k >= 4, "{ctx}: regime drifted");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn auto_ctrl_resume_is_bit_identical_mid_backoff() {
+    // Mid-BACKOFF save: e4m3 with an oversized k0 = 24 and update steps
+    // around 2e-2 — every scaled word clips (0.02 × 2²⁴ ≫ 448), so the
+    // controller walks k down one exponent per saturated step from t = 1.
+    // Split inside the clipping window (k well below k0, counter freshly
+    // reset) and resume; backoffs must continue identically afterwards.
+    let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+        .with_auto_delta_scale(24)
+        .unwrap();
+    let theta0 = vec![16.0f32; 300];
+    let dir = tmp_dir("backoff");
+    for workers in [1usize, 2, 8] {
+        let path = dir.join(format!("b{workers}.ckpt"));
+        let (st_a, tail_a) = run(plan, &theta0, 2e-2, 0.5, 40, None, workers);
+        let (st_b, tail_b) =
+            run(plan, &theta0, 2e-2, 0.5, 40, Some((12, &path)), workers);
+        let saved = Checkpoint::load(&path).unwrap();
+        let saved_k = saved.state.delta_ctrl().unwrap().k;
+        assert!(saved_k < 24, "split must land after at least one backoff");
+        let ctx = format!("backoff workers={workers} (saved k={saved_k})");
+        assert_states_bitwise(&st_a, &st_b, &ctx);
+        for (i, (a, b)) in tail_a.iter().zip(&tail_b).enumerate() {
+            assert_stats_bitwise(a, b, &format!("{ctx} tail step {i}"));
+        }
+        // The clipping regime persists past the split: more backoffs after
+        // the resume, bit-identically on both paths.
+        assert!(
+            st_a.delta_ctrl().unwrap().k < saved_k,
+            "{ctx}: no backoff happened after the split"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn static_and_off_plans_are_untouched_by_the_controller_machinery() {
+    // A static delta-scale plan and an unscaled plan must carry no
+    // controller, report their static exponent in StepStats, and resume
+    // bit-identically through the same harness (regression guard: the
+    // controller hook must be a true no-op for them).
+    let dir = tmp_dir("static");
+    for (plan, expect_k) in [
+        (
+            PrecisionPlan::new(FP8E4M3, Scheme::CollageLight).with_delta_scale(8).unwrap(),
+            8u8,
+        ),
+        (PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3), 0u8),
+    ] {
+        let theta0 = vec![16.0f32; 300];
+        let path = dir.join(format!("s{expect_k}.ckpt"));
+        let (st_a, tail_a) = run(plan, &theta0, 1e-4, 0.5, 30, None, 2);
+        let (st_b, tail_b) = run(plan, &theta0, 1e-4, 0.5, 30, Some((15, &path)), 2);
+        assert!(st_a.delta_ctrl().is_none());
+        assert_eq!(st_a.delta_k(), expect_k);
+        assert!(tail_a.iter().all(|s| s.delta_k == expect_k));
+        let ctx = format!("static plan {plan}");
+        assert_states_bitwise(&st_a, &st_b, &ctx);
+        for (a, b) in tail_a.iter().zip(&tail_b) {
+            assert_stats_bitwise(a, b, &ctx);
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -68,6 +68,11 @@ fn assert_stats_bitwise(a: &StepStats, b: &StepStats, ctx: &str) {
     for (name, x, y) in fields {
         assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: stats.{name} {x:e} != {y:e}");
     }
+    // The extended stats: the delta-scale telemetry counters and the
+    // exponent in effect must agree exactly too.
+    assert_eq!(a.delta_saturated, b.delta_saturated, "{ctx}: stats.delta_saturated");
+    assert_eq!(a.delta_underflow, b.delta_underflow, "{ctx}: stats.delta_underflow");
+    assert_eq!(a.delta_k, b.delta_k, "{ctx}: stats.delta_k");
 }
 
 /// Run `steps` steps through the fused and oracle paths with identical
@@ -93,6 +98,13 @@ fn compare_paths(plan: PrecisionPlan, n: usize, workers: usize, steps: u64) {
         let ctx = format!("{ctx} t={t}");
         assert_states_bitwise(&st_oracle, &st_fused, &ctx);
         assert_stats_bitwise(&s_oracle, &s_fused, &ctx);
+        // Auto plans: the adaptive controllers must track identically
+        // (same k, same clean-step counter) after every step.
+        assert_eq!(
+            st_oracle.delta_ctrl(),
+            st_fused.delta_ctrl(),
+            "{ctx}: controller state diverged"
+        );
     }
 }
 
@@ -140,6 +152,11 @@ fn length3_and_delta_scale_fused_match_oracle_all_sizes_and_workers() {
         PrecisionPlan::new(FP8E4M3, Scheme::CollageLight).with_delta_scale(8).unwrap(),
         PrecisionPlan::new(FP8E4M3, Scheme::CollagePlus).with_delta_scale(6).unwrap(),
         PrecisionPlan::new(FP8E5M2, Scheme::CollageLight3).with_delta_scale(8).unwrap(),
+        // Adaptive controller plans ride the same scaled kernels with the
+        // controller's live k injected.
+        PrecisionPlan::new(FP8E4M3, Scheme::CollageLight).with_auto_delta_scale(8).unwrap(),
+        PrecisionPlan::new(FP8E5M2, Scheme::CollageLight3).with_auto_delta_scale(2).unwrap(),
+        PrecisionPlan::new(FP16, Scheme::CollagePlus).with_auto_delta_scale(24).unwrap(),
     ];
     for plan in plans {
         for n in [1usize, 1023, 4097] {
@@ -159,6 +176,51 @@ fn length3_and_delta_scale_fused_match_oracle_all_sizes_and_workers() {
         for workers in [1usize, 2, 8] {
             compare_paths(plan, 40_000, workers, 2);
         }
+    }
+}
+
+#[test]
+fn auto_delta_scale_transitions_match_oracle_bitwise_across_workers() {
+    // Force the adaptive controller through real grow transitions (the
+    // sub-subnormal-floor regime: exact updates vanish on the 2^k0-finer
+    // grid, so after every clean growth interval k steps up) and require
+    // fused == oracle bitwise — state, stats, AND controller — throughout,
+    // at a multi-chunk size for every worker count.
+    let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight)
+        .with_auto_delta_scale(2)
+        .unwrap();
+    let n = 40_000; // 3 chunks: exercises the counter combine too
+    let opt = AdamW { weight_decay: 0.0, ..AdamW::for_plan(plan, 0.95) };
+    let oracle = GenericAdamW::from_adamw(&opt, plan);
+    let theta0 = vec![16.0f32; n];
+    for workers in [1usize, 2, 8] {
+        let mut st_oracle = OptimState::init_plan(plan, &theta0);
+        let mut st_fused = OptimState::init_plan(plan, &theta0);
+        let mut r_o = Rng::new(4, 4);
+        let mut r_f = Rng::new(4, 4);
+        // Constant gradient 0.5 → m̂/√v̂ ≈ 1 → Δθ ≈ −lr = −5e-5, below the
+        // scaled grid at k = 2 AND k = 3, so the controller must grow at
+        // steps 25 and 50 (one growth interval each).
+        let g = vec![FP8E4M3.round_nearest(0.5); n];
+        let mut transitions = 0;
+        let mut last_k = st_fused.delta_k();
+        for t in 1..=60 {
+            let so = oracle.step(&mut st_oracle, &g, 5e-5, t, &mut r_o);
+            let sf = opt.step_sharded(&mut st_fused, &g, 5e-5, t, &mut r_f, workers);
+            let ctx = format!("auto transitions workers={workers} t={t}");
+            assert_states_bitwise(&st_oracle, &st_fused, &ctx);
+            assert_stats_bitwise(&so, &sf, &ctx);
+            assert_eq!(st_oracle.delta_ctrl(), st_fused.delta_ctrl(), "{ctx}");
+            if st_fused.delta_k() != last_k {
+                transitions += 1;
+                last_k = st_fused.delta_k();
+            }
+        }
+        assert!(
+            transitions >= 2,
+            "workers={workers}: the regime must actually drive k transitions \
+             (saw {transitions}, final k {last_k})"
+        );
     }
 }
 
