@@ -1,17 +1,84 @@
 //! Checkpointing: the flat optimizer-state vectors + step counter, written
 //! in a simple length-prefixed binary format with a JSON header, so runs
 //! can resume bit-exactly.
+//!
+//! Since the guardrail treats checkpoints as rollback targets, integrity
+//! matters: every file ends with an FNV-1a-64 checksum over all preceding
+//! bytes, and [`Checkpoint::load`] returns a typed [`CheckpointError`] on
+//! truncated or bit-flipped input — never a panic, never silently-loaded
+//! garbage.  Pre-checksum files (no trailer) still load when they parse
+//! to exactly end-of-file.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::optim::plan::PrecisionPlan;
 use crate::optim::state::OptimState;
 use crate::util::json::{Obj, Value};
 
 const MAGIC: &[u8; 8] = b"COLLAGE1";
+
+/// FNV-1a 64-bit over the serialized bytes — cheap, dependency-free, and
+/// plenty to catch the torn-write / bit-rot failures that matter here
+/// (this is corruption detection, not an adversarial MAC).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Why a checkpoint failed to load.  Returned through `anyhow` (downcast
+/// with `err.downcast_ref::<CheckpointError>()`).
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("{0:?} is not a collage checkpoint (bad magic)")]
+    BadMagic(PathBuf),
+    #[error("{path:?} is truncated reading {what} ({needed} missing bytes)")]
+    Truncated { path: PathBuf, what: &'static str, needed: usize },
+    #[error("{path:?} has a corrupt header: {msg}")]
+    Header { path: PathBuf, msg: String },
+    #[error(
+        "{path:?} failed its content checksum \
+         (stored {stored:#018x}, computed {computed:#018x})"
+    )]
+    Checksum { path: PathBuf, stored: u64, computed: u64 },
+    #[error("{path:?} is corrupt: {msg}")]
+    Corrupt { path: PathBuf, msg: String },
+}
+
+/// Bounds-checked reader over the raw checkpoint bytes: every read that
+/// would run past end-of-input is a [`CheckpointError::Truncated`], and
+/// lengths are validated *before* any allocation sized by them.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CheckpointError> {
+        let remaining = self.bytes.len() - self.pos;
+        if n > remaining {
+            return Err(CheckpointError::Truncated {
+                path: self.path.to_path_buf(),
+                what,
+                needed: n - remaining,
+            });
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, CheckpointError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("take(8) returned 8 bytes")))
+    }
+}
 
 /// A saved training state.
 #[derive(Debug, Clone)]
@@ -22,98 +89,162 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Serialize to `path` (atomic: write then rename).
+    /// Serialize to `path` (atomic: write then rename), appending an
+    /// FNV-1a-64 checksum over all preceding bytes as an 8-byte LE
+    /// trailer.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent).ok();
         }
-        let tmp = path.with_extension("tmp");
-        {
-            let mut f = std::io::BufWriter::new(
-                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
-            );
-            let mut header = Obj::new();
-            header.insert("step", self.step);
-            header.insert("model", self.model.as_str());
-            // Single combined spelling — legacy option strings on the bf16
-            // row, "scheme@format" elsewhere; one parser reads both back.
-            header.insert("strategy", self.state.plan.to_string());
-            header.insert("n", self.state.n);
-            header.insert(
-                "vectors",
-                Value::Arr(
-                    self.state.names().iter().map(|&n| Value::Str(n.to_string())).collect(),
-                ),
-            );
-            // Adaptive delta-scale controller state (auto plans only): the
-            // live exponent + clean-step counter, so resume is
-            // bit-identical to an uninterrupted run.
-            if let Some(ctrl) = self.state.delta_ctrl() {
-                let mut c = Obj::new();
-                c.insert("k", ctrl.k as u64);
-                c.insert("good_steps", ctrl.good_steps as u64);
-                header.insert("delta_ctrl", Value::Obj(c));
-            }
-            let header_text = Value::Obj(header).dump();
-            f.write_all(MAGIC)?;
-            f.write_all(&(header_text.len() as u64).to_le_bytes())?;
-            f.write_all(header_text.as_bytes())?;
-            for vec in self.state.vecs() {
-                f.write_all(&(vec.len() as u64).to_le_bytes())?;
-                for &x in vec {
-                    f.write_all(&x.to_le_bytes())?;
-                }
+        let mut header = Obj::new();
+        header.insert("step", self.step);
+        header.insert("model", self.model.as_str());
+        // Single combined spelling — legacy option strings on the bf16
+        // row, "scheme@format" elsewhere; one parser reads both back.
+        header.insert("strategy", self.state.plan.to_string());
+        header.insert("n", self.state.n);
+        header.insert(
+            "vectors",
+            Value::Arr(self.state.names().iter().map(|&n| Value::Str(n.to_string())).collect()),
+        );
+        // Adaptive delta-scale controller state (auto plans only): the
+        // live exponent + clean-step counter, so resume is
+        // bit-identical to an uninterrupted run.
+        if let Some(ctrl) = self.state.delta_ctrl() {
+            let mut c = Obj::new();
+            c.insert("k", ctrl.k as u64);
+            c.insert("good_steps", ctrl.good_steps as u64);
+            header.insert("delta_ctrl", Value::Obj(c));
+        }
+        let header_text = Value::Obj(header).dump();
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(header_text.len() as u64).to_le_bytes());
+        buf.extend_from_slice(header_text.as_bytes());
+        for vec in self.state.vecs() {
+            buf.extend_from_slice(&(vec.len() as u64).to_le_bytes());
+            for &x in vec {
+                buf.extend_from_slice(&x.to_le_bytes());
             }
         }
+        let sum = fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &buf).with_context(|| format!("writing {tmp:?}"))?;
         std::fs::rename(&tmp, path).with_context(|| format!("renaming to {path:?}"))?;
         Ok(())
     }
 
-    /// Load from `path`.
+    /// Load from `path`.  Verifies the trailing content checksum when
+    /// present (files written before the trailer existed load as long as
+    /// they parse to exactly end-of-file); every failure is a typed
+    /// [`CheckpointError`] — corrupt input can never panic or come back
+    /// as silently-wrong state.
     pub fn load(path: &Path) -> Result<Self> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
-        );
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{path:?} is not a collage checkpoint");
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        // Checksummed layout: body + 8-byte FNV trailer.
+        if bytes.len() >= 8 {
+            let (body, tail) = bytes.split_at(bytes.len() - 8);
+            let stored = u64::from_le_bytes(tail.try_into().expect("split_at leaves 8 bytes"));
+            let computed = fnv1a(body);
+            if computed == stored {
+                let (ck, used) = Self::parse(body, path)?;
+                if used != body.len() {
+                    return Err(CheckpointError::Corrupt {
+                        path: path.to_path_buf(),
+                        msg: format!("{} trailing bytes after state vectors", body.len() - used),
+                    }
+                    .into());
+                }
+                return Ok(ck);
+            }
         }
-        let mut len8 = [0u8; 8];
-        f.read_exact(&mut len8)?;
-        let hlen = u64::from_le_bytes(len8) as usize;
-        let mut hbytes = vec![0u8; hlen];
-        f.read_exact(&mut hbytes)?;
-        let header = Value::parse(std::str::from_utf8(&hbytes)?)?;
-        let step = header.get("step")?.as_i64()? as u64;
-        let model = header.get("model")?.as_str()?.to_string();
-        let plan: PrecisionPlan = header.get("strategy")?.as_str()?.parse()?;
-        let n_vectors = header.get("vectors")?.as_arr()?.len();
-        let mut vecs = Vec::with_capacity(n_vectors);
+        // Legacy layout (pre-checksum): the whole file must parse exactly.
+        let (ck, used) = Self::parse(&bytes, path)?;
+        match bytes.len() - used {
+            0 => Ok(ck),
+            // Exactly a trailer left over: a checksummed file whose
+            // trailer no longer matches its (bit-flipped) body.
+            8 => {
+                let (body, tail) = bytes.split_at(bytes.len() - 8);
+                Err(CheckpointError::Checksum {
+                    path: path.to_path_buf(),
+                    stored: u64::from_le_bytes(tail.try_into().expect("8-byte tail")),
+                    computed: fnv1a(body),
+                }
+                .into())
+            }
+            extra => Err(CheckpointError::Corrupt {
+                path: path.to_path_buf(),
+                msg: format!("{extra} trailing bytes after state vectors"),
+            }
+            .into()),
+        }
+    }
+
+    /// Parse one checkpoint from `bytes`, returning it plus the number of
+    /// bytes consumed.
+    fn parse(bytes: &[u8], path: &Path) -> Result<(Self, usize), CheckpointError> {
+        let mut r = Reader { bytes, pos: 0, path };
+        let magic = r.take(8, "magic")?;
+        if magic != MAGIC {
+            return Err(CheckpointError::BadMagic(path.to_path_buf()));
+        }
+        let herr = |msg: String| CheckpointError::Header { path: path.to_path_buf(), msg };
+        let hlen = usize::try_from(r.u64("header length")?)
+            .map_err(|_| herr("header length exceeds usize".into()))?;
+        let hbytes = r.take(hlen, "header")?;
+        let text =
+            std::str::from_utf8(hbytes).map_err(|_| herr("header is not UTF-8".into()))?;
+        // Header field extraction: any missing/ill-typed field is a
+        // corrupt header, reported as such.
+        let (step, model, plan, n_vectors, ctrl) = (|| -> Result<_, anyhow::Error> {
+            let header = Value::parse(text)?;
+            let step = header.get("step")?.as_i64()? as u64;
+            let model = header.get("model")?.as_str()?.to_string();
+            let plan: PrecisionPlan = header.get("strategy")?.as_str()?.parse()?;
+            let n_vectors = header.get("vectors")?.as_arr()?.len();
+            // Range-check before narrowing: a truncating `as` cast would
+            // let a corrupt header (k = 261 → 5) slip past the policy
+            // bounds validation and reinterpret the stored δθ words
+            // through the wrong exponent.
+            let ctrl = match header.opt("delta_ctrl") {
+                Some(c) => Some((
+                    u8::try_from(c.get("k")?.as_i64()?)
+                        .map_err(|_| anyhow::anyhow!("delta_ctrl.k out of range"))?,
+                    u32::try_from(c.get("good_steps")?.as_i64()?)
+                        .map_err(|_| anyhow::anyhow!("delta_ctrl.good_steps out of range"))?,
+                )),
+                None => None,
+            };
+            Ok((step, model, plan, n_vectors, ctrl))
+        })()
+        .map_err(|e| herr(format!("{e:#}")))?;
+
+        let mut vecs: Vec<Vec<f32>> = Vec::with_capacity(n_vectors.min(16));
         for _ in 0..n_vectors {
-            f.read_exact(&mut len8)?;
-            let n = u64::from_le_bytes(len8) as usize;
-            let mut buf = vec![0u8; n * 4];
-            f.read_exact(&mut buf)?;
+            let n = usize::try_from(r.u64("vector length")?)
+                .map_err(|_| herr("vector length exceeds usize".into()))?;
+            let nbytes = n.checked_mul(4).ok_or_else(|| CheckpointError::Corrupt {
+                path: path.to_path_buf(),
+                msg: format!("vector length {n} overflows"),
+            })?;
+            // Bounds-checked BEFORE the allocation: a bit-flipped length
+            // prefix must fail as Truncated, not attempt a huge Vec.
+            let buf = r.take(nbytes, "vector payload")?;
             vecs.push(
                 buf.chunks_exact(4)
                     .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect(),
             );
         }
-        let mut state = OptimState::from_vecs_plan(plan, vecs)?;
-        if let Some(c) = header.opt("delta_ctrl") {
-            // Range-check before narrowing: a truncating `as` cast would
-            // let a corrupt header (k = 261 → 5) slip past the policy
-            // bounds validation and reinterpret the stored δθ words
-            // through the wrong exponent.
-            let k = u8::try_from(c.get("k")?.as_i64()?)
-                .map_err(|_| anyhow::anyhow!("corrupt delta_ctrl.k in {path:?}"))?;
-            let good_steps = u32::try_from(c.get("good_steps")?.as_i64()?)
-                .map_err(|_| anyhow::anyhow!("corrupt delta_ctrl.good_steps in {path:?}"))?;
-            state.restore_delta_ctrl(k, good_steps)?;
+        let cerr = |msg: String| CheckpointError::Corrupt { path: path.to_path_buf(), msg };
+        let mut state =
+            OptimState::from_vecs_plan(plan, vecs).map_err(|e| cerr(format!("{e:#}")))?;
+        if let Some((k, good_steps)) = ctrl {
+            state.restore_delta_ctrl(k, good_steps).map_err(|e| cerr(format!("{e:#}")))?;
         }
-        Ok(Checkpoint { step, model, state })
+        Ok((Checkpoint { step, model, state }, r.pos))
     }
 }
 
@@ -228,6 +359,107 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// A representative saved checkpoint (auto plan: exercises the
+    /// delta_ctrl header too), returned as (dir, path, raw bytes).
+    fn saved_ckpt(tag: &str) -> (std::path::PathBuf, std::path::PathBuf, Vec<u8>) {
+        use crate::numerics::format::FP8E4M3;
+        use crate::optim::plan::Scheme;
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3)
+            .with_auto_delta_scale(8)
+            .unwrap();
+        let theta: Vec<f32> = (0..48).map(|i| FP8E4M3.round_nearest(i as f32 * 0.25)).collect();
+        let state = OptimState::init_plan(plan, &theta);
+        let ck = Checkpoint { step: 33, model: "proxy".into(), state };
+        let dir = std::env::temp_dir().join(format!("collage_test_ckpt_{tag}"));
+        let path = dir.join("c.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        (dir, path, bytes)
+    }
+
+    #[test]
+    fn bit_flips_at_any_offset_are_typed_errors() {
+        let (dir, path, bytes) = saved_ckpt("flip");
+        // Flip one byte in every structural region: magic, header-length
+        // prefix, JSON header, a vector-length prefix, f32 payload, and
+        // the checksum trailer itself.
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let offsets = [
+            0,               // magic
+            9,               // header length (low bytes → huge length)
+            16 + hlen / 2,   // inside the JSON header
+            16 + hlen + 3,   // first vector-length prefix
+            16 + hlen + 8 + 5, // f32 payload
+            bytes.len() / 2, // somewhere in the middle
+            bytes.len() - 3, // checksum trailer
+        ];
+        for off in offsets {
+            let mut corrupt = bytes.clone();
+            corrupt[off] ^= 0x40;
+            std::fs::write(&path, &corrupt).unwrap();
+            let err = Checkpoint::load(&path)
+                .expect_err(&format!("flip at offset {off} must fail, not load"));
+            assert!(
+                err.downcast_ref::<CheckpointError>().is_some(),
+                "flip at {off}: expected CheckpointError, got {err:#}"
+            );
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_never_a_panic() {
+        let (dir, path, bytes) = saved_ckpt("trunc");
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        // Cut at every structural boundary-ish point, including 0.
+        for cut in [0, 5, 8, 12, 16, 16 + hlen - 2, 16 + hlen + 4, bytes.len() - 11] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = Checkpoint::load(&path)
+                .expect_err(&format!("truncation to {cut} bytes must fail"));
+            assert!(
+                err.downcast_ref::<CheckpointError>().is_some(),
+                "cut at {cut}: expected CheckpointError, got {err:#}"
+            );
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn checksum_mismatch_is_reported_as_such() {
+        let (dir, path, bytes) = saved_ckpt("sum");
+        // Flip a payload byte that still parses structurally: the error
+        // must be the checksum variant, proving the trailer is what
+        // rejects otherwise-plausible garbage.
+        let mut corrupt = bytes.clone();
+        let off = bytes.len() - 12; // inside the last f32 word
+        corrupt[off] ^= 0x01;
+        std::fs::write(&path, &corrupt).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        match err.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::Checksum { stored, computed, .. }) => {
+                assert_ne!(stored, computed)
+            }
+            other => panic!("expected Checksum error, got {other:?}"),
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn legacy_files_without_trailer_still_load() {
+        let (dir, path, bytes) = saved_ckpt("legacy");
+        let loaded = Checkpoint::load(&path).unwrap();
+        // Strip the trailer: byte-identical to the pre-checksum format.
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        let legacy = Checkpoint::load(&path).unwrap();
+        assert_eq!(legacy.step, loaded.step);
+        for (a, b) in loaded.state.vecs().iter().zip(legacy.state.vecs()) {
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb);
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -10,6 +10,8 @@ use crate::optim::plan::PrecisionPlan;
 use crate::optim::strategy::Strategy;
 use crate::util::json::{Obj, Value};
 
+use super::guard::GuardConfig;
+
 /// One training run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -44,6 +46,9 @@ pub struct RunConfig {
     pub checkpoint_dir: Option<String>,
     /// Checkpoint every N steps (0 = only at the end, if dir set).
     pub checkpoint_every: u64,
+    /// Spike guardrail (`--guard on` / `--guard window=...,skip=...`);
+    /// `None` = off.  Serialized as the guard grammar string.
+    pub guard: Option<GuardConfig>,
 }
 
 impl Default for RunConfig {
@@ -64,6 +69,7 @@ impl Default for RunConfig {
             dp_workers: 1,
             checkpoint_dir: None,
             checkpoint_every: 0,
+            guard: None,
         }
     }
 }
@@ -96,6 +102,10 @@ impl RunConfig {
             None => o.insert("checkpoint_dir", Value::Null),
         }
         o.insert("checkpoint_every", self.checkpoint_every);
+        match &self.guard {
+            Some(g) => o.insert("guard", g.to_string()),
+            None => o.insert("guard", Value::Null),
+        }
         Value::Obj(o)
     }
 
@@ -156,6 +166,10 @@ impl RunConfig {
                 .opt("checkpoint_every")
                 .map(|x| x.as_i64().unwrap_or(0) as u64)
                 .unwrap_or(d.checkpoint_every),
+            guard: match v.opt("guard").and_then(|x| x.as_str().ok()) {
+                Some(s) => Some(s.parse().context("parsing guard config")?),
+                None => None,
+            },
         })
     }
 
@@ -260,6 +274,28 @@ mod tests {
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.plan, cfg.plan);
         assert_eq!((back.plan.delta_auto, back.plan.delta_scale), (true, 3));
+    }
+
+    #[test]
+    fn json_roundtrip_guard_config() {
+        let mut cfg = RunConfig::default();
+        cfg.guard = Some(GuardConfig::default());
+        let v = cfg.to_json();
+        assert_eq!(v.get("guard").unwrap().as_str().unwrap(), "on");
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(back.guard, Some(GuardConfig::default()));
+        // Non-default knobs survive as the full key=value grammar.
+        cfg.guard = Some(GuardConfig { window: 8, skip: 32, ..Default::default() });
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.guard, cfg.guard);
+        // Absent / null key → off; garbage → error, not silently off.
+        cfg.guard = None;
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap().guard, None);
+        let v = Value::parse(
+            r#"{"model": "tiny", "strategy": "a", "steps": 1, "guard": "zap=1"}"#,
+        )
+        .unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! Spike guardrail: rolling loss/update-norm anomaly detection plus the
+//! rollback policy that lets a run survive an injected (or real) fp8
+//! instability instead of diverging permanently.
+//!
+//! # State machine
+//!
+//! ```text
+//!            trip (loss/update spike or non-finite loss)
+//!   Armed ────────────────────────────────────────────────► Rollback
+//!     ▲                                                        │
+//!     │                      restore retained snapshot (s0),   │
+//!     │                      discard rows > s0, back off k     │
+//!     │                      iff the discarded segment         │
+//!     │                      saturated δθ words                │
+//!     │                                                        ▼
+//!   Cooldown ◄─────────────────────────────────────────── Quarantine
+//!   (baselines update,        skip steps s0+1 ..= trip+skip
+//!    trips suppressed          (no updates, no rows;
+//!    until cool_until)          steps_lost += skip_until − s0)
+//!
+//!   After `max_rollbacks` rollbacks the guard is Exhausted: inert for
+//!   spikes (baselines keep updating), but a non-finite loss still
+//!   surfaces as a typed error rather than poisoning the log.
+//! ```
+//!
+//! # Detection
+//!
+//! Two rolling-median channels, evaluated *before* the step consumes the
+//! gradient (the proxy trainer) or right after the artifact step returns
+//! (the HLO trainer):
+//!
+//! * **loss**: trip when `loss > spike_factor × median(recent losses)` —
+//!   catches telemetry-scale spikes (×2^s) and fast divergence;
+//! * **update-norm**: trip when the previous step's `update_norm >
+//!   update_factor × median(recent update norms)` — catches the
+//!   sign-corrupted outlier-burst regime, where Adam's normalization
+//!   keeps the *loss* creeping slowly while the parameter updates have
+//!   already jumped several-fold.
+//!
+//! Baseline hygiene is what makes the detector stable: samples that
+//! cause a trip are never appended to the baselines, and on rollback all
+//! baseline entries recorded after the restore point are dropped (not
+//! the whole history — the guard stays armed immediately with its clean
+//! pre-trip window).
+//!
+//! # Grammar
+//!
+//! [`GuardConfig`] round-trips through `FromStr`/`Display` like the plan
+//! grammar and rides `RunConfig` JSON + `collage train --guard ...`:
+//! `"on"` (all defaults) or a comma-separated `key=value` list over
+//! `window`, `spike-factor`, `update-factor`, `max-rollbacks`,
+//! `cooldown`, `skip`, `k-backoff`, `retain-every`.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::optim::state::OptimState;
+
+/// Tuning knobs of the guardrail.  Defaults are the values validated on
+/// the proxy outlier-burst scenario (`experiments/stability.rs`): the
+/// guard-off run lands ≳3× the clean loss, the guard-on run within 2×,
+/// with zero false trips on the clean run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GuardConfig {
+    /// Rolling-median window (entries) for both baselines; the guard
+    /// arms once a baseline holds `window` samples.
+    pub window: usize,
+    /// Loss channel: trip when `loss > spike_factor × median`.
+    pub spike_factor: f64,
+    /// Update-norm channel: trip when `update_norm > update_factor ×
+    /// median`.
+    pub update_factor: f64,
+    /// Rollbacks allowed before the guard goes inert (Exhausted).
+    pub max_rollbacks: u32,
+    /// Steps after a quarantine during which trips are suppressed while
+    /// baselines re-fill.
+    pub cooldown: u64,
+    /// Steps quarantined past the trip step on each rollback (covers the
+    /// tail of a burst so the run does not re-trip its way through it).
+    pub skip: u64,
+    /// Exponents to back the delta-scale controller's `k` off on
+    /// rollback, applied only when the discarded segment saturated
+    /// scaled δθ words (`delta_saturated > 0`).
+    pub k_backoff: u8,
+    /// Snapshot retention cadence (steps) for the in-memory rollback
+    /// target.
+    pub retain_every: u64,
+}
+
+impl Default for GuardConfig {
+    fn default() -> Self {
+        GuardConfig {
+            window: 16,
+            spike_factor: 4.0,
+            update_factor: 3.5,
+            max_rollbacks: 4,
+            cooldown: 4,
+            skip: 16,
+            k_backoff: 2,
+            retain_every: 25,
+        }
+    }
+}
+
+impl fmt::Display for GuardConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if *self == GuardConfig::default() {
+            return write!(f, "on");
+        }
+        write!(
+            f,
+            "window={},spike-factor={},update-factor={},max-rollbacks={},\
+             cooldown={},skip={},k-backoff={},retain-every={}",
+            self.window,
+            self.spike_factor,
+            self.update_factor,
+            self.max_rollbacks,
+            self.cooldown,
+            self.skip,
+            self.k_backoff,
+            self.retain_every
+        )
+    }
+}
+
+impl FromStr for GuardConfig {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty guard spec (use \"on\" or key=value,...)");
+        }
+        let mut cfg = GuardConfig::default();
+        if s == "on" {
+            return Ok(cfg);
+        }
+        for pair in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = pair.split_once('=') else {
+                bail!("guard option {pair:?} is not key=value");
+            };
+            let v = v.trim();
+            let ctx = || format!("guard option {pair:?}");
+            match k.trim() {
+                "window" => {
+                    cfg.window = v.parse().with_context(ctx)?;
+                    if cfg.window == 0 {
+                        bail!("guard window must be >= 1");
+                    }
+                }
+                "spike-factor" => {
+                    cfg.spike_factor = v.parse().with_context(ctx)?;
+                    // NaN parses as a float; reject it along with <= 1.
+                    if cfg.spike_factor.is_nan() || cfg.spike_factor <= 1.0 {
+                        bail!("spike-factor must be > 1");
+                    }
+                }
+                "update-factor" => {
+                    cfg.update_factor = v.parse().with_context(ctx)?;
+                    if cfg.update_factor.is_nan() || cfg.update_factor <= 1.0 {
+                        bail!("update-factor must be > 1");
+                    }
+                }
+                "max-rollbacks" => cfg.max_rollbacks = v.parse().with_context(ctx)?,
+                "cooldown" => cfg.cooldown = v.parse().with_context(ctx)?,
+                "skip" => cfg.skip = v.parse().with_context(ctx)?,
+                "k-backoff" => cfg.k_backoff = v.parse().with_context(ctx)?,
+                "retain-every" => {
+                    cfg.retain_every = v.parse().with_context(ctx)?;
+                    if cfg.retain_every == 0 {
+                        bail!("retain-every must be >= 1");
+                    }
+                }
+                other => bail!("unknown guard option {other:?}"),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Why the guard tripped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TripReason {
+    /// NaN/inf loss: always surfaced (even when Exhausted / cooling).
+    NonFiniteLoss,
+    /// Loss exceeded `spike_factor ×` its rolling median.
+    LossSpike { ratio: f64 },
+    /// Previous step's update norm exceeded `update_factor ×` its
+    /// rolling median.
+    UpdateSpike { ratio: f64 },
+}
+
+impl fmt::Display for TripReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TripReason::NonFiniteLoss => write!(f, "non-finite loss"),
+            TripReason::LossSpike { ratio } => write!(f, "loss spike ({ratio:.2}x median)"),
+            TripReason::UpdateSpike { ratio } => {
+                write!(f, "update-norm spike ({ratio:.2}x median)")
+            }
+        }
+    }
+}
+
+/// The run diverged with the guard off (or exhausted): a NaN/inf loss
+/// must become a hard error, never a CSV row.
+#[derive(Debug, thiserror::Error)]
+#[error(
+    "non-finite loss ({loss}) at step {step}: run diverged \
+     (enable --guard for automatic rollback recovery)"
+)]
+pub struct NonFiniteLossError {
+    pub step: u64,
+    pub loss: f64,
+}
+
+/// Live guardrail state.  Baseline entries are tagged with the step they
+/// were observed at so a rollback can drop exactly the post-snapshot
+/// history.
+#[derive(Debug, Clone)]
+pub struct SpikeGuard {
+    pub cfg: GuardConfig,
+    /// (step, loss) baseline, newest last, at most `window` entries.
+    recent_loss: Vec<(u64, f64)>,
+    /// (step, update_norm) baseline, newest last.
+    recent_unorm: Vec<(u64, f64)>,
+    /// Trips taken (== rollbacks performed; a trip that cannot roll back
+    /// is not counted).
+    pub trips: u64,
+    /// Cumulative steps discarded by rollbacks + quarantines.
+    pub steps_lost: u64,
+    /// Trips are suppressed while `step <= cool_until`.
+    cool_until: u64,
+}
+
+impl SpikeGuard {
+    pub fn new(cfg: GuardConfig) -> Self {
+        SpikeGuard {
+            cfg,
+            recent_loss: Vec::new(),
+            recent_unorm: Vec::new(),
+            trips: 0,
+            steps_lost: 0,
+            cool_until: 0,
+        }
+    }
+
+    /// All rollback retries spent?
+    pub fn exhausted(&self) -> bool {
+        self.trips >= self.cfg.max_rollbacks as u64
+    }
+
+    fn median(entries: &[(u64, f64)]) -> f64 {
+        let mut vals: Vec<f64> = entries.iter().map(|&(_, v)| v).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("baselines hold finite values"));
+        vals[vals.len() / 2]
+    }
+
+    fn push(window: usize, entries: &mut Vec<(u64, f64)>, step: u64, value: f64) {
+        entries.push((step, value));
+        if entries.len() > window {
+            entries.remove(0);
+        }
+    }
+
+    /// Observe step `step`'s loss and the *previous* step's update norm
+    /// (`None` before the first step).  Returns a trip reason when the
+    /// guard fires; trip-causing samples are NOT folded into the
+    /// baselines.  Non-finite losses always surface, even while cooling
+    /// down or exhausted — the caller decides between rollback and a
+    /// [`NonFiniteLossError`].
+    pub fn observe(&mut self, step: u64, loss: f64, unorm_prev: Option<f64>) -> Option<TripReason> {
+        if !loss.is_finite() {
+            return Some(TripReason::NonFiniteLoss);
+        }
+        let suppressed = step <= self.cool_until || self.exhausted();
+        let mut trip = None;
+        if !suppressed {
+            if self.recent_loss.len() >= self.cfg.window {
+                let med = Self::median(&self.recent_loss);
+                if med > 0.0 && loss > self.cfg.spike_factor * med {
+                    trip = Some(TripReason::LossSpike { ratio: loss / med });
+                }
+            }
+            if trip.is_none() {
+                if let Some(u) = unorm_prev.filter(|u| u.is_finite()) {
+                    if self.recent_unorm.len() >= self.cfg.window {
+                        let med = Self::median(&self.recent_unorm);
+                        if med > 0.0 && u > self.cfg.update_factor * med {
+                            trip = Some(TripReason::UpdateSpike { ratio: u / med });
+                        }
+                    }
+                }
+            }
+        }
+        if trip.is_some() {
+            return trip;
+        }
+        Self::push(self.cfg.window, &mut self.recent_loss, step, loss);
+        if let Some(u) = unorm_prev.filter(|u| u.is_finite()) {
+            // Tag with the step the stat was produced at (step - 1) so a
+            // rollback to s0 keeps exactly the stats of steps <= s0.
+            Self::push(self.cfg.window, &mut self.recent_unorm, step.saturating_sub(1), u);
+        }
+        None
+    }
+
+    /// Record a rollback to snapshot step `s0` with quarantine through
+    /// `skip_until`: counts the trip + lost steps, drops post-`s0`
+    /// baseline entries (the guard stays armed on its clean pre-trip
+    /// window), and starts the cooldown.
+    pub fn note_rollback(&mut self, s0: u64, skip_until: u64) {
+        self.trips += 1;
+        self.steps_lost += skip_until.saturating_sub(s0);
+        self.recent_loss.retain(|&(s, _)| s <= s0);
+        self.recent_unorm.retain(|&(s, _)| s <= s0);
+        self.cool_until = skip_until + self.cfg.cooldown;
+    }
+
+    /// Back the adaptive delta-scale controller off by `k_backoff`
+    /// exponents (clamped at the policy floor), exactly rescaling the
+    /// stored δθ words — the "the exponent was too hot" half of the
+    /// recovery, reusing the `delta_saturated` telemetry.  No-op on
+    /// plans without a controller.  Returns `(old_k, new_k)` when a
+    /// backoff was applied.
+    pub fn backoff_delta_k(&self, state: &mut OptimState) -> Option<(u8, u8)> {
+        let ctrl = state.delta_ctrl()?;
+        let old_k = ctrl.k;
+        let new_k = old_k.saturating_sub(self.cfg.k_backoff).max(ctrl.policy.k_min);
+        if new_k >= old_k {
+            return None;
+        }
+        {
+            let ctrl = state.delta_ctrl_mut().expect("controller just observed");
+            ctrl.k = new_k;
+            ctrl.good_steps = 0;
+        }
+        state.rescale_delta_words(old_k, new_k);
+        Some((old_k, new_k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_grammar_round_trips() {
+        let d = GuardConfig::default();
+        assert_eq!(d.to_string(), "on");
+        assert_eq!("on".parse::<GuardConfig>().unwrap(), d);
+        let custom = GuardConfig { window: 8, skip: 32, ..d };
+        let text = custom.to_string();
+        assert_eq!(text.parse::<GuardConfig>().unwrap(), custom);
+        // Partial key lists override defaults.
+        let g: GuardConfig = "update-factor=5,skip=4".parse().unwrap();
+        assert_eq!(g.update_factor, 5.0);
+        assert_eq!(g.skip, 4);
+        assert_eq!(g.window, d.window);
+        // Garbage rejected.
+        assert!("".parse::<GuardConfig>().is_err());
+        assert!("window=0".parse::<GuardConfig>().is_err());
+        assert!("spike-factor=1".parse::<GuardConfig>().is_err());
+        assert!("zap=3".parse::<GuardConfig>().is_err());
+        assert!("window".parse::<GuardConfig>().is_err());
+    }
+
+    #[test]
+    fn loss_spike_trips_after_arming_and_not_before() {
+        let mut g = SpikeGuard::new(GuardConfig { window: 4, ..Default::default() });
+        // Not armed yet: even a huge loss only seeds the baseline.
+        assert_eq!(g.observe(1, 100.0, None), None);
+        for t in 2..=4 {
+            assert_eq!(g.observe(t, 1.0, None), None);
+        }
+        // Armed (4 entries, median 1.0): 3.9x is clean, 4.1x trips.
+        assert_eq!(g.observe(5, 3.9, None), None);
+        match g.observe(6, 4.1, None) {
+            Some(TripReason::LossSpike { ratio }) => assert!(ratio > 4.0),
+            other => panic!("expected loss-spike trip, got {other:?}"),
+        }
+        // The trip-causing sample was NOT absorbed into the baseline:
+        // the same value trips again immediately.
+        assert!(g.observe(7, 4.1, None).is_some());
+    }
+
+    #[test]
+    fn update_channel_trips_on_unorm_jump() {
+        let mut g = SpikeGuard::new(GuardConfig { window: 4, ..Default::default() });
+        for t in 1..=5 {
+            assert_eq!(g.observe(t, 1.0, Some(0.09)), None);
+        }
+        // Loss still boring, update norm jumped 4x: the burst signature.
+        match g.observe(6, 1.0, Some(0.36)) {
+            Some(TripReason::UpdateSpike { ratio }) => assert!((ratio - 4.0).abs() < 1e-9),
+            other => panic!("expected update-spike trip, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rollback_bookkeeping_cooldown_and_exhaustion() {
+        let cfg = GuardConfig { window: 2, max_rollbacks: 2, cooldown: 3, ..Default::default() };
+        let mut g = SpikeGuard::new(cfg);
+        for t in 1..=4 {
+            g.observe(t, 1.0, Some(1.0));
+        }
+        assert!(g.observe(5, 10.0, Some(1.0)).is_some());
+        g.note_rollback(3, 8); // quarantine 4..=8, cooldown through 11
+        assert_eq!((g.trips, g.steps_lost), (1, 5));
+        // Post-s0 baseline entries were dropped, pre-s0 kept.
+        assert!(g.recent_loss.iter().all(|&(s, _)| s <= 3));
+        assert!(!g.recent_loss.is_empty());
+        // During cooldown the same spike is suppressed (and absorbed).
+        assert_eq!(g.observe(9, 10.0, Some(1.0)), None);
+        // Past cooldown it trips again...
+        for t in 12..=13 {
+            g.observe(t, 1.0, Some(1.0));
+        }
+        assert!(g.observe(14, 10.0, Some(1.0)).is_some());
+        g.note_rollback(12, 20);
+        assert!(g.exhausted());
+        // ...but an exhausted guard is inert for spikes...
+        for t in 26..=28 {
+            g.observe(t, 1.0, Some(1.0));
+        }
+        assert_eq!(g.observe(29, 50.0, Some(1.0)), None);
+        // ...while non-finite losses still surface.
+        assert_eq!(g.observe(30, f64::NAN, None), Some(TripReason::NonFiniteLoss));
+    }
+
+    #[test]
+    fn nonfinite_always_surfaces() {
+        let mut g = SpikeGuard::new(GuardConfig::default());
+        assert_eq!(g.observe(1, f64::INFINITY, None), Some(TripReason::NonFiniteLoss));
+        assert_eq!(g.observe(1, f64::NAN, Some(1.0)), Some(TripReason::NonFiniteLoss));
+        // And never poisons the baselines.
+        assert!(g.recent_loss.is_empty());
+    }
+}

@@ -32,6 +32,13 @@ pub struct StepRow {
     pub delta_saturated: u64,
     /// Exact Δθ that rounded to zero before the expansion saw it.
     pub delta_underflow: u64,
+    /// Cumulative guardrail trips up to and including this step (0 when
+    /// the guard is off).
+    pub guard_trips: u64,
+    /// Cumulative rollbacks performed (== trips that found a snapshot).
+    pub rollbacks: u64,
+    /// Cumulative steps discarded by rollbacks + quarantine skips.
+    pub steps_lost: u64,
 }
 
 impl StepRow {
@@ -55,7 +62,7 @@ impl StepRow {
 
 pub const CSV_HEADER: &str = "step,loss,ppl,lr,grad_norm,param_norm,update_norm,\
 eff_update_norm,edq,edq_ratio,lost_frac,clip_coef,val_loss,val_ppl,step_time,\
-delta_k,delta_saturated,delta_underflow";
+delta_k,delta_saturated,delta_underflow,guard_trips,rollbacks,steps_lost";
 
 /// Accumulating metrics log.
 #[derive(Debug, Default, Clone)]
@@ -70,6 +77,13 @@ impl MetricsLog {
 
     pub fn push(&mut self, row: StepRow) {
         self.rows.push(row);
+    }
+
+    /// Discard every row recorded after `step` — the metrics half of a
+    /// guardrail rollback, so replayed steps never appear twice in the
+    /// CSV and tail statistics see only surviving history.
+    pub fn truncate_after(&mut self, step: u64) {
+        self.rows.retain(|r| r.step <= step);
     }
 
     pub fn rows(&self) -> &[StepRow] {
@@ -152,7 +166,7 @@ impl MetricsLog {
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{:.6},{:.4},{:.3e},{:.4},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.3},{:.6},{:.4},{:.4},{},{},{}",
+                "{},{:.6},{:.4},{:.3e},{:.4},{:.4},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.3},{:.6},{:.4},{:.4},{},{},{},{},{},{}",
                 r.step,
                 r.loss,
                 r.perplexity(),
@@ -171,6 +185,9 @@ impl MetricsLog {
                 r.delta_k,
                 r.delta_saturated,
                 r.delta_underflow,
+                r.guard_trips,
+                r.rollbacks,
+                r.steps_lost,
             )?;
         }
         Ok(())
@@ -213,6 +230,33 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("step,loss"));
         assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncate_after_drops_rolled_back_rows() {
+        let mut log = MetricsLog::new();
+        for i in 1..=10 {
+            log.push(row(i, i as f64));
+        }
+        log.truncate_after(4);
+        assert_eq!(log.rows().len(), 4);
+        assert_eq!(log.last().unwrap().step, 4);
+        log.truncate_after(0);
+        assert!(log.rows().is_empty());
+        assert!(log.tail_loss(3).is_nan());
+    }
+
+    #[test]
+    fn csv_includes_guard_columns() {
+        let mut log = MetricsLog::new();
+        log.push(StepRow { step: 1, guard_trips: 2, rollbacks: 2, steps_lost: 23, ..row(1, 0.5) });
+        let dir = std::env::temp_dir().join("collage_test_metrics_guard");
+        let path = dir.join("m.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().next().unwrap().ends_with("guard_trips,rollbacks,steps_lost"));
+        assert!(text.lines().nth(1).unwrap().ends_with(",2,2,23"));
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -1,14 +1,48 @@
 //! The training coordinator: run configuration, LR scheduling, the step
 //! loop over AOT artifacts, metric logging and checkpointing.
+//!
+//! # Guardrail state machine (`guard`)
+//!
+//! Both trainers (the artifact [`Trainer`] and the pure-Rust proxy in
+//! [`proxy`]) can run under a [`SpikeGuard`] configured by
+//! [`GuardConfig`] (`RunConfig.guard`, `collage train --guard ...`):
+//!
+//! 1. **Armed** — every step's loss and the previous step's update norm
+//!    are compared against rolling medians over `window` samples; the
+//!    guard **trips** when either exceeds its `spike-factor` /
+//!    `update-factor` threshold, or immediately on a non-finite loss.
+//! 2. **Rollback** — the trainer restores the last retained snapshot
+//!    (taken every `retain-every` steps: optimizer state, step counter,
+//!    SR-rng), truncates the metrics log to the snapshot step, and — only
+//!    when the discarded segment saturated scaled δθ words
+//!    (`delta_saturated > 0`) — backs the adaptive delta-scale `k` off by
+//!    `k-backoff` exponents via the exact word rescaling.
+//! 3. **Quarantine** — steps through `trip + skip` are skipped entirely
+//!    (no updates, no rows; counted in `steps_lost`), covering the tail
+//!    of a fault burst.
+//! 4. **Cooldown** — for `cooldown` further steps the detectors keep
+//!    learning the post-recovery baseline but cannot trip again.
+//!
+//! After `max-rollbacks` trips the guard is **exhausted**: spikes are
+//! ignored, but a non-finite loss still surfaces as a typed
+//! [`guard::NonFiniteLossError`] instead of poisoning the log.  Guard
+//! activity streams into the CSV as the cumulative `guard_trips`,
+//! `rollbacks`, and `steps_lost` columns.
+//!
+//! Fault injection for exercising this machinery deterministically lives
+//! in `data/faults`; the scenario harness is `experiments/stability` /
+//! `collage stability`.
 
 pub mod checkpoint;
 pub mod config;
+pub mod guard;
 pub mod metrics;
 pub mod proxy;
 pub mod schedule;
 pub mod trainer;
 
 pub use config::RunConfig;
+pub use guard::{GuardConfig, SpikeGuard};
 pub use metrics::{MetricsLog, StepRow};
 pub use proxy::{ProxyConfig, ProxyOutcome};
 pub use schedule::LrSchedule;

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::data::faults::{FaultInjector, FaultSpec};
 use crate::optim::adamw::AdamW;
 use crate::optim::plan::PrecisionPlan;
 use crate::optim::state::OptimState;
@@ -22,6 +23,7 @@ use crate::optim::strategy::Strategy;
 use crate::util::rng::Rng;
 use crate::util::threadpool::default_workers;
 
+use super::guard::{GuardConfig, NonFiniteLossError, SpikeGuard};
 use super::metrics::{MetricsLog, StepRow};
 use super::schedule::LrSchedule;
 
@@ -46,6 +48,10 @@ pub struct ProxyConfig {
     /// Scale of the teacher parameters θ* (sets the θ/Δθ ulp gap, i.e. how
     /// much lost arithmetic the format exhibits).
     pub theta_scale: f32,
+    /// Spike guardrail (rollback recovery); `None` = off.
+    pub guard: Option<GuardConfig>,
+    /// Injected faults (`data/faults.rs`); empty = clean run.
+    pub faults: Vec<FaultSpec>,
 }
 
 impl Default for ProxyConfig {
@@ -62,6 +68,8 @@ impl Default for ProxyConfig {
             log_every: 10,
             workers: default_workers(),
             theta_scale: 8.0,
+            guard: None,
+            faults: Vec::new(),
         }
     }
 }
@@ -77,11 +85,32 @@ pub struct ProxyOutcome {
     pub lost_frac: f64,
     /// Mean step time in seconds.
     pub step_time: f64,
+    /// Guardrail totals (all zero when the guard is off or never fired).
+    pub guard_trips: u64,
+    pub rollbacks: u64,
+    pub steps_lost: u64,
     pub log: MetricsLog,
+}
+
+/// In-memory rollback target: everything a replayed step depends on.
+struct Snapshot {
+    state: OptimState,
+    step: u64,
+    srng: Rng,
+    last_unorm: Option<f64>,
 }
 
 /// Run the proxy objective under `cfg`, emitting [`StepRow`]s (and stdout
 /// lines every `log_every` steps) with the full streamed diagnostics.
+///
+/// With `cfg.guard` set, each step's loss (and the previous step's update
+/// norm) is screened by a [`SpikeGuard`] *before* the optimizer consumes
+/// the gradient; a trip restores the last retained [`Snapshot`],
+/// truncates the metrics log, optionally backs the delta-scale `k` off
+/// (only when the discarded segment saturated δθ words), and quarantines
+/// the window `s0+1 ..= trip+skip`.  A non-finite loss with the guard off
+/// (or exhausted) is a typed [`NonFiniteLossError`] — it never reaches
+/// the log or the tail aggregates.
 pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
     let plan = cfg.plan;
     let fmt = plan.format;
@@ -104,25 +133,88 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
     let workers = cfg.workers.max(1);
     let mut log = MetricsLog::new();
 
-    for t in 1..=cfg.steps {
+    let injector = FaultInjector::new(cfg.seed);
+    let mut guard = cfg.guard.map(SpikeGuard::new);
+    // Update norm of the previous surviving step: the guard's second
+    // detection channel (sign-corrupted bursts move ‖update‖ long before
+    // the loss runs away).
+    let mut last_unorm: Option<f64> = None;
+    // δθ saturation observed since the last retained snapshot: gates the
+    // k-backoff so a rollback only shrinks the exponent when the
+    // discarded segment actually clipped scaled words.
+    let mut sat_since_retain: u64 = 0;
+    let mut snap = Snapshot { state: state.clone(), step: 0, srng: srng.clone(), last_unorm };
+
+    let mut t: u64 = 1;
+    while t <= cfg.steps {
         let t0 = Instant::now();
         let eff = state.theta_effective();
         let mut loss = 0.0f64;
         let mut gnorm2 = 0.0f64;
-        let g: Vec<f32> = eff
+        let mut g: Vec<f32> = eff
             .iter()
             .zip(&target)
             .map(|(&e, &tg)| {
                 let d = e - tg as f64;
                 loss += d * d;
-                let gq = fmt.round_nearest(d as f32);
-                gnorm2 += gq as f64 * gq as f64;
-                gq
+                fmt.round_nearest(d as f32)
             })
             .collect();
         loss *= 0.5 / cfg.n as f64;
+        if !cfg.faults.is_empty() {
+            injector.apply(&cfg.faults, fmt, t, &mut g);
+            loss *= injector.loss_multiplier(&cfg.faults, t);
+        }
+        for &gq in &g {
+            gnorm2 += gq as f64 * gq as f64;
+        }
+
+        if let Some(gd) = guard.as_mut() {
+            if let Some(reason) = gd.observe(t, loss, last_unorm) {
+                if gd.exhausted() {
+                    // Only NonFiniteLoss reaches here (spike trips are
+                    // suppressed once exhausted): surface it.
+                    return Err(NonFiniteLossError { step: t, loss }.into());
+                }
+                // Roll back to the retained snapshot and quarantine
+                // through trip+skip.
+                let s0 = snap.step;
+                let skip_until = t.saturating_add(gd.cfg.skip).min(cfg.steps);
+                state = snap.state.clone();
+                srng = snap.srng.clone();
+                last_unorm = snap.last_unorm;
+                log.truncate_after(s0);
+                gd.note_rollback(s0, skip_until);
+                let backed = if sat_since_retain > 0 { gd.backoff_delta_k(&mut state) } else { None };
+                sat_since_retain = 0;
+                if cfg.log_every > 0 {
+                    let kmsg = match backed {
+                        Some((a, b)) => format!(" k:{a}->{b}"),
+                        None => String::new(),
+                    };
+                    println!(
+                        "[guard] trip at step {t} ({reason}): rollback to {s0}, \
+                         quarantine through {skip_until}{kmsg}"
+                    );
+                }
+                // The restored snapshot is the new retention point.
+                snap = Snapshot {
+                    state: state.clone(),
+                    step: s0,
+                    srng: srng.clone(),
+                    last_unorm,
+                };
+                t = skip_until + 1;
+                continue;
+            }
+        } else if !loss.is_finite() {
+            return Err(NonFiniteLossError { step: t, loss }.into());
+        }
+
         let lr = schedule.at(t) as f32;
         let stats = opt.step_sharded(&mut state, &g, lr, t, &mut srng, workers);
+        let (trips, rbs, lost) =
+            guard.as_ref().map(|gd| (gd.trips, gd.trips, gd.steps_lost)).unwrap_or((0, 0, 0));
 
         let row = StepRow {
             step: t,
@@ -140,6 +232,9 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
             delta_k: stats.delta_k,
             delta_saturated: stats.delta_saturated,
             delta_underflow: stats.delta_underflow,
+            guard_trips: trips,
+            rollbacks: rbs,
+            steps_lost: lost,
         };
         if cfg.log_every > 0 && t % cfg.log_every == 0 {
             // Delta-scaled plans log the controller's view every logged
@@ -156,15 +251,35 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
             );
         }
         log.push(row);
+        last_unorm = Some(stats.edq.update_norm);
+        sat_since_retain += stats.delta_saturated;
+
+        if let Some(gd) = guard.as_ref() {
+            if t % gd.cfg.retain_every == 0 {
+                snap = Snapshot {
+                    state: state.clone(),
+                    step: t,
+                    srng: srng.clone(),
+                    last_unorm,
+                };
+                sat_since_retain = 0;
+            }
+        }
+        t += 1;
     }
 
     let tail = (cfg.steps as usize / 10).max(1);
+    let (trips, rbs, lost) =
+        guard.as_ref().map(|gd| (gd.trips, gd.trips, gd.steps_lost)).unwrap_or((0, 0, 0));
     Ok(ProxyOutcome {
         steps: cfg.steps,
         final_loss: log.tail_loss(tail),
         edq_ratio: log.tail_edq_ratio(tail),
         lost_frac: log.tail_lost_frac(tail),
         step_time: log.mean_step_time(),
+        guard_trips: trips,
+        rollbacks: rbs,
+        steps_lost: lost,
         log,
     })
 }
@@ -216,6 +331,62 @@ mod tests {
             o.log.rows().iter().map(|r| r.loss.to_bits()).collect()
         };
         assert_eq!(bits(&a), bits(&b), "losses must be bit-identical");
+    }
+
+    #[test]
+    fn nonfinite_loss_is_a_typed_error_when_guard_is_off() {
+        // Satellite: a NaN/inf loss must never flow into the log/CSV.
+        let cfg = ProxyConfig {
+            n: 128,
+            steps: 20,
+            log_every: 0,
+            faults: FaultSpec::parse_list("loss-spike:start=5,window=1,scale=1100").unwrap(),
+            ..Default::default()
+        };
+        let err = run(&cfg).unwrap_err();
+        let e = err.downcast_ref::<NonFiniteLossError>().expect("typed NonFiniteLossError");
+        assert_eq!(e.step, 5);
+        assert!(!e.loss.is_finite());
+    }
+
+    #[test]
+    fn guard_rolls_back_past_nonfinite_loss_spike() {
+        let cfg = ProxyConfig {
+            n: 128,
+            steps: 40,
+            log_every: 0,
+            guard: Some(GuardConfig::default()),
+            faults: FaultSpec::parse_list("loss-spike:start=5,window=1,scale=1100").unwrap(),
+            ..Default::default()
+        };
+        let o = run(&cfg).unwrap();
+        assert!(o.guard_trips >= 1);
+        assert!(o.steps_lost >= 1);
+        // No row carries the poisoned loss and the run still converged
+        // past the spike step.
+        assert!(o.log.rows().iter().all(|r| r.loss.is_finite()));
+        assert!(o.log.rows().iter().all(|r| r.step != 5));
+        assert_eq!(o.log.last().unwrap().step, 40);
+    }
+
+    #[test]
+    fn guard_is_transparent_on_a_clean_run() {
+        let mk = |guard| ProxyConfig {
+            plan: "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap(),
+            n: 512,
+            steps: 60,
+            warmup: 10,
+            log_every: 0,
+            guard,
+            ..Default::default()
+        };
+        let off = run(&mk(None)).unwrap();
+        let on = run(&mk(Some(GuardConfig::default()))).unwrap();
+        assert_eq!(on.guard_trips, 0, "clean run must not trip the guard");
+        let bits = |o: &ProxyOutcome| -> Vec<u64> {
+            o.log.rows().iter().map(|r| r.loss.to_bits()).collect()
+        };
+        assert_eq!(bits(&off), bits(&on), "guard must not perturb a clean trajectory");
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::runtime::{ArtifactKind, Executable, InputRef, Manifest, Runtime};
 
 use super::checkpoint::Checkpoint;
 use super::config::RunConfig;
+use super::guard::{NonFiniteLossError, SpikeGuard};
 use super::metrics::{MetricsLog, StepRow};
 use super::schedule::LrSchedule;
 
@@ -48,6 +49,10 @@ pub struct TrainOutcome {
     pub step_time: f64,
     /// Tokens processed per second (micro-batch × seq / step time).
     pub tokens_per_sec: f64,
+    /// Guardrail totals (zero when `cfg.guard` is off or never fired).
+    pub guard_trips: u64,
+    pub rollbacks: u64,
+    pub steps_lost: u64,
     pub log: MetricsLog,
 }
 
@@ -231,6 +236,11 @@ impl Trainer {
             delta_k: 0,
             delta_saturated: 0,
             delta_underflow: 0,
+            // Cumulative guard totals are stamped by `run_until` (the
+            // guard lives there, not in the single-step path).
+            guard_trips: 0,
+            rollbacks: 0,
+            steps_lost: 0,
         };
         Ok(row)
     }
@@ -274,12 +284,66 @@ impl Trainer {
     /// Run until `stop` (≤ cfg.steps).  The LR schedule always spans
     /// cfg.steps, so interrupted + resumed runs follow the identical
     /// trajectory as an uninterrupted one.
+    ///
+    /// With `cfg.guard` set, each completed step's loss (plus the
+    /// previous step's update norm) feeds a [`SpikeGuard`].  Unlike the
+    /// proxy path — which screens the loss *before* stepping — the AOT
+    /// artifact computes loss and update atomically, so the guard
+    /// inspects the row *after* the step and a trip discards that
+    /// already-applied update by restoring the retained in-memory
+    /// snapshot.  A non-finite loss with the guard off (or exhausted) is
+    /// a typed [`NonFiniteLossError`]; it never reaches the log, the
+    /// CSV, or a checkpoint.
     pub fn run_until(&mut self, stop: u64) -> Result<TrainOutcome> {
         let total = stop.min(self.cfg.steps);
+        let mut guard = self.cfg.guard.map(SpikeGuard::new);
+        // Retained rollback target: (state, step, that step's update norm).
+        let mut snap = (self.state.clone(), self.step, None::<f64>);
+        let mut last_unorm: Option<f64> = None;
+        let mut sat_since_retain = 0u64;
         while self.step < total {
             // Stateless per-step batch: checkpoint resume is bit-exact.
             let batch = self.train_iter.batch_for_step(self.cfg.seed, self.step + 1);
             let mut row = self.train_step(&batch)?;
+            if let Some(gd) = guard.as_mut() {
+                if let Some(reason) = gd.observe(row.step, row.loss, last_unorm) {
+                    if gd.exhausted() {
+                        // Only NonFiniteLoss survives exhaustion.
+                        return Err(
+                            NonFiniteLossError { step: row.step, loss: row.loss }.into()
+                        );
+                    }
+                    let (s0, skip_until) = (snap.1, row.step.saturating_add(gd.cfg.skip).min(total));
+                    self.state = snap.0.clone();
+                    last_unorm = snap.2;
+                    self.log.truncate_after(s0);
+                    gd.note_rollback(s0, skip_until);
+                    let backed =
+                        if sat_since_retain > 0 { gd.backoff_delta_k(&mut self.state) } else { None };
+                    sat_since_retain = 0;
+                    if self.cfg.log_every > 0 {
+                        let kmsg = match backed {
+                            Some((a, b)) => format!(" k:{a}->{b}"),
+                            None => String::new(),
+                        };
+                        println!(
+                            "[guard] trip at step {} ({reason}): rollback to {s0}, \
+                             quarantine through {skip_until}{kmsg}",
+                            row.step
+                        );
+                    }
+                    // Quarantine: the next executed step is skip_until+1.
+                    self.step = skip_until;
+                    continue;
+                }
+            } else if !row.loss.is_finite() {
+                return Err(NonFiniteLossError { step: row.step, loss: row.loss }.into());
+            }
+            if let Some(gd) = guard.as_ref() {
+                row.guard_trips = gd.trips;
+                row.rollbacks = gd.trips;
+                row.steps_lost = gd.steps_lost;
+            }
             let do_eval = (self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0)
                 || self.step == total;
             if do_eval {
@@ -306,6 +370,14 @@ impl Trainer {
                 );
             }
             self.log.push(row);
+            last_unorm = Some(row.update_norm);
+            sat_since_retain += row.delta_saturated;
+            if let Some(gd) = guard.as_ref() {
+                if self.step % gd.cfg.retain_every == 0 {
+                    snap = (self.state.clone(), self.step, last_unorm);
+                    sat_since_retain = 0;
+                }
+            }
             self.maybe_checkpoint(false)?;
         }
         self.maybe_checkpoint(true)?;
@@ -313,6 +385,8 @@ impl Trainer {
         let tail = (total as usize / 10).max(1);
         let val_loss = self.log.last_val_loss();
         let step_time = self.log.mean_step_time();
+        let (trips, rbs, lost) =
+            guard.as_ref().map(|gd| (gd.trips, gd.trips, gd.steps_lost)).unwrap_or((0, 0, 0));
         Ok(TrainOutcome {
             steps: self.step,
             train_loss: self.log.tail_loss(tail),
@@ -323,6 +397,9 @@ impl Trainer {
             lost_frac: self.log.tail_lost_frac(tail),
             step_time,
             tokens_per_sec: (self.micro_batch * self.seq_len) as f64 / step_time,
+            guard_trips: trips,
+            rollbacks: rbs,
+            steps_lost: lost,
             log: self.log.clone(),
         })
     }

@@ -1,0 +1,350 @@
+//! Deterministic counter-based fault injection for the stability scenario
+//! suite (`experiments/stability.rs`, `collage stability`).
+//!
+//! "To FP8 and Back Again" (PAPERS.md) observes that low-precision
+//! training failures arrive as *sudden instabilities* — gradient outlier
+//! bursts, loss spikes — that clean smoke tests never exercise.  This
+//! module injects those failure modes on demand, with the same
+//! determinism contract as the optimizer's `sr_noise`:
+//!
+//! * Selection and sign are derived from a **counter-based hash** of
+//!   `(seed-derived key, element index)` — no sequential RNG state — so
+//!   the injected pattern is bit-identical at any worker count and across
+//!   checkpoint rollback/resume (`tests/delta_ctrl_checkpoint.rs` and
+//!   `tests/stability_recovery.rs` pin this).
+//! * Faults are applied to the **global** gradient vector before
+//!   sharding, so the per-worker views agree by construction.
+//! * The per-element hash depends only on the element index (not the
+//!   step), so the *same* subset of elements misbehaves for the whole
+//!   burst window — modelling a persistently-corrupt reduction lane or
+//!   activation outlier channel rather than white noise.
+//!
+//! The fault grammar (`FromStr`/`Display`, round-trips like the plan
+//! grammar) is `kind:key=value[,key=value...]`:
+//!
+//! ```text
+//! outlier-burst:start=230,window=16,scale=12,frac-ppm=300000
+//! loss-spike:start=150,window=8,scale=8
+//! update-shrink:start=200,window=60,scale=6
+//! ```
+//!
+//! `collage train --fault ...` accepts a `;`-separated list of these.
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::numerics::format::FloatFormat;
+use crate::util::rng::Rng;
+
+/// RNG stream id for the fault-injection key (cf. `0x5E` for SR noise and
+/// `0xF8` for proxy init).
+const FAULT_STREAM: u64 = 0xFA;
+
+/// One injectable failure mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Gradient outlier burst: a `frac_ppm` fraction of elements is
+    /// replaced by `sign × |g| × 2^scale_exp`, where the sign comes from
+    /// the element hash — i.e. roughly half the spiked elements carry a
+    /// *wrong-signed* saturated gradient.  This models garbage values
+    /// from a corrupt lane, and is what actually diverges Adam: a pure
+    /// magnitude spike is normalized away by `m/√v`, but a persistent
+    /// wrong sign displaces θ at full trust-region speed while `v`
+    /// stays saturated.
+    OutlierBurst { scale_exp: u8, frac_ppm: u32 },
+    /// Reported-loss spike: the loss *telemetry* is multiplied by
+    /// `2^scale_exp` during the window (the gradient is untouched).
+    /// Large exponents overflow to `inf`, exercising the non-finite-loss
+    /// guard path deterministically.
+    LossSpike { scale_exp: u16 },
+    /// Late-training update shrinkage: every gradient element is scaled
+    /// by `2^-scale_exp`, pushing exact updates toward (or below) the
+    /// format's representable floor — the regime the adaptive
+    /// delta-scale controller must grow `k` through.
+    UpdateShrink { scale_exp: u8 },
+}
+
+/// A fault plus the step window it is active in: `start <= t < start+window`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// First active step (1-based, like the trainer's step counter).
+    pub start: u64,
+    /// Number of consecutive active steps.
+    pub window: u64,
+}
+
+impl FaultSpec {
+    /// Is this fault active at step `t`?
+    pub fn active(&self, t: u64) -> bool {
+        t >= self.start && t < self.start.saturating_add(self.window)
+    }
+
+    /// Parse a `;`-separated list of fault specs (empty input → empty list).
+    pub fn parse_list(s: &str) -> Result<Vec<FaultSpec>> {
+        s.split(';')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| p.parse().with_context(|| format!("parsing fault {p:?}")))
+            .collect()
+    }
+}
+
+/// SplitMix64 finalizer: the per-element mixing function (identical to the
+/// one seeding [`Rng`], applied counter-style).
+fn mix64(x: u64) -> u64 {
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic fault injector: one hash key per `(seed)`, applied
+/// counter-style per element.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultInjector {
+    key: u64,
+}
+
+impl FaultInjector {
+    /// Derive the injection key from the run seed (stream `0xFA`).
+    pub fn new(seed: u64) -> Self {
+        FaultInjector { key: Rng::new(seed, FAULT_STREAM).next_u64() }
+    }
+
+    /// Per-element hash: depends only on (key, index), so the selected
+    /// subset is stable across a burst window.
+    fn elem_hash(&self, i: u64) -> u64 {
+        mix64(self.key.wrapping_add((i + 1).wrapping_mul(0x9E3779B97F4A7C15)))
+    }
+
+    /// Apply every gradient-touching fault in `specs` that is active at
+    /// step `t` to the global gradient vector `g` (pre-sharding).
+    /// Elements are re-rounded onto `fmt`'s grid, matching where the
+    /// proxy trainer quantizes its gradients.
+    pub fn apply(&self, specs: &[FaultSpec], fmt: FloatFormat, t: u64, g: &mut [f32]) {
+        for spec in specs {
+            if !spec.active(t) {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::OutlierBurst { scale_exp, frac_ppm } => {
+                    // Exact power of two via an integer shift (scale_exp
+                    // <= 30): no libm involvement, bit-specified.
+                    let scale = (1u64 << scale_exp) as f32;
+                    for (i, x) in g.iter_mut().enumerate() {
+                        let h = self.elem_hash(i as u64);
+                        if h % 1_000_000 < frac_ppm as u64 {
+                            let sign = if (h >> 32) & 1 == 1 { -1.0f32 } else { 1.0f32 };
+                            *x = fmt.round_nearest(sign * x.abs() * scale);
+                        }
+                    }
+                }
+                FaultKind::UpdateShrink { scale_exp } => {
+                    let scale = 1.0f32 / (1u64 << scale_exp) as f32;
+                    for x in g.iter_mut() {
+                        *x = fmt.round_nearest(*x * scale);
+                    }
+                }
+                FaultKind::LossSpike { .. } => {} // telemetry-only
+            }
+        }
+    }
+
+    /// Combined multiplier the active [`FaultKind::LossSpike`] faults put
+    /// on the *reported* loss at step `t` (1.0 when none are active).
+    /// Exponents ≥ 1075 overflow f64 to `inf` — deterministic non-finite
+    /// loss for the guard's NaN/inf path.
+    pub fn loss_multiplier(&self, specs: &[FaultSpec], t: u64) -> f64 {
+        let mut m = 1.0f64;
+        for spec in specs {
+            if let (true, FaultKind::LossSpike { scale_exp }) = (spec.active(t), spec.kind) {
+                // Exact power of two via exponent arithmetic; exponents
+                // past f64's range saturate to inf deliberately.
+                m *= if scale_exp >= 1024 { f64::INFINITY } else { (scale_exp as f64).exp2() };
+            }
+        }
+        m
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            FaultKind::OutlierBurst { scale_exp, frac_ppm } => write!(
+                f,
+                "outlier-burst:start={},window={},scale={},frac-ppm={}",
+                self.start, self.window, scale_exp, frac_ppm
+            ),
+            FaultKind::LossSpike { scale_exp } => write!(
+                f,
+                "loss-spike:start={},window={},scale={}",
+                self.start, self.window, scale_exp
+            ),
+            FaultKind::UpdateShrink { scale_exp } => write!(
+                f,
+                "update-shrink:start={},window={},scale={}",
+                self.start, self.window, scale_exp
+            ),
+        }
+    }
+}
+
+impl FromStr for FaultSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (kind_name, rest) = match s.split_once(':') {
+            Some((k, r)) => (k.trim(), r),
+            None => (s.trim(), ""),
+        };
+        let mut start = 1u64;
+        let mut window = 1u64;
+        let mut scale: Option<u64> = None;
+        let mut frac_ppm = 300_000u32;
+        for pair in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((k, v)) = pair.split_once('=') else {
+                bail!("fault option {pair:?} is not key=value");
+            };
+            let v = v.trim();
+            match k.trim() {
+                "start" => start = v.parse().with_context(|| format!("fault start {v:?}"))?,
+                "window" => window = v.parse().with_context(|| format!("fault window {v:?}"))?,
+                "scale" => {
+                    scale = Some(v.parse().with_context(|| format!("fault scale {v:?}"))?)
+                }
+                "frac-ppm" => {
+                    frac_ppm = v.parse().with_context(|| format!("fault frac-ppm {v:?}"))?;
+                    if frac_ppm > 1_000_000 {
+                        bail!("frac-ppm {frac_ppm} > 1000000");
+                    }
+                }
+                other => bail!("unknown fault option {other:?}"),
+            }
+        }
+        if window == 0 {
+            bail!("fault window must be >= 1");
+        }
+        let kind = match kind_name {
+            "outlier-burst" => {
+                let e = scale.unwrap_or(12);
+                FaultKind::OutlierBurst {
+                    scale_exp: u8::try_from(e).ok().filter(|&e| e <= 30).with_context(
+                        || format!("outlier-burst scale {e} out of range (0..=30)"),
+                    )?,
+                    frac_ppm,
+                }
+            }
+            "loss-spike" => FaultKind::LossSpike {
+                scale_exp: u16::try_from(scale.unwrap_or(8))
+                    .with_context(|| "loss-spike scale out of range")?,
+            },
+            "update-shrink" => {
+                let e = scale.unwrap_or(6);
+                FaultKind::UpdateShrink {
+                    scale_exp: u8::try_from(e).ok().filter(|&e| e <= 30).with_context(
+                        || format!("update-shrink scale {e} out of range (0..=30)"),
+                    )?,
+                }
+            }
+            other => bail!(
+                "unknown fault kind {other:?} (outlier-burst|loss-spike|update-shrink)"
+            ),
+        };
+        Ok(FaultSpec { kind, start, window })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::format::FP8E4M3;
+
+    #[test]
+    fn grammar_round_trips() {
+        for text in [
+            "outlier-burst:start=230,window=16,scale=12,frac-ppm=300000",
+            "loss-spike:start=150,window=8,scale=8",
+            "update-shrink:start=200,window=60,scale=6",
+        ] {
+            let spec: FaultSpec = text.parse().unwrap();
+            assert_eq!(spec.to_string(), text);
+            let back: FaultSpec = spec.to_string().parse().unwrap();
+            assert_eq!(back, spec);
+        }
+        // Defaults fill missing keys; key order is free.
+        let spec: FaultSpec = "outlier-burst:window=4,start=9".parse().unwrap();
+        assert_eq!((spec.start, spec.window), (9, 4));
+        assert_eq!(spec.kind, FaultKind::OutlierBurst { scale_exp: 12, frac_ppm: 300_000 });
+        // Garbage is rejected, not defaulted.
+        assert!("outlier-burst:bogus=1".parse::<FaultSpec>().is_err());
+        assert!("meteor-strike".parse::<FaultSpec>().is_err());
+        assert!("outlier-burst:frac-ppm=2000000".parse::<FaultSpec>().is_err());
+        assert!("outlier-burst:window=0".parse::<FaultSpec>().is_err());
+    }
+
+    #[test]
+    fn parse_list_splits_and_trims() {
+        let specs =
+            FaultSpec::parse_list("loss-spike:start=5 ; update-shrink:start=9,scale=3").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].kind, FaultKind::LossSpike { scale_exp: 8 });
+        assert!(FaultSpec::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn burst_is_deterministic_and_window_stable() {
+        let spec: FaultSpec =
+            "outlier-burst:start=10,window=4,scale=6,frac-ppm=300000".parse().unwrap();
+        let inj = FaultInjector::new(1234);
+        let base: Vec<f32> = (0..256).map(|i| FP8E4M3.round_nearest(0.25 + i as f32 * 0.001)).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        inj.apply(&[spec], FP8E4M3, 10, &mut a);
+        inj.apply(&[spec], FP8E4M3, 10, &mut b);
+        assert_eq!(a, b, "same step must inject identically");
+        // The same subset is hit on every step of the window.
+        let hit: Vec<usize> =
+            (0..a.len()).filter(|&i| a[i].to_bits() != base[i].to_bits()).collect();
+        let mut c = base.clone();
+        inj.apply(&[spec], FP8E4M3, 12, &mut c);
+        let hit12: Vec<usize> =
+            (0..c.len()).filter(|&i| c[i].to_bits() != base[i].to_bits()).collect();
+        assert_eq!(hit, hit12, "selected subset must be window-stable");
+        // ~30% of elements selected, some with flipped sign.
+        assert!(hit.len() > 40 && hit.len() < 120, "selection {} / 256", hit.len());
+        assert!(hit.iter().any(|&i| a[i] < 0.0), "hash signs must flip some elements");
+        // Outside the window: untouched.
+        let mut d = base.clone();
+        inj.apply(&[spec], FP8E4M3, 14, &mut d);
+        assert_eq!(d, base);
+        // A different seed selects a different subset.
+        let mut e = base.clone();
+        FaultInjector::new(77).apply(&[spec], FP8E4M3, 10, &mut e);
+        assert_ne!(a, e);
+    }
+
+    #[test]
+    fn shrink_and_loss_spike_semantics() {
+        let shrink: FaultSpec = "update-shrink:start=1,window=1,scale=2".parse().unwrap();
+        let inj = FaultInjector::new(1);
+        let mut g = vec![1.0f32, -2.0, 0.5];
+        inj.apply(&[shrink], FP8E4M3, 1, &mut g);
+        assert_eq!(g, vec![0.25, -0.5, 0.125]);
+        let spike: FaultSpec = "loss-spike:start=3,window=2,scale=8".parse().unwrap();
+        assert_eq!(inj.loss_multiplier(&[spike], 2), 1.0);
+        assert_eq!(inj.loss_multiplier(&[spike], 3), 256.0);
+        assert_eq!(inj.loss_multiplier(&[spike], 4), 256.0);
+        assert_eq!(inj.loss_multiplier(&[spike], 5), 1.0);
+        // An oversized exponent deterministically overflows to inf — the
+        // non-finite-loss guard path.
+        let inf: FaultSpec = "loss-spike:start=1,window=1,scale=1100".parse().unwrap();
+        assert!(inj.loss_multiplier(&[inf], 1).is_infinite());
+        // Gradients are untouched by loss spikes.
+        let mut g = vec![1.0f32];
+        inj.apply(&[spike], FP8E4M3, 3, &mut g);
+        assert_eq!(g, vec![1.0]);
+    }
+}

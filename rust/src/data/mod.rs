@@ -12,8 +12,10 @@
 //! not on the text itself).
 
 pub mod batches;
+pub mod faults;
 pub mod glue;
 pub mod synthetic;
 
 pub use batches::{Batch, BatchIterator, Split};
+pub use faults::{FaultInjector, FaultKind, FaultSpec};
 pub use synthetic::SyntheticCorpus;

@@ -5,5 +5,6 @@ pub mod lowprec;
 pub mod memory_tables;
 pub mod pretrain;
 pub mod registry;
+pub mod stability;
 
 pub use registry::{list, run};

@@ -4,7 +4,7 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use super::{lowprec, memory_tables, pretrain};
+use super::{lowprec, memory_tables, pretrain, stability};
 use crate::util::table::Table;
 
 /// All experiment ids with one-line descriptions.
@@ -25,6 +25,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig56", "β₂ = 0.95 vs 0.99 stability (ppl + grad norms)"),
     ("fig7to12", "EDQ/ppl grids over β₂ × batch (CSV; same runs as table6)"),
     ("fp8", "EDQ/loss/lost-frac grid over formats × schemes (§6; no artifacts)"),
+    ("stability", "fault-injection × guardrail recovery grid (no artifacts)"),
     ("all-analytic", "every experiment that needs no artifacts"),
 ];
 
@@ -84,6 +85,15 @@ pub fn run(id: &str, artifacts: &Path, out_dir: &Path, quick: bool) -> Result<()
             let t = lowprec::fp8(out_dir, quick)?;
             t.print();
             let out = out_dir.join("fp8.txt");
+            std::fs::write(&out, t.render())?;
+            println!("wrote {}", out.display());
+            return Ok(());
+        }
+        "stability" => {
+            // Pure-Rust proxy runs — no artifacts needed.
+            let t = stability::stability(out_dir, quick)?;
+            t.print();
+            let out = out_dir.join("stability.txt");
             std::fs::write(&out, t.render())?;
             println!("wrote {}", out.display());
             return Ok(());

@@ -1,0 +1,275 @@
+//! The `stability` experiment: fault-injection × guardrail recovery grid.
+//!
+//! For each scenario (the known fp8 failure modes from "To FP8 and Back
+//! Again": gradient outlier bursts, loss spikes, late-training update
+//! shrinkage, and a mis-set initial delta-scale k0) and each plan, the
+//! harness runs the proxy objective three ways — clean, faulted with the
+//! guard off, faulted with the guard on — and reports final-loss ratios,
+//! guard telemetry, and time-to-recover into `stability_grid.csv`.
+//!
+//! The headline row is the acceptance criterion of the stability suite:
+//! under the injected outlier burst,
+//! `collage-light-3@fp8e4m3+delta-scale=auto` diverges with the guard off
+//! (≈5× the clean loss) and finishes within 2× of clean with the guard on
+//! (`tests/stability_recovery.rs` pins this on the same configuration).
+//!
+//! Every run is bit-deterministic: the injector is counter-based
+//! (`data/faults.rs`), so the grid is identical at any worker count.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::guard::GuardConfig;
+use crate::coordinator::proxy::{self, ProxyConfig};
+use crate::data::faults::FaultSpec;
+use crate::numerics::format::FP8E4M3;
+use crate::optim::plan::{PrecisionPlan, Scheme};
+use crate::util::table::{fnum, Table};
+
+/// Shared run shape for every grid cell (matches the tuned scenario the
+/// tier-1 recovery test uses: long enough for the burst at step 230 to
+/// land in decayed-lr territory, where divergence is unrecoverable
+/// without rollback).
+const STEPS: u64 = 300;
+const N: usize = 1024;
+
+pub const CSV_HEADER: &str = "scenario,plan,guard,steps,final_loss,clean_final_loss,\
+loss_ratio,guard_trips,rollbacks,steps_lost,time_to_recover,recovered";
+
+/// Gradient/telemetry fault scenarios: (name, fault spec list, first
+/// faulty step).
+const FAULT_SCENARIOS: [(&str, &str, u64); 3] = [
+    // Sign-corrupted ×2^12 burst on 30% of elements for 16 steps: the
+    // regime that permanently diverges Adam without rollback.
+    ("outlier-burst", "outlier-burst:start=230,window=16,scale=12,frac-ppm=300000", 230),
+    // Telemetry-scale loss spike (×2^8 for 8 steps): gradient untouched,
+    // so the guard-off run shrugs it off while the guard-on run must not
+    // over-react into a worse final loss.
+    ("loss-spike", "loss-spike:start=150,window=8,scale=8", 150),
+    // Late-training update shrinkage (×2^-6 for 60 steps): pushes exact
+    // updates toward the representable floor — the adaptive delta-scale
+    // controller's territory.
+    ("update-shrink", "update-shrink:start=200,window=60,scale=6", 200),
+];
+
+/// k0 mis-configuration scenarios: no injected faults — the "fault" is an
+/// oversized/undersized initial delta-scale exponent on the auto plan,
+/// which the controller (plus the guard, if it saturates hard enough to
+/// spike) must walk back to a working exponent.
+const K0_SCENARIOS: [(&str, u8); 2] = [("oversized-k0", 24), ("undersized-k0", 1)];
+
+fn base_cfg(plan: PrecisionPlan) -> ProxyConfig {
+    ProxyConfig {
+        plan,
+        n: N,
+        steps: STEPS,
+        warmup: 40,
+        lr: 2e-2,
+        beta2: 0.95,
+        seed: 1234,
+        log_every: 0,
+        theta_scale: 8.0,
+        ..Default::default()
+    }
+}
+
+/// One measured grid cell.
+struct Case {
+    final_loss: f64,
+    trips: u64,
+    rollbacks: u64,
+    steps_lost: u64,
+    /// Steps from the first faulty step until the loss is back (and
+    /// stays) within 2× of the clean final loss; 0 = never left the
+    /// band, -1 = never recovered.
+    time_to_recover: i64,
+    recovered: bool,
+}
+
+/// Run one faulted cell.  A `NonFiniteLossError` (guard off, loss
+/// overflowed) is a *measurement*, not a harness failure: it reports as
+/// diverged.
+fn run_case(cfg: &ProxyConfig, clean_final: f64, fault_start: u64) -> Case {
+    match proxy::run(cfg) {
+        Ok(o) => {
+            let thresh = 2.0 * clean_final;
+            let last_bad = o
+                .log
+                .rows()
+                .iter()
+                .filter(|r| r.step >= fault_start && (r.loss.is_nan() || r.loss > thresh))
+                .map(|r| r.step)
+                .max();
+            let last_step = o.log.last().map(|r| r.step).unwrap_or(0);
+            let time_to_recover = match last_bad {
+                None => 0,
+                Some(s) if s >= last_step => -1,
+                Some(s) => (s + 1 - fault_start) as i64,
+            };
+            let recovered = o.final_loss.is_finite() && o.final_loss <= thresh;
+            Case {
+                final_loss: o.final_loss,
+                trips: o.guard_trips,
+                rollbacks: o.rollbacks,
+                steps_lost: o.steps_lost,
+                time_to_recover,
+                recovered,
+            }
+        }
+        // Guard-off runs may die on a non-finite loss; that IS the
+        // result being measured.
+        Err(_) => Case {
+            final_loss: f64::INFINITY,
+            trips: 0,
+            rollbacks: 0,
+            steps_lost: 0,
+            time_to_recover: -1,
+            recovered: false,
+        },
+    }
+}
+
+/// Run the grid; returns the rendered table and writes
+/// `stability_grid.csv` into `out_dir`.
+pub fn stability(out_dir: &Path, quick: bool) -> Result<Table> {
+    let headline: PrecisionPlan = "collage-light-3@fp8e4m3+delta-scale=auto".parse()?;
+    let mut plans = vec![headline];
+    if !quick {
+        plans.push("collage-light@fp8e4m3+delta-scale=8".parse()?);
+        plans.push("collage-light-3@fp8e4m3".parse()?);
+    }
+
+    let mut csv = String::from(CSV_HEADER);
+    csv.push('\n');
+    let mut t = Table::new(format!(
+        "stability — fault injection × guardrail recovery \
+         (proxy task, n={N}, {STEPS} steps, guard defaults)"
+    ));
+    t.header(&[
+        "scenario", "plan", "guard", "final loss", "clean", "ratio", "trips", "lost", "ttr",
+        "recovered",
+    ]);
+
+    let mut emit = |t: &mut Table,
+                    csv: &mut String,
+                    scenario: &str,
+                    plan: PrecisionPlan,
+                    guard: &str,
+                    clean_final: f64,
+                    c: &Case| {
+        let ratio = c.final_loss / clean_final;
+        println!(
+            "  [{scenario}/{plan}/guard={guard}] loss={:.4e} ({:.2}x clean) trips={} \
+             lost={} ttr={} recovered={}",
+            c.final_loss, ratio, c.trips, c.steps_lost, c.time_to_recover, c.recovered
+        );
+        csv.push_str(&format!(
+            "{scenario},{plan},{guard},{STEPS},{:.6e},{:.6e},{:.4},{},{},{},{},{}\n",
+            c.final_loss,
+            clean_final,
+            ratio,
+            c.trips,
+            c.rollbacks,
+            c.steps_lost,
+            c.time_to_recover,
+            c.recovered
+        ));
+        t.row(vec![
+            scenario.to_string(),
+            plan.to_string(),
+            guard.to_string(),
+            format!("{:.3e}", c.final_loss),
+            format!("{clean_final:.3e}"),
+            fnum(ratio, 2),
+            c.trips.to_string(),
+            c.steps_lost.to_string(),
+            c.time_to_recover.to_string(),
+            c.recovered.to_string(),
+        ]);
+    };
+
+    for (name, spec, fault_start) in FAULT_SCENARIOS {
+        let faults = FaultSpec::parse_list(spec)?;
+        for &plan in &plans {
+            let clean = proxy::run(&base_cfg(plan))?;
+            for guard_on in [false, true] {
+                let mut cfg = base_cfg(plan);
+                cfg.faults = faults.clone();
+                cfg.guard = guard_on.then(GuardConfig::default);
+                let c = run_case(&cfg, clean.final_loss, fault_start);
+                emit(
+                    &mut t,
+                    &mut csv,
+                    name,
+                    plan,
+                    if guard_on { "on" } else { "off" },
+                    clean.final_loss,
+                    &c,
+                );
+            }
+        }
+    }
+
+    // k0 scenarios: reference = the same scheme at the default auto k0.
+    let clean = proxy::run(&base_cfg(headline))?;
+    for (name, k0) in K0_SCENARIOS {
+        let plan = PrecisionPlan::new(FP8E4M3, Scheme::CollageLight3)
+            .with_auto_delta_scale(k0)
+            .expect("light-3 is MCF");
+        for guard_on in [false, true] {
+            let mut cfg = base_cfg(plan);
+            cfg.guard = guard_on.then(GuardConfig::default);
+            let c = run_case(&cfg, clean.final_loss, 1);
+            emit(
+                &mut t,
+                &mut csv,
+                name,
+                plan,
+                if guard_on { "on" } else { "off" },
+                clean.final_loss,
+                &c,
+            );
+        }
+    }
+
+    let csv_path = out_dir.join("stability_grid.csv");
+    std::fs::write(&csv_path, csv)?;
+    println!("wrote {}", csv_path.display());
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_emits_recovery_columns() {
+        let dir = std::env::temp_dir().join(format!("collage_stab_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = stability(&dir, true).unwrap();
+        let rendered = t.render();
+        let csv = std::fs::read_to_string(dir.join("stability_grid.csv")).unwrap();
+        // Quick mode: headline plan only — (3 fault + 2 k0) scenarios ×
+        // {off, on}.
+        assert_eq!(csv.lines().count(), 1 + 5 * 2, "csv:\n{csv}");
+        assert_eq!(csv.lines().next().unwrap(), CSV_HEADER);
+        for scenario in ["outlier-burst", "loss-spike", "update-shrink", "oversized-k0"] {
+            assert!(csv.contains(&format!("\n{scenario},")), "missing {scenario}:\n{csv}");
+            assert!(rendered.contains(scenario), "{rendered}");
+        }
+        // The headline acceptance row: guard-on outlier burst recovers
+        // where guard-off does not (the tier-1 recovery test asserts the
+        // precise ratios; here we pin the CSV shape + verdict columns).
+        let row = |needle: &str| {
+            csv.lines().find(|l| l.starts_with(needle)).unwrap_or_else(|| {
+                panic!("no row starting with {needle}:\n{csv}")
+            })
+        };
+        let on = row("outlier-burst,collage-light-3@fp8e4m3+delta-scale=auto,on,");
+        let off = row("outlier-burst,collage-light-3@fp8e4m3+delta-scale=auto,off,");
+        assert!(on.ends_with(",true"), "guard-on must recover: {on}");
+        assert!(off.ends_with(",false"), "guard-off must not recover: {off}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -4,6 +4,7 @@
 //!   train       pretrain a model under one precision plan (scheme × format)
 //!   eval        evaluate a checkpoint on the validation split
 //!   experiment  regenerate a paper table/figure (see --list)
+//!   stability   fault-injection × guardrail recovery grid
 //!   memory      analytic peak-memory report for any (model, plan)
 //!   inspect     dump manifest/artifact information
 //!   dp-train    data-parallel training demo (threaded workers)
@@ -14,8 +15,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 use collage::coordinator::checkpoint::Checkpoint;
 use collage::coordinator::config::RunConfig;
+use collage::coordinator::guard::GuardConfig;
 use collage::coordinator::proxy::{self, ProxyConfig};
 use collage::coordinator::trainer::Trainer;
+use collage::data::faults::FaultSpec;
 use collage::data::batches::{BatchIterator, Split};
 use collage::data::synthetic::{CorpusConfig, SyntheticCorpus};
 use collage::experiments;
@@ -48,6 +51,7 @@ fn usage() -> String {
        train        pretrain under one precision plan (strategy × format)\n\
        eval         evaluate a checkpoint\n\
        experiment   regenerate a paper table/figure (--list to enumerate)\n\
+       stability    fault-injection × guardrail recovery grid (stability_grid.csv)\n\
        memory       analytic peak-memory report (any plan; --format for fp8 rows)\n\
        inspect      show artifact manifest details\n\
        dp-train     threaded data-parallel training\n\n\
@@ -59,6 +63,10 @@ fn usage() -> String {
        collage train --format fp8e4m3 --strategy collage-light-3\n\
        collage train --strategy collage-light@fp8e4m3+delta-scale=8\n\
        collage train --strategy collage-light-3@fp8e4m3+delta-scale=auto\n\n\
+     Training can run under a spike guardrail (rollback recovery) and with\n\
+     deterministic fault injection:\n\
+       collage train --guard on --fault outlier-burst:start=230,window=16,scale=12\n\
+       collage stability --quick\n\n\
      Run `collage <SUBCOMMAND> --help` for options.\n"
         .to_string()
 }
@@ -73,6 +81,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
         "experiment" => cmd_experiment(rest),
+        "stability" => cmd_stability(rest),
         "memory" => cmd_memory(rest),
         "inspect" => cmd_inspect(rest),
         "dp-train" => cmd_dp_train(rest),
@@ -110,10 +119,26 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .opt("csv", "", "write per-step metrics CSV here")
             .opt("checkpoint-dir", "", "checkpoint directory (resume if present)")
             .opt("checkpoint-every", "0", "checkpoint cadence")
-            .opt("proxy-params", "8192", "parameter count for the proxy fallback path"),
+            .opt("proxy-params", "8192", "parameter count for the proxy fallback path")
+            .opt(
+                "guard",
+                "",
+                "spike guardrail: \"on\" or key=value,... over window/spike-factor/\
+                 update-factor/max-rollbacks/cooldown/skip/k-backoff/retain-every",
+            )
+            .opt(
+                "fault",
+                "",
+                "inject faults (proxy path): ';'-separated kind:key=value,... specs \
+                 (outlier-burst|loss-spike|update-shrink)",
+            ),
     );
     let a = spec.parse(args)?;
     let plan = PrecisionPlan::parse_with_format(a.get("strategy"), a.get("format"))?;
+    let guard = match a.get("guard") {
+        "" => None,
+        s => Some(s.parse::<GuardConfig>().context("parsing --guard")?),
+    };
     let cfg = RunConfig {
         model: a.get("model").to_string(),
         plan,
@@ -127,6 +152,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         corpus_tokens: a.usize("corpus-tokens")?,
         checkpoint_dir: non_empty(a.get("checkpoint-dir")),
         checkpoint_every: a.u64("checkpoint-every")?,
+        guard,
         ..Default::default()
     };
     // AOT artifacts cover only the bf16 row of the plan space; every other
@@ -202,6 +228,8 @@ fn train_proxy(a: &Args, cfg: &RunConfig) -> Result<()> {
         beta2: cfg.beta2.unwrap_or(0.95),
         seed: cfg.seed,
         log_every: cfg.log_every,
+        guard: cfg.guard,
+        faults: FaultSpec::parse_list(a.get("fault"))?,
         ..Default::default()
     };
     println!(
@@ -212,8 +240,13 @@ fn train_proxy(a: &Args, cfg: &RunConfig) -> Result<()> {
         pcfg.steps
     );
     let o = proxy::run(&pcfg)?;
+    let guard_suffix = if pcfg.guard.is_some() {
+        format!(" guard: trips={} rollbacks={} steps_lost={}", o.guard_trips, o.rollbacks, o.steps_lost)
+    } else {
+        String::new()
+    };
     println!(
-        "done: steps={} final_loss={:.4e} edq_ratio={:.4} lost={:.2}% {:.2} ms/step",
+        "done: steps={} final_loss={:.4e} edq_ratio={:.4} lost={:.2}% {:.2} ms/step{guard_suffix}",
         o.steps,
         o.final_loss,
         o.edq_ratio,
@@ -278,6 +311,22 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
         id,
         Path::new(a.get("artifacts")),
         &PathBuf::from(a.get("out-dir")).join(id),
+        a.flag("quick"),
+    )
+}
+
+fn cmd_stability(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "collage stability",
+        "Fault-injection × guardrail recovery grid (writes stability_grid.csv)",
+    )
+    .opt("out-dir", "runs", "output directory for the grid CSV + table")
+    .flag("quick", "headline plan only (CI mode)");
+    let a = spec.parse(args)?;
+    experiments::run(
+        "stability",
+        Path::new("artifacts"), // unused: the stability grid is proxy-only
+        &PathBuf::from(a.get("out-dir")).join("stability"),
         a.flag("quick"),
     )
 }

@@ -573,4 +573,103 @@ mod tests {
         let back = Value::parse(&v.dump()).unwrap();
         assert_eq!(back.as_f64().unwrap(), 0.1 + 0.2);
     }
+
+    // ----- property tests (in-tree harness, cf. util::proptest) ---------
+
+    use crate::util::proptest::check_msg;
+    use crate::util::rng::Rng;
+
+    /// Strings mixing the corners `write_str` special-cases: short
+    /// escapes, raw control characters, multi-byte unicode, plain ascii.
+    fn gen_string(rng: &mut Rng) -> String {
+        (0..rng.below(12))
+            .map(|_| match rng.below(6) {
+                0 => (b'a' + rng.below(26) as u8) as char,
+                1 => ['"', '\\', '/', '\n', '\r', '\t'][rng.below(6) as usize],
+                2 => char::from_u32(rng.below(0x20) as u32).unwrap(),
+                3 => ['é', '素', '😀', 'Ω'][rng.below(4) as usize],
+                _ => char::from_u32(33 + rng.below(94) as u32).unwrap(),
+            })
+            .collect()
+    }
+
+    /// Finite numbers only: JSON has no NaN/inf (`write_num` maps them to
+    /// null, which deliberately does NOT round-trip).
+    fn gen_num(rng: &mut Rng) -> f64 {
+        match rng.below(6) {
+            0 => 0.0,
+            1 => (rng.next_u32() as i64 - (1i64 << 31)) as f64,
+            2 => rng.normal(),
+            3 => rng.normal() * 1e300,
+            4 => rng.normal() * 1e-300,
+            _ => rng.f64(),
+        }
+    }
+
+    fn gen_value(rng: &mut Rng, depth: u64) -> Value {
+        match rng.below(if depth == 0 { 4 } else { 6 }) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 1),
+            2 => Value::Num(gen_num(rng)),
+            3 => Value::Str(gen_string(rng)),
+            4 => Value::Arr((0..rng.below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Obj::new();
+                for _ in 0..rng.below(4) {
+                    o.insert(gen_string(rng), gen_value(rng, depth - 1));
+                }
+                Value::Obj(o)
+            }
+        }
+    }
+
+    #[test]
+    fn prop_parse_inverts_dump_and_pretty() {
+        check_msg(
+            "json parse(dump(v)) == v",
+            |rng| gen_value(rng, 3),
+            |v| {
+                let compact = Value::parse(&v.dump())
+                    .map_err(|e| format!("compact reparse failed: {e}"))?;
+                if &compact != v {
+                    return Err(format!("compact mismatch: {}", v.dump()));
+                }
+                let pretty = Value::parse(&v.pretty(2))
+                    .map_err(|e| format!("pretty reparse failed: {e}"))?;
+                if &pretty != v {
+                    return Err(format!("pretty mismatch:\n{}", v.pretty(2)));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_parse_is_total_on_mutated_input() {
+        // Corrupt valid documents (ascii byte mutations + truncation) and
+        // require parse to return a Result — never panic, never index out
+        // of bounds on multi-byte boundaries.
+        check_msg(
+            "json parse total on garbage",
+            |rng| {
+                let mut bytes = gen_value(rng, 3).dump().into_bytes();
+                for _ in 0..rng.below(4) + 1 {
+                    if bytes.is_empty() {
+                        break;
+                    }
+                    let i = rng.below(bytes.len() as u64) as usize;
+                    bytes[i] = rng.below(0x80) as u8;
+                }
+                if rng.below(2) == 0 {
+                    let keep = rng.below(bytes.len() as u64 + 1) as usize;
+                    bytes.truncate(keep);
+                }
+                String::from_utf8_lossy(&bytes).into_owned()
+            },
+            |s| {
+                let _ = Value::parse(s);
+                Ok(())
+            },
+        );
+    }
 }

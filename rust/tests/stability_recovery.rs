@@ -1,0 +1,107 @@
+//! Tier-1 acceptance tests for the stability suite (ISSUE 6): under an
+//! injected sign-corrupted gradient outlier burst, the headline plan
+//! `collage-light-3@fp8e4m3+delta-scale=auto` must
+//!
+//!   * diverge with the guard OFF (final loss ≥ 3× the clean run), and
+//!   * recover with the guard ON (final loss ≤ 2× the clean run, with at
+//!     least one trip/rollback recorded),
+//!
+//! and the whole machinery — fault injection, detection, rollback — must
+//! be bit-deterministic across worker counts 1/2/8.
+
+use collage::coordinator::guard::GuardConfig;
+use collage::coordinator::proxy::{self, ProxyConfig, ProxyOutcome};
+use collage::data::faults::FaultSpec;
+
+/// The tuned scenario from `experiments/stability.rs`: burst at step 230
+/// (decayed-lr territory), 16 steps, ×2^12 on 30% of elements with
+/// hash-derived signs — roughly half the spiked elements push θ the
+/// wrong way at full Adam trust-region speed.
+const BURST: &str = "outlier-burst:start=230,window=16,scale=12,frac-ppm=300000";
+
+fn scenario_cfg(guard: Option<GuardConfig>, faulted: bool, workers: usize) -> ProxyConfig {
+    ProxyConfig {
+        plan: "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap(),
+        n: 1024,
+        steps: 300,
+        warmup: 40,
+        lr: 2e-2,
+        beta2: 0.95,
+        seed: 1234,
+        log_every: 0,
+        theta_scale: 8.0,
+        workers,
+        guard,
+        faults: if faulted { FaultSpec::parse_list(BURST).unwrap() } else { Vec::new() },
+        ..Default::default()
+    }
+}
+
+fn loss_bits(o: &ProxyOutcome) -> Vec<(u64, u64)> {
+    o.log.rows().iter().map(|r| (r.step, r.loss.to_bits())).collect()
+}
+
+#[test]
+fn guard_recovers_outlier_burst_where_guard_off_diverges() {
+    let clean = proxy::run(&scenario_cfg(None, false, 2)).unwrap();
+    assert!(clean.final_loss.is_finite() && clean.final_loss > 0.0);
+
+    let off = proxy::run(&scenario_cfg(None, true, 2)).unwrap();
+    assert!(
+        off.final_loss >= 3.0 * clean.final_loss,
+        "guard-off run must diverge: clean={:.4e} off={:.4e}",
+        clean.final_loss,
+        off.final_loss
+    );
+    assert_eq!((off.guard_trips, off.steps_lost), (0, 0));
+
+    let on = proxy::run(&scenario_cfg(Some(GuardConfig::default()), true, 2)).unwrap();
+    assert!(
+        on.final_loss <= 2.0 * clean.final_loss,
+        "guard-on run must recover within 2x of clean: clean={:.4e} on={:.4e}",
+        clean.final_loss,
+        on.final_loss
+    );
+    assert!(on.guard_trips >= 1, "the burst must trip the guard");
+    assert!(on.rollbacks >= 1);
+    assert!(on.steps_lost >= 1);
+    // The log's cumulative guard columns agree with the outcome totals.
+    let last = on.log.last().unwrap();
+    assert_eq!(
+        (last.guard_trips, last.rollbacks, last.steps_lost),
+        (on.guard_trips, on.rollbacks, on.steps_lost)
+    );
+}
+
+#[test]
+fn guard_does_not_perturb_the_clean_run() {
+    // Guard on, no faults: zero trips, and the loss trajectory is
+    // bit-identical to the guard-off clean run.
+    let off = proxy::run(&scenario_cfg(None, false, 2)).unwrap();
+    let on = proxy::run(&scenario_cfg(Some(GuardConfig::default()), false, 2)).unwrap();
+    assert_eq!(on.guard_trips, 0);
+    assert_eq!(on.steps_lost, 0);
+    assert_eq!(loss_bits(&off), loss_bits(&on));
+}
+
+#[test]
+fn faulted_recovery_is_worker_count_invariant() {
+    // Same seed + plan ⇒ identical guard-trip steps, surviving rows, and
+    // loss bits at 1, 2, and 8 workers: the injector is counter-based
+    // and faults are applied to the global gradient before sharding.
+    let a = proxy::run(&scenario_cfg(Some(GuardConfig::default()), true, 1)).unwrap();
+    for workers in [2, 8] {
+        let b = proxy::run(&scenario_cfg(Some(GuardConfig::default()), true, workers)).unwrap();
+        assert_eq!(
+            (a.guard_trips, a.rollbacks, a.steps_lost),
+            (b.guard_trips, b.rollbacks, b.steps_lost),
+            "guard telemetry must not depend on worker count ({workers} workers)"
+        );
+        assert_eq!(
+            loss_bits(&a),
+            loss_bits(&b),
+            "surviving rows must be bit-identical at {workers} workers"
+        );
+        assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    }
+}
