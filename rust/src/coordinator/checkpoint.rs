@@ -21,8 +21,10 @@ const MAGIC: &[u8; 8] = b"COLLAGE1";
 
 /// FNV-1a 64-bit over the serialized bytes — cheap, dependency-free, and
 /// plenty to catch the torn-write / bit-rot failures that matter here
-/// (this is corruption detection, not an adversarial MAC).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// (this is corruption detection, not an adversarial MAC).  Shared with
+/// `proxy::state_digest`, which fingerprints live optimizer state the
+/// same way the checkpoint trailer fingerprints the file.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;

@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::optim::plan::PrecisionPlan;
 use crate::optim::strategy::Strategy;
-use crate::util::json::{Obj, Value};
+use crate::util::json::{FromJson, JsonError, Obj, Value};
 
 use super::guard::GuardConfig;
 
@@ -184,6 +184,16 @@ impl RunConfig {
     }
 }
 
+/// Typed-decode entry for the serve wire protocol.  Defers to the
+/// inherent `from_json` above (inherent methods shadow trait methods in
+/// resolution, so the inner call is not self-recursive), folding its
+/// `anyhow` error into a [`JsonError::Decode`].
+impl FromJson for RunConfig {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        RunConfig::from_json(v).map_err(|e| JsonError::Decode(format!("run config: {e:#}")))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +306,19 @@ mod tests {
         )
         .unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn from_json_trait_matches_inherent() {
+        let mut cfg = RunConfig::default();
+        cfg.plan = "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap();
+        let decoded: RunConfig = cfg.to_json().decode().unwrap();
+        assert_eq!(decoded.plan, cfg.plan);
+        assert_eq!(decoded.steps, cfg.steps);
+        // Errors surface as typed JsonError::Decode, not panics.
+        let bad = Value::parse(r#"{"model": "tiny"}"#).unwrap();
+        let err = bad.decode::<RunConfig>().unwrap_err();
+        assert!(matches!(err, JsonError::Decode(_)), "{err}");
     }
 
     #[test]

@@ -180,6 +180,21 @@ impl FromStr for GuardConfig {
     }
 }
 
+/// Wire decode for the serve protocol: a guard travels as its grammar
+/// string (`"on"` or `"window=8,skip=32"`), the same spelling `--guard`
+/// and `RunConfig` JSON use.
+impl crate::util::json::FromJson for GuardConfig {
+    fn from_json(
+        v: &crate::util::json::Value,
+    ) -> Result<Self, crate::util::json::JsonError> {
+        v.as_str()?
+            .parse()
+            .map_err(|e: anyhow::Error| {
+                crate::util::json::JsonError::Decode(format!("guard: {e:#}"))
+            })
+    }
+}
+
 /// Why the guard tripped.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum TripReason {

@@ -1,12 +1,16 @@
-//! Per-step metric log: in-memory history + CSV export.  The column set
-//! carries every series the paper plots: loss/perplexity, grad norm
-//! (Fig. 5/6), parameter & update norms (Fig. 2), EDQ (Fig. 3 right,
-//! Figs. 7-12) and the lost-arithmetic percentage (Fig. 3 left).
+//! Per-step metric log: in-memory history + CSV export, plus the
+//! [`StepSink`] streaming abstraction `collage serve` hangs NDJSON
+//! telemetry off.  The column set carries every series the paper plots:
+//! loss/perplexity, grad norm (Fig. 5/6), parameter & update norms
+//! (Fig. 2), EDQ (Fig. 3 right, Figs. 7-12) and the lost-arithmetic
+//! percentage (Fig. 3 left).
 
 use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+use crate::util::json::{FromJson, JsonError, Obj, Value};
 
 /// One training-step record (mirrors `optim.METRIC_NAMES` + bookkeeping).
 #[derive(Debug, Clone, Copy, Default)]
@@ -58,6 +62,103 @@ impl StepRow {
             1.0
         }
     }
+
+    /// Wire encoding for NDJSON telemetry.  Every field travels so that a
+    /// decoded row is bit-identical to the in-process one (`dump` is
+    /// bit-exact for finite f64); `val_loss` is omitted when NaN because
+    /// JSON cannot spell it.
+    pub fn to_json(&self) -> Value {
+        let mut o = Obj::new();
+        o.insert("step", self.step);
+        o.insert("loss", self.loss);
+        o.insert("lr", self.lr);
+        o.insert("grad_norm", self.grad_norm);
+        o.insert("param_norm", self.param_norm);
+        o.insert("update_norm", self.update_norm);
+        o.insert("eff_update_norm", self.eff_update_norm);
+        o.insert("edq", self.edq);
+        o.insert("edq_ratio", self.edq_ratio());
+        o.insert("lost_frac", self.lost_frac);
+        o.insert("clip_coef", self.clip_coef);
+        if !self.val_loss.is_nan() {
+            o.insert("val_loss", self.val_loss);
+        }
+        o.insert("step_time", self.step_time);
+        o.insert("k", self.delta_k as u64);
+        o.insert("sat", self.delta_saturated);
+        o.insert("uflow", self.delta_underflow);
+        o.insert("guard_trips", self.guard_trips);
+        o.insert("rollbacks", self.rollbacks);
+        o.insert("steps_lost", self.steps_lost);
+        Value::Obj(o)
+    }
+}
+
+impl FromJson for StepRow {
+    /// Tolerant of extra keys (serve step events add `event`/`run`
+    /// envelope fields around the row).
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        Ok(StepRow {
+            step: v.get_as("step")?,
+            loss: v.get_as("loss")?,
+            lr: v.get_as("lr")?,
+            grad_norm: v.get_as("grad_norm")?,
+            param_norm: v.get_as("param_norm")?,
+            update_norm: v.get_as("update_norm")?,
+            eff_update_norm: v.get_as("eff_update_norm")?,
+            edq: v.get_as("edq")?,
+            lost_frac: v.get_as("lost_frac")?,
+            clip_coef: v.get_as("clip_coef")?,
+            val_loss: v.opt_as("val_loss")?.unwrap_or(f64::NAN),
+            step_time: v.get_as("step_time")?,
+            delta_k: v.get_as("k")?,
+            delta_saturated: v.get_as("sat")?,
+            delta_underflow: v.get_as("uflow")?,
+            guard_trips: v.get_as("guard_trips")?,
+            rollbacks: v.get_as("rollbacks")?,
+            steps_lost: v.get_as("steps_lost")?,
+        })
+    }
+}
+
+/// Streaming observer for a live training run — the hook `collage serve`
+/// uses to forward per-step telemetry over a socket while the run is in
+/// flight, without the trainer knowing anything about transports.
+///
+/// All hooks default to no-ops so in-process callers keep using
+/// [`NullSink`].  Contract: hooks observe and gate, they never mutate run
+/// state, so a run's `StepStats` stream is identical whatever sink is
+/// attached.
+pub trait StepSink {
+    /// Called before each step's gradient is computed.  Returning `false`
+    /// cancels the run with a typed [`RunCancelled`] error — serve uses
+    /// this both as the fair-scheduling admission point (block here until
+    /// the run's turn) and to stop burning pool time for a disconnected
+    /// client.
+    fn step_gate(&mut self, _t: u64) -> bool {
+        true
+    }
+
+    /// Called after each step's [`StepRow`] lands in the metrics log.
+    fn on_row(&mut self, _row: &StepRow) {}
+
+    /// Called when the guardrail rolls back to `to_step` and quarantines
+    /// until `resume_at` (exclusive of replay) — lets a telemetry consumer
+    /// mark the discarded span.
+    fn on_rollback(&mut self, _to_step: u64, _resume_at: u64) {}
+}
+
+/// The do-nothing sink: plain `proxy::run` behaviour.
+pub struct NullSink;
+
+impl StepSink for NullSink {}
+
+/// Typed cancellation error raised when a [`StepSink::step_gate`] returns
+/// `false` (e.g. the serve client hung up).
+#[derive(Debug, thiserror::Error)]
+#[error("run cancelled by its telemetry sink at step {step}")]
+pub struct RunCancelled {
+    pub step: u64,
 }
 
 pub const CSV_HEADER: &str = "step,loss,ppl,lr,grad_norm,param_norm,update_norm,\
@@ -264,5 +365,56 @@ mod tests {
     fn edq_ratio_degenerate() {
         let r = StepRow::default();
         assert_eq!(r.edq_ratio(), 1.0);
+    }
+
+    #[test]
+    fn step_row_json_roundtrip_is_bit_exact() {
+        let r = StepRow {
+            step: 17,
+            loss: 0.1 + 0.2,
+            lr: 1e-3,
+            grad_norm: 3.25,
+            param_norm: 100.5,
+            update_norm: 7e-6,
+            eff_update_norm: 6.5e-6,
+            edq: 6.9e-6,
+            lost_frac: 0.015625,
+            clip_coef: 1.0,
+            val_loss: f64::NAN,
+            step_time: 0.002,
+            delta_k: 12,
+            delta_saturated: 3,
+            delta_underflow: 9007199254740992, // 2^53: u64 decode ceiling
+            guard_trips: 1,
+            rollbacks: 1,
+            steps_lost: 23,
+        };
+        let wire = r.to_json().dump();
+        let back: StepRow = Value::parse(&wire).unwrap().decode().unwrap();
+        assert_eq!(back.step, r.step);
+        assert_eq!(back.loss.to_bits(), r.loss.to_bits());
+        assert_eq!(back.update_norm.to_bits(), r.update_norm.to_bits());
+        assert_eq!(back.edq.to_bits(), r.edq.to_bits());
+        assert_eq!(back.lost_frac.to_bits(), r.lost_frac.to_bits());
+        assert!(back.val_loss.is_nan(), "NaN val_loss omitted on the wire → NaN back");
+        assert_eq!(back.delta_k, r.delta_k);
+        assert_eq!(back.delta_underflow, r.delta_underflow);
+        assert_eq!(back.steps_lost, r.steps_lost);
+        // Envelope keys from serve events must not break decode.
+        let mut env = Value::parse(&wire).unwrap();
+        if let Value::Obj(o) = &mut env {
+            o.insert("event", "step");
+            o.insert("run", 4u64);
+        }
+        let again: StepRow = env.decode().unwrap();
+        assert_eq!(again.step, r.step);
+    }
+
+    #[test]
+    fn null_sink_defaults() {
+        let mut s = NullSink;
+        assert!(s.step_gate(0));
+        s.on_row(&StepRow::default());
+        s.on_rollback(3, 10);
     }
 }

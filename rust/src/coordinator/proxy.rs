@@ -11,6 +11,9 @@
 //! precisely the storage-format effects the paper studies — the same
 //! quantity Fig. 3 plots, at any format.
 
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -23,8 +26,9 @@ use crate::optim::strategy::Strategy;
 use crate::util::rng::Rng;
 use crate::util::threadpool::default_workers;
 
+use super::checkpoint::{fnv1a, Checkpoint};
 use super::guard::{GuardConfig, NonFiniteLossError, SpikeGuard};
-use super::metrics::{MetricsLog, StepRow};
+use super::metrics::{MetricsLog, NullSink, RunCancelled, StepRow, StepSink};
 use super::schedule::LrSchedule;
 
 /// One proxy run.
@@ -52,6 +56,13 @@ pub struct ProxyConfig {
     pub guard: Option<GuardConfig>,
     /// Injected faults (`data/faults.rs`); empty = clean run.
     pub faults: Vec<FaultSpec>,
+    /// Directory for checkpoint snapshots; `None` = no checkpointing.
+    /// Saves go through a background writer thread so file I/O never sits
+    /// on the step hot path (the only hot-path cost is one state clone).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Snapshot every `checkpoint_every` steps (`step_NNNNNN.ckpt`); 0 =
+    /// only the terminal `final.ckpt`.  Ignored without `checkpoint_dir`.
+    pub checkpoint_every: u64,
 }
 
 impl Default for ProxyConfig {
@@ -70,6 +81,8 @@ impl Default for ProxyConfig {
             theta_scale: 8.0,
             guard: None,
             faults: Vec::new(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -89,7 +102,73 @@ pub struct ProxyOutcome {
     pub guard_trips: u64,
     pub rollbacks: u64,
     pub steps_lost: u64,
+    /// FNV-1a-64 fingerprint of the final optimizer state (see
+    /// [`state_digest`]) — the cheap way to assert two runs ended in
+    /// bit-identical state without shipping the vectors themselves.
+    pub state_digest: u64,
     pub log: MetricsLog,
+}
+
+/// FNV-1a-64 fingerprint over every bit of an [`OptimState`]: the plan
+/// spelling, all state vectors (length-prefixed, f32 bits LE), and the
+/// adaptive delta-scale controller when present.  Two states digest equal
+/// iff a bitwise comparison would pass, up to 64-bit collision odds —
+/// what the serve determinism contract ("final state bits identical
+/// however scheduled") is asserted with.
+pub fn state_digest(state: &OptimState) -> u64 {
+    let mut bytes: Vec<u8> = Vec::new();
+    bytes.extend_from_slice(state.plan.to_string().as_bytes());
+    for vec in state.vecs() {
+        bytes.extend_from_slice(&(vec.len() as u64).to_le_bytes());
+        for &x in vec {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    if let Some(ctrl) = state.delta_ctrl() {
+        bytes.extend_from_slice(&(ctrl.k as u64).to_le_bytes());
+        bytes.extend_from_slice(&(ctrl.good_steps as u64).to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
+/// Background checkpoint writer: snapshots cross an mpsc channel to a
+/// dedicated thread, so the training loop pays only the `state.clone()`
+/// and never blocks on disk.  `finish` joins and surfaces the first save
+/// error (a failed snapshot must not be silently dropped).
+struct CkptWriter {
+    tx: mpsc::Sender<(Checkpoint, PathBuf)>,
+    handle: thread::JoinHandle<Result<u64>>,
+}
+
+impl CkptWriter {
+    fn start() -> Self {
+        let (tx, rx) = mpsc::channel::<(Checkpoint, PathBuf)>();
+        let handle = thread::spawn(move || {
+            let mut written = 0u64;
+            for (ck, path) in rx {
+                ck.save(&path)?;
+                written += 1;
+            }
+            Ok(written)
+        });
+        CkptWriter { tx, handle }
+    }
+
+    fn snapshot(&self, state: &OptimState, step: u64, path: PathBuf) {
+        // A send can only fail if the writer thread died; the error it
+        // died with is reported by `finish`, so the send result is moot.
+        let ck = Checkpoint { step, model: "proxy".into(), state: state.clone() };
+        let _ = self.tx.send((ck, path));
+    }
+
+    /// Close the channel, join the writer, and return how many snapshots
+    /// landed on disk (propagating the first save error, if any).
+    fn finish(self) -> Result<u64> {
+        drop(self.tx);
+        self.handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("checkpoint writer thread panicked"))?
+    }
 }
 
 /// In-memory rollback target: everything a replayed step depends on.
@@ -112,6 +191,16 @@ struct Snapshot {
 /// (or exhausted) is a typed [`NonFiniteLossError`] — it never reaches
 /// the log or the tail aggregates.
 pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
+    run_with_sink(cfg, &mut NullSink)
+}
+
+/// [`run`] with a streaming [`StepSink`] attached: `collage serve` routes
+/// NDJSON telemetry and fair-scheduling admission through the hooks.  The
+/// sink observes and gates but never influences numerics — a run produces
+/// bit-identical `StepRow`s and final state whatever sink is attached
+/// (asserted in `tests/serve_concurrency.rs`).  A `step_gate` veto
+/// surfaces as a typed [`RunCancelled`] error.
+pub fn run_with_sink(cfg: &ProxyConfig, sink: &mut dyn StepSink) -> Result<ProxyOutcome> {
     let plan = cfg.plan;
     let fmt = plan.format;
     let mut init_rng = Rng::new(cfg.seed, 0xF8);
@@ -144,9 +233,17 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
     // discarded segment actually clipped scaled words.
     let mut sat_since_retain: u64 = 0;
     let mut snap = Snapshot { state: state.clone(), step: 0, srng: srng.clone(), last_unorm };
+    let ckpt = cfg.checkpoint_dir.as_ref().map(|_| CkptWriter::start());
 
     let mut t: u64 = 1;
     while t <= cfg.steps {
+        // Admission point: serve blocks here until this run's fair-share
+        // turn; a `false` means the consumer is gone — stop burning pool
+        // time.  Outside the step timer on purpose: queue wait is
+        // scheduling, not compute.
+        if !sink.step_gate(t) {
+            return Err(RunCancelled { step: t }.into());
+        }
         let t0 = Instant::now();
         let eff = state.theta_effective();
         let mut loss = 0.0f64;
@@ -185,6 +282,7 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
                 last_unorm = snap.last_unorm;
                 log.truncate_after(s0);
                 gd.note_rollback(s0, skip_until);
+                sink.on_rollback(s0, skip_until + 1);
                 let backed = if sat_since_retain > 0 { gd.backoff_delta_k(&mut state) } else { None };
                 sat_since_retain = 0;
                 if cfg.log_every > 0 {
@@ -251,8 +349,14 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
             );
         }
         log.push(row);
+        sink.on_row(&row);
         last_unorm = Some(stats.edq.update_norm);
         sat_since_retain += stats.delta_saturated;
+        if let (Some(w), Some(dir)) = (ckpt.as_ref(), cfg.checkpoint_dir.as_ref()) {
+            if cfg.checkpoint_every > 0 && t % cfg.checkpoint_every == 0 {
+                w.snapshot(&state, t, dir.join(format!("step_{t:06}.ckpt")));
+            }
+        }
 
         if let Some(gd) = guard.as_ref() {
             if t % gd.cfg.retain_every == 0 {
@@ -268,6 +372,13 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
         t += 1;
     }
 
+    if let (Some(w), Some(dir)) = (ckpt.as_ref(), cfg.checkpoint_dir.as_ref()) {
+        w.snapshot(&state, cfg.steps, dir.join("final.ckpt"));
+    }
+    if let Some(w) = ckpt {
+        w.finish()?;
+    }
+
     let tail = (cfg.steps as usize / 10).max(1);
     let (trips, rbs, lost) =
         guard.as_ref().map(|gd| (gd.trips, gd.trips, gd.steps_lost)).unwrap_or((0, 0, 0));
@@ -280,6 +391,7 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
         guard_trips: trips,
         rollbacks: rbs,
         steps_lost: lost,
+        state_digest: state_digest(&state),
         log,
     })
 }
@@ -387,6 +499,92 @@ mod tests {
             o.log.rows().iter().map(|r| r.loss.to_bits()).collect()
         };
         assert_eq!(bits(&off), bits(&on), "guard must not perturb a clean trajectory");
+    }
+
+    #[test]
+    fn sink_streams_rows_without_perturbing_the_run() {
+        struct Collect {
+            rows: Vec<StepRow>,
+            rollbacks: Vec<(u64, u64)>,
+        }
+        impl StepSink for Collect {
+            fn on_row(&mut self, row: &StepRow) {
+                self.rows.push(*row);
+            }
+            fn on_rollback(&mut self, to_step: u64, resume_at: u64) {
+                self.rollbacks.push((to_step, resume_at));
+            }
+        }
+        let cfg = ProxyConfig {
+            plan: "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap(),
+            n: 256,
+            steps: 25,
+            log_every: 0,
+            guard: Some(GuardConfig::default()),
+            faults: FaultSpec::parse_list("loss-spike:start=5,window=1,scale=1100").unwrap(),
+            ..Default::default()
+        };
+        let plain = run(&cfg).unwrap();
+        let mut sink = Collect { rows: Vec::new(), rollbacks: Vec::new() };
+        let sunk = run_with_sink(&cfg, &mut sink).unwrap();
+        assert_eq!(sunk.state_digest, plain.state_digest, "sink must not perturb state");
+        assert!(!sink.rollbacks.is_empty(), "the spike must surface through on_rollback");
+        // The sink saw every row in emit order, including rows later
+        // truncated by the rollback — a telemetry stream is append-only.
+        assert!(sink.rows.len() >= sunk.log.rows().len());
+        let logged: Vec<u64> = sunk.log.rows().iter().map(|r| r.loss.to_bits()).collect();
+        let live: Vec<u64> = plain.log.rows().iter().map(|r| r.loss.to_bits()).collect();
+        assert_eq!(logged, live);
+    }
+
+    #[test]
+    fn sink_gate_cancels_with_typed_error() {
+        struct StopAt(u64);
+        impl StepSink for StopAt {
+            fn step_gate(&mut self, t: u64) -> bool {
+                t < self.0
+            }
+        }
+        let cfg =
+            ProxyConfig { n: 128, steps: 50, log_every: 0, ..Default::default() };
+        let err = run_with_sink(&cfg, &mut StopAt(7)).unwrap_err();
+        let e = err.downcast_ref::<RunCancelled>().expect("typed RunCancelled");
+        assert_eq!(e.step, 7);
+    }
+
+    #[test]
+    fn async_checkpoints_land_and_final_matches_digest() {
+        let dir = std::env::temp_dir().join("collage_test_proxy_ckpt");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = ProxyConfig {
+            plan: "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap(),
+            n: 256,
+            steps: 20,
+            log_every: 0,
+            checkpoint_dir: Some(dir.clone()),
+            checkpoint_every: 8,
+            ..Default::default()
+        };
+        let o = run(&cfg).unwrap();
+        // Same run without checkpointing: snapshots must be pure observers.
+        let bare = run(&ProxyConfig {
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            ..cfg.clone()
+        })
+        .unwrap();
+        assert_eq!(o.state_digest, bare.state_digest);
+        for name in ["step_000008.ckpt", "step_000016.ckpt", "final.ckpt"] {
+            assert!(dir.join(name).is_file(), "missing {name}");
+        }
+        let ck = Checkpoint::load(&dir.join("final.ckpt")).unwrap();
+        assert_eq!(ck.step, 20);
+        assert_eq!(
+            state_digest(&ck.state),
+            o.state_digest,
+            "final.ckpt must reload to the exact final state bits"
+        );
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

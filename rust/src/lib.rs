@@ -32,6 +32,7 @@
 //! | [`runtime`] | PJRT client/executable wrappers + artifact manifest | — |
 //! | [`parallel`] | data-parallel runtime: per-rank workers, deterministic all-reduce ([`parallel::allreduce`]), sharded optimizer | §5 (training speed) |
 //! | [`coordinator`] | [`coordinator::trainer`]: the HLO train loop; [`coordinator::proxy`]: the artifact-free proxy trainer; configs, schedules, checkpoints, metrics | Figs. 1–3 pipelines |
+//! | [`serve`] | multi-tenant training service: TCP line protocol, typed request decode, fair per-step scheduling of concurrent runs on the shared pool, NDJSON telemetry streams | — |
 //! | [`experiments`] | regenerates the paper's tables/figures (`collage experiment --list`) | Tables 2–12, Figs. 1–7 |
 //!
 //! Numerics invariants worth knowing before touching anything:
@@ -78,6 +79,7 @@ pub mod numerics;
 pub mod optim;
 pub mod parallel;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

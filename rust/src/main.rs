@@ -8,6 +8,8 @@
 //!   memory      analytic peak-memory report for any (model, plan)
 //!   inspect     dump manifest/artifact information
 //!   dp-train    data-parallel training demo (threaded workers)
+//!   serve       multi-tenant training service (NDJSON over TCP)
+//!   submit      submit a run to a serve instance and stream telemetry
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -16,6 +18,7 @@ use anyhow::{bail, Context, Result};
 use collage::coordinator::checkpoint::Checkpoint;
 use collage::coordinator::config::RunConfig;
 use collage::coordinator::guard::GuardConfig;
+use collage::coordinator::metrics::{MetricsLog, StepRow};
 use collage::coordinator::proxy::{self, ProxyConfig};
 use collage::coordinator::trainer::Trainer;
 use collage::data::faults::FaultSpec;
@@ -29,7 +32,11 @@ use collage::optim::adamw::AdamW;
 use collage::optim::plan::{PrecisionPlan, ALL_SCHEMES};
 use collage::parallel::worker::DataParallel;
 use collage::runtime::{Manifest, Runtime};
+use collage::serve::client::submit_lines;
+use collage::serve::protocol::{build_request, RequestLimits};
+use collage::serve::server::{ServeConfig, Server};
 use collage::util::cli::{ArgSpec, Args};
+use collage::util::json::Obj;
 use collage::util::table::{fnum, Table};
 
 fn main() {
@@ -54,7 +61,9 @@ fn usage() -> String {
        stability    fault-injection × guardrail recovery grid (stability_grid.csv)\n\
        memory       analytic peak-memory report (any plan; --format for fp8 rows)\n\
        inspect      show artifact manifest details\n\
-       dp-train     threaded data-parallel training\n\n\
+       dp-train     threaded data-parallel training\n\
+       serve        multi-tenant training service (NDJSON telemetry over TCP)\n\
+       submit       submit a run to a serve instance and stream its telemetry\n\n\
      Plans combine a scheme (--strategy) with a storage format (--format),\n\
      optionally with loss-scaled δθ words — a static exponent\n\
      (+delta-scale=<pow2>) or the adaptive controller (+delta-scale=auto,\n\
@@ -85,6 +94,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "memory" => cmd_memory(rest),
         "inspect" => cmd_inspect(rest),
         "dp-train" => cmd_dp_train(rest),
+        "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
         "--help" | "-h" | "help" => {
             print!("{}", usage());
             Ok(())
@@ -497,6 +508,123 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
         "dp-train done: {:.1}s, {:.0} tokens/s across {workers} workers",
         dt,
         tokens / dt
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "collage serve",
+        "Multi-tenant training service: concurrent proxy runs over one shared \
+         worker pool, NDJSON telemetry per connection",
+    )
+    .opt("addr", "127.0.0.1:7734", "bind address (port 0 = ephemeral)")
+    .opt("max-inflight", "2", "runs allowed to compute a step concurrently")
+    .opt("max-runs", "0", "exit after serving N connections (0 = run forever)")
+    .opt("worker-cap", "0", "clamp per-run worker counts to this (0 = CPU count)")
+    .opt("max-request-bytes", "1048576", "reject request lines longer than this")
+    .opt("max-params", "4194304", "reject runs with more proxy parameters")
+    .opt("max-steps", "1000000", "reject runs with more optimizer steps")
+    .opt("checkpoint-root", "", "write per-run checkpoints under this directory")
+    .flag("quiet", "no per-connection stdout notes");
+    let a = spec.parse(args)?;
+    let mut limits = RequestLimits {
+        max_params: a.usize("max-params")?,
+        max_steps: a.u64("max-steps")?,
+        ..Default::default()
+    };
+    let cap = a.usize("worker-cap")?;
+    if cap > 0 {
+        limits.worker_cap = cap;
+    }
+    let cfg = ServeConfig {
+        addr: a.get("addr").to_string(),
+        max_inflight: a.usize("max-inflight")?.max(1),
+        max_runs: a.usize("max-runs")?,
+        limits,
+        max_request_bytes: a.usize("max-request-bytes")?,
+        checkpoint_root: non_empty(a.get("checkpoint-root")).map(PathBuf::from),
+        quiet: a.flag("quiet"),
+    };
+    let server = Server::bind(cfg)?;
+    println!("collage serve: listening on {}", server.local_addr()?);
+    server.run()
+}
+
+fn cmd_submit(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "collage submit",
+        "Submit one run to a collage serve instance and stream its NDJSON \
+         telemetry to stdout",
+    )
+    .opt("addr", "127.0.0.1:7734", "server address")
+    .opt(
+        "plan",
+        "collage-plus",
+        "precision plan (scheme[@format][+delta-scale=<pow2>|auto[:<k0>]])",
+    )
+    .opt("params", "8192", "proxy parameter count")
+    .opt("steps", "200", "optimizer steps")
+    .opt("warmup", "", "warmup steps (server default if empty)")
+    .opt("lr", "", "peak learning rate (server default if empty)")
+    .opt("beta2", "", "AdamW β₂ (server default if empty)")
+    .opt("seed", "", "rng seed (server default if empty)")
+    .opt("log-every", "1", "telemetry cadence (0 = terminal events only)")
+    .opt("workers", "", "pool workers for this run (server clamps)")
+    .opt("theta-scale", "", "teacher parameter scale (server default if empty)")
+    .opt("checkpoint-every", "", "checkpoint cadence (server must enable a root)")
+    .opt("guard", "", "spike guardrail: \"on\" or key=value,... (see collage train)")
+    .opt("fault", "", "inject faults: ';'-separated kind:key=value,... specs")
+    .opt("csv", "", "also write the streamed step rows as CSV here");
+    let a = spec.parse(args)?;
+
+    let mut c = Obj::new();
+    c.insert("n", a.u64("params")?);
+    c.insert("steps", a.u64("steps")?);
+    c.insert("log_every", a.u64("log-every")?);
+    for (key, flag) in [("warmup", "warmup"), ("seed", "seed"), ("workers", "workers"),
+                        ("checkpoint_every", "checkpoint-every")]
+    {
+        if !a.get(flag).is_empty() {
+            c.insert(key, a.u64(flag)?);
+        }
+    }
+    for (key, flag) in [("lr", "lr"), ("beta2", "beta2"), ("theta_scale", "theta-scale")] {
+        if !a.get(flag).is_empty() {
+            c.insert(key, a.f64(flag)?);
+        }
+    }
+    let request = build_request(
+        a.get("plan"),
+        c,
+        non_empty(a.get("guard")).as_deref(),
+        non_empty(a.get("fault")).as_deref(),
+    );
+
+    // Stream every event line verbatim as it arrives; optionally decode the
+    // step events back into rows for a local CSV.
+    let mut log = MetricsLog::default();
+    let want_csv = !a.get("csv").is_empty();
+    let outcome = submit_lines(a.get("addr"), &request, |v| {
+        println!("{}", v.dump());
+        if want_csv && v.opt("event").and_then(|e| e.as_str().ok()) == Some("step") {
+            if let Ok(row) = v.decode::<StepRow>() {
+                log.push(row);
+            }
+        }
+    })?;
+    let done = outcome.into_done()?;
+    if want_csv {
+        log.write_csv(Path::new(a.get("csv")))?;
+        eprintln!("metrics -> {}", a.get("csv"));
+    }
+    eprintln!(
+        "done: steps={} final_loss={:.4e} edq_ratio={:.4} lost={:.2}% digest={:016x}",
+        done.steps,
+        done.final_loss,
+        done.edq_ratio,
+        done.lost_frac * 100.0,
+        done.state_digest
     );
     Ok(())
 }

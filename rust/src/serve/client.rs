@@ -1,0 +1,140 @@
+//! The `collage submit` client: connect, send one request line, stream
+//! the NDJSON response back line by line.
+//!
+//! The transport is intentionally dumb — one request, one connection, a
+//! stream of events until the server closes — so anything that speaks
+//! TCP and JSON (`nc`, a Python script) is an equally valid client; this
+//! module just adds typed decoding of the terminal events.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+use super::protocol::DoneEvent;
+
+/// What a submission ended as.
+#[derive(Debug)]
+pub struct SubmitOutcome {
+    /// The decoded `done` event, if the run succeeded.
+    pub done: Option<DoneEvent>,
+    /// `(code, message)` from a terminal `error` event, if any.
+    pub error: Option<(String, String)>,
+    /// Total response lines received.
+    pub lines: u64,
+}
+
+impl SubmitOutcome {
+    /// `Ok(done)` on success, `Err` otherwise — for callers that treat a
+    /// server-side error as their own failure (the CLI does).
+    pub fn into_done(self) -> Result<DoneEvent> {
+        if let Some((code, msg)) = self.error {
+            bail!("server error [{code}]: {msg}");
+        }
+        self.done
+            .ok_or_else(|| anyhow::anyhow!("connection closed without a done event"))
+    }
+}
+
+/// Submit `request` to the server at `addr` and invoke `on_line` for every
+/// decoded response event as it arrives (streaming, not after the fact).
+/// Returns once the server closes the connection.
+pub fn submit_lines(
+    addr: &str,
+    request: &Value,
+    mut on_line: impl FnMut(&Value),
+) -> Result<SubmitOutcome> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let mut line = request.dump();
+    line.push('\n');
+    stream.write_all(line.as_bytes())?;
+    stream.flush()?;
+
+    let mut out = SubmitOutcome { done: None, error: None, lines: 0 };
+    for l in BufReader::new(stream).lines() {
+        let l = l.context("reading response line")?;
+        if l.is_empty() {
+            continue;
+        }
+        let v = Value::parse(&l)
+            .with_context(|| format!("response line is not JSON: {l:?}"))?;
+        out.lines += 1;
+        match v.get("event").ok().and_then(|e| e.as_str().ok()) {
+            Some("done") => {
+                out.done =
+                    Some(v.decode::<DoneEvent>().context("decoding done event")?);
+            }
+            Some("error") => {
+                let code = v
+                    .opt("code")
+                    .and_then(|c| c.as_str().ok())
+                    .unwrap_or("unknown")
+                    .to_string();
+                let msg = v
+                    .opt("message")
+                    .and_then(|m| m.as_str().ok())
+                    .unwrap_or_default()
+                    .to_string();
+                out.error = Some((code, msg));
+            }
+            _ => {}
+        }
+        on_line(&v);
+    }
+    Ok(out)
+}
+
+/// Submit and collect every event (convenience for tests and the CLI's
+/// non-streaming paths).
+pub fn submit(addr: &str, request: &Value) -> Result<(SubmitOutcome, Vec<Value>)> {
+    let mut events = Vec::new();
+    let outcome = submit_lines(addr, request, |v| events.push(v.clone()))?;
+    Ok((outcome, events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::build_request;
+    use crate::serve::server::{ServeConfig, Server};
+    use crate::util::json::Obj;
+
+    #[test]
+    fn submit_decodes_done_and_error_terminals() {
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_runs: 2,
+            quiet: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || server.run().unwrap());
+
+        // Failure first: the per-connection isolation means the next
+        // request on a fresh connection is unaffected.
+        let bad = Value::parse(r#"{"plan": "warp-drive"}"#).unwrap();
+        let (out, _) = submit(&addr, &bad).unwrap();
+        assert!(out.done.is_none());
+        let (code, msg) = out.error.expect("typed error");
+        assert_eq!(code, "bad-field");
+        assert!(msg.contains("plan"), "message names the field: {msg}");
+        assert!(out.into_done().is_err());
+
+        let mut c = Obj::new();
+        c.insert("n", 128u64);
+        c.insert("steps", 5u64);
+        c.insert("workers", 1u64);
+        let req = build_request("collage-plus", c, None, None);
+        let (out, events) = submit(&addr, &req).unwrap();
+        let done = out.into_done().unwrap();
+        assert_eq!(done.steps, 5);
+        assert!(done.final_loss.is_finite());
+        // accepted + 5 steps + done.
+        assert_eq!(events.len() as u64, 7);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,124 @@
+//! `collage serve` — a multi-tenant training service over the shared
+//! worker pool.
+//!
+//! One server process owns one persistent thread pool (see
+//! [`crate::util::threadpool`]) and runs many proxy-training jobs on it
+//! concurrently.  Clients connect over TCP, send **one request line**,
+//! and receive a stream of **NDJSON telemetry events** until the run
+//! finishes.  A fair per-step scheduler ([`scheduler::FairScheduler`])
+//! interleaves concurrent runs at chunk/step granularity, so a 100k-step
+//! run cannot starve a 10-step run submitted after it.
+//!
+//! # Wire protocol
+//!
+//! **Request** — a single `\n`-terminated JSON object:
+//!
+//! ```json
+//! {"plan": "collage-light-3@fp8e4m3+delta-scale=auto",
+//!  "config": {"n": 4096, "steps": 200, "lr": 0.02, "seed": 7,
+//!             "log_every": 10, "workers": 2},
+//!  "guard": "window=8,skip=16",
+//!  "faults": "loss-spike:start=50,window=1,scale=1100"}
+//! ```
+//!
+//! `plan` uses the [`crate::optim::plan`] grammar, `guard` the
+//! [`crate::coordinator::guard`] grammar, `faults` the
+//! [`crate::data::faults`] grammar (a `;`-joined string or an array of
+//! strings) — the exact strings the CLI takes.  Unknown keys are typed
+//! errors, not silently ignored.
+//!
+//! **Response** — one JSON object per line, in order:
+//!
+//! 1. `{"event":"accepted","run":N,"plan":...,"n":...,"steps":...,"workers":...}`
+//! 2. `{"event":"step","run":N,"step":t,"loss":...,"edq":...,"edq_ratio":...,
+//!    "lost_frac":...,"k":...,"sat":...,"uflow":...,...}` — every
+//!    `log_every` steps, the full [`crate::coordinator::metrics::StepRow`].
+//! 3. `{"event":"rollback","run":N,"to_step":s,"resume_at":r}` — on each
+//!    guardrail trip, interleaved with step events.
+//! 4. Terminal: `{"event":"done","run":N,...,"state_digest":"<16 hex>"}`
+//!    on success, or `{"event":"error","code":...,"message":...}` with a
+//!    stable `code` (`oversized` | `bad-json` | `bad-field` |
+//!    `run-failed` | `io`).
+//!
+//! `state_digest` is the FNV-1a-64 fingerprint of the full optimizer
+//! state ([`crate::coordinator::proxy::state_digest`]), sent as a hex
+//! string because JSON numbers are f64 and would corrupt bits above 2^53.
+//!
+//! # Determinism contract
+//!
+//! Serving is pure admission control: the scheduler decides *when* a
+//! run's next step starts, never how it computes, and telemetry sinks
+//! observe rows without mutating them.  A run's `StepRow` stream and
+//! final `state_digest` are therefore **bit-identical** whether the run
+//! executes alone, concurrently with any mix of tenants, or at any
+//! worker count — enforced by `tests/serve_concurrency.rs`.
+//!
+//! # Examples
+//!
+//! Requests decode through the same validated grammars the CLI uses:
+//!
+//! ```
+//! use collage::serve::protocol::{decode_request, RequestLimits};
+//! use collage::util::json::Value;
+//!
+//! let v = Value::parse(r#"{
+//!     "plan": "collage-light-3@fp8e4m3+delta-scale=auto",
+//!     "config": {"n": 512, "steps": 40, "workers": 2},
+//!     "guard": "on"
+//! }"#).unwrap();
+//! let cfg = decode_request(&v, &RequestLimits::default()).unwrap();
+//! assert_eq!(cfg.plan.to_string(), "collage-light-3@fp8e4m3+delta-scale=auto");
+//! assert_eq!((cfg.n, cfg.steps, cfg.workers), (512, 40, 2));
+//! assert!(cfg.guard.is_some());
+//! ```
+//!
+//! Malformed input is a typed, machine-readable rejection:
+//!
+//! ```
+//! use collage::serve::protocol::{decode_request, error_event, RequestLimits};
+//! use collage::util::json::Value;
+//!
+//! let v = Value::parse(r#"{"plan": "collage-plus", "config": {"step": 10}}"#).unwrap();
+//! let err = decode_request(&v, &RequestLimits::default()).unwrap_err();
+//! assert_eq!(err.code(), "bad-field");
+//! let line = error_event(&err).dump();
+//! assert!(line.contains(r#""code":"bad-field""#));
+//! ```
+//!
+//! End to end, in-process (the CLI's `collage serve` / `collage submit`
+//! wrap exactly this):
+//!
+//! ```
+//! use collage::serve::client::submit;
+//! use collage::serve::protocol::build_request;
+//! use collage::serve::server::{ServeConfig, Server};
+//! use collage::util::json::Obj;
+//!
+//! let server = Server::bind(ServeConfig {
+//!     addr: "127.0.0.1:0".into(), max_runs: 1, quiet: true,
+//!     ..Default::default()
+//! }).unwrap();
+//! let addr = server.local_addr().unwrap().to_string();
+//! let h = std::thread::spawn(move || server.run().unwrap());
+//!
+//! let mut c = Obj::new();
+//! c.insert("n", 128u64);
+//! c.insert("steps", 4u64);
+//! c.insert("workers", 1u64);
+//! let (outcome, _events) =
+//!     submit(&addr, &build_request("collage-light@fp8e4m3", c, None, None)).unwrap();
+//! let done = outcome.into_done().unwrap();
+//! assert_eq!(done.steps, 4);
+//! assert!(done.final_loss.is_finite());
+//! h.join().unwrap();
+//! ```
+
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use client::{submit, submit_lines, SubmitOutcome};
+pub use protocol::{DoneEvent, RequestLimits, ServeError};
+pub use scheduler::FairScheduler;
+pub use server::{ServeConfig, Server};

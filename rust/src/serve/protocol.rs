@@ -1,0 +1,411 @@
+//! Wire protocol for `collage serve`: typed request decode (through the
+//! same `PrecisionPlan` / `GuardConfig` / fault grammars the CLI uses)
+//! and the NDJSON event vocabulary streamed back per run.
+//!
+//! See [`crate::serve`] for the full protocol spec with examples.
+
+use crate::coordinator::guard::GuardConfig;
+use crate::coordinator::metrics::StepRow;
+use crate::coordinator::proxy::{ProxyConfig, ProxyOutcome};
+use crate::data::faults::FaultSpec;
+use crate::optim::plan::PrecisionPlan;
+use crate::util::json::{FromJson, JsonError, Obj, Value};
+use crate::util::threadpool::default_workers;
+
+/// Why a request was rejected (or a run failed).  Every variant maps to a
+/// stable machine-readable [`code`](ServeError::code) in the error event,
+/// so clients can branch without string-matching messages.
+#[derive(Debug, thiserror::Error)]
+pub enum ServeError {
+    #[error("request line exceeds {max} bytes before a newline")]
+    Oversized { max: usize },
+    #[error("request is not valid JSON: {0}")]
+    BadJson(String),
+    #[error("bad request field {field:?}: {msg}")]
+    BadField { field: &'static str, msg: String },
+    #[error("run failed: {0}")]
+    RunFailed(String),
+    #[error("i/o: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl ServeError {
+    /// Stable machine-readable error code carried in the error event.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Oversized { .. } => "oversized",
+            ServeError::BadJson(_) => "bad-json",
+            ServeError::BadField { .. } => "bad-field",
+            ServeError::RunFailed(_) => "run-failed",
+            ServeError::Io(_) => "io",
+        }
+    }
+}
+
+/// The terminal `{"event":"error",...}` line for a failed request/run.
+pub fn error_event(e: &ServeError) -> Value {
+    let mut o = Obj::new();
+    o.insert("event", "error");
+    o.insert("code", e.code());
+    o.insert("message", e.to_string());
+    Value::Obj(o)
+}
+
+/// Server-side resource ceilings applied while decoding a request — a
+/// hostile `{"config":{"n":1e15}}` must die at decode, not at `vec!`.
+#[derive(Debug, Clone)]
+pub struct RequestLimits {
+    /// Max proxy parameter count per run.
+    pub max_params: usize,
+    /// Max optimizer steps per run.
+    pub max_steps: u64,
+    /// Worker counts in requests are clamped (not rejected) to this.
+    pub worker_cap: usize,
+}
+
+impl Default for RequestLimits {
+    fn default() -> Self {
+        RequestLimits { max_params: 1 << 22, max_steps: 1_000_000, worker_cap: default_workers() }
+    }
+}
+
+fn bad(field: &'static str, e: impl std::fmt::Display) -> ServeError {
+    ServeError::BadField { field, msg: format!("{e}") }
+}
+
+/// Keys accepted in the request's `config` object.  Everything else is a
+/// typed `bad-field` rejection: silently ignoring a typo'd `"step"` would
+/// run 200 default steps instead of the 20,000 the client asked for.
+const CONFIG_KEYS: [&str; 11] = [
+    "n",
+    "steps",
+    "warmup",
+    "lr",
+    "min_lr_ratio",
+    "beta2",
+    "seed",
+    "log_every",
+    "workers",
+    "theta_scale",
+    "checkpoint_every",
+];
+
+/// Decode and validate one run request into a [`ProxyConfig`].
+///
+/// `log_every` here is the *telemetry cadence* (a step event every
+/// `log_every` steps; default 1 — the server silences stdout separately).
+/// The returned config never exceeds `lim`; unknown top-level or config
+/// keys are rejected.
+pub fn decode_request(v: &Value, lim: &RequestLimits) -> Result<ProxyConfig, ServeError> {
+    let obj = v
+        .as_obj()
+        .map_err(|_| bad("request", "must be a JSON object"))?;
+    for k in obj.keys() {
+        if !matches!(k.as_str(), "plan" | "config" | "guard" | "faults") {
+            return Err(bad("request", format!("unknown key {k:?}")));
+        }
+    }
+    let plan_s: String = v.get_as("plan").map_err(|e| bad("plan", e))?;
+    let plan: PrecisionPlan = plan_s.parse().map_err(|e| bad("plan", format!("{e:#}")))?;
+    let mut cfg = ProxyConfig { plan, log_every: 1, ..Default::default() };
+
+    if let Some(c) = v.opt("config") {
+        let cobj = c.as_obj().map_err(|_| bad("config", "must be a JSON object"))?;
+        for k in cobj.keys() {
+            if !CONFIG_KEYS.contains(&k.as_str()) {
+                return Err(bad("config", format!("unknown key {k:?}")));
+            }
+        }
+        let e = |e: JsonError| bad("config", e);
+        if let Some(n) = c.opt_as::<usize>("n").map_err(e)? {
+            cfg.n = n;
+        }
+        if let Some(steps) = c.opt_as::<u64>("steps").map_err(e)? {
+            cfg.steps = steps;
+        }
+        if let Some(w) = c.opt_as::<u64>("warmup").map_err(e)? {
+            cfg.warmup = w;
+        }
+        if let Some(lr) = c.opt_as::<f64>("lr").map_err(e)? {
+            cfg.lr = lr;
+        }
+        if let Some(m) = c.opt_as::<f64>("min_lr_ratio").map_err(e)? {
+            cfg.min_lr_ratio = m;
+        }
+        if let Some(b) = c.opt_as::<f64>("beta2").map_err(e)? {
+            cfg.beta2 = b;
+        }
+        if let Some(s) = c.opt_as::<u64>("seed").map_err(e)? {
+            cfg.seed = s;
+        }
+        if let Some(le) = c.opt_as::<u64>("log_every").map_err(e)? {
+            cfg.log_every = le;
+        }
+        if let Some(w) = c.opt_as::<usize>("workers").map_err(e)? {
+            cfg.workers = w;
+        }
+        if let Some(ts) = c.opt_as::<f64>("theta_scale").map_err(e)? {
+            cfg.theta_scale = ts as f32;
+        }
+        if let Some(ce) = c.opt_as::<u64>("checkpoint_every").map_err(e)? {
+            cfg.checkpoint_every = ce;
+        }
+    }
+
+    if let Some(g) = v.opt_as::<GuardConfig>("guard").map_err(|e| bad("guard", e))? {
+        cfg.guard = Some(g);
+    }
+    if let Some(fv) = v.opt("faults") {
+        // A `;`-separated grammar string, or an array of such strings.
+        let joined = match fv {
+            Value::Str(s) => s.clone(),
+            Value::Arr(_) => fv
+                .decode::<Vec<String>>()
+                .map_err(|e| bad("faults", e))?
+                .join(";"),
+            _ => return Err(bad("faults", "expected a string or array of strings")),
+        };
+        cfg.faults = FaultSpec::parse_list(&joined).map_err(|e| bad("faults", format!("{e:#}")))?;
+    }
+
+    if cfg.n == 0 || cfg.n > lim.max_params {
+        return Err(bad("config", format!("n={} outside 1..={}", cfg.n, lim.max_params)));
+    }
+    if cfg.steps == 0 || cfg.steps > lim.max_steps {
+        return Err(bad(
+            "config",
+            format!("steps={} outside 1..={}", cfg.steps, lim.max_steps),
+        ));
+    }
+    cfg.workers = cfg.workers.clamp(1, lim.worker_cap.max(1));
+    Ok(cfg)
+}
+
+/// Client-side request construction from the same grammar strings the CLI
+/// takes.  `config` carries raw key/value pairs (validated server-side).
+pub fn build_request(
+    plan: &str,
+    config: Obj,
+    guard: Option<&str>,
+    faults: Option<&str>,
+) -> Value {
+    let mut o = Obj::new();
+    o.insert("plan", plan);
+    if !config.is_empty() {
+        o.insert("config", Value::Obj(config));
+    }
+    if let Some(g) = guard {
+        o.insert("guard", g);
+    }
+    if let Some(f) = faults {
+        o.insert("faults", f);
+    }
+    Value::Obj(o)
+}
+
+fn envelope(event: &str, run: u64) -> Obj {
+    let mut o = Obj::new();
+    o.insert("event", event);
+    o.insert("run", run);
+    o
+}
+
+/// First line of every successful response: the run was admitted.
+pub fn ev_accepted(run: u64, cfg: &ProxyConfig) -> Value {
+    let mut o = envelope("accepted", run);
+    o.insert("plan", cfg.plan.to_string());
+    o.insert("n", cfg.n);
+    o.insert("steps", cfg.steps);
+    o.insert("workers", cfg.workers);
+    Value::Obj(o)
+}
+
+/// One per logged step: the envelope plus every [`StepRow`] field.
+pub fn ev_step(run: u64, row: &StepRow) -> Value {
+    let mut o = envelope("step", run);
+    if let Value::Obj(fields) = row.to_json() {
+        for (k, v) in fields.iter() {
+            o.insert(k.clone(), v.clone());
+        }
+    }
+    Value::Obj(o)
+}
+
+/// Guardrail rollback marker: history after `to_step` was discarded and
+/// the run resumes at `resume_at`.
+pub fn ev_rollback(run: u64, to_step: u64, resume_at: u64) -> Value {
+    let mut o = envelope("rollback", run);
+    o.insert("to_step", to_step);
+    o.insert("resume_at", resume_at);
+    Value::Obj(o)
+}
+
+/// Terminal success line with the run summary.  `state_digest` travels as
+/// a hex *string*: JSON numbers are f64, which silently drops bits of a
+/// u64 above 2^53 — exactly the bits a digest comparison is for.
+pub fn ev_done(run: u64, o: &ProxyOutcome) -> Value {
+    let mut e = envelope("done", run);
+    e.insert("steps", o.steps);
+    e.insert("final_loss", o.final_loss);
+    e.insert("edq_ratio", o.edq_ratio);
+    e.insert("lost_frac", o.lost_frac);
+    e.insert("guard_trips", o.guard_trips);
+    e.insert("rollbacks", o.rollbacks);
+    e.insert("steps_lost", o.steps_lost);
+    e.insert("state_digest", format!("{:016x}", o.state_digest));
+    Value::Obj(e)
+}
+
+/// Decoded terminal `done` event (client side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DoneEvent {
+    pub run: u64,
+    pub steps: u64,
+    pub final_loss: f64,
+    pub edq_ratio: f64,
+    pub lost_frac: f64,
+    pub guard_trips: u64,
+    pub rollbacks: u64,
+    pub steps_lost: u64,
+    pub state_digest: u64,
+}
+
+impl FromJson for DoneEvent {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        let digest_hex: String = v.get_as("state_digest")?;
+        let state_digest = u64::from_str_radix(&digest_hex, 16)
+            .map_err(|e| JsonError::Decode(format!("state_digest {digest_hex:?}: {e}")))?;
+        Ok(DoneEvent {
+            run: v.get_as("run")?,
+            steps: v.get_as("steps")?,
+            final_loss: v.get_as("final_loss")?,
+            edq_ratio: v.get_as("edq_ratio")?,
+            lost_frac: v.get_as("lost_frac")?,
+            guard_trips: v.get_as("guard_trips")?,
+            rollbacks: v.get_as("rollbacks")?,
+            steps_lost: v.get_as("steps_lost")?,
+            state_digest,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(text: &str) -> Result<ProxyConfig, ServeError> {
+        decode_request(&Value::parse(text).unwrap(), &RequestLimits::default())
+    }
+
+    #[test]
+    fn decodes_full_request_through_existing_grammars() {
+        let cfg = req(r#"{
+            "plan": "collage-light-3@fp8e4m3+delta-scale=auto",
+            "config": {"n": 512, "steps": 40, "warmup": 5, "lr": 0.02,
+                       "seed": 7, "log_every": 2, "workers": 2},
+            "guard": "window=8,skip=16",
+            "faults": "loss-spike:start=5,window=1,scale=1100"
+        }"#)
+        .unwrap();
+        assert_eq!(cfg.plan.to_string(), "collage-light-3@fp8e4m3+delta-scale=auto");
+        assert_eq!((cfg.n, cfg.steps, cfg.warmup), (512, 40, 5));
+        assert_eq!(cfg.log_every, 2);
+        let g = cfg.guard.expect("guard decoded");
+        assert_eq!((g.window, g.skip), (8, 16));
+        assert_eq!(cfg.faults.len(), 1);
+        assert_eq!(cfg.faults[0].start, 5);
+    }
+
+    #[test]
+    fn faults_accept_string_or_array() {
+        let a = req(r#"{"plan": "collage-plus", "config": {"steps": 5},
+                        "faults": "loss-spike:start=2,window=1,scale=10;update-shrink:start=3,window=2,scale=4"}"#)
+            .unwrap();
+        let b = req(r#"{"plan": "collage-plus", "config": {"steps": 5},
+                        "faults": ["loss-spike:start=2,window=1,scale=10",
+                                   "update-shrink:start=3,window=2,scale=4"]}"#)
+            .unwrap();
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.faults.len(), 2);
+    }
+
+    #[test]
+    fn rejections_are_typed_with_stable_codes() {
+        let cases = [
+            (r#"[1,2]"#, "request"),
+            (r#"{"config": {}}"#, "plan"),
+            (r#"{"plan": "no-such-scheme@fp8e4m3"}"#, "plan"),
+            (r#"{"plan": "collage-plus", "zap": 1}"#, "request"),
+            (r#"{"plan": "collage-plus", "config": {"step": 10}}"#, "config"),
+            (r#"{"plan": "collage-plus", "config": {"steps": -5}}"#, "config"),
+            (r#"{"plan": "collage-plus", "config": {"steps": 0}}"#, "config"),
+            (r#"{"plan": "collage-plus", "config": {"n": 100000000}}"#, "config"),
+            (r#"{"plan": "collage-plus", "guard": "zap=1"}"#, "guard"),
+            (r#"{"plan": "collage-plus", "faults": "warp:x=1"}"#, "faults"),
+            (r#"{"plan": "collage-plus", "faults": 7}"#, "faults"),
+        ];
+        for (text, field) in cases {
+            match req(text) {
+                Err(ServeError::BadField { field: f, .. }) => {
+                    assert_eq!(f, field, "wrong field for {text}")
+                }
+                other => panic!("{text}: expected BadField({field}), got {other:?}"),
+            }
+        }
+        assert_eq!(
+            ServeError::BadField { field: "plan", msg: String::new() }.code(),
+            "bad-field"
+        );
+        assert_eq!(ServeError::Oversized { max: 1 }.code(), "oversized");
+    }
+
+    #[test]
+    fn worker_counts_clamp_to_the_cap() {
+        let lim = RequestLimits { worker_cap: 4, ..Default::default() };
+        let v = Value::parse(
+            r#"{"plan": "collage-plus", "config": {"steps": 5, "workers": 64}}"#,
+        )
+        .unwrap();
+        assert_eq!(decode_request(&v, &lim).unwrap().workers, 4);
+        let v = Value::parse(
+            r#"{"plan": "collage-plus", "config": {"steps": 5, "workers": 0}}"#,
+        )
+        .unwrap();
+        assert_eq!(decode_request(&v, &lim).unwrap().workers, 1);
+    }
+
+    #[test]
+    fn done_event_roundtrips_digest_exactly() {
+        let o = ProxyOutcome {
+            steps: 40,
+            final_loss: 1.5e-4,
+            edq_ratio: 0.993,
+            lost_frac: 0.01,
+            step_time: 0.001,
+            guard_trips: 1,
+            rollbacks: 1,
+            steps_lost: 12,
+            // Top bit + low bit set: dies if it ever transits as f64.
+            state_digest: 0x8000_0000_0000_0001,
+            log: Default::default(),
+        };
+        let wire = ev_done(3, &o).dump();
+        let back: DoneEvent = Value::parse(&wire).unwrap().decode().unwrap();
+        assert_eq!(back.run, 3);
+        assert_eq!(back.state_digest, 0x8000_0000_0000_0001);
+        assert_eq!(back.final_loss.to_bits(), o.final_loss.to_bits());
+        assert_eq!(back.steps_lost, 12);
+    }
+
+    #[test]
+    fn build_request_decodes_back() {
+        let mut c = Obj::new();
+        c.insert("n", 256u64);
+        c.insert("steps", 10u64);
+        let v = build_request("collage-light@fp8e4m3", c, Some("on"), None);
+        let cfg = decode_request(&v, &RequestLimits::default()).unwrap();
+        assert_eq!(cfg.n, 256);
+        assert_eq!(cfg.guard, Some(GuardConfig::default()));
+        assert!(cfg.faults.is_empty());
+    }
+}

@@ -1,0 +1,217 @@
+//! Fair per-step admission for concurrent runs sharing one worker pool.
+//!
+//! Every run must acquire a [`StepTicket`] before computing a step and
+//! drops it as soon as the step's compute is done.  Tickets are granted
+//! strictly FIFO with at most `max_inflight` outstanding; because a run
+//! re-enqueues *per step*, the grant order degenerates to round-robin
+//! under contention — a 100k-step run and a 10-step run each get every
+//! other turn, so the small run finishes after ~20 grants instead of
+//! waiting 100k steps (no starvation, bounded latency).
+//!
+//! Scheduling is pure admission control: it decides *when* a step runs,
+//! never *how*, so the determinism contract (bit-identical `StepStats`
+//! and state at any worker count / concurrency level) is untouched.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Shared FIFO step scheduler (one per server).
+pub struct FairScheduler {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+struct SchedState {
+    max_inflight: usize,
+    inflight: usize,
+    /// Runs waiting for their next step, oldest first.  A run id appears
+    /// at most once: a run holds one ticket at a time and re-enqueues
+    /// only after dropping it.
+    queue: VecDeque<u64>,
+}
+
+impl FairScheduler {
+    pub fn new(max_inflight: usize) -> Arc<Self> {
+        Arc::new(FairScheduler {
+            state: Mutex::new(SchedState {
+                max_inflight: max_inflight.max(1),
+                inflight: 0,
+                queue: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Block until run `id` reaches the front of the queue *and* an
+    /// inflight slot is free, then claim the slot.  Dropping the returned
+    /// ticket frees the slot and wakes waiters.
+    pub fn step_ticket(self: &Arc<Self>, id: u64) -> StepTicket {
+        let mut st = self.state.lock().unwrap();
+        st.queue.push_back(id);
+        loop {
+            if st.inflight < st.max_inflight && st.queue.front() == Some(&id) {
+                st.queue.pop_front();
+                st.inflight += 1;
+                return StepTicket { sched: Arc::clone(self) };
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Runs currently queued for a step (instantaneous).
+    pub fn waiting(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Steps currently executing (instantaneous; `<= max_inflight`).
+    pub fn inflight(&self) -> usize {
+        self.state.lock().unwrap().inflight
+    }
+}
+
+/// An admitted step: hold while computing, drop when done.  Owns an `Arc`
+/// to its scheduler so holders (e.g. a serve connection's sink) don't
+/// need a borrow tying them to the scheduler's lifetime.
+pub struct StepTicket {
+    sched: Arc<FairScheduler>,
+}
+
+impl Drop for StepTicket {
+    fn drop(&mut self) {
+        let mut st = self.sched.state.lock().unwrap();
+        st.inflight -= 1;
+        drop(st);
+        // notify_all, not one: the freed slot is only usable by the queue
+        // *front*, and we cannot know which waiter that is.
+        self.sched.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+
+    /// Spin until `cond` holds (scheduler state is condvar-driven; tests
+    /// observe it by polling, never by sleeping fixed amounts).
+    fn wait_until(cond: impl Fn() -> bool) {
+        let t0 = std::time::Instant::now();
+        while !cond() {
+            assert!(t0.elapsed().as_secs() < 10, "timed out waiting for condition");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn grants_are_fifo() {
+        let s = FairScheduler::new(1);
+        let first = s.step_ticket(0);
+        let (tx, rx) = mpsc::channel::<u64>();
+        let mut handles = Vec::new();
+        // Enqueue 1 then 2 then 3, each provably queued before the next
+        // starts (waiting() is the queue length).
+        for id in 1..=3u64 {
+            let s2 = Arc::clone(&s);
+            let tx2 = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let t = s2.step_ticket(id);
+                tx2.send(id).unwrap();
+                drop(t);
+            }));
+            wait_until(|| s.waiting() == id as usize);
+        }
+        drop(first);
+        // Each waiter sends while holding its ticket, so receive order is
+        // grant order: strictly the enqueue order.
+        let order: Vec<u64> = (0..3).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(order, [1, 2, 3]);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!((s.waiting(), s.inflight()), (0, 0));
+    }
+
+    #[test]
+    fn inflight_never_exceeds_cap() {
+        for cap in [1usize, 2, 3] {
+            let s = FairScheduler::new(cap);
+            let live = Arc::new(AtomicUsize::new(0));
+            let peak = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..6u64)
+                .map(|id| {
+                    let (s, live, peak) = (Arc::clone(&s), Arc::clone(&live), Arc::clone(&peak));
+                    std::thread::spawn(move || {
+                        for _ in 0..25 {
+                            let t = s.step_ticket(id);
+                            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::yield_now();
+                            live.fetch_sub(1, Ordering::SeqCst);
+                            drop(t);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let p = peak.load(Ordering::SeqCst);
+            assert!(p <= cap, "cap {cap}: saw {p} concurrent steps");
+            assert_eq!((s.waiting(), s.inflight()), (0, 0));
+        }
+    }
+
+    #[test]
+    fn big_run_cannot_starve_a_small_one() {
+        // One slot, a "big" run taking many steps and a "small" run taking
+        // few, both re-enqueueing per step: round-robin means the small
+        // run's last grant happens within its first ~2*small_steps grants
+        // overall, not after the big run drains.
+        let s = FairScheduler::new(1);
+        let grants = Arc::new(Mutex::new(Vec::<u64>::new()));
+        // The big run takes its first grant, then holds it until released
+        // — pinning the schedule so the small run is provably queued
+        // *behind an in-flight big run* before either free-runs.
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let big = {
+            let (s, grants) = (Arc::clone(&s), Arc::clone(&grants));
+            std::thread::spawn(move || {
+                let first = s.step_ticket(1);
+                grants.lock().unwrap().push(1);
+                release_rx.recv().unwrap();
+                drop(first);
+                for _ in 1..400 {
+                    let t = s.step_ticket(1);
+                    grants.lock().unwrap().push(1);
+                    drop(t);
+                }
+            })
+        };
+        wait_until(|| !grants.lock().unwrap().is_empty());
+        let small = {
+            let (s, grants) = (Arc::clone(&s), Arc::clone(&grants));
+            std::thread::spawn(move || {
+                for _ in 0..10 {
+                    let t = s.step_ticket(2);
+                    grants.lock().unwrap().push(2);
+                    drop(t);
+                }
+            })
+        };
+        wait_until(|| s.waiting() == 1); // small is queued behind big
+        release_tx.send(()).unwrap();
+        small.join().unwrap();
+        let at_small_done = grants.lock().unwrap().len();
+        big.join().unwrap();
+        // From the release point the grants interleave ~1:1 (each run
+        // re-enqueues behind the other), so the small run's 10 grants
+        // complete within ~21 total — the generous bound below fails
+        // utterly without per-step re-enqueue (would be ≥ 400).
+        assert!(
+            at_small_done <= 100,
+            "small run waited for {at_small_done} grants — starved"
+        );
+        assert_eq!(grants.lock().unwrap().iter().filter(|&&g| g == 2).count(), 10);
+    }
+}

@@ -1,0 +1,363 @@
+//! The `collage serve` TCP server: accept loop, bounds-checked request
+//! reads, per-connection run threads, and the [`StepSink`] bridge that
+//! turns a live proxy run into an NDJSON telemetry stream.
+//!
+//! Failure isolation: everything that can go wrong on one connection —
+//! oversized or malformed request, bad plan/guard/fault grammar, a run
+//! error, a client hang-up mid-run — ends as a typed error event (or a
+//! silent cancel) *on that connection only*; the accept loop never sees
+//! it and keeps serving.
+
+use std::io::{BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::{RunCancelled, StepRow, StepSink};
+use crate::coordinator::proxy::{self, ProxyConfig};
+use crate::util::json::{NdjsonWriter, Value};
+
+use super::protocol::{
+    error_event, ev_accepted, ev_done, ev_rollback, ev_step, decode_request, RequestLimits,
+    ServeError,
+};
+use super::scheduler::{FairScheduler, StepTicket};
+
+/// Server configuration (`collage serve` flags map 1:1 onto this).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (see `local_addr`).
+    pub addr: String,
+    /// Runs allowed to compute a step concurrently (the fair scheduler's
+    /// inflight cap).  Each stepping run leases `workers` pool threads,
+    /// so total pool pressure ≈ `max_inflight × worker_cap`.
+    pub max_inflight: usize,
+    /// Exit after serving this many connections (0 = run forever).  The
+    /// bounded mode is what tests and the CI smoke use for a clean join.
+    pub max_runs: usize,
+    /// Per-request resource ceilings.
+    pub limits: RequestLimits,
+    /// Reject request lines longer than this many bytes before a newline.
+    pub max_request_bytes: usize,
+    /// Root directory for per-run checkpoints (`<root>/run_<id>/...`);
+    /// `None` disables checkpointing regardless of what runs request.
+    pub checkpoint_root: Option<PathBuf>,
+    /// Suppress per-connection stdout notes.
+    pub quiet: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7734".to_string(),
+            max_inflight: 2,
+            max_runs: 0,
+            limits: RequestLimits::default(),
+            max_request_bytes: 1 << 20,
+            checkpoint_root: None,
+            quiet: false,
+        }
+    }
+}
+
+/// A bound, not-yet-running server.
+pub struct Server {
+    listener: TcpListener,
+    cfg: Arc<ServeConfig>,
+    sched: Arc<FairScheduler>,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding collage serve to {}", cfg.addr))?;
+        let sched = FairScheduler::new(cfg.max_inflight);
+        Ok(Server { listener, cfg: Arc::new(cfg), sched })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept-and-serve loop.  Each connection gets its own thread; with
+    /// `max_runs > 0` the loop stops accepting after that many
+    /// connections and joins them all before returning.
+    pub fn run(self) -> Result<()> {
+        let mut handles = Vec::new();
+        let mut served: usize = 0;
+        for conn in self.listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                // A failed accept poisons nothing: note it and keep going.
+                Err(e) => {
+                    if !self.cfg.quiet {
+                        eprintln!("[serve] accept error: {e}");
+                    }
+                    continue;
+                }
+            };
+            served += 1;
+            let id = served as u64;
+            let cfg = Arc::clone(&self.cfg);
+            let sched = Arc::clone(&self.sched);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("collage-serve-{id}"))
+                    .spawn(move || handle_conn(stream, id, cfg, sched))
+                    .context("spawning connection thread")?,
+            );
+            if self.cfg.max_runs > 0 && served >= self.cfg.max_runs {
+                break;
+            }
+        }
+        for h in handles {
+            // A connection-thread panic is that connection's failure only.
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Read one `\n`-terminated request line with a hard byte ceiling.  The
+/// scan position advances monotonically (no re-scanning), and the buffer
+/// can never grow past `max + one read chunk` — an attacker streaming
+/// gigabytes without a newline is cut off with a typed `oversized` error.
+fn read_request_line(stream: &mut TcpStream, max: usize) -> Result<String, ServeError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut scanned = 0usize;
+    loop {
+        if let Some(pos) = buf[scanned..].iter().position(|&b| b == b'\n') {
+            buf.truncate(scanned + pos);
+            break;
+        }
+        scanned = buf.len();
+        if scanned > max {
+            return Err(ServeError::Oversized { max });
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Err(ServeError::BadJson("empty request".to_string()));
+            }
+            break; // EOF without newline: take what arrived as the line
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    if buf.len() > max {
+        return Err(ServeError::Oversized { max });
+    }
+    String::from_utf8(buf).map_err(|_| ServeError::BadJson("request is not UTF-8".to_string()))
+}
+
+/// [`StepSink`] bridging one run to its connection: fair-scheduler
+/// admission in `step_gate`, NDJSON step/rollback events out, and client
+/// hang-up detection (a failed write cancels the run at the next gate
+/// instead of computing thousands of steps nobody will read).
+struct ConnSink<'a, W: Write> {
+    out: &'a mut NdjsonWriter<W>,
+    run: u64,
+    /// Telemetry cadence (from the request's `log_every`; 0 = no step
+    /// events, terminal events only).
+    every: u64,
+    sched: Arc<FairScheduler>,
+    ticket: Option<StepTicket>,
+    dead: bool,
+}
+
+impl<W: Write> StepSink for ConnSink<'_, W> {
+    fn step_gate(&mut self, _t: u64) -> bool {
+        if self.dead {
+            return false;
+        }
+        self.ticket = Some(self.sched.step_ticket(self.run));
+        true
+    }
+
+    fn on_row(&mut self, row: &StepRow) {
+        // Release the slot before any socket I/O: writes are not compute
+        // and must not hold other runs out of the scheduler.
+        self.ticket = None;
+        let logged = self.every > 0 && row.step % self.every == 0;
+        if logged && self.out.write(&ev_step(self.run, row)).is_err() {
+            self.dead = true;
+        }
+    }
+
+    fn on_rollback(&mut self, to_step: u64, resume_at: u64) {
+        self.ticket = None;
+        if self.out.write(&ev_rollback(self.run, to_step, resume_at)).is_err() {
+            self.dead = true;
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, id: u64, cfg: Arc<ServeConfig>, sched: Arc<FairScheduler>) {
+    let mut read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut out = NdjsonWriter::new(BufWriter::new(stream));
+    match serve_one(&mut read_half, &mut out, id, &cfg, &sched) {
+        Ok(()) => {
+            if !cfg.quiet {
+                println!("[serve] run {id}: done");
+            }
+        }
+        Err(e) => {
+            // Typed terminal error event; a dead socket makes this a no-op,
+            // which is fine — there is nobody left to tell.
+            let _ = out.write(&error_event(&e));
+            if !cfg.quiet {
+                println!("[serve] run {id}: {} ({e})", e.code());
+            }
+        }
+    }
+}
+
+fn serve_one<W: Write>(
+    read_half: &mut TcpStream,
+    out: &mut NdjsonWriter<W>,
+    id: u64,
+    cfg: &ServeConfig,
+    sched: &Arc<FairScheduler>,
+) -> Result<(), ServeError> {
+    let line = read_request_line(read_half, cfg.max_request_bytes)?;
+    let v = Value::parse(&line).map_err(|e| ServeError::BadJson(e.to_string()))?;
+    let mut pcfg: ProxyConfig = decode_request(&v, &cfg.limits)?;
+
+    // The request's log_every is the telemetry cadence; the run itself is
+    // stdout-silent (many concurrent runs on one terminal are noise).
+    let every = pcfg.log_every;
+    pcfg.log_every = 0;
+    match &cfg.checkpoint_root {
+        Some(root) => pcfg.checkpoint_dir = Some(root.join(format!("run_{id:04}"))),
+        None => {
+            pcfg.checkpoint_dir = None;
+            pcfg.checkpoint_every = 0;
+        }
+    }
+
+    out.write(&ev_accepted(id, &pcfg))?;
+    // Reborrow (`&mut *out`) rather than move, so `out` is usable again
+    // for the terminal event once the sink is dropped.
+    let mut sink = ConnSink {
+        out: &mut *out,
+        run: id,
+        every,
+        sched: Arc::clone(sched),
+        ticket: None,
+        dead: false,
+    };
+    let outcome = proxy::run_with_sink(&pcfg, &mut sink);
+    let dead = sink.dead;
+    drop(sink);
+    match outcome {
+        Ok(o) => {
+            out.write(&ev_done(id, &o))?;
+            Ok(())
+        }
+        Err(e) if e.downcast_ref::<RunCancelled>().is_some() && dead => {
+            // Client hung up; nothing to report and nobody to report to.
+            Ok(())
+        }
+        Err(e) => Err(ServeError::RunFailed(format!("{e:#}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    #[test]
+    fn read_request_line_bounds_and_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        // Line within bounds, newline-terminated.
+        let t = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(b"{\"x\":1}\ntrailing ignored").unwrap();
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        assert_eq!(read_request_line(&mut s, 1024).unwrap(), "{\"x\":1}");
+        t.join().unwrap();
+
+        // Oversized: no newline within the cap.
+        let t = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let junk = vec![b'a'; 64 * 1024];
+            // The server may cut us off mid-write; that's the point.
+            let _ = c.write_all(&junk);
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        match read_request_line(&mut s, 4096) {
+            Err(ServeError::Oversized { max: 4096 }) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        drop(s);
+        t.join().unwrap();
+
+        // EOF without newline: the partial buffer is the line.
+        let t = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(b"{\"y\":2}").unwrap();
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        t.join().unwrap();
+        assert_eq!(read_request_line(&mut s, 1024).unwrap(), "{\"y\":2}");
+
+        // Immediate EOF: typed bad-json, not a panic.
+        let t = thread::spawn(move || {
+            let _ = TcpStream::connect(addr).unwrap();
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        t.join().unwrap();
+        match read_request_line(&mut s, 1024) {
+            Err(ServeError::BadJson(_)) => {}
+            other => panic!("expected BadJson, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn server_serves_one_quick_run_end_to_end() {
+        let server = Server::bind(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_runs: 1,
+            quiet: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = server.local_addr().unwrap();
+        let h = thread::spawn(move || server.run().unwrap());
+
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(
+            b"{\"plan\": \"collage-light@fp8e4m3\", \"config\": {\"n\": 128, \"steps\": 6, \"workers\": 1}}\n",
+        )
+        .unwrap();
+        let reader = std::io::BufReader::new(c);
+        let lines: Vec<Value> = reader
+            .lines()
+            .map(|l| Value::parse(&l.unwrap()).unwrap())
+            .collect();
+        h.join().unwrap();
+        let ev = |v: &Value| v.get("event").unwrap().as_str().unwrap().to_string();
+        assert_eq!(ev(&lines[0]), "accepted");
+        assert_eq!(ev(lines.last().unwrap()), "done");
+        // Default cadence 1: one step event per step, each carrying the
+        // full diagnostics the paper tracks.
+        let steps: Vec<&Value> = lines.iter().filter(|v| ev(v) == "step").collect();
+        assert_eq!(steps.len(), 6);
+        for s in steps {
+            for key in ["loss", "edq", "edq_ratio", "lost_frac", "k", "sat", "uflow"] {
+                assert!(s.opt(key).is_some(), "step event missing {key}: {}", s.dump());
+            }
+        }
+    }
+}

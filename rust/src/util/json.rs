@@ -1,15 +1,33 @@
-//! Minimal JSON parser / serializer.
+//! Minimal JSON parser / serializer, plus the typed-decode and NDJSON
+//! layers the `collage serve` wire protocol is built on.
 //!
 //! Implements the full JSON grammar (RFC 8259) with the restrictions that
 //! numbers are held as `f64` and object key order is preserved (the AOT
 //! manifest relies on ordered `inputs` / `outputs` arrays, not key order,
 //! but preserving order keeps serialized diffs stable).
 //!
-//! Built in-tree because no `serde_json` is available offline; the surface
-//! is deliberately tiny: [`Value::parse`], accessors, and [`Value::dump`].
+//! Built in-tree because no `serde_json` is available offline.  Three
+//! layers, smallest first:
+//!
+//! * the untyped [`Value`] tree: [`Value::parse`], accessors,
+//!   [`Value::dump`] / [`Value::pretty`];
+//! * typed decode via [`FromJson`]: `value.decode::<T>()`,
+//!   `value.get_as::<T>("key")`, `value.opt_as::<T>("key")` — integer
+//!   conversions are range- and integrality-checked so a `-1` or `1.5`
+//!   can never silently truncate into a `u64` field;
+//! * NDJSON framing via [`NdjsonWriter`] / [`Value::parse_ndjson`]: one
+//!   compact value per `\n`-terminated line (string escaping guarantees
+//!   a dumped value never contains a raw newline), flushed per line so a
+//!   telemetry consumer sees each record as soon as it is produced.
+//!
+//! Serialization is **bit-exact for finite numbers**: `parse(dump(v))`
+//! reproduces every finite `f64` bit pattern, including `-0.0` and
+//! integer-valued floats at/above 2^53 (the non-finite values have no
+//! JSON spelling and are emitted as `null` — deliberately lossy).
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io::Write;
 
 /// A JSON document node.
 #[derive(Debug, Clone, PartialEq)]
@@ -73,6 +91,8 @@ pub enum JsonError {
     Type { expected: &'static str, path: String },
     #[error("json missing key {0:?}")]
     Missing(String),
+    #[error("json decode error: {0}")]
+    Decode(String),
 }
 
 impl Value {
@@ -146,6 +166,32 @@ impl Value {
         let mut got = format!("{self:?}");
         got.truncate(80);
         JsonError::Type { expected, path: got }
+    }
+
+    // ----- typed decode -------------------------------------------------
+
+    /// Decode this value into `T` via its [`FromJson`] impl.
+    pub fn decode<T: FromJson>(&self) -> Result<T, JsonError> {
+        T::from_json(self)
+    }
+
+    /// `obj["key"]` decoded as `T`; missing key or wrong shape is an error.
+    pub fn get_as<T: FromJson>(&self, key: &str) -> Result<T, JsonError> {
+        self.get(key)?
+            .decode()
+            .map_err(|e| JsonError::Decode(format!("key {key:?}: {e}")))
+    }
+
+    /// Optional `obj["key"]` decoded as `T`; absent or `null` → `Ok(None)`,
+    /// present-but-malformed is still an error (never silently dropped).
+    pub fn opt_as<T: FromJson>(&self, key: &str) -> Result<Option<T>, JsonError> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .decode()
+                .map(Some)
+                .map_err(|e| JsonError::Decode(format!("key {key:?}: {e}"))),
+        }
     }
 
     // ----- parsing ------------------------------------------------------
@@ -230,10 +276,16 @@ fn newline(out: &mut String, indent: Option<usize>, depth: usize) {
 }
 
 fn write_num(out: &mut String, n: f64) {
-    if n.is_finite() && n == n.trunc() && n.abs() < 9e15 {
+    if n == 0.0 {
+        // `n as i64` would erase the sign of -0.0; JSON can spell it.
+        out.push_str(if n.is_sign_negative() { "-0.0" } else { "0" });
+    } else if n.is_finite() && n == n.trunc() && n.abs() < 9e15 {
         let _ = fmt::Write::write_fmt(out, format_args!("{}", n as i64));
     } else if n.is_finite() {
-        // shortest round-trip representation rust gives us
+        // Shortest round-trip representation rust gives us.  Integer-valued
+        // floats at/above 2^53 (> the 9e15 cutoff) take this path: the
+        // shortest-repr digits reparse to the identical bit pattern, which
+        // an `as i64` cast could not guarantee near i64::MAX.
         let _ = fmt::Write::write_fmt(out, format_args!("{n}"));
     } else {
         out.push_str("null"); // JSON has no NaN/Inf
@@ -463,6 +515,155 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ----- typed decode (FromJson) ----------------------------------------------
+
+/// Conversion from a parsed [`Value`] into a concrete Rust type — the
+/// decode half of the wire protocol (the encode half is the `From<T> for
+/// Value` impls below plus hand-built [`Obj`]s).
+///
+/// Shape mirrors the rask `json` module's `from_value` surface: one
+/// fallible method, integer impls checked for integrality and range so a
+/// hostile `{"steps": -3}` or `{"seed": 1.5}` becomes a typed
+/// [`JsonError::Decode`] instead of a silent `as` truncation.
+pub trait FromJson: Sized {
+    fn from_json(v: &Value) -> Result<Self, JsonError>;
+}
+
+impl FromJson for f64 {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        v.as_f64()
+    }
+}
+
+impl FromJson for f32 {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        Ok(v.as_f64()? as f32)
+    }
+}
+
+impl FromJson for bool {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        v.as_bool()
+    }
+}
+
+impl FromJson for String {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        Ok(v.as_str()?.to_string())
+    }
+}
+
+/// Shared checked-integer core: requires a finite, integer-valued number
+/// inside `[lo, hi]` (both inclusive, expressed exactly in f64).
+fn int_in_range(v: &Value, lo: f64, hi: f64, what: &str) -> Result<f64, JsonError> {
+    let n = v.as_f64()?;
+    if !n.is_finite() || n != n.trunc() {
+        return Err(JsonError::Decode(format!("expected integer {what}, got {n}")));
+    }
+    if n < lo || n > hi {
+        return Err(JsonError::Decode(format!("{what} out of range: {n}")));
+    }
+    Ok(n)
+}
+
+impl FromJson for u64 {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        // Cap at 2^53: a JSON number is an f64, so anything larger has
+        // already lost bits.  Exact u64s (digests) travel as hex strings.
+        Ok(int_in_range(v, 0.0, 9007199254740992.0, "u64")? as u64)
+    }
+}
+
+impl FromJson for u32 {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        Ok(int_in_range(v, 0.0, u32::MAX as f64, "u32")? as u32)
+    }
+}
+
+impl FromJson for u8 {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        Ok(int_in_range(v, 0.0, u8::MAX as f64, "u8")? as u8)
+    }
+}
+
+impl FromJson for usize {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        Ok(u64::from_json(v)? as usize)
+    }
+}
+
+impl FromJson for i64 {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        Ok(int_in_range(v, -9007199254740992.0, 9007199254740992.0, "i64")? as i64)
+    }
+}
+
+impl<T: FromJson> FromJson for Vec<T> {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        v.as_arr()?.iter().map(T::from_json).collect()
+    }
+}
+
+impl<T: FromJson> FromJson for Option<T> {
+    fn from_json(v: &Value) -> Result<Self, JsonError> {
+        match v {
+            Value::Null => Ok(None),
+            other => T::from_json(other).map(Some),
+        }
+    }
+}
+
+// ----- NDJSON framing -------------------------------------------------------
+
+impl Value {
+    /// Parse newline-delimited JSON: one value per non-empty line.
+    /// Returns the line number (1-based) alongside any per-line error.
+    pub fn parse_ndjson(text: &str) -> Result<Vec<Value>, (usize, JsonError)> {
+        text.lines()
+            .enumerate()
+            .filter(|(_, line)| !line.trim().is_empty())
+            .map(|(i, line)| Value::parse(line).map_err(|e| (i + 1, e)))
+            .collect()
+    }
+}
+
+/// Streaming NDJSON emitter: each [`write`](NdjsonWriter::write) call dumps
+/// one compact value, appends `\n`, and flushes, so a consumer on the other
+/// end of a pipe or socket sees every record as soon as it is produced.
+/// Compact [`Value::dump`] output never contains a raw newline (strings
+/// escape `\n`), so the one-value-per-line framing invariant holds for any
+/// value.
+pub struct NdjsonWriter<W: Write> {
+    inner: W,
+    lines: u64,
+}
+
+impl<W: Write> NdjsonWriter<W> {
+    pub fn new(inner: W) -> Self {
+        Self { inner, lines: 0 }
+    }
+
+    /// Write one value as a single flushed line.
+    pub fn write(&mut self, v: &Value) -> std::io::Result<()> {
+        let mut line = v.dump();
+        line.push('\n');
+        self.inner.write_all(line.as_bytes())?;
+        self.inner.flush()?;
+        self.lines += 1;
+        Ok(())
+    }
+
+    /// Number of lines written so far.
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// Recover the underlying writer.
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
 // ----- From conversions -----------------------------------------------------
 
 impl From<f64> for Value {
@@ -574,6 +775,85 @@ mod tests {
         assert_eq!(back.as_f64().unwrap(), 0.1 + 0.2);
     }
 
+    /// parse∘dump must reproduce the exact bit pattern for every finite
+    /// f64 — the serve telemetry determinism tests decode floats off the
+    /// wire and compare `to_bits`, so "close" is not good enough here.
+    #[test]
+    fn write_num_bit_exact_regressions() {
+        let cases: &[f64] = &[
+            0.0,
+            -0.0,                  // used to dump as "0" (sign erased by `as i64`)
+            9007199254740992.0,    // 2^53
+            9007199254740994.0,    // 2^53 + 2 (smallest even step above 2^53)
+            -9007199254740992.0,   // -2^53
+            9.1e15,                // integer-valued, just past the i64 fast path
+            9.2e18,                // above i64::MAX entirely
+            1e300,
+            -1e300,
+            5e-324,                // smallest subnormal
+            f64::MAX,
+            f64::MIN_POSITIVE,
+        ];
+        for &n in cases {
+            let dumped = Value::Num(n).dump();
+            let back = Value::parse(&dumped).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                n.to_bits(),
+                "bit mismatch for {n:?}: dumped {dumped:?}, reparsed {back:?}"
+            );
+        }
+        // The sign of zero is visible in the text too, not just the bits.
+        assert_eq!(Value::Num(-0.0).dump(), "-0.0");
+        assert_eq!(Value::Num(0.0).dump(), "0");
+    }
+
+    #[test]
+    fn typed_decode_helpers() {
+        let v = Value::parse(r#"{"n": 4096, "lr": 0.01, "name": "run", "ks": [1, 2, 3]}"#)
+            .unwrap();
+        assert_eq!(v.get_as::<u64>("n").unwrap(), 4096);
+        assert_eq!(v.get_as::<f64>("lr").unwrap(), 0.01);
+        assert_eq!(v.get_as::<String>("name").unwrap(), "run");
+        assert_eq!(v.get_as::<Vec<u32>>("ks").unwrap(), vec![1, 2, 3]);
+        assert!(v.opt_as::<u64>("absent").unwrap().is_none());
+        assert_eq!(v.opt_as::<u64>("n").unwrap(), Some(4096));
+    }
+
+    #[test]
+    fn typed_decode_rejects_bad_integers() {
+        for text in ["-3", "1.5", "1e300", "\"7\"", "null"] {
+            let v = Value::parse(text).unwrap();
+            assert!(v.decode::<u64>().is_err(), "u64 accepted {text}");
+        }
+        // Present-but-malformed optional keys error instead of becoming None.
+        let v = Value::parse(r#"{"steps": -1}"#).unwrap();
+        assert!(v.opt_as::<u64>("steps").is_err());
+        // u8 range check.
+        assert!(Value::Num(256.0).decode::<u8>().is_err());
+        assert_eq!(Value::Num(255.0).decode::<u8>().unwrap(), 255);
+    }
+
+    #[test]
+    fn ndjson_writer_and_parse() {
+        let mut w = NdjsonWriter::new(Vec::new());
+        let mut o = Obj::new();
+        o.insert("step", 0u64);
+        o.insert("note", "line one\nline two"); // embedded newline must be escaped
+        w.write(&Value::Obj(o.clone())).unwrap();
+        w.write(&Value::Num(-0.0)).unwrap();
+        assert_eq!(w.lines(), 2);
+        let text = String::from_utf8(w.into_inner()).unwrap();
+        assert_eq!(text.matches('\n').count(), 2, "exactly one newline per record");
+        let vals = Value::parse_ndjson(&text).unwrap();
+        assert_eq!(vals.len(), 2);
+        assert_eq!(vals[0], Value::Obj(o));
+        assert!(vals[1].as_f64().unwrap().is_sign_negative());
+        // Per-line errors carry the 1-based line number.
+        let err = Value::parse_ndjson("{\"a\":1}\n{broken\n").unwrap_err();
+        assert_eq!(err.0, 2);
+    }
+
     // ----- property tests (in-tree harness, cf. util::proptest) ---------
 
     use crate::util::proptest::check_msg;
@@ -594,14 +874,19 @@ mod tests {
     }
 
     /// Finite numbers only: JSON has no NaN/inf (`write_num` maps them to
-    /// null, which deliberately does NOT round-trip).
+    /// null, which deliberately does NOT round-trip).  Includes the
+    /// round-trip corners: signed zero and integer-valued floats straddling
+    /// the 2^53 / 9e15 `as i64` fast-path cutoff.
     fn gen_num(rng: &mut Rng) -> f64 {
-        match rng.below(6) {
+        match rng.below(8) {
             0 => 0.0,
             1 => (rng.next_u32() as i64 - (1i64 << 31)) as f64,
             2 => rng.normal(),
             3 => rng.normal() * 1e300,
             4 => rng.normal() * 1e-300,
+            5 => -0.0,
+            6 => (9007199254740992.0 + 2.0 * rng.below(1 << 20) as f64)
+                * if rng.below(2) == 0 { 1.0 } else { -1.0 },
             _ => rng.f64(),
         }
     }
@@ -623,21 +908,75 @@ mod tests {
         }
     }
 
+    /// Recursive equality that is *bit-exact* on numbers: `PartialEq` on
+    /// f64 treats `0.0 == -0.0`, which would mask a signed-zero dump bug.
+    fn bits_equal(a: &Value, b: &Value) -> bool {
+        match (a, b) {
+            (Value::Num(x), Value::Num(y)) => x.to_bits() == y.to_bits(),
+            (Value::Arr(x), Value::Arr(y)) => {
+                x.len() == y.len() && x.iter().zip(y).all(|(p, q)| bits_equal(p, q))
+            }
+            (Value::Obj(x), Value::Obj(y)) => {
+                x.len() == y.len()
+                    && x.iter()
+                        .zip(y.iter())
+                        .all(|((ka, va), (kb, vb))| ka == kb && bits_equal(va, vb))
+            }
+            _ => a == b,
+        }
+    }
+
     #[test]
     fn prop_parse_inverts_dump_and_pretty() {
         check_msg(
-            "json parse(dump(v)) == v",
+            "json parse(dump(v)) == v (bit-exact on numbers)",
             |rng| gen_value(rng, 3),
             |v| {
                 let compact = Value::parse(&v.dump())
                     .map_err(|e| format!("compact reparse failed: {e}"))?;
-                if &compact != v {
+                if !bits_equal(&compact, v) {
                     return Err(format!("compact mismatch: {}", v.dump()));
                 }
                 let pretty = Value::parse(&v.pretty(2))
                     .map_err(|e| format!("pretty reparse failed: {e}"))?;
-                if &pretty != v {
+                if !bits_equal(&pretty, v) {
                     return Err(format!("pretty mismatch:\n{}", v.pretty(2)));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_ndjson_framing_roundtrip() {
+        // A batch of arbitrary values written through NdjsonWriter must
+        // come back value-for-value via parse_ndjson: one value per line,
+        // no embedded raw newlines, count preserved.
+        check_msg(
+            "ndjson parse(write(vs)) == vs",
+            |rng| (0..rng.below(6) + 1).map(|_| gen_value(rng, 2)).collect::<Vec<_>>(),
+            |vs| {
+                let mut w = NdjsonWriter::new(Vec::new());
+                for v in vs {
+                    w.write(v).map_err(|e| format!("write failed: {e}"))?;
+                }
+                let text = String::from_utf8(w.into_inner())
+                    .map_err(|e| format!("not utf-8: {e}"))?;
+                if text.matches('\n').count() != vs.len() {
+                    return Err(format!(
+                        "expected {} newline-terminated lines, got: {text:?}",
+                        vs.len()
+                    ));
+                }
+                let back = Value::parse_ndjson(&text)
+                    .map_err(|(line, e)| format!("line {line}: {e}"))?;
+                if back.len() != vs.len() {
+                    return Err(format!("count mismatch: {} vs {}", back.len(), vs.len()));
+                }
+                for (a, b) in back.iter().zip(vs) {
+                    if !bits_equal(a, b) {
+                        return Err(format!("value mismatch: {} vs {}", a.dump(), b.dump()));
+                    }
                 }
                 Ok(())
             },

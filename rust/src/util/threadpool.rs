@@ -139,6 +139,14 @@ pub fn pool_threads_spawned() -> usize {
     SPAWNED.load(Ordering::Relaxed)
 }
 
+/// Number of pool workers currently parked idle (instantaneous; another
+/// lease may race it).  Telemetry for `collage serve`, whose many
+/// concurrent runs all lease from this one shared pool: steady-state
+/// `spawned - idle` is the pool's live helper load.
+pub fn pool_workers_idle() -> usize {
+    IDLE.lock().unwrap().len()
+}
+
 fn lease(n: usize) -> Vec<Arc<WorkerSlot>> {
     let mut out = {
         let mut idle = IDLE.lock().unwrap();
@@ -500,5 +508,42 @@ mod tests {
         // lease disjoint workers, so this must complete.
         let out = parallel_map(4, 4, |i| parallel_map(8, 2, move |j| i * 8 + j).len());
         assert_eq!(out, vec![8; 4]);
+    }
+
+    #[test]
+    fn concurrent_leaders_share_one_pool_correctly() {
+        // The `collage serve` load shape: several OS threads (one per
+        // connection) each driving many sharded calls — some nested —
+        // against the single process-wide pool, concurrently.  Every
+        // leader must see correct index-ordered results, and the pool
+        // must stay bounded by peak concurrent demand (each round leases
+        // at most 4 leaders × (1 outer + 1 nested) helpers) instead of
+        // growing per call.
+        let before = pool_threads_spawned();
+        let handles: Vec<_> = (0..4)
+            .map(|leader: usize| {
+                std::thread::spawn(move || {
+                    for round in 0..50 {
+                        let out = parallel_map(33, 2, move |i| {
+                            let inner = parallel_map(4, 2, move |j| i + j).len();
+                            leader * 1000 + round + i + inner
+                        });
+                        for (i, &x) in out.iter().enumerate() {
+                            assert_eq!(x, leader * 1000 + round + i + 4);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let grown = pool_threads_spawned() - before;
+        // 4 leaders × 1 outer helper × (1 + 1 nested helper) = 8 at peak;
+        // allow generous slack for leases racing other tests in this
+        // binary, but 200 rounds × 4 leaders must not mean ~800 spawns.
+        assert!(grown <= 64, "pool grew by {grown} threads under concurrent leaders");
+        // Once everything is joined, every leased worker is back idle.
+        assert!(pool_workers_idle() <= pool_threads_spawned());
     }
 }

@@ -1,0 +1,311 @@
+//! End-to-end tests for `collage serve`: the determinism contract (a
+//! run's telemetry and final state are bit-identical whether it executes
+//! alone, concurrently with other tenants, or at any worker count),
+//! fair scheduling, failure isolation, and served checkpoints.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use collage::coordinator::checkpoint::Checkpoint;
+use collage::coordinator::metrics::StepRow;
+use collage::coordinator::proxy::{self, state_digest, ProxyConfig, ProxyOutcome};
+use collage::serve::client::{submit, submit_lines};
+use collage::serve::protocol::{build_request, DoneEvent};
+use collage::serve::server::{ServeConfig, Server};
+use collage::util::json::{Obj, Value};
+
+/// Bind a quiet server on an ephemeral port and run it on a thread.
+fn spawn_server(cfg: ServeConfig) -> (String, thread::JoinHandle<()>) {
+    let server = Server::bind(ServeConfig { addr: "127.0.0.1:0".to_string(), quiet: true, ..cfg })
+        .expect("bind");
+    let addr = server.local_addr().unwrap().to_string();
+    let h = thread::spawn(move || server.run().unwrap());
+    (addr, h)
+}
+
+fn event_name(v: &Value) -> &str {
+    v.get("event").unwrap().as_str().unwrap()
+}
+
+fn step_rows(events: &[Value]) -> Vec<StepRow> {
+    events
+        .iter()
+        .filter(|v| event_name(v) == "step")
+        .map(|v| v.decode::<StepRow>().expect("step event decodes as StepRow"))
+        .collect()
+}
+
+/// Every deterministic numeric field of a row, as raw bits.  `step_time`
+/// (wall clock) and `val_loss` (proxy runs never eval) are excluded —
+/// everything the optimizer computes is in.
+fn numeric_bits(r: &StepRow) -> Vec<u64> {
+    vec![
+        r.step,
+        r.loss.to_bits(),
+        r.lr.to_bits(),
+        r.grad_norm.to_bits(),
+        r.param_norm.to_bits(),
+        r.update_norm.to_bits(),
+        r.eff_update_norm.to_bits(),
+        r.edq.to_bits(),
+        r.lost_frac.to_bits(),
+        r.clip_coef.to_bits(),
+        r.delta_k as u64,
+        r.delta_saturated,
+        r.delta_underflow,
+        r.guard_trips,
+        r.rollbacks,
+        r.steps_lost,
+    ]
+}
+
+fn assert_rows_bit_identical(served: &[StepRow], serial: &[StepRow], label: &str) {
+    assert_eq!(served.len(), serial.len(), "{label}: row count");
+    for (a, b) in served.iter().zip(serial) {
+        assert_eq!(
+            numeric_bits(a),
+            numeric_bits(b),
+            "{label}: step {} differs between served and serial",
+            b.step
+        );
+    }
+}
+
+/// The tentpole contract: two runs submitted concurrently to one server
+/// (sharing one pool, interleaved step-by-step by the fair scheduler)
+/// stream exactly the rows — and reach exactly the final state — of the
+/// same configs run serially in-process, which are themselves invariant
+/// to the worker count.
+#[test]
+fn concurrent_runs_match_serial_bitwise() {
+    let plan_a = "collage-light-3@fp8e4m3+delta-scale=auto";
+    let plan_b = "collage-plus"; // bf16 storage
+    let cfg_a = ProxyConfig {
+        plan: plan_a.parse().unwrap(),
+        n: 256,
+        steps: 24,
+        seed: 7,
+        workers: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    let cfg_b = ProxyConfig {
+        plan: plan_b.parse().unwrap(),
+        n: 192,
+        steps: 18,
+        seed: 11,
+        workers: 1,
+        log_every: 0,
+        ..Default::default()
+    };
+
+    // Serial baselines; worker-count invariance for the fp8 plan first.
+    let serial_a = proxy::run(&cfg_a).unwrap();
+    for workers in [1usize, 8] {
+        let o = proxy::run(&ProxyConfig { workers, ..cfg_a.clone() }).unwrap();
+        assert_eq!(
+            o.state_digest, serial_a.state_digest,
+            "digest changed at workers={workers}"
+        );
+        assert_rows_bit_identical(o.log.rows(), serial_a.log.rows(), "workers");
+    }
+    let serial_b = proxy::run(&cfg_b).unwrap();
+
+    let (addr, server) =
+        spawn_server(ServeConfig { max_runs: 2, max_inflight: 2, ..Default::default() });
+    let submit_one = |plan: &str, cfg: &ProxyConfig| -> (Vec<Value>, DoneEvent) {
+        let mut c = Obj::new();
+        c.insert("n", cfg.n as u64);
+        c.insert("steps", cfg.steps);
+        c.insert("seed", cfg.seed);
+        c.insert("workers", cfg.workers as u64);
+        let (out, events) = submit(&addr, &build_request(plan, c, None, None)).unwrap();
+        let done = out.into_done().unwrap();
+        (events, done)
+    };
+    // Both runs in flight at once (max_inflight=2 admits both; the pool
+    // and scheduler are shared).
+    let (a, b) = {
+        let addr2 = addr.clone();
+        let cfg_a2 = cfg_a.clone();
+        let plan_a2 = plan_a.to_string();
+        let ha = thread::spawn(move || {
+            let mut c = Obj::new();
+            c.insert("n", cfg_a2.n as u64);
+            c.insert("steps", cfg_a2.steps);
+            c.insert("seed", cfg_a2.seed);
+            c.insert("workers", cfg_a2.workers as u64);
+            submit(&addr2, &build_request(&plan_a2, c, None, None)).unwrap()
+        });
+        let b = submit_one(plan_b, &cfg_b);
+        let (out, events) = ha.join().unwrap();
+        ((events, out.into_done().unwrap()), b)
+    };
+
+    let check = |(events, done): &(Vec<Value>, DoneEvent), serial: &ProxyOutcome, label: &str| {
+        assert_rows_bit_identical(&step_rows(events), serial.log.rows(), label);
+        assert_eq!(done.state_digest, serial.state_digest, "{label}: state digest");
+        assert_eq!(done.steps, serial.steps, "{label}: steps");
+        assert_eq!(done.final_loss.to_bits(), serial.final_loss.to_bits(), "{label}: final loss");
+    };
+    check(&a, &serial_a, "run A (fp8 + auto delta-scale)");
+    check(&b, &serial_b, "run B (bf16)");
+    server.join().unwrap();
+}
+
+/// Malformed and oversized requests die with a typed error event on their
+/// own connection; the server keeps accepting and a valid run afterwards
+/// is unaffected.
+#[test]
+fn bad_requests_are_isolated_typed_errors() {
+    let (addr, server) = spawn_server(ServeConfig {
+        max_runs: 4,
+        max_request_bytes: 512,
+        ..Default::default()
+    });
+
+    // Raw non-JSON line.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"this is not json\n").unwrap();
+    let lines: Vec<String> = BufReader::new(s).lines().map(|l| l.unwrap()).collect();
+    assert_eq!(lines.len(), 1);
+    let v = Value::parse(&lines[0]).unwrap();
+    assert_eq!(event_name(&v), "error");
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad-json");
+
+    // Oversized request: bytes keep coming with no newline.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let _ = s.write_all(&vec![b'a'; 4096]); // server may cut us off mid-write
+    let lines: Vec<String> = BufReader::new(s).lines().map(|l| l.unwrap()).collect();
+    let v = Value::parse(&lines[0]).unwrap();
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "oversized");
+
+    // Well-formed JSON, bad plan grammar.
+    let (out, _) = submit(&addr, &Value::parse(r#"{"plan": "warp-drive@fp8"}"#).unwrap()).unwrap();
+    let (code, msg) = out.error.expect("typed error");
+    assert_eq!(code, "bad-field");
+    assert!(msg.contains("plan"), "error names the field: {msg}");
+
+    // The server is still healthy: a valid run on connection #4 completes.
+    let mut c = Obj::new();
+    c.insert("n", 128u64);
+    c.insert("steps", 5u64);
+    c.insert("workers", 1u64);
+    let (out, events) =
+        submit(&addr, &build_request("collage-light@fp8e4m3", c, None, None)).unwrap();
+    let done = out.into_done().unwrap();
+    assert_eq!(done.steps, 5);
+    assert_eq!(step_rows(&events).len(), 5);
+    server.join().unwrap();
+}
+
+/// With one inflight slot, per-step re-enqueue means round-robin: a
+/// 10-step run submitted while a 300-step run is mid-flight finishes
+/// long before the big one does.
+#[test]
+fn fair_scheduling_small_run_finishes_first() {
+    let (addr, server) =
+        spawn_server(ServeConfig { max_runs: 2, max_inflight: 1, ..Default::default() });
+    let (tx, rx) = mpsc::channel::<(&'static str, String)>();
+    let big_started = Arc::new(AtomicBool::new(false));
+
+    let big = {
+        let (addr, tx, started) = (addr.clone(), tx.clone(), Arc::clone(&big_started));
+        thread::spawn(move || {
+            let mut c = Obj::new();
+            c.insert("n", 1024u64);
+            c.insert("steps", 300u64);
+            c.insert("workers", 1u64);
+            let out = submit_lines(&addr, &build_request("collage-plus", c, None, None), |v| {
+                let ev = event_name(v).to_string();
+                if ev == "step" {
+                    started.store(true, Ordering::SeqCst);
+                }
+                tx.send(("big", ev)).unwrap();
+            })
+            .unwrap();
+            out.into_done().unwrap()
+        })
+    };
+    // Only submit the small run once the big one is provably mid-flight.
+    while !big_started.load(Ordering::SeqCst) {
+        thread::yield_now();
+    }
+    let small = {
+        let (addr, tx) = (addr.clone(), tx);
+        thread::spawn(move || {
+            let mut c = Obj::new();
+            c.insert("n", 128u64);
+            c.insert("steps", 10u64);
+            c.insert("workers", 1u64);
+            let out = submit_lines(&addr, &build_request("collage-plus", c, None, None), |v| {
+                tx.send(("small", event_name(v).to_string())).unwrap();
+            })
+            .unwrap();
+            out.into_done().unwrap()
+        })
+    };
+
+    let small_done = small.join().unwrap();
+    let big_done = big.join().unwrap();
+    assert_eq!((small_done.steps, big_done.steps), (10, 300));
+    let timeline: Vec<(&str, String)> = rx.into_iter().collect();
+    let pos = |run: &str, ev: &str| {
+        timeline
+            .iter()
+            .position(|(r, e)| *r == run && e == ev)
+            .unwrap_or_else(|| panic!("no {ev} event for {run}"))
+    };
+    assert!(
+        pos("small", "done") < pos("big", "done"),
+        "small run starved: finished after the big run despite round-robin"
+    );
+    server.join().unwrap();
+}
+
+/// Served checkpoints land under `<root>/run_<id>/` off the hot path, and
+/// the terminal one reloads to exactly the digest the done event reported
+/// — which is also the digest of the same config run serially.
+#[test]
+fn served_checkpoints_reload_to_the_reported_digest() {
+    let root = std::env::temp_dir().join("collage_test_serve_ckpt");
+    std::fs::remove_dir_all(&root).ok();
+    let (addr, server) = spawn_server(ServeConfig {
+        max_runs: 1,
+        checkpoint_root: Some(root.clone()),
+        ..Default::default()
+    });
+    let mut c = Obj::new();
+    c.insert("n", 128u64);
+    c.insert("steps", 12u64);
+    c.insert("seed", 3u64);
+    c.insert("workers", 1u64);
+    c.insert("checkpoint_every", 5u64);
+    let (out, _) = submit(&addr, &build_request("collage-light@fp8e4m3", c, None, None)).unwrap();
+    let done = out.into_done().unwrap();
+    server.join().unwrap();
+
+    let run_dir = root.join("run_0001");
+    for name in ["step_000005.ckpt", "step_000010.ckpt", "final.ckpt"] {
+        assert!(run_dir.join(name).exists(), "missing {name}");
+    }
+    let ck = Checkpoint::load(&run_dir.join("final.ckpt")).unwrap();
+    assert_eq!(ck.step, 12);
+    assert_eq!(state_digest(&ck.state), done.state_digest, "reloaded state != reported digest");
+
+    let serial = proxy::run(&ProxyConfig {
+        plan: "collage-light@fp8e4m3".parse().unwrap(),
+        n: 128,
+        steps: 12,
+        seed: 3,
+        workers: 1,
+        log_every: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(serial.state_digest, done.state_digest, "served digest != serial digest");
+    std::fs::remove_dir_all(&root).ok();
+}
