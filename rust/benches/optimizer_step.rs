@@ -11,8 +11,9 @@
 //! plus the full AOT HLO train step on the `small` config when artifacts
 //! are present (end-to-end, includes fwd/bwd — the realistic amortization).
 //!
-//! ... plus the format-generic kernel rows (FP16 / FP8-E4M3 / FP8-E5M2 ×
-//! plain/light/plus plans through the same fused `AdamW::step`).
+//! ... plus the format-generic kernel rows (FP16 / FP8-E4M3 / FP8-E5M2 /
+//! block-scaled MXFP4 × plain/light/plus plans through the same fused
+//! `AdamW::step`).
 //!
 //! Emits `BENCH_optimizer_step.json` (strategy → median ns/elem, speedup
 //! vs option D; per-format generic-kernel rows under `generic_formats`) so
@@ -25,7 +26,8 @@
 use collage::coordinator::config::RunConfig;
 use collage::coordinator::trainer::Trainer;
 use collage::numerics::expansion::rn_bf16;
-use collage::numerics::format::{FP16, FP8E4M3, FP8E5M2};
+use collage::numerics::block::quantize_slice_in_place;
+use collage::numerics::format::{FP16, FP8E4M3, FP8E5M2, MXFP4};
 use collage::optim::adamw::AdamW;
 use collage::optim::plan::{PrecisionPlan, Scheme};
 use collage::optim::state::OptimState;
@@ -159,7 +161,9 @@ fn main() {
     let shard = shard_workers;
     println!("\n== format-generic fused kernels, {gen_n} params ==");
     let mut generic_obj = Obj::new();
-    for fmt in [FP16, FP8E4M3, FP8E5M2] {
+    for fmt in [FP16, FP8E4M3, FP8E5M2, MXFP4] {
+        // Every scheme below is legal at mxfp4 too (BLOCK_SCHEMES is
+        // exactly this list), so the block row needs no filtering.
         for scheme in [
             Scheme::Plain,
             Scheme::CollageLight,
@@ -170,8 +174,15 @@ fn main() {
             let plan = PrecisionPlan::new(fmt, scheme);
             let label = format!("{}@{}", scheme.name(), fmt.name);
             let opt = AdamW::for_plan(plan, 0.95);
-            let theta_q: Vec<f32> = theta[..gen_n].iter().map(|&x| fmt.round_nearest(x)).collect();
-            let g_q: Vec<f32> = g[..gen_n].iter().map(|&x| fmt.round_nearest(x)).collect();
+            let quantize = |v: &[f32]| -> Vec<f32> {
+                let mut out: Vec<f32> = v.iter().map(|&x| fmt.round_nearest(x)).collect();
+                if fmt.block != 0 {
+                    quantize_slice_in_place(&mut out);
+                }
+                out
+            };
+            let theta_q = quantize(&theta[..gen_n]);
+            let g_q = quantize(&g[..gen_n]);
 
             let mut state = OptimState::init_plan(plan, &theta_q);
             let mut step = 0u64;

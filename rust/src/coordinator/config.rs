@@ -129,6 +129,9 @@ impl RunConfig {
         if let Some(s) = v.opt("scheme") {
             plan.scheme = s.as_str()?.parse()?;
         }
+        // Field-by-field overrides can assemble pairs the combined-spelling
+        // parser would reject (e.g. kahan@mxfp4): re-check the plan rules.
+        plan.validate()?;
         Ok(RunConfig {
             model: v.get("model")?.as_str()?.to_string(),
             plan,

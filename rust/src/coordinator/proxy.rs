@@ -203,10 +203,20 @@ pub fn run(cfg: &ProxyConfig) -> Result<ProxyOutcome> {
 pub fn run_with_sink(cfg: &ProxyConfig, sink: &mut dyn StepSink) -> Result<ProxyOutcome> {
     let plan = cfg.plan;
     let fmt = plan.format;
+    // Block-scaled formats quantize the teacher and every gradient per
+    // 32-element block (the global index grid), not element-wise.
+    let blk = fmt.block != 0;
     let mut init_rng = Rng::new(cfg.seed, 0xF8);
-    let target: Vec<f32> = (0..cfg.n)
-        .map(|_| fmt.round_nearest(cfg.theta_scale * init_rng.normal() as f32))
+    let mut target: Vec<f32> = (0..cfg.n)
+        .map(|_| cfg.theta_scale * init_rng.normal() as f32)
         .collect();
+    if blk {
+        crate::numerics::block::quantize_slice_in_place(&mut target);
+    } else {
+        for x in target.iter_mut() {
+            *x = fmt.round_nearest(*x);
+        }
+    }
     let theta0: Vec<f32> = target
         .iter()
         .map(|&x| x + 0.3 * cfg.theta_scale * init_rng.normal() as f32)
@@ -254,9 +264,16 @@ pub fn run_with_sink(cfg: &ProxyConfig, sink: &mut dyn StepSink) -> Result<Proxy
             .map(|(&e, &tg)| {
                 let d = e - tg as f64;
                 loss += d * d;
-                fmt.round_nearest(d as f32)
+                if blk {
+                    d as f32
+                } else {
+                    fmt.round_nearest(d as f32)
+                }
             })
             .collect();
+        if blk {
+            crate::numerics::block::quantize_slice_in_place(&mut g);
+        }
         loss *= 0.5 / cfg.n as f64;
         if !cfg.faults.is_empty() {
             injector.apply(&cfg.faults, fmt, t, &mut g);

@@ -25,6 +25,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig56", "β₂ = 0.95 vs 0.99 stability (ppl + grad norms)"),
     ("fig7to12", "EDQ/ppl grids over β₂ × batch (CSV; same runs as table6)"),
     ("fp8", "EDQ/loss/lost-frac grid over formats × schemes (§6; no artifacts)"),
+    ("fp4", "EDQ/loss/lost-frac grid at block-scaled mxfp4 (expansion × δθ-scale policy)"),
     ("stability", "fault-injection × guardrail recovery grid (no artifacts)"),
     ("all-analytic", "every experiment that needs no artifacts"),
 ];
@@ -85,6 +86,15 @@ pub fn run(id: &str, artifacts: &Path, out_dir: &Path, quick: bool) -> Result<()
             let t = lowprec::fp8(out_dir, quick)?;
             t.print();
             let out = out_dir.join("fp8.txt");
+            std::fs::write(&out, t.render())?;
+            println!("wrote {}", out.display());
+            return Ok(());
+        }
+        "fp4" => {
+            // Runs on the pure-Rust proxy objective — no artifacts needed.
+            let t = lowprec::fp4(out_dir, quick)?;
+            t.print();
+            let out = out_dir.join("fp4.txt");
             std::fs::write(&out, t.render())?;
             println!("wrote {}", out.display());
             return Ok(());

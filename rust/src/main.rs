@@ -71,7 +71,8 @@ fn usage() -> String {
      while updates underflow:\n\
        collage train --format fp8e4m3 --strategy collage-light-3\n\
        collage train --strategy collage-light@fp8e4m3+delta-scale=8\n\
-       collage train --strategy collage-light-3@fp8e4m3+delta-scale=auto\n\n\
+       collage train --strategy collage-light-3@fp8e4m3+delta-scale=auto\n\
+       collage train --strategy collage-light-3@mxfp4+delta-scale=auto\n\n\
      Training can run under a spike guardrail (rollback recovery) and with\n\
      deterministic fault injection:\n\
        collage train --guard on --fault outlier-burst:start=230,window=16,scale=12\n\
@@ -118,7 +119,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 "precision scheme (a|collage-light[-3]|collage-plus[-3]|dmw|d|kahan|sr|fp32, \
                  a combined scheme@format, optionally +delta-scale=<pow2>|auto[:<k0>])",
             )
-            .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
+            .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|mxfp4|fp32)")
             .opt("steps", "200", "optimizer steps")
             .opt("warmup", "20", "warmup steps")
             .opt("lr", "1e-3", "peak learning rate")
@@ -365,7 +366,13 @@ fn cmd_memory(args: &[String]) -> Result<()> {
         collage::optim::strategy::ALL_STRATEGIES.iter().map(|&s| s.into()).collect()
     } else {
         let fmt: FloatFormat = a.get("format").parse()?;
-        ALL_SCHEMES.iter().map(|&sch| PrecisionPlan::new(fmt, sch)).collect()
+        // Block-scaled formats support only the plain/MCF rows; skip the
+        // schemes `PrecisionPlan::validate` would reject (e.g. kahan@mxfp4).
+        ALL_SCHEMES
+            .iter()
+            .map(|&sch| PrecisionPlan::new(fmt, sch))
+            .filter(|p| p.validate().is_ok())
+            .collect()
     };
     let mut t = Table::new(format!(
         "peak memory — {} (UBS={ubs}, seq={seq}, TP={tp}, PP={pp}, {} params)",
@@ -440,7 +447,7 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
             "collage-plus",
             "precision scheme (or scheme@format[+delta-scale=<pow2>|auto[:<k0>]])",
         )
-        .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|fp32)")
+        .opt("format", "", "storage format (bf16|fp16|fp8e4m3|fp8e5m2|mxfp4|fp32)")
         .opt("workers", "4", "data-parallel worker count")
         .opt("steps", "100", "global steps")
         .opt("lr", "1e-3", "peak learning rate")

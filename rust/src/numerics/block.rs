@@ -1,0 +1,474 @@
+//! Block-scaled microscaling (MX) quantization: MXFP4 per the OCP
+//! Microscaling spec — 32 E2M1 elements sharing one E8M0 power-of-two
+//! scale ("Training LLMs with MXFP4"; "Exploring FP4 Precision").
+//!
+//! # The block contract
+//!
+//! A **block** is up to [`BLOCK`] = 32 consecutive elements on the global
+//! index grid (blocks never straddle `ACCUM_CHUNK` boundaries —
+//! `ACCUM_CHUNK % BLOCK == 0` — so chunk-sharded kernels see the same
+//! blocks at any worker count; the last block of a vector may be short).
+//! Quantizing a block:
+//!
+//! 1. **Scale selection** (the OCP rule): the shared scale is
+//!    `2^e` with `e = floor(log2(max|x|)) − 2` (2 = E2M1's top binade,
+//!    6 = 1.5·2²), clamped to `e ∈ [`[`SCALE_E_MIN`]`, `[`SCALE_E_MAX`]`]`.
+//!    The block max therefore lands in `[4·2^e, 8·2^e)`.
+//! 2. **Element rounding**: each element rounds to nearest on the E2M1
+//!    magnitude grid `{0, 0.5, 1, 1.5, 2, 3, 4, 6}·2^e`, **ties to the
+//!    even mantissa code** (magnitudes 0, 1, 2, 4), values beyond
+//!    `6·2^e` clamping to `±6·2^e` (only the block max can be there, and
+//!    E2M1 has no infinities).  The sign of zero is preserved.
+//!
+//! Pinned edge behavior (property-tested in `tests/block_format.rs`):
+//!
+//! * **All-zero block** → scale exponent 0, all elements ±0.
+//! * **Any non-finite element** → the whole block quantizes to NaN and
+//!   the scale is reported as `None` (E8M0's NaN scale code).
+//! * The scale depends on the block only through `max|x|`: it is
+//!   invariant under element permutation and monotone in the max.
+//!
+//! # The element-wise view
+//!
+//! The scale-exponent clamp is chosen so that the union of every block
+//! grid is **exactly** the element grid of
+//! [`MXFP4`](crate::numerics::format::MXFP4) = `FloatFormat { exp_bits:
+//! 8, mantissa_bits: 1 }` (every decodable value has ≤ 2 significant
+//! bits): `0.5·2^SCALE_E_MIN = 2⁻¹²⁷` is that format's smallest
+//! subnormal and `6·2^SCALE_E_MAX = 1.5·2¹²⁷` its `max_finite`.  So the
+//! repo's element-wise machinery — `representable`, `check_representable`,
+//! `ulp`, `default_eps` — describes the decodable set with no changes,
+//! while this module owns the *joint* constraint (one shared scale per
+//! block).  Block quantization is idempotent, which also means the scale
+//! needs no side-channel persistence: the quantized block's own max
+//! (always `4·2^e` or `6·2^e`) re-derives `e`, so checkpoints keep
+//! storing plain f32 containers.
+//!
+//! Two implementations provide the contract, mirroring
+//! [`format`](crate::numerics::format):
+//!
+//! * [`quantize_block`] — the fast path: scale exponent read off the f64
+//!   exponent bits of the block max, exact power-of-two rescale, and a
+//!   branch-chain commit onto the 8-point magnitude grid.  No
+//!   `log2`/`floor`/`powi`.
+//! * [`quantize_block_reference`] — the executable specification: scale
+//!   via `log2().floor()`, then a scan over all 16 code points choosing
+//!   the nearest with ties to the even mantissa code.
+//!
+//! They are bitwise identical for every input; `tests/block_format.rs`
+//! sweeps all 16 codes × all block scales × boundary/tie inputs
+//! exhaustively in tier 1 (the 4-bit grid is small enough).
+//!
+//! ```
+//! use collage::numerics::block::quantize_block;
+//! use collage::numerics::format::MXFP4;
+//!
+//! let mut x = [0.0f64; 32];
+//! x[0] = 1.7;
+//! x[1] = -0.02;
+//! x[5] = 3.9e-3;
+//! let mut q = [0.0f32; 32];
+//! let e = quantize_block(&x, &mut q).unwrap();
+//! assert_eq!(e, -2); // max |x| = 1.7 → floor(log2 1.7) − 2 = −2
+//! // 1.7 · 2² = 6.8 sits past the top code: clamps to 6 · 2⁻² = 1.5.
+//! assert_eq!(q[0], 1.5);
+//! // -0.02 · 2² = -0.08 rounds to zero, keeping its sign.
+//! assert_eq!(q[1], 0.0);
+//! assert!(q[1].is_sign_negative());
+//! // Every decodable value is on MXFP4's element-wise grid.
+//! assert!(q.iter().all(|&v| MXFP4.representable(v)));
+//! ```
+
+/// Elements per block (the OCP MX default).
+pub const BLOCK: usize = 32;
+
+/// Smallest shared-scale exponent.  E8M0 proper encodes down to −127;
+/// clamping one higher keeps the smallest decodable element
+/// (`0.5·2^SCALE_E_MIN = 2⁻¹²⁷`) on the element-wise `MXFP4` grid, whose
+/// subnormal quantum is `2⁻¹²⁷`.
+pub const SCALE_E_MIN: i32 = -126;
+
+/// Largest shared-scale exponent.  E8M0 proper encodes up to +127, but a
+/// block max drawn from an f32 container is below 2¹²⁸, so the OCP rule
+/// never selects past 125 — and `6·2^SCALE_E_MAX = 1.5·2¹²⁷` is exactly
+/// the element-wise `MXFP4.max_finite()`.
+pub const SCALE_E_MAX: i32 = 125;
+
+/// The 8 non-negative E2M1 magnitudes, indexed by (exponent, mantissa)
+/// code.  Even indices have the even (zero) mantissa bit — the tie
+/// winners.  A 4-bit code is `sign << 3 | index`.
+pub const E2M1_MAGNITUDES: [f64; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// `2^q` as an f64 by direct bit construction (normal range only).
+#[inline]
+fn pow2(q: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&q), "pow2 exponent {q} out of range");
+    f64::from_bits(((q + 1023) as u64) << 52)
+}
+
+/// The OCP scale rule on a finite, non-negative block max:
+/// `floor(log2(max)) − 2`, clamped; an all-zero block pins to exponent 0.
+///
+/// Fast path: the floor-log2 is the f64 exponent field.  f64-subnormal
+/// maxima (< 2⁻¹⁰²²) are far below the clamp and need no special bit
+/// handling.
+#[inline]
+pub fn select_scale_exp(max_abs: f64) -> i32 {
+    debug_assert!(max_abs >= 0.0 && max_abs.is_finite());
+    if max_abs == 0.0 {
+        return 0;
+    }
+    let biased = ((max_abs.to_bits() >> 52) & 0x7FF) as i32;
+    if biased == 0 {
+        return SCALE_E_MIN;
+    }
+    (biased - 1023 - 2).clamp(SCALE_E_MIN, SCALE_E_MAX)
+}
+
+/// Arithmetic twin of [`select_scale_exp`] (`log2().floor()` with the
+/// power-of-two fixup), used by the reference quantizer.
+fn select_scale_exp_reference(max_abs: f64) -> i32 {
+    if max_abs == 0.0 {
+        return 0;
+    }
+    let mut e = max_abs.log2().floor() as i32;
+    // log2 misrounds just below powers of two; nudge so 2^e <= max < 2^(e+1).
+    if 2f64.powi(e) > max_abs {
+        e -= 1;
+    }
+    if 2f64.powi(e + 1) <= max_abs {
+        e += 1;
+    }
+    (e - 2).clamp(SCALE_E_MIN, SCALE_E_MAX)
+}
+
+/// The shared scale exponent a block would select, or `None` if any
+/// element is non-finite (the NaN-block case).  Exposed for the
+/// block-scale property tests; [`quantize_block`] agrees with it.
+pub fn block_scale_exp(x: &[f64]) -> Option<i32> {
+    let mut max_abs = 0.0f64;
+    for &v in x {
+        if !v.is_finite() {
+            return None;
+        }
+        let a = v.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    Some(select_scale_exp(max_abs))
+}
+
+/// RN-even of a non-negative scaled magnitude onto the E2M1 grid
+/// `{0, 0.5, 1, 1.5, 2, 3, 4, 6}`, ties to the even mantissa code
+/// (0, 1, 2, 4), clamping past 6.  All compares are exact.
+#[inline]
+fn e2m1_magnitude(m: f64) -> f64 {
+    if m <= 0.25 {
+        0.0 // tie 0.25 → 0 (even)
+    } else if m < 0.75 {
+        0.5
+    } else if m <= 1.25 {
+        1.0 // ties 0.75, 1.25 → 1.0 (even)
+    } else if m < 1.75 {
+        1.5
+    } else if m <= 2.5 {
+        2.0 // ties 1.75, 2.5 → 2.0 (even)
+    } else if m < 3.5 {
+        3.0
+    } else if m <= 5.0 {
+        4.0 // ties 3.5, 5.0 → 4.0 (even)
+    } else {
+        6.0 // includes the (6·2^e, 8·2^e) clamp zone
+    }
+}
+
+/// Round one finite element at a pinned scale exponent: RN-even onto the
+/// block grid `{0, ±0.5, …, ±6}·2^e`, clamping past `±6·2^e`, preserving
+/// the sign of zero.  Exact: the rescale is a power-of-two multiply and
+/// every grid point is f32-representable (down to the subnormal `2⁻¹²⁷`).
+#[inline]
+pub fn quantize_element(x: f64, scale_exp: i32) -> f32 {
+    if !x.is_finite() {
+        return f32::NAN;
+    }
+    let q = e2m1_magnitude((x * pow2(-scale_exp)).abs()) * pow2(scale_exp);
+    let v = q as f32;
+    if x.is_sign_negative() {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Quantize one block (≤ [`BLOCK`] elements) into decoded f32 values —
+/// the **fast path**.  Returns the shared scale exponent, or `None` when
+/// any input is non-finite, in which case the whole block is NaN (the
+/// E8M0 NaN scale).  See the module docs for the full contract; bitwise
+/// identical to [`quantize_block_reference`].
+pub fn quantize_block(x: &[f64], out: &mut [f32]) -> Option<i32> {
+    debug_assert!(x.len() <= BLOCK && x.len() == out.len());
+    let mut max_abs = 0.0f64;
+    let mut finite = true;
+    for &v in x {
+        finite &= v.is_finite();
+        let a = v.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    if !finite {
+        for o in out.iter_mut() {
+            *o = f32::NAN;
+        }
+        return None;
+    }
+    let e = select_scale_exp(max_abs);
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = quantize_element(v, e);
+    }
+    Some(e)
+}
+
+/// The executable specification of block quantization: arithmetic scale
+/// selection, then per element a scan over all 16 E2M1 code points
+/// choosing the nearest (ties to the even mantissa code).  ~10× the cost
+/// of [`quantize_block`]; kept as the oracle for the conformance suite
+/// and the `GenericAdamW` reference optimizer.
+pub fn quantize_block_reference(x: &[f64], out: &mut [f32]) -> Option<i32> {
+    debug_assert!(x.len() <= BLOCK && x.len() == out.len());
+    if x.iter().any(|v| !v.is_finite()) {
+        for o in out.iter_mut() {
+            *o = f32::NAN;
+        }
+        return None;
+    }
+    let max_abs = x.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+    let e = select_scale_exp_reference(max_abs);
+    let scale = 2f64.powi(e);
+    for (o, &v) in out.iter_mut().zip(x) {
+        let m = v.abs() / scale; // exact power-of-two divide
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, &c) in E2M1_MAGNITUDES.iter().enumerate() {
+            let d = (m - c).abs();
+            // Near any contested midpoint both distances are Sterbenz-
+            // exact, so the comparison (and the tie test) is exact.
+            if d < best_d || (d == best_d && i % 2 == 0 && best % 2 == 1) {
+                best = i;
+                best_d = d;
+            }
+        }
+        let q = (E2M1_MAGNITUDES[best] * scale) as f32;
+        *o = if v.is_sign_negative() { -q } else { q };
+    }
+    Some(e)
+}
+
+/// The 4-bit code one element commits to at a pinned scale
+/// (`sign << 3 | magnitude index`).  Test/conformance helper; agrees
+/// with [`quantize_element`] via [`decode`].
+pub fn encode_element(x: f64, scale_exp: i32) -> u8 {
+    let m = e2m1_magnitude((x * pow2(-scale_exp)).abs());
+    let idx = E2M1_MAGNITUDES.iter().position(|&c| c == m).unwrap() as u8;
+    if x.is_sign_negative() {
+        idx | 8
+    } else {
+        idx
+    }
+}
+
+/// Decode a 4-bit E2M1 code at a scale exponent into its f32 value.
+///
+/// ```
+/// use collage::numerics::block::decode;
+/// assert_eq!(decode(0b0111, 0), 6.0); // top magnitude at scale 2⁰
+/// assert_eq!(decode(0b1010, -3), -0.125); // -1.0 · 2⁻³
+/// assert!(decode(0b1000, 5).is_sign_negative()); // -0 keeps its sign
+/// ```
+pub fn decode(code: u8, scale_exp: i32) -> f32 {
+    debug_assert!(code < 16, "4-bit code out of range: {code}");
+    debug_assert!((SCALE_E_MIN..=SCALE_E_MAX).contains(&scale_exp));
+    let v = (E2M1_MAGNITUDES[(code & 7) as usize] * pow2(scale_exp)) as f32;
+    if code & 8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Quantize a whole vector on the global 32-element block grid (the last
+/// block may be short) — the layout every block-format consumer shares
+/// with the fused kernels (`ACCUM_CHUNK % BLOCK == 0`, so chunk sharding
+/// preserves it).
+pub fn quantize_slice(x: &[f64], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (xs, os) in x.chunks(BLOCK).zip(out.chunks_mut(BLOCK)) {
+        quantize_block(xs, os);
+    }
+}
+
+/// Block-quantize an f32 vector in place (θ initialization, target
+/// construction): widen each block to f64 (exact) and requantize.
+pub fn quantize_slice_in_place(v: &mut [f32]) {
+    let mut buf = [0.0f64; BLOCK];
+    for blk in v.chunks_mut(BLOCK) {
+        for (b, &x) in buf.iter_mut().zip(blk.iter()) {
+            *b = x as f64;
+        }
+        let n = blk.len();
+        quantize_block(&buf[..n], blk);
+    }
+}
+
+/// True iff every 32-block of `v` is a fixpoint of block quantization —
+/// the block-format strengthening of element-wise `representable` checks
+/// (a vector can be element-wise on-grid yet have a block whose nonzero
+/// magnitudes span more than one shared scale).  Quantizer outputs always
+/// pass: the quantized max re-derives the same scale (it lands on
+/// `4·2^e` or `6·2^e`), and on-grid elements re-round to themselves.
+pub fn block_consistent(v: &[f32]) -> bool {
+    let mut buf = [0.0f64; BLOCK];
+    let mut out = [0.0f32; BLOCK];
+    for blk in v.chunks(BLOCK) {
+        let n = blk.len();
+        for i in 0..n {
+            buf[i] = blk[i] as f64;
+        }
+        quantize_block(&buf[..n], &mut out[..n]);
+        for i in 0..n {
+            let same = out[i].to_bits() == blk[i].to_bits()
+                || (out[i].is_nan() && blk[i].is_nan());
+            if !same {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::format::MXFP4;
+    use crate::util::rng::Rng;
+
+    fn assert_block_eq(fast: &[f32], slow: &[f32], ctx: &str) {
+        for (i, (a, b)) in fast.iter().zip(slow).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                "{ctx}: element {i}: fast {a:e} ({:08x}) != reference {b:e} ({:08x})",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn tie_table_and_clamp_at_unit_scale() {
+        // Pin the scale to 0 with a max element of 6; check every tie
+        // midpoint and the clamp zone against the documented table.
+        let cases: [(f64, f32); 12] = [
+            (0.25, 0.0),
+            (0.26, 0.5),
+            (0.75, 1.0),
+            (1.25, 1.0),
+            (1.26, 1.5),
+            (1.75, 2.0),
+            (2.5, 2.0),
+            (2.51, 3.0),
+            (3.5, 4.0),
+            (5.0, 4.0),
+            (5.01, 6.0),
+            (7.9, 6.0), // clamp: the block max itself saturates to 6
+        ];
+        for (x, want) in cases {
+            let input = [6.0, x, -x];
+            let mut fast = [0.0f32; 3];
+            let mut slow = [0.0f32; 3];
+            assert_eq!(quantize_block(&input, &mut fast), Some(0), "x={x}");
+            assert_eq!(quantize_block_reference(&input, &mut slow), Some(0));
+            assert_block_eq(&fast, &slow, &format!("x={x}"));
+            assert_eq!(fast[1], want, "x={x}");
+            assert_eq!(fast[2], -want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn pinned_all_zero_nan_and_subnormal_blocks() {
+        // All-zero: scale exponent 0, elements ±0 with signs preserved.
+        let mut out = [1.0f32; 4];
+        assert_eq!(quantize_block(&[0.0, -0.0, 0.0, -0.0], &mut out), Some(0));
+        assert_eq!(out[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(out[1].to_bits(), (-0.0f32).to_bits());
+        // Any NaN or inf poisons the whole block.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut out = [0.0f32; 3];
+            assert_eq!(quantize_block(&[1.0, bad, 2.0], &mut out), None);
+            assert!(out.iter().all(|v| v.is_nan()), "bad={bad}");
+            let mut slow = [0.0f32; 3];
+            assert_eq!(quantize_block_reference(&[1.0, bad, 2.0], &mut slow), None);
+            assert!(slow.iter().all(|v| v.is_nan()));
+        }
+        // A lone tiny value: the scale clamps at SCALE_E_MIN and the
+        // element rounds on the 2⁻¹²⁷-floor grid.
+        let mut out = [0.0f32; 2];
+        let e = quantize_block(&[0.0, 2f64.powi(-140)], &mut out).unwrap();
+        assert_eq!(e, SCALE_E_MIN);
+        assert_eq!(out[1], 0.0); // 2⁻¹⁴⁰ · 2¹²⁶ = 2⁻¹⁴ ≤ 0.25 → 0
+        let e = quantize_block(&[0.0, 2f64.powi(-127)], &mut out).unwrap();
+        assert_eq!(e, SCALE_E_MIN);
+        assert_eq!(out[1], 2f32.powi(-127)); // 0.5 on the floor grid
+    }
+
+    #[test]
+    fn fast_matches_reference_on_seeded_blocks() {
+        let mut rng = Rng::new(0xB10C_F4, 0);
+        let mut x = [0.0f64; BLOCK];
+        let mut fast = [0.0f32; BLOCK];
+        let mut slow = [0.0f32; BLOCK];
+        for round in 0..2000 {
+            let scale = 10f64.powi(rng.below(61) as i32 - 30);
+            for v in x.iter_mut() {
+                *v = rng.normal() * scale;
+            }
+            let ef = quantize_block(&x, &mut fast);
+            let es = quantize_block_reference(&x, &mut slow);
+            assert_eq!(ef, es, "round {round}");
+            assert_block_eq(&fast, &slow, &format!("round {round}"));
+        }
+    }
+
+    #[test]
+    fn idempotent_and_on_element_grid() {
+        let mut rng = Rng::new(0xB10C_F5, 0);
+        let mut x = [0.0f64; BLOCK];
+        let mut q1 = [0.0f32; BLOCK];
+        for _ in 0..500 {
+            for v in x.iter_mut() {
+                *v = rng.normal() * 3.0;
+            }
+            let e1 = quantize_block(&x, &mut q1).unwrap();
+            assert!(q1.iter().all(|&v| MXFP4.representable(v)));
+            assert!(block_consistent(&q1));
+            // Requantizing the decoded block reselects the same scale.
+            let wide: Vec<f64> = q1.iter().map(|&v| v as f64).collect();
+            let mut q2 = [0.0f32; BLOCK];
+            assert_eq!(quantize_block(&wide, &mut q2), Some(e1));
+            assert_block_eq(&q2, &q1, "idempotence");
+        }
+    }
+
+    #[test]
+    fn encode_decode_agree_with_quantize() {
+        let mut rng = Rng::new(0xB10C_F6, 0);
+        for _ in 0..2000 {
+            let e = rng.below((SCALE_E_MAX - SCALE_E_MIN + 1) as u64) as i32 + SCALE_E_MIN;
+            let x = rng.normal() * 8.0 * 2f64.powi(e);
+            let code = encode_element(x, e);
+            let direct = quantize_element(x, e);
+            let via_code = decode(code, e);
+            assert_eq!(via_code.to_bits(), direct.to_bits(), "x={x:e} e={e}");
+        }
+    }
+}

@@ -51,25 +51,84 @@ pub struct FloatFormat {
     /// Whether overflow saturates to the max finite value instead of ±inf
     /// (FP8-E4M3 per the OCP spec has no infinities).
     pub saturating: bool,
+    /// Block size for block-scaled (microscaling) formats — the number of
+    /// consecutive elements sharing one power-of-two scale — or 0 for
+    /// plain element-wise formats.  When nonzero, this descriptor is the
+    /// **element-wise view** (the union of every block grid; see
+    /// [`crate::numerics::block`]) and quantization must go through the
+    /// block quantizer, not `round`.
+    pub block: usize,
 }
 
 /// bfloat16: 8 exponent bits, 7 mantissa bits — FP32's range, tiny precision.
-pub const BF16: FloatFormat =
-    FloatFormat { name: "bf16", exp_bits: 8, mantissa_bits: 7, bytes: 2, saturating: false };
+pub const BF16: FloatFormat = FloatFormat {
+    name: "bf16",
+    exp_bits: 8,
+    mantissa_bits: 7,
+    bytes: 2,
+    saturating: false,
+    block: 0,
+};
 /// IEEE half precision.
-pub const FP16: FloatFormat =
-    FloatFormat { name: "fp16", exp_bits: 5, mantissa_bits: 10, bytes: 2, saturating: false };
+pub const FP16: FloatFormat = FloatFormat {
+    name: "fp16",
+    exp_bits: 5,
+    mantissa_bits: 10,
+    bytes: 2,
+    saturating: false,
+    block: 0,
+};
 /// FP8 E4M3 (saturating, no inf).
-pub const FP8E4M3: FloatFormat =
-    FloatFormat { name: "fp8e4m3", exp_bits: 4, mantissa_bits: 3, bytes: 1, saturating: true };
+pub const FP8E4M3: FloatFormat = FloatFormat {
+    name: "fp8e4m3",
+    exp_bits: 4,
+    mantissa_bits: 3,
+    bytes: 1,
+    saturating: true,
+    block: 0,
+};
 /// FP8 E5M2.
-pub const FP8E5M2: FloatFormat =
-    FloatFormat { name: "fp8e5m2", exp_bits: 5, mantissa_bits: 2, bytes: 1, saturating: false };
+pub const FP8E5M2: FloatFormat = FloatFormat {
+    name: "fp8e5m2",
+    exp_bits: 5,
+    mantissa_bits: 2,
+    bytes: 1,
+    saturating: false,
+    block: 0,
+};
 /// IEEE single precision (identity quantizer over f32 containers).
-pub const FP32: FloatFormat =
-    FloatFormat { name: "fp32", exp_bits: 8, mantissa_bits: 23, bytes: 4, saturating: false };
+pub const FP32: FloatFormat = FloatFormat {
+    name: "fp32",
+    exp_bits: 8,
+    mantissa_bits: 23,
+    bytes: 4,
+    saturating: false,
+    block: 0,
+};
+/// MXFP4 (OCP microscaling): E2M1 elements sharing a per-32-element E8M0
+/// power-of-two scale.  This descriptor is the **element-wise view**: the
+/// union of every block grid is exactly an `exp_bits: 8, mantissa_bits: 1`
+/// grid (every decodable value has ≤ 2 significant bits, down to the
+/// subnormal 2⁻¹²⁷ and up to `max_finite = 1.5·2¹²⁷`), so `round` /
+/// `representable` / `ulp` describe the decodable set unchanged.  True
+/// quantization — shared max-abs scale selection per block — lives in
+/// [`crate::numerics::block`].  `bytes: 1` rounds up the true 4.25
+/// bits/element; `saturating` is false because the element-wise overflow
+/// path is unreachable (block scales clamp at 2¹²⁵, elements at 6·2¹²⁵).
+pub const MXFP4: FloatFormat = FloatFormat {
+    name: "mxfp4",
+    exp_bits: 8,
+    mantissa_bits: 1,
+    bytes: 1,
+    saturating: false,
+    block: 32,
+};
 
-/// All formats the library knows about (Table 9 order).
+/// All **element-wise** formats (Table 9 order).  Block-scaled formats
+/// ([`MXFP4`]) are deliberately not listed: they support a restricted
+/// scheme set and quantize per block, so sweeps over this array would
+/// apply element-wise semantics they don't have.  The parser accepts
+/// them by name regardless.
 pub const ALL_FORMATS: [FloatFormat; 5] = [FP32, FP16, BF16, FP8E4M3, FP8E5M2];
 
 /// The canonical string → format mapping used by the CLI, `RunConfig` JSON
@@ -91,8 +150,9 @@ impl std::str::FromStr for FloatFormat {
             "bfloat16" => BF16,
             "e4m3" | "fp8" => FP8E4M3,
             "e5m2" => FP8E5M2,
+            "mxfp4" | "fp4" | "mx4" => MXFP4,
             other => anyhow::bail!(
-                "unknown float format {other:?} (fp32|fp16|bf16|fp8e4m3|fp8e5m2)"
+                "unknown float format {other:?} (fp32|fp16|bf16|fp8e4m3|fp8e5m2|mxfp4)"
             ),
         })
     }
@@ -469,6 +529,30 @@ mod tests {
             assert_eq!(back, f, "{}", f.name);
         }
         assert!("fp12".parse::<FloatFormat>().is_err());
+    }
+
+    #[test]
+    fn mxfp4_elementwise_view() {
+        assert_eq!("mxfp4".parse::<FloatFormat>().unwrap(), MXFP4);
+        assert_eq!("fp4".parse::<FloatFormat>().unwrap(), MXFP4);
+        assert_eq!(MXFP4.block, 32);
+        // The element-wise grid brackets the decodable set exactly:
+        // 0.5·2⁻¹²⁶ = 2⁻¹²⁷ is the smallest subnormal, 6·2¹²⁵ = 1.5·2¹²⁷
+        // the max (see numerics::block).
+        assert_eq!(MXFP4.ulp(0.0), 2f64.powi(-127));
+        assert_eq!(MXFP4.max_finite(), 1.5 * 2f64.powi(127));
+        // ≤2-significant-bit values are representable; 3-bit ones are not.
+        for e in [-126, -5, 0, 60] {
+            assert!(MXFP4.representable(1.0 * 2f32.powi(e)), "2^{e}");
+            assert!(MXFP4.representable(1.5 * 2f32.powi(e)), "1.5·2^{e}");
+            assert!(!MXFP4.representable(1.25 * 2f32.powi(e)), "1.25·2^{e}");
+        }
+        // The subnormal floor: 2⁻¹²⁷ is on the grid, 1.5·2⁻¹²⁷ is below
+        // the quantum and is not.
+        assert!(MXFP4.representable(2f32.powi(-127)));
+        assert!(!MXFP4.representable(1.5 * 2f32.powi(-127)));
+        assert_eq!(MXFP4.round_nearest(5.0), 4.0); // tie to even on the grid
+        assert_eq!(MXFP4.round_nearest(5.1), 6.0);
     }
 
     #[test]

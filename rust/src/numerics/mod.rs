@@ -12,10 +12,11 @@
 //! p₂ ≥ 2·p₁ + 2), so this matches hardware arithmetic bit-for-bit.
 
 pub mod analysis;
+pub mod block;
 pub mod expansion;
 pub mod format;
 pub mod round;
 
 pub use analysis::{edq, lost_fraction, EdqReport};
 pub use expansion::Expansion;
-pub use format::{FloatFormat, BF16, FP16, FP32, FP8E4M3, FP8E5M2};
+pub use format::{FloatFormat, BF16, FP16, FP32, FP8E4M3, FP8E5M2, MXFP4};

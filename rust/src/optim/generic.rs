@@ -12,13 +12,17 @@
 //! for the bf16 row.
 
 use crate::numerics::analysis::{edq, edq_effective, sum_sq_chunked};
+use crate::numerics::block::{quantize_block_reference, BLOCK};
 use crate::numerics::expansion::{grow, Expansion};
 use crate::numerics::format::FloatFormat;
 use crate::util::rng::Rng;
 
 use super::adamw::{AdamW, StepStats};
 use super::delta_ctrl;
-use super::kernels::{sr_noise, sr_round_fmt, DeltaTally, GenericScalars};
+use super::kernels::{
+    bgroup_light, bgroup_light3, bgroup_plain, bgroup_plus, bgroup_plus3, sr_noise, sr_round_fmt,
+    BlockQuantizer, DeltaTally, GenericScalars,
+};
 use super::plan::{PrecisionPlan, Scheme};
 use super::state::OptimState;
 
@@ -136,7 +140,109 @@ impl GenericAdamW {
 
         let mut dtheta = vec![0.0f32; n];
 
+        // Block-scaled plans run the same `bgroup_*` group math as the
+        // fused kernels, driven by the *reference* quantizer — the
+        // executable E2M1 spec — so the bitwise equivalence tests
+        // transitively prove the fast quantizer correct inside the full
+        // optimizer update.  The whole-vector loop walks the same global
+        // 32-element grid the chunked kernels do (CHUNK % BLOCK == 0).
+        let blk = fmt.block != 0;
+        let qb: BlockQuantizer = quantize_block_reference;
+
         match plan.scheme {
+            Scheme::Plain if blk => {
+                let [theta, m, v] = state.vecs_mut() else { unreachable!() };
+                for lo in (0..n).step_by(BLOCK) {
+                    let hi = (lo + BLOCK).min(n);
+                    bgroup_plain(
+                        &s,
+                        qb,
+                        &g[lo..hi],
+                        &mut theta[lo..hi],
+                        &mut m[lo..hi],
+                        &mut v[lo..hi],
+                        &mut dtheta[lo..hi],
+                    );
+                }
+            }
+            Scheme::CollageLight if blk => {
+                let [theta, dtc, m, v] = state.vecs_mut() else { unreachable!() };
+                for lo in (0..n).step_by(BLOCK) {
+                    let hi = (lo + BLOCK).min(n);
+                    bgroup_light(
+                        &s,
+                        qb,
+                        &g[lo..hi],
+                        &mut theta[lo..hi],
+                        &mut dtc[lo..hi],
+                        &mut m[lo..hi],
+                        &mut v[lo..hi],
+                        &mut dtheta[lo..hi],
+                        &mut tally,
+                    );
+                }
+            }
+            Scheme::CollageLight3 if blk => {
+                let [theta, dtc, dtc2, m, v] = state.vecs_mut() else { unreachable!() };
+                for lo in (0..n).step_by(BLOCK) {
+                    let hi = (lo + BLOCK).min(n);
+                    bgroup_light3(
+                        &s,
+                        qb,
+                        &g[lo..hi],
+                        &mut theta[lo..hi],
+                        &mut dtc[lo..hi],
+                        &mut dtc2[lo..hi],
+                        &mut m[lo..hi],
+                        &mut v[lo..hi],
+                        &mut dtheta[lo..hi],
+                        &mut tally,
+                    );
+                }
+            }
+            Scheme::CollagePlus if blk => {
+                let [theta, dtc, m, v, dv] = state.vecs_mut() else { unreachable!() };
+                for lo in (0..n).step_by(BLOCK) {
+                    let hi = (lo + BLOCK).min(n);
+                    bgroup_plus(
+                        &s,
+                        qb,
+                        &g[lo..hi],
+                        &mut theta[lo..hi],
+                        &mut dtc[lo..hi],
+                        &mut m[lo..hi],
+                        &mut v[lo..hi],
+                        &mut dv[lo..hi],
+                        &mut dtheta[lo..hi],
+                        &mut tally,
+                    );
+                }
+            }
+            Scheme::CollagePlus3 if blk => {
+                let [theta, dtc, dtc2, m, v, dv, dv2] = state.vecs_mut() else {
+                    unreachable!()
+                };
+                for lo in (0..n).step_by(BLOCK) {
+                    let hi = (lo + BLOCK).min(n);
+                    bgroup_plus3(
+                        &s,
+                        qb,
+                        &g[lo..hi],
+                        &mut theta[lo..hi],
+                        &mut dtc[lo..hi],
+                        &mut dtc2[lo..hi],
+                        &mut m[lo..hi],
+                        &mut v[lo..hi],
+                        &mut dv[lo..hi],
+                        &mut dv2[lo..hi],
+                        &mut dtheta[lo..hi],
+                        &mut tally,
+                    );
+                }
+            }
+            sch if blk => {
+                unreachable!("scheme {sch:?} rejected at block formats by PrecisionPlan::validate")
+            }
             Scheme::Plain => {
                 let vecs = state.vecs_mut(); // [theta, m, v]
                 for k in 0..n {

@@ -37,6 +37,7 @@
 
 use std::ops::Range;
 
+use crate::numerics::block::BLOCK;
 use crate::numerics::expansion::{
     grow, grow_bf16, grow_n, mul, mul_bf16, mul_n, rn_bf16, Expansion, ExpansionN,
 };
@@ -769,6 +770,14 @@ pub struct GenericScalars {
     /// its exact reciprocal.
     pub ds_scale: f64,
     pub ds_inv: f64,
+    /// Per-step Cauchy–Schwarz bound on the bias-corrected Adam ratio
+    /// `|m̂/√v̂|` — exact (unquantized) moments can never exceed it, so
+    /// clamping at it never alters an exact trajectory.  The block-scaled
+    /// kernels use it ([`GenericScalars::delta_exact_block`]) to bound the
+    /// artifact where block quantization flushes an element's `v` history
+    /// to zero while its `m` survives (∞ for β₂ ≤ β₁², where the geometric
+    /// sum diverges — no supported config).
+    pub ratio_max: f64,
 }
 
 impl GenericScalars {
@@ -790,6 +799,20 @@ impl GenericScalars {
         let b2 = ExpansionN::<3>::split_scalar(&fmt, opt.beta2);
         let (bc1, bc2) = opt.bias_corrections(t);
         let ds_scale = crate::optim::plan::pow2_factor(k);
+        // |m̂/√v̂| ≤ (1−β₁)/bc1 · √(bc2/(1−β₂) · Σₖ₌₀^{t−1}(β₁²/β₂)ᵏ) by
+        // Cauchy–Schwarz on the exponential moment sums (at t = 1 this is
+        // exactly 1, the value Adam attains on its first step).  `powi` —
+        // not `powf` — keeps it bit-deterministic; the exponent cap is
+        // inert for every q this far below 1 (q ≤ β₁² / β₂ < 0.82 at the
+        // supported β grids, so qᵉ underflows to 0 long before the cap).
+        let ratio_max = if opt.beta2 > opt.beta1 * opt.beta1 {
+            let q = opt.beta1 * opt.beta1 / opt.beta2;
+            let e = t.max(1).min(1_000_000) as i32;
+            let gsum = (1.0 - q.powi(e)) / (1.0 - q);
+            (1.0 - opt.beta1) / bc1 as f64 * (bc2 as f64 / (1.0 - opt.beta2) * gsum).sqrt()
+        } else {
+            f64::INFINITY
+        };
         GenericScalars {
             fmt,
             beta1_f,
@@ -807,6 +830,7 @@ impl GenericScalars {
             wd: opt.weight_decay,
             ds_scale,
             ds_inv: 1.0 / ds_scale,
+            ratio_max,
         }
     }
 
@@ -928,6 +952,33 @@ impl GenericScalars {
     #[inline]
     pub fn delta_theta(&self, theta_ref: f32, m_new: f32, v_eval: f64) -> f32 {
         self.fmt.round_nearest_f64(self.delta_exact(theta_ref, m_new, v_eval))
+    }
+
+    /// [`GenericScalars::delta_exact`] with the Adam ratio clamped to
+    /// [`GenericScalars::ratio_max`] — the block-scaled hardware model.
+    /// At 4 bits the shared E2M1 block grid can flush an element's stored
+    /// `v` to zero while its `m` survives (v's squared dynamic range
+    /// halves the per-block surviving range); if that element then sees a
+    /// quantized-to-zero gradient, even the exact in-register Vx is 0 and
+    /// the unclamped ratio becomes `m̂/eps ≈ 10⁸` — one such element
+    /// detonates the run.  The clamp is invisible to healthy elements:
+    /// exact moments provably never exceed the bound.
+    #[inline]
+    pub fn delta_exact_block(&self, theta_ref: f32, m_new: f32, v_eval: f64) -> f64 {
+        let m_hat = m_new as f64 / self.bc1 as f64;
+        let v_hat = v_eval / self.bc2 as f64;
+        let raw = m_hat / (v_hat.max(0.0).sqrt() + self.eps as f64);
+        // Explicit comparisons, not `clamp`: a NaN ratio must propagate
+        // into θ (the guardrail's signal), never be replaced by the bound.
+        let t1 = if raw > self.ratio_max {
+            self.ratio_max
+        } else if raw < -self.ratio_max {
+            -self.ratio_max
+        } else {
+            raw
+        };
+        let t2 = theta_ref as f64 * self.wd as f64;
+        -(self.lr as f64) * (t1 + t2)
     }
 
     /// Did the exact update `dtx` round to zero on the grid the expansion
@@ -1328,6 +1379,470 @@ pub fn gstep_chunk_fp32_mw(
     acc
 }
 
+// ---------------------------------------------------------------------------
+// Block-scaled (mxfp4) kernels
+// ---------------------------------------------------------------------------
+//
+// The MX hardware model: stored words are dequantized (the f32 containers
+// already hold their exact values), the update is computed **exactly** in
+// f64 registers, and each stored word passes through the 32-element block
+// quantizer exactly once.  Scalar constants (β₁, β₂, lr, …) stay at their
+// f32-narrowed register precision — only *stored* vectors are E2M1+E8M0.
+// Because [`CHUNK`] is a multiple of [`BLOCK`], chunk-local 32-groups sit
+// on the global block grid, so sharding never splits a block and every
+// worker count produces identical bits.
+//
+// Two v-channel rules keep Adam stable at 4 bits (both validated against a
+// reference simulation of the proxy objective; without them every block
+// plan diverges within ~20 steps):
+//
+//   1. **v_eval is the step's exact in-register Vx**, never the stored
+//      quantized v.  The shared block scale tracks the block *max*; since
+//      v holds squared gradients, any element with `|g| < gmax/4` has its
+//      v flushed to zero while its (unsquared) m survives down to gmax/16.
+//      Evaluating `m̂/(√v̂+ε)` against the flushed v turns a vanished
+//      curvature estimate into a ~10⁸× step.
+//   2. **The Adam ratio is clamped at its per-step Cauchy–Schwarz bound**
+//      ([`GenericScalars::delta_exact_block`]): when the element's v
+//      *history* was flushed and its current g also quantized to zero,
+//      even the exact Vx is 0 — the clamp bounds that artifact at a value
+//      exact moments can never exceed, so it is invisible otherwise.
+
+/// A 32-element block quantizer: `numerics::block::quantize_block` (the
+/// fused fast path) or `quantize_block_reference` (the scalar oracle's
+/// executable spec).  The surrounding update math is shared through the
+/// `bgroup_*` functions below, so the equivalence tests transitively prove
+/// the two quantizers agree bitwise *inside* the full optimizer update.
+pub type BlockQuantizer = fn(&[f64], &mut [f32]) -> Option<i32>;
+
+impl GenericScalars {
+    /// First moment for one ≤32-element group: m ← Qb(β₁m + (1−β₁)g),
+    /// exact in f64 then one block round.
+    #[inline]
+    fn bgroup_moment_m(&self, qb: BlockQuantizer, g: &[f32], m: &mut [f32]) {
+        let w = g.len();
+        let mut buf = [0.0f64; BLOCK];
+        for j in 0..w {
+            buf[j] = m[j] as f64 * self.beta1_f as f64 + g[j] as f64 * self.one_m_beta1 as f64;
+        }
+        qb(&buf[..w], &mut m[..w]);
+    }
+
+    /// Plain second moment for one group: v ← Qb(β₂v + (1−β₂)g²).
+    /// `vbuf[..w]` is left holding the exact pre-quantization Vx for the
+    /// caller's v_eval (see the v_eval rule in the module comment above).
+    #[inline]
+    fn bgroup_moment_v(
+        &self,
+        qb: BlockQuantizer,
+        g: &[f32],
+        v: &mut [f32],
+        vbuf: &mut [f64; BLOCK],
+    ) {
+        let w = g.len();
+        for j in 0..w {
+            let gd = g[j] as f64;
+            vbuf[j] = v[j] as f64 * self.beta2_f as f64 + gd * gd * self.one_m_beta2 as f64;
+        }
+        qb(&vbuf[..w], &mut v[..w]);
+    }
+
+    /// Expansion second moment for one group: the exact
+    /// Vx = (Σvᵢ)·β₂ + (1−β₂)g² peeled into `words` block-quantized
+    /// components (δv words are never delta-scaled — the second moment
+    /// only decays, so it has no swamping problem).  `vbuf[..w]` is left
+    /// holding the exact Vx for the caller's v_eval.
+    #[inline]
+    fn bgroup_moment_v_mcf(
+        &self,
+        qb: BlockQuantizer,
+        g: &[f32],
+        words: &mut [&mut [f32]],
+        vbuf: &mut [f64; BLOCK],
+    ) {
+        let w = g.len();
+        for j in 0..w {
+            let mut veval = 0.0f64;
+            for word in words.iter() {
+                veval += word[j] as f64;
+            }
+            let gd = g[j] as f64;
+            vbuf[j] = veval * self.beta2_f as f64 + gd * gd * self.one_m_beta2 as f64;
+        }
+        let mut r = *vbuf;
+        for word in words.iter_mut() {
+            qb(&r[..w], &mut word[..w]);
+            for j in 0..w {
+                r[j] -= word[j] as f64;
+            }
+        }
+    }
+
+    /// Parameter chain for one group: per element the exact
+    /// T = hi + 2⁻ᵏ·Σδθᵢ + Δθ_exact, then hi' = Qb(T) and the residual
+    /// (T − hi')·2ᵏ peeled through the δθ words, each block-quantized.
+    /// With delta-scale off (k = 0) this degenerates to the unscaled MCF
+    /// update — one uniform code path.  Streams the same telemetry the
+    /// element-wise kernels count: `underflow` when the exact Δθ vanishes
+    /// on the 2ᵏ-finer grid, `saturated` when a scaled residual word
+    /// overshoots the format's global range (the within-block (6,8)·2ᵉ
+    /// clamp is ordinary rounding, **not** saturation — counting it would
+    /// fire on ~half of all blocks and wrongly drive the auto controller
+    /// to back off).  Writes the f32 cast of the exact Δθ into `dt_out`
+    /// (the single-rounding diagnostics convention of the scaled plans).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn bgroup_theta(
+        &self,
+        qb: BlockQuantizer,
+        theta: &mut [f32],
+        lo_words: &mut [&mut [f32]],
+        m: &[f32],
+        v_eval: &[f64],
+        dt_out: &mut [f32],
+        tally: &mut DeltaTally,
+    ) {
+        let w = theta.len();
+        let mut t_buf = [0.0f64; BLOCK];
+        for j in 0..w {
+            let mut lo_sum = 0.0f64;
+            for word in lo_words.iter() {
+                lo_sum += word[j] as f64;
+            }
+            let dtx = self.delta_exact_block(theta[j], m[j], v_eval[j]);
+            tally.underflow += self.delta_underflowed(dtx) as u64;
+            dt_out[j] = dtx as f32;
+            t_buf[j] = theta[j] as f64 + lo_sum * self.ds_inv + dtx;
+        }
+        qb(&t_buf[..w], &mut theta[..w]);
+        let mut r = [0.0f64; BLOCK];
+        for j in 0..w {
+            r[j] = (t_buf[j] - theta[j] as f64) * self.ds_scale;
+        }
+        for word in lo_words.iter_mut() {
+            for &rj in &r[..w] {
+                tally.saturated += (rj.is_finite() && rj.abs() > self.fmt.max_finite()) as u64;
+            }
+            qb(&r[..w], &mut word[..w]);
+            for j in 0..w {
+                r[j] -= word[j] as f64;
+            }
+        }
+    }
+}
+
+/// Plain scheme, one ≤32-element group: θ ← Qb(θ + Δθ_exact), plain
+/// block-quantized m/v.  Like the element-wise plain kernel it streams no
+/// delta telemetry (there are no δθ words to saturate or feed).
+pub fn bgroup_plain(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dt_out: &mut [f32],
+) {
+    let w = g.len();
+    s.bgroup_moment_m(qb, g, m);
+    let mut vbuf = [0.0f64; BLOCK];
+    s.bgroup_moment_v(qb, g, v, &mut vbuf);
+    let mut buf = [0.0f64; BLOCK];
+    for j in 0..w {
+        let dtx = s.delta_exact_block(theta[j], m[j], vbuf[j]);
+        dt_out[j] = dtx as f32;
+        buf[j] = theta[j] as f64 + dtx;
+    }
+    qb(&buf[..w], &mut theta[..w]);
+}
+
+/// Collage-light, one group: MCF (θ, δθ), plain block m/v.
+#[allow(clippy::too_many_arguments)]
+pub fn bgroup_light(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dt_out: &mut [f32],
+    tally: &mut DeltaTally,
+) {
+    let w = g.len();
+    s.bgroup_moment_m(qb, g, m);
+    let mut vbuf = [0.0f64; BLOCK];
+    s.bgroup_moment_v(qb, g, v, &mut vbuf);
+    s.bgroup_theta(qb, theta, &mut [dtheta_c], m, &vbuf[..w], dt_out, tally);
+}
+
+/// Collage-light-3, one group: length-3 MCF (θ, δθ₁, δθ₂), plain block m/v.
+#[allow(clippy::too_many_arguments)]
+pub fn bgroup_light3(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dt_out: &mut [f32],
+    tally: &mut DeltaTally,
+) {
+    let w = g.len();
+    s.bgroup_moment_m(qb, g, m);
+    let mut vbuf = [0.0f64; BLOCK];
+    s.bgroup_moment_v(qb, g, v, &mut vbuf);
+    s.bgroup_theta(qb, theta, &mut [dtheta_c, dtheta_c2], m, &vbuf[..w], dt_out, tally);
+}
+
+/// Collage-plus, one group: MCF (θ, δθ) and MCF (v, δv).
+#[allow(clippy::too_many_arguments)]
+pub fn bgroup_plus(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    dt_out: &mut [f32],
+    tally: &mut DeltaTally,
+) {
+    let w = g.len();
+    s.bgroup_moment_m(qb, g, m);
+    let mut vbuf = [0.0f64; BLOCK];
+    s.bgroup_moment_v_mcf(qb, g, &mut [&mut *v, &mut *dv], &mut vbuf);
+    s.bgroup_theta(qb, theta, &mut [dtheta_c], m, &vbuf[..w], dt_out, tally);
+}
+
+/// Collage-plus-3, one group: length-3 MCF (θ, δθ₁, δθ₂) **and** length-3
+/// MCF (v, δv₁, δv₂).
+#[allow(clippy::too_many_arguments)]
+pub fn bgroup_plus3(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    dv2: &mut [f32],
+    dt_out: &mut [f32],
+    tally: &mut DeltaTally,
+) {
+    let w = g.len();
+    s.bgroup_moment_m(qb, g, m);
+    let mut vbuf = [0.0f64; BLOCK];
+    s.bgroup_moment_v_mcf(qb, g, &mut [&mut *v, &mut *dv, &mut *dv2], &mut vbuf);
+    s.bgroup_theta(qb, theta, &mut [dtheta_c, dtheta_c2], m, &vbuf[..w], dt_out, tally);
+}
+
+/// Plain scheme at a block-scaled format, one chunk.
+pub fn bstep_chunk_plain(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    let mut dt = [0.0f32; BLOCK];
+    let mut old = [0.0f32; BLOCK];
+    for start in (0..g.len()).step_by(BLOCK) {
+        let end = (start + BLOCK).min(g.len());
+        let w = end - start;
+        old[..w].copy_from_slice(&theta[start..end]);
+        bgroup_plain(
+            s,
+            qb,
+            &g[start..end],
+            &mut theta[start..end],
+            &mut m[start..end],
+            &mut v[start..end],
+            &mut dt[..w],
+        );
+        for j in 0..w {
+            acc.tally(dt[j], old[j], theta[start + j]);
+        }
+    }
+    acc
+}
+
+/// Collage-light at a block-scaled format, one chunk.
+pub fn bstep_chunk_light(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    let mut dt = [0.0f32; BLOCK];
+    let mut old = [0.0f64; BLOCK];
+    for start in (0..g.len()).step_by(BLOCK) {
+        let end = (start + BLOCK).min(g.len());
+        let w = end - start;
+        for j in 0..w {
+            old[j] = eff_theta2(theta[start + j], dtheta_c[start + j], s.ds_inv);
+        }
+        bgroup_light(
+            s,
+            qb,
+            &g[start..end],
+            &mut theta[start..end],
+            &mut dtheta_c[start..end],
+            &mut m[start..end],
+            &mut v[start..end],
+            &mut dt[..w],
+            &mut acc.delta,
+        );
+        for j in 0..w {
+            let new = eff_theta2(theta[start + j], dtheta_c[start + j], s.ds_inv);
+            acc.tally_f64(dt[j], old[j], new);
+        }
+    }
+    acc
+}
+
+/// Collage-light-3 at a block-scaled format, one chunk.
+#[allow(clippy::too_many_arguments)]
+pub fn bstep_chunk_light3(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    let mut dt = [0.0f32; BLOCK];
+    let mut old = [0.0f64; BLOCK];
+    for start in (0..g.len()).step_by(BLOCK) {
+        let end = (start + BLOCK).min(g.len());
+        let w = end - start;
+        for j in 0..w {
+            old[j] =
+                eff_theta3(theta[start + j], dtheta_c[start + j], dtheta_c2[start + j], s.ds_inv);
+        }
+        bgroup_light3(
+            s,
+            qb,
+            &g[start..end],
+            &mut theta[start..end],
+            &mut dtheta_c[start..end],
+            &mut dtheta_c2[start..end],
+            &mut m[start..end],
+            &mut v[start..end],
+            &mut dt[..w],
+            &mut acc.delta,
+        );
+        for j in 0..w {
+            let new =
+                eff_theta3(theta[start + j], dtheta_c[start + j], dtheta_c2[start + j], s.ds_inv);
+            acc.tally_f64(dt[j], old[j], new);
+        }
+    }
+    acc
+}
+
+/// Collage-plus at a block-scaled format, one chunk.
+#[allow(clippy::too_many_arguments)]
+pub fn bstep_chunk_plus(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    let mut dt = [0.0f32; BLOCK];
+    let mut old = [0.0f64; BLOCK];
+    for start in (0..g.len()).step_by(BLOCK) {
+        let end = (start + BLOCK).min(g.len());
+        let w = end - start;
+        for j in 0..w {
+            old[j] = eff_theta2(theta[start + j], dtheta_c[start + j], s.ds_inv);
+        }
+        bgroup_plus(
+            s,
+            qb,
+            &g[start..end],
+            &mut theta[start..end],
+            &mut dtheta_c[start..end],
+            &mut m[start..end],
+            &mut v[start..end],
+            &mut dv[start..end],
+            &mut dt[..w],
+            &mut acc.delta,
+        );
+        for j in 0..w {
+            let new = eff_theta2(theta[start + j], dtheta_c[start + j], s.ds_inv);
+            acc.tally_f64(dt[j], old[j], new);
+        }
+    }
+    acc
+}
+
+/// Collage-plus-3 at a block-scaled format, one chunk.
+#[allow(clippy::too_many_arguments)]
+pub fn bstep_chunk_plus3(
+    s: &GenericScalars,
+    qb: BlockQuantizer,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    dv2: &mut [f32],
+) -> ChunkAccum {
+    let mut acc = ChunkAccum::default();
+    let mut dt = [0.0f32; BLOCK];
+    let mut old = [0.0f64; BLOCK];
+    for start in (0..g.len()).step_by(BLOCK) {
+        let end = (start + BLOCK).min(g.len());
+        let w = end - start;
+        for j in 0..w {
+            old[j] =
+                eff_theta3(theta[start + j], dtheta_c[start + j], dtheta_c2[start + j], s.ds_inv);
+        }
+        bgroup_plus3(
+            s,
+            qb,
+            &g[start..end],
+            &mut theta[start..end],
+            &mut dtheta_c[start..end],
+            &mut dtheta_c2[start..end],
+            &mut m[start..end],
+            &mut v[start..end],
+            &mut dv[start..end],
+            &mut dv2[start..end],
+            &mut dt[..w],
+            &mut acc.delta,
+        );
+        for j in 0..w {
+            let new =
+                eff_theta3(theta[start + j], dtheta_c[start + j], dtheta_c2[start + j], s.ds_inv);
+            acc.tally_f64(dt[j], old[j], new);
+        }
+    }
+    acc
+}
+
 /// The format-generic half of [`fused_step`]: same chunk grid, same
 /// index-ordered combine, same zero-allocation contract — dispatched by
 /// [`Scheme`] instead of legacy [`Strategy`].
@@ -1361,10 +1876,88 @@ fn fused_step_generic(
         let vecs = state.vecs_mut();
         let p = VecPtrs::new(vecs, n);
         let run = &mut scratch;
+        // Block-scaled formats route to the `bstep_chunk_*` family with the
+        // fast block quantizer (the scalar oracle runs the same `bgroup_*`
+        // math with the reference quantizer).  `PrecisionPlan::validate`
+        // restricts block plans to `BLOCK_SCHEMES`, so the guard arms below
+        // cover every reachable scheme; delta-scale needs no separate
+        // kernels here — the uniform θ chain degenerates exactly at k = 0.
+        let blk = plan.format.block != 0;
+        let qb: BlockQuantizer = crate::numerics::block::quantize_block;
         // SAFETY (all arms): `parallel_chunks` hands out non-overlapping
         // ranges, each claimed by exactly one thread, so the `p.slice`
         // windows are disjoint &mut views per vector.
         match plan.scheme {
+            Scheme::Plain if blk => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                bstep_chunk_plain(
+                    &s,
+                    qb,
+                    &g[r.clone()],
+                    p.slice(0, r.clone()),
+                    p.slice(1, r.clone()),
+                    p.slice(2, r),
+                )
+            }),
+            Scheme::CollageLight if blk => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    bstep_chunk_light(
+                        &s,
+                        qb,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r),
+                    )
+                })
+            }
+            Scheme::CollageLight3 if blk => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    bstep_chunk_light3(
+                        &s,
+                        qb,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r.clone()),
+                        p.slice(4, r),
+                    )
+                })
+            }
+            Scheme::CollagePlus if blk => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    bstep_chunk_plus(
+                        &s,
+                        qb,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r.clone()),
+                        p.slice(4, r),
+                    )
+                })
+            }
+            Scheme::CollagePlus3 if blk => {
+                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
+                    bstep_chunk_plus3(
+                        &s,
+                        qb,
+                        &g[r.clone()],
+                        p.slice(0, r.clone()),
+                        p.slice(1, r.clone()),
+                        p.slice(2, r.clone()),
+                        p.slice(3, r.clone()),
+                        p.slice(4, r.clone()),
+                        p.slice(5, r.clone()),
+                        p.slice(6, r),
+                    )
+                })
+            }
+            sch if blk => {
+                unreachable!("scheme {sch:?} rejected at block formats by PrecisionPlan::validate")
+            }
             Scheme::Plain => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
                 gstep_chunk_plain(
                     &s,

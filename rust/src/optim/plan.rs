@@ -35,8 +35,8 @@
 //! scheme  := "plain" | "collage-light" | "collage-light-3" | "collage-plus"
 //!          | "collage-plus-3" | "fp32-optim" | "fp32-mw" | "kahan" | "sr"
 //!          (+ aliases, see Scheme)
-//! format  := "fp32" | "fp16" | "bf16" | "fp8e4m3" | "fp8e5m2"
-//!          (+ aliases "f32", "half", "e4m3", "fp8", ... see FloatFormat)
+//! format  := "fp32" | "fp16" | "bf16" | "fp8e4m3" | "fp8e5m2" | "mxfp4"
+//!          (+ aliases "f32", "half", "e4m3", "fp8", "fp4", ... see FloatFormat)
 //! legacy  := "a" | "b" | "c" | "d" | "dmw" | "kahan" | "sr" | "fp32"
 //! ds      := pow2                   # static: δθ words stored ×2^pow2
 //!          | "auto"                 # adaptive k, default initial exponent
@@ -115,6 +115,40 @@
 //! assert!("plain@fp16+delta-scale=4".parse::<PrecisionPlan>().is_err());
 //! ```
 //!
+//! ## Block-scaled 4-bit rows (mxfp4)
+//!
+//! `format` also accepts the block-scaled `mxfp4` (OCP microscaling: 32
+//! E2M1 elements sharing one E8M0 power-of-two scale — see
+//! [`crate::numerics::block`]).  Block formats support the plain and
+//! Collage schemes, whose state words are exact f64 updates committed
+//! through the block quantizer; the element-wise rounding tricks
+//! (`kahan`, `sr`) and the fp32-sidecar schemes (`fp32-optim`,
+//! `fp32-mw`) are rejected at parse time — their semantics are defined
+//! by element-wise rounding chains that do not exist on a shared-scale
+//! grid.  Delta-scale suffixes are accepted on the MCF rows (E8M0's
+//! per-block scale already absorbs most of the dynamic range, so the
+//! controller mostly idles — the fp4 experiment grid measures this).
+//!
+//! ```
+//! use collage::optim::plan::PrecisionPlan;
+//!
+//! let p: PrecisionPlan = "collage-light-3@mxfp4+delta-scale=auto".parse().unwrap();
+//! assert_eq!((p.format.name, p.format.block), ("mxfp4", 32));
+//! assert_eq!(p.scheme.theta_components(), 3);
+//! assert_eq!(p.to_string(), "collage-light-3@mxfp4+delta-scale=auto");
+//!
+//! // "fp4" is an accepted alias; Display prints the canonical name.
+//! let q: PrecisionPlan = "plain@fp4".parse().unwrap();
+//! assert_eq!(q.to_string(), "plain@mxfp4");
+//!
+//! // Element-wise-only schemes are rejected at block formats...
+//! assert!("kahan@mxfp4".parse::<PrecisionPlan>().is_err());
+//! assert!("sr@mxfp4".parse::<PrecisionPlan>().is_err());
+//! assert!("fp32-mw@mxfp4".parse::<PrecisionPlan>().is_err());
+//! // ...including through the CLI --format override path.
+//! assert!(PrecisionPlan::parse_with_format("kahan", "mxfp4").is_err());
+//! ```
+//!
 //! ```
 //! use collage::numerics::format::{BF16, FP8E4M3};
 //! use collage::optim::plan::{PrecisionPlan, Scheme};
@@ -191,6 +225,19 @@ pub const ALL_SCHEMES: [Scheme; 9] = [
     Scheme::Fp32MasterWeights,
     Scheme::Kahan,
     Scheme::StochasticRounding,
+];
+
+/// The schemes block-scaled formats (mxfp4) support: the paths whose state
+/// words are exact f64 updates committed once through the block quantizer.
+/// Element-wise rounding tricks (`kahan`, `sr`) and fp32-sidecar schemes
+/// (`fp32-optim`, `fp32-mw`) have no shared-scale semantics and are
+/// rejected by [`PrecisionPlan::validate`].
+pub const BLOCK_SCHEMES: [Scheme; 5] = [
+    Scheme::Plain,
+    Scheme::CollageLight,
+    Scheme::CollageLight3,
+    Scheme::CollagePlus,
+    Scheme::CollagePlus3,
 ];
 
 impl Scheme {
@@ -477,6 +524,29 @@ impl PrecisionPlan {
         }
     }
 
+    /// Scheme × format compatibility: block-scaled formats ([`FloatFormat::block`]
+    /// ≠ 0, i.e. mxfp4) support exactly [`BLOCK_SCHEMES`].  Every plan
+    /// constructed from external input — [`FromStr`], the CLI `--format`
+    /// override, `RunConfig` JSON field overrides — passes through here,
+    /// so invalid cells are rejected at the boundary, not deep in a kernel.
+    pub fn validate(&self) -> Result<()> {
+        if self.format.block != 0 && !BLOCK_SCHEMES.contains(&self.scheme) {
+            bail!(
+                "scheme {} is not supported at block-scaled format {} \
+                 (supported: plain|collage-light[-3]|collage-plus[-3])",
+                self.scheme,
+                self.format.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Builder-style [`PrecisionPlan::validate`].
+    pub fn validated(self) -> Result<Self> {
+        self.validate()?;
+        Ok(self)
+    }
+
     /// Parse a CLI pair: a strategy/scheme string plus an optional
     /// `--format` override (empty string = no override).
     pub fn parse_with_format(strategy: &str, format: &str) -> Result<Self> {
@@ -485,7 +555,7 @@ impl PrecisionPlan {
             return Ok(base);
         }
         let fmt: FloatFormat = format.parse()?;
-        Ok(PrecisionPlan { format: fmt, ..base })
+        PrecisionPlan { format: fmt, ..base }.validated()
     }
 }
 
@@ -531,28 +601,30 @@ impl FromStr for PrecisionPlan {
         } else {
             PrecisionPlan::bf16(s.parse::<Scheme>()?)
         };
-        match suffix {
-            None => Ok(base),
-            Some("auto") => base.with_auto_delta_scale(DEFAULT_AUTO_DELTA_SCALE),
+        let plan = match suffix {
+            None => base,
+            Some("auto") => base.with_auto_delta_scale(DEFAULT_AUTO_DELTA_SCALE)?,
             Some(spec) => {
                 if let Some(k0) = spec.strip_prefix("auto:") {
                     let k0: u8 = k0.parse().map_err(|_| {
                         anyhow::anyhow!("bad delta-scale=auto exponent {k0:?}")
                     })?;
-                    return base.with_auto_delta_scale(k0);
+                    base.with_auto_delta_scale(k0)?
+                } else {
+                    let k: u8 = spec
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad delta-scale exponent {spec:?}"))?;
+                    if k == 0 {
+                        bail!(
+                            "delta-scale=0 is a no-op suffix Display never emits — \
+                             drop the suffix (or use delta-scale=auto)"
+                        );
+                    }
+                    base.with_delta_scale(k)?
                 }
-                let k: u8 = spec
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad delta-scale exponent {spec:?}"))?;
-                if k == 0 {
-                    bail!(
-                        "delta-scale=0 is a no-op suffix Display never emits — \
-                         drop the suffix (or use delta-scale=auto)"
-                    );
-                }
-                base.with_delta_scale(k)
             }
-        }
+        };
+        plan.validated()
     }
 }
 
@@ -573,7 +645,7 @@ impl fmt::Display for PrecisionPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::numerics::format::{ALL_FORMATS, FP16, FP8E4M3};
+    use crate::numerics::format::{ALL_FORMATS, FP16, FP8E4M3, MXFP4};
     use crate::optim::strategy::ALL_STRATEGIES;
 
     #[test]
@@ -703,8 +775,52 @@ mod tests {
                 }
             }
         }
-        // 5 formats × (9 schemes + 4 MCF schemes × 24 k × 2 modes).
-        assert_eq!(checked, 5 * (9 + 4 * 24 * 2));
+        // The block-scaled mxfp4 row sweeps its restricted scheme set.
+        for scheme in BLOCK_SCHEMES {
+            let base = PrecisionPlan::new(MXFP4, scheme);
+            check(base);
+            if scheme.is_mcf_params() {
+                for k in 1..=MAX_DELTA_SCALE {
+                    check(base.with_delta_scale(k).unwrap());
+                    check(base.with_auto_delta_scale(k).unwrap());
+                }
+            }
+        }
+        // 5 element-wise formats × (9 schemes + 4 MCF × 24 k × 2 modes),
+        // plus mxfp4 × (5 schemes + 4 MCF × 24 k × 2 modes).
+        assert_eq!(checked, 5 * (9 + 4 * 24 * 2) + (5 + 4 * 24 * 2));
+    }
+
+    #[test]
+    fn mxfp4_rows_validate_and_roundtrip() {
+        // The headline spelling parses, routes off the legacy kernels and
+        // round-trips (so CLI / RunConfig JSON / checkpoints all carry it).
+        let p: PrecisionPlan = "collage-light-3@mxfp4+delta-scale=auto".parse().unwrap();
+        assert_eq!((p.format, p.scheme), (MXFP4, Scheme::CollageLight3));
+        assert!(p.delta_auto);
+        assert_eq!(p.as_strategy(), None);
+        assert_eq!(p.to_string().parse::<PrecisionPlan>().unwrap(), p);
+        // Aliases normalize to the canonical name.
+        assert_eq!("light-3@fp4".parse::<PrecisionPlan>().unwrap().format, MXFP4);
+        assert_eq!("plain@mx4".parse::<PrecisionPlan>().unwrap().to_string(), "plain@mxfp4");
+        // Byte accounting at 1 B/word: light-3 = 5 state words + gradient.
+        let p = PrecisionPlan::new(MXFP4, Scheme::CollageLight3);
+        assert_eq!(p.bytes_per_param(), 6);
+        assert!(p.state_spec().iter().all(|(_, d)| *d == SemanticDtype::Mxfp4));
+        // The 4-bit format keeps the fp8-style ε floor.
+        assert_eq!(p.default_eps(), 1e-4);
+        // Unsupported schemes are rejected through every entry point:
+        // FromStr, suffixed spellings, --format override, and the builder
+        // validation RunConfig's JSON field overrides call.
+        for bad in ["kahan@mxfp4", "sr@mxfp4", "fp32-optim@mxfp4", "fp32-mw@mxfp4"] {
+            assert!(bad.parse::<PrecisionPlan>().is_err(), "{bad}");
+        }
+        assert!("kahan@mxfp4+delta-scale=4".parse::<PrecisionPlan>().is_err());
+        assert!(PrecisionPlan::parse_with_format("sr", "mxfp4").is_err());
+        assert!(PrecisionPlan::new(MXFP4, Scheme::Kahan).validated().is_err());
+        for scheme in BLOCK_SCHEMES {
+            assert!(PrecisionPlan::new(MXFP4, scheme).validate().is_ok(), "{scheme}");
+        }
     }
 
     #[test]

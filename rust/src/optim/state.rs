@@ -73,8 +73,14 @@ impl OptimState {
         let fmt = plan.format;
         if fmt.mantissa_bits != 23 {
             if let Some(theta) = st.get_mut("theta") {
-                for x in theta.iter_mut() {
-                    *x = fmt.round_nearest(*x);
+                if fmt.block != 0 {
+                    // Block-scaled formats quantize per 32-element block on
+                    // the global index grid, not element-wise.
+                    crate::numerics::block::quantize_slice_in_place(theta);
+                } else {
+                    for x in theta.iter_mut() {
+                        *x = fmt.round_nearest(*x);
+                    }
                 }
             }
         }
@@ -301,6 +307,13 @@ impl OptimState {
                     vec[idx],
                     fmt.name
                 );
+            }
+            // Element-wise representability is necessary but not
+            // sufficient for block formats: the vector must also be a
+            // fixpoint of the 32-element block quantizer (every block's
+            // elements lie on the grid its own max-abs selects).
+            if fmt.block != 0 && !crate::numerics::block::block_consistent(vec) {
+                bail!("state vector {name:?} is not consistent on the {} block grid", fmt.name);
             }
         }
         Ok(())

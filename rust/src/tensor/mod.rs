@@ -5,17 +5,19 @@
 
 use anyhow::{bail, Result};
 
-use crate::numerics::format::{FloatFormat, BF16, FP16, FP32, FP8E4M3, FP8E5M2};
+use crate::numerics::format::{FloatFormat, BF16, FP16, FP32, FP8E4M3, FP8E5M2, MXFP4};
 
 /// Semantic storage dtype of an f32-containerized tensor — one variant per
 /// [`FloatFormat`] the optimizer-state layer can store (the `PrecisionPlan`
-/// space: bf16 plus the §6 sub-16-bit extensions).
+/// space: bf16 plus the §6 sub-16-bit extensions, and the block-scaled
+/// mxfp4 rows).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SemanticDtype {
     Bf16,
     Fp16,
     Fp8E4M3,
     Fp8E5M2,
+    Mxfp4,
     Fp32,
 }
 
@@ -26,6 +28,7 @@ impl SemanticDtype {
             SemanticDtype::Fp16 => FP16,
             SemanticDtype::Fp8E4M3 => FP8E4M3,
             SemanticDtype::Fp8E5M2 => FP8E5M2,
+            SemanticDtype::Mxfp4 => MXFP4,
             SemanticDtype::Fp32 => FP32,
         }
     }
@@ -39,6 +42,7 @@ impl SemanticDtype {
             "fp16" => SemanticDtype::Fp16,
             "fp8e4m3" => SemanticDtype::Fp8E4M3,
             "fp8e5m2" => SemanticDtype::Fp8E5M2,
+            "mxfp4" => SemanticDtype::Mxfp4,
             _ => SemanticDtype::Fp32,
         }
     }
@@ -53,6 +57,7 @@ impl SemanticDtype {
             "fp16" | "f16" => SemanticDtype::Fp16,
             "fp8e4m3" => SemanticDtype::Fp8E4M3,
             "fp8e5m2" => SemanticDtype::Fp8E5M2,
+            "mxfp4" | "fp4" => SemanticDtype::Mxfp4,
             "fp32" | "f32" => SemanticDtype::Fp32,
             other => bail!("unknown semantic dtype {other:?}"),
         })
@@ -98,9 +103,15 @@ impl Tensor {
     }
 
     /// Quantize all elements into the semantic format (idempotent).
+    /// Block-scaled dtypes quantize per 32-element block on the global
+    /// index grid (see `numerics::block`), not element-wise.
     pub fn quantize(&mut self) {
         let fmt = self.dtype.format();
         if fmt.mantissa_bits == 23 {
+            return;
+        }
+        if fmt.block != 0 {
+            crate::numerics::block::quantize_slice_in_place(&mut self.data);
             return;
         }
         for v in &mut self.data {

@@ -1,0 +1,352 @@
+//! Tier-1 conformance suite for block-scaled MXFP4 quantization
+//! (`numerics::block`): the exhaustive 4-bit sweep — all 16 E2M1 code
+//! points × every E8M0 block scale × boundary/tie inputs — checking the
+//! fast path bitwise against the reference quantizer, plus property tests
+//! for the shared-scale selection rule.
+//!
+//! The property tests draw `COLLAGE_PROPTEST_CASES` cases (default 256)
+//! through `util::proptest::check`, so CI can dial the budget.
+
+use collage::numerics::block::{
+    block_scale_exp, decode, encode_element, quantize_block, quantize_block_reference,
+    quantize_element, select_scale_exp, E2M1_MAGNITUDES, BLOCK, SCALE_E_MAX, SCALE_E_MIN,
+};
+use collage::numerics::format::MXFP4;
+use collage::util::proptest::{check, check_msg};
+use collage::util::rng::Rng;
+
+/// Bitwise block comparison (NaN ≡ NaN).
+fn assert_bits_eq(fast: &[f32], slow: &[f32], ctx: &str) {
+    for (i, (a, b)) in fast.iter().zip(slow).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+            "{ctx}: element {i}: fast {a:e} ({:08x}) != reference {b:e} ({:08x})",
+            a.to_bits(),
+            b.to_bits()
+        );
+    }
+}
+
+/// Quantize through both implementations, assert bitwise agreement
+/// (scale exponent and every element), and return the fast result.
+fn both(x: &[f64], ctx: &str) -> (Option<i32>, Vec<f32>) {
+    let mut fast = vec![0.0f32; x.len()];
+    let mut slow = vec![0.0f32; x.len()];
+    let ef = quantize_block(x, &mut fast);
+    let es = quantize_block_reference(x, &mut slow);
+    assert_eq!(ef, es, "{ctx}: scale exponents disagree");
+    assert_bits_eq(&fast, &slow, ctx);
+    (ef, fast)
+}
+
+/// All 16 code points at every legal block scale: decoding then
+/// requantizing (with the scale pinned by a `6·2^e` max element) must be
+/// the identity, bitwise, through BOTH implementations, and the 4-bit
+/// encode must round-trip the code.
+#[test]
+fn exhaustive_codes_times_scales_roundtrip() {
+    for e in SCALE_E_MIN..=SCALE_E_MAX {
+        // One block holding every code point plus the scale pin (6·2^e
+        // keeps floor(log2 max) − 2 == e without disturbing the grid).
+        let pin = 6.0 * 2f64.powi(e);
+        let decoded: Vec<f32> = (0u8..16).map(|c| decode(c, e)).collect();
+        let mut x: Vec<f64> = decoded.iter().map(|&v| v as f64).collect();
+        x.push(pin);
+        let (scale, q) = both(&x, &format!("codes at e={e}"));
+        assert_eq!(scale, Some(e), "pin failed to hold the scale at e={e}");
+        for (c, (&orig, &requant)) in decoded.iter().zip(&q).enumerate() {
+            assert_eq!(
+                requant.to_bits(),
+                orig.to_bits(),
+                "code {c} at e={e}: decode→requantize not identity ({orig:e} → {requant:e})"
+            );
+            // The element-wise pinned-scale path and the 4-bit encoding
+            // agree with the block path.
+            assert_eq!(quantize_element(orig as f64, e).to_bits(), orig.to_bits());
+            assert_eq!(encode_element(orig as f64, e), c as u8, "e={e}");
+            // Every decodable value sits on MXFP4's element-wise grid.
+            assert!(MXFP4.representable(orig), "code {c} at e={e}: {orig:e}");
+        }
+    }
+}
+
+/// Boundary and tie inputs at every scale: the documented round-to-
+/// nearest-even-mantissa table, the clamp zone past `6·2^e`, and the
+/// nearly-tied neighbors one ulp off each midpoint — fast ≡ reference
+/// bitwise throughout, and the committed values match the table.
+#[test]
+fn exhaustive_ties_and_boundaries_at_every_scale() {
+    // (scaled input magnitude, expected committed magnitude); ties land
+    // on the even mantissa codes {0, 1, 2, 4}.
+    let table: [(f64, f64); 16] = [
+        (0.25, 0.0),
+        (0.2500000000000001, 0.5),
+        (0.749, 0.5),
+        (0.75, 1.0),
+        (1.25, 1.0),
+        (1.2500000000000002, 1.5),
+        (1.749, 1.5),
+        (1.75, 2.0),
+        (2.5, 2.0),
+        (2.5000000000000004, 3.0),
+        (3.499, 3.0),
+        (3.5, 4.0),
+        (5.0, 4.0),
+        (5.000000000000001, 6.0),
+        (6.0, 6.0),
+        (7.999, 6.0), // clamp zone: only the block max can live here
+    ];
+    for e in SCALE_E_MIN..=SCALE_E_MAX {
+        let scale = 2f64.powi(e);
+        let pin = 6.0 * scale;
+        for &(m, want) in &table {
+            let x = [pin, m * scale, -m * scale];
+            let (se, q) = both(&x, &format!("tie m={m} e={e}"));
+            assert_eq!(se, Some(e), "m={m} e={e}");
+            let w = (want * scale) as f32;
+            assert_eq!(q[1].to_bits(), w.to_bits(), "m={m} e={e}: got {:e}", q[1]);
+            assert_eq!(q[2].to_bits(), (-w).to_bits(), "-m={m} e={e}");
+            // Zero results must keep the input's sign.
+            if want == 0.0 {
+                assert!(q[1].is_sign_positive() && q[2].is_sign_negative(), "m={m} e={e}");
+            }
+        }
+    }
+}
+
+/// Every element-wise MXFP4-representable value is a fixpoint of block
+/// quantization as a singleton block (the union-of-block-grids ==
+/// element-grid direction the module docs pin): sweep the entire finite
+/// element grid, both signs.
+#[test]
+fn element_grid_is_union_of_block_grids() {
+    let mut grid: Vec<f32> = vec![0.0];
+    // Normals {1, 1.5}·2^f down to the single subnormal step 2⁻¹²⁷.
+    for f in -126..=127 {
+        grid.push((2f64.powi(f)) as f32);
+        grid.push((1.5 * 2f64.powi(f)) as f32);
+    }
+    grid.push(2f32.powi(-127));
+    for v in grid {
+        for s in [v, -v] {
+            assert!(MXFP4.representable(s), "grid construction: {s:e}");
+            let (e, q) = both(&[s as f64], &format!("singleton {s:e}"));
+            assert!(e.is_some());
+            assert_eq!(
+                q[0].to_bits(),
+                s.to_bits(),
+                "representable {s:e} not a block-quantization fixpoint (got {:e})",
+                q[0]
+            );
+        }
+    }
+}
+
+/// Random full blocks over wild magnitudes: fast ≡ reference bitwise and
+/// the selected scale matches `block_scale_exp`.
+#[test]
+fn prop_fast_matches_reference() {
+    check_msg(
+        "fast-equals-reference",
+        |rng: &mut Rng| {
+            let decade = rng.below(77) as i32 - 38;
+            let mut x = [0.0f64; BLOCK];
+            for v in x.iter_mut() {
+                *v = rng.normal() * 10f64.powi(decade);
+            }
+            // Sprinkle exact powers of two and zeros — the tie corners.
+            for _ in 0..4 {
+                let i = rng.below(BLOCK as u64) as usize;
+                x[i] = 2f64.powi(rng.below(80) as i32 - 40);
+            }
+            x[rng.below(BLOCK as u64) as usize] = 0.0;
+            x
+        },
+        |x| {
+            let mut fast = [0.0f32; BLOCK];
+            let mut slow = [0.0f32; BLOCK];
+            let ef = quantize_block(x, &mut fast);
+            let es = quantize_block_reference(x, &mut slow);
+            if ef != es {
+                return Err(format!("scales {ef:?} != {es:?}"));
+            }
+            if ef != block_scale_exp(x) {
+                return Err(format!("block_scale_exp disagrees: {:?}", block_scale_exp(x)));
+            }
+            for i in 0..BLOCK {
+                if fast[i].to_bits() != slow[i].to_bits() {
+                    return Err(format!("element {i}: {:e} != {:e}", fast[i], slow[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The shared scale depends on a block only through its max-abs: it is
+/// invariant under any permutation of the elements.
+#[test]
+fn prop_scale_permutation_invariant() {
+    check(
+        "scale-permutation-invariant",
+        |rng: &mut Rng| {
+            let mut x = [0.0f64; BLOCK];
+            let decade = rng.below(61) as i32 - 30;
+            for v in x.iter_mut() {
+                *v = rng.normal() * 10f64.powi(decade);
+            }
+            let mut perm = x;
+            rng.shuffle(&mut perm);
+            (x, perm)
+        },
+        |(x, perm)| block_scale_exp(x) == block_scale_exp(perm),
+    );
+}
+
+/// `select_scale_exp` is monotone in the block max-abs (and agrees with
+/// the clamped floor-log2 rule on exact powers of two).
+#[test]
+fn prop_scale_monotone_in_max() {
+    check(
+        "scale-monotone",
+        |rng: &mut Rng| {
+            let a = rng.normal().abs() * 10f64.powi(rng.below(77) as i32 - 38);
+            let b = rng.normal().abs() * 10f64.powi(rng.below(77) as i32 - 38);
+            if a <= b { (a, b) } else { (b, a) }
+        },
+        // The all-zero pin (exponent 0) is a deliberate special case, so
+        // monotonicity is stated over nonzero maxima.
+        |&(lo, hi)| lo == 0.0 || select_scale_exp(lo) <= select_scale_exp(hi),
+    );
+    // Exact powers of two: the fast exponent-field read must equal the
+    // arithmetic rule everywhere, including both clamp ends.
+    for f in -300..=300 {
+        let e = select_scale_exp(2f64.powi(f));
+        assert_eq!(e, (f - 2).clamp(SCALE_E_MIN, SCALE_E_MAX), "2^{f}");
+    }
+}
+
+/// Pinned degenerate blocks: all-zero keeps signs and scale 0; a lone
+/// subnormal clamps to `SCALE_E_MIN`; any NaN/inf poisons the whole block
+/// in both implementations.
+#[test]
+fn prop_pinned_degenerate_blocks() {
+    // All-zero with random sign pattern: scale 0, every element ±0 with
+    // its input sign.
+    check_msg(
+        "all-zero-block",
+        |rng: &mut Rng| {
+            let mut x = [0.0f64; BLOCK];
+            for v in x.iter_mut() {
+                if rng.below(2) == 1 {
+                    *v = -0.0;
+                }
+            }
+            x
+        },
+        |x| {
+            let (e, q) = {
+                let mut fast = vec![0.0f32; BLOCK];
+                let e = quantize_block(x, &mut fast);
+                (e, fast)
+            };
+            if e != Some(0) {
+                return Err(format!("scale {e:?}"));
+            }
+            for i in 0..BLOCK {
+                if q[i] != 0.0 || q[i].is_sign_negative() != x[i].is_sign_negative() {
+                    return Err(format!("element {i}: {:e} from {:e}", q[i], x[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+    // A single subnormal-range magnitude among zeros: scale clamps to the
+    // floor and the survivor rounds on the 2⁻¹²⁷ grid.
+    check_msg(
+        "single-subnormal-block",
+        |rng: &mut Rng| {
+            let i = rng.below(BLOCK as u64) as usize;
+            let mag = 2f64.powi(-(127 + rng.below(40) as i32));
+            (i, mag)
+        },
+        |&(i, mag)| {
+            let mut x = [0.0f64; BLOCK];
+            x[i] = mag;
+            let mut fast = [0.0f32; BLOCK];
+            let e = quantize_block(&x, &mut fast);
+            if e != Some(SCALE_E_MIN) {
+                return Err(format!("scale {e:?} != floor"));
+            }
+            // On the floor grid the only candidates are 0 and k·2⁻¹²⁷.
+            let want = quantize_element(mag, SCALE_E_MIN);
+            if fast[i].to_bits() != want.to_bits() {
+                return Err(format!("{:e} != {want:e}", fast[i]));
+            }
+            Ok(())
+        },
+    );
+    // NaN- or inf-bearing blocks: scale None, all elements NaN, in both
+    // implementations.
+    check_msg(
+        "nan-bearing-block",
+        |rng: &mut Rng| {
+            let mut x = [0.0f64; BLOCK];
+            for v in x.iter_mut() {
+                *v = rng.normal();
+            }
+            let bad = match rng.below(3) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                _ => f64::NEG_INFINITY,
+            };
+            x[rng.below(BLOCK as u64) as usize] = bad;
+            x
+        },
+        |x| {
+            let mut fast = [0.0f32; BLOCK];
+            let mut slow = [0.0f32; BLOCK];
+            if quantize_block(x, &mut fast).is_some() {
+                return Err("fast scale not None".into());
+            }
+            if quantize_block_reference(x, &mut slow).is_some() {
+                return Err("reference scale not None".into());
+            }
+            if !fast.iter().chain(&slow).all(|v| v.is_nan()) {
+                return Err("non-NaN element in poisoned block".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Short blocks (a vector tail of length n % 32) behave identically to
+/// full blocks truncated at the same elements.
+#[test]
+fn short_blocks_match_prefixes() {
+    let mut rng = Rng::new(0xB10C_F7, 0);
+    for _ in 0..200 {
+        let mut x = [0.0f64; BLOCK];
+        for v in x.iter_mut() {
+            *v = rng.normal() * 4.0;
+        }
+        for w in [1usize, 2, 7, 31] {
+            // A short block is its own scale domain: quantize the prefix
+            // directly and check fast ≡ reference on it.
+            let (e, q) = both(&x[..w], &format!("short block w={w}"));
+            assert_eq!(e, block_scale_exp(&x[..w]));
+            assert_eq!(q.len(), w);
+        }
+    }
+}
+
+/// `E2M1_MAGNITUDES` is the documented grid in the documented order
+/// (even indices = even mantissa codes, the tie winners).
+#[test]
+fn magnitude_table_is_pinned() {
+    assert_eq!(E2M1_MAGNITUDES, [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    assert_eq!(MXFP4.max_finite(), 6.0 * 2f64.powi(SCALE_E_MAX));
+    assert_eq!(BLOCK, 32);
+    // Blocks never straddle accumulation chunks.
+    assert_eq!(collage::numerics::analysis::ACCUM_CHUNK % BLOCK, 0);
+}

@@ -290,6 +290,85 @@ fn sharded_is_invariant_across_worker_counts() {
 }
 
 #[test]
+fn mxfp4_block_plans_fused_match_oracle_all_sizes_and_workers() {
+    // The block-scaled rows: the fused chunk kernels quantize through the
+    // fast block quantizer, the oracle through the reference scan — bitwise
+    // agreement here transitively proves the fast quantizer conforms inside
+    // the full update.  Sizes 31/32/33 pin the short-tail / exactly-one-
+    // block / one-block-plus-tail boundary handling; 40_000 spans chunks.
+    use collage::numerics::format::MXFP4;
+    use collage::optim::plan::BLOCK_SCHEMES;
+    for &scheme in BLOCK_SCHEMES.iter() {
+        let plan = PrecisionPlan::new(MXFP4, scheme);
+        for n in [1usize, 31, 32, 33, 1023, 4097] {
+            for workers in [1usize, 2, 8] {
+                compare_paths(plan, n, workers, 2);
+            }
+        }
+        for workers in [1usize, 2, 8] {
+            compare_paths(plan, 40_000, workers, 2);
+        }
+    }
+    // Loss-scaled δθ and the adaptive controller ride the same block
+    // kernels with the live exponent injected.
+    for plan in [
+        PrecisionPlan::new(MXFP4, Scheme::CollageLight).with_delta_scale(8).unwrap(),
+        PrecisionPlan::new(MXFP4, Scheme::CollageLight3).with_delta_scale(8).unwrap(),
+        PrecisionPlan::new(MXFP4, Scheme::CollagePlus3).with_delta_scale(6).unwrap(),
+        PrecisionPlan::new(MXFP4, Scheme::CollageLight).with_auto_delta_scale(8).unwrap(),
+        PrecisionPlan::new(MXFP4, Scheme::CollageLight3).with_auto_delta_scale(2).unwrap(),
+    ] {
+        for n in [31usize, 33, 1023, 4097] {
+            for workers in [1usize, 2, 8] {
+                compare_paths(plan, n, workers, 2);
+            }
+        }
+    }
+}
+
+#[test]
+fn mxfp4_grammar_roundtrips_and_rejects() {
+    // FromStr → Display is the identity on the canonical mxfp4 spellings
+    // (the checkpoint header and RunConfig JSON both persist the Display
+    // string, so exact round-tripping is a compatibility contract).
+    for s in [
+        "plain@mxfp4",
+        "collage-light@mxfp4",
+        "collage-light-3@mxfp4",
+        "collage-plus@mxfp4",
+        "collage-plus-3@mxfp4",
+        "collage-light@mxfp4+delta-scale=8",
+        "collage-light-3@mxfp4+delta-scale=auto",
+        "collage-light-3@mxfp4+delta-scale=auto:12",
+    ] {
+        let plan: PrecisionPlan = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+        assert_eq!(plan.to_string(), s, "Display not canonical for {s}");
+        assert_eq!(plan.format.block, 32, "{s}");
+        assert_eq!(plan, plan.to_string().parse::<PrecisionPlan>().unwrap(), "{s}");
+        assert!(plan.as_strategy().is_none(), "{s}: block plans are never legacy");
+    }
+    // Format aliases normalize to the canonical spelling.
+    for alias in ["collage-light-3@fp4", "collage-light-3@mx4"] {
+        let plan: PrecisionPlan = alias.parse().unwrap();
+        assert_eq!(plan.to_string(), "collage-light-3@mxfp4", "{alias}");
+    }
+    // Schemes outside BLOCK_SCHEMES are rejected at parse time, through
+    // both the combined spelling and the CLI --format override path.
+    for bad in [
+        "kahan@mxfp4",
+        "sr@mxfp4",
+        "fp32-optim@mxfp4",
+        "fp32-mw@mxfp4",
+        "kahan@mxfp4+delta-scale=4",
+        "plain@mxfp5",
+    ] {
+        assert!(bad.parse::<PrecisionPlan>().is_err(), "{bad} should not parse");
+    }
+    assert!(PrecisionPlan::parse_with_format("kahan", "mxfp4").is_err());
+    assert!(PrecisionPlan::parse_with_format("d", "fp4").is_err());
+}
+
+#[test]
 fn prop_fp8_e4m3_saturating_state_never_goes_inf() {
     // E4M3 has no infinities (overflow saturates to ±448): no matter how
     // violent the gradients or how large the parameters, every vector of

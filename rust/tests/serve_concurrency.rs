@@ -156,6 +156,93 @@ fn concurrent_runs_match_serial_bitwise() {
     server.join().unwrap();
 }
 
+/// A block-scaled mxfp4 tenant is a first-class citizen of the service:
+/// its rows and final state digest are bit-identical whether it runs
+/// alone, at any worker count, or concurrently with an elementwise-format
+/// tenant sharing the pool (block quantization rides the same chunk grid,
+/// so the scheduler interleaving cannot perturb it).
+#[test]
+fn mxfp4_tenant_matches_serial_bitwise_under_concurrency() {
+    let plan_a = "collage-light-3@mxfp4+delta-scale=auto";
+    let cfg_a = ProxyConfig {
+        plan: plan_a.parse().unwrap(),
+        n: 259, // 8 full blocks + a short tail block of 3
+        steps: 20,
+        seed: 13,
+        workers: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    let serial_a = proxy::run(&cfg_a).unwrap();
+    for workers in [1usize, 8] {
+        let o = proxy::run(&ProxyConfig { workers, ..cfg_a.clone() }).unwrap();
+        assert_eq!(
+            o.state_digest, serial_a.state_digest,
+            "mxfp4 digest changed at workers={workers}"
+        );
+        assert_rows_bit_identical(o.log.rows(), serial_a.log.rows(), "mxfp4 workers");
+    }
+
+    let (addr, server) =
+        spawn_server(ServeConfig { max_runs: 2, max_inflight: 2, ..Default::default() });
+    // The mxfp4 run and a bf16 neighbor in flight at once.
+    let ha = {
+        let addr = addr.clone();
+        let plan = plan_a.to_string();
+        let cfg = cfg_a.clone();
+        thread::spawn(move || {
+            let mut c = Obj::new();
+            c.insert("n", cfg.n as u64);
+            c.insert("steps", cfg.steps);
+            c.insert("seed", cfg.seed);
+            c.insert("workers", cfg.workers as u64);
+            submit(&addr, &build_request(&plan, c, None, None)).unwrap()
+        })
+    };
+    let mut c = Obj::new();
+    c.insert("n", 192u64);
+    c.insert("steps", 15u64);
+    c.insert("workers", 1u64);
+    let (out_b, _) = submit(&addr, &build_request("collage-plus", c, None, None)).unwrap();
+    out_b.into_done().unwrap();
+    let (out_a, events_a) = ha.join().unwrap();
+    let done_a = out_a.into_done().unwrap();
+    assert_rows_bit_identical(&step_rows(&events_a), serial_a.log.rows(), "mxfp4 served");
+    assert_eq!(done_a.state_digest, serial_a.state_digest, "mxfp4 served state digest");
+    assert_eq!(done_a.final_loss.to_bits(), serial_a.final_loss.to_bits(), "mxfp4 final loss");
+    server.join().unwrap();
+}
+
+/// Malformed mxfp4 plan spellings are rejected with the existing typed
+/// `bad-field` error naming the plan field — scheme × block-format rules
+/// included — and the connection-isolated server stays healthy.
+#[test]
+fn malformed_mxfp4_plans_are_bad_field_errors() {
+    let (addr, server) = spawn_server(ServeConfig { max_runs: 4, ..Default::default() });
+    for bad in [
+        "kahan@mxfp4",                        // scheme outside BLOCK_SCHEMES
+        "fp32-mw@mxfp4",                      // ditto, via the master-weights row
+        "collage-light@mxfp4+delta-scale=0",  // explicit zero exponent is rejected
+        "plain@mxfp5",                        // unknown format
+    ] {
+        let req = build_request(bad, Obj::new(), None, None);
+        let (out, _) = submit(&addr, &req).unwrap();
+        let (code, msg) = out.error.unwrap_or_else(|| panic!("{bad}: expected typed error"));
+        assert_eq!(code, "bad-field", "{bad}");
+        assert!(msg.contains("plan"), "{bad}: error names the field: {msg}");
+    }
+    // Still healthy afterwards: a valid mxfp4 run completes on the same server.
+    let mut c = Obj::new();
+    c.insert("n", 64u64);
+    c.insert("steps", 4u64);
+    c.insert("workers", 1u64);
+    let (out, events) =
+        submit(&addr, &build_request("collage-light@mxfp4", c, None, None)).unwrap();
+    assert_eq!(out.into_done().unwrap().steps, 4);
+    assert_eq!(step_rows(&events).len(), 4);
+    server.join().unwrap();
+}
+
 /// Malformed and oversized requests die with a typed error event on their
 /// own connection; the server keeps accepting and a valid run afterwards
 /// is unaffected.
