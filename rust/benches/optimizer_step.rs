@@ -13,7 +13,8 @@
 //!
 //! ... plus the format-generic kernel rows (FP16 / FP8-E4M3 / FP8-E5M2 /
 //! block-scaled MXFP4 × plain/light/plus plans through the same fused
-//! `AdamW::step`).
+//! `AdamW::step`), plus the compressed-allreduce codec rows (`dp-proc`'s
+//! error-feedback encode+decode per wire format, ns/elem and bytes/elem).
 //!
 //! Emits `BENCH_optimizer_step.json` (strategy → median ns/elem, speedup
 //! vs option D; per-format generic-kernel rows under `generic_formats`) so
@@ -27,7 +28,7 @@ use collage::coordinator::config::RunConfig;
 use collage::coordinator::trainer::Trainer;
 use collage::numerics::expansion::rn_bf16;
 use collage::numerics::block::quantize_slice_in_place;
-use collage::numerics::format::{FP16, FP8E4M3, FP8E5M2, MXFP4};
+use collage::numerics::format::{BF16, FP16, FP8E4M3, FP8E5M2, MXFP4};
 use collage::optim::adamw::AdamW;
 use collage::optim::plan::{PrecisionPlan, Scheme};
 use collage::optim::state::OptimState;
@@ -212,11 +213,52 @@ fn main() {
         }
     }
 
+    // ---- compressed-allreduce codec (dp-proc's wire path) ------------------
+    // One full round per case: encode `n` gradient elements through the
+    // error-feedback residual, then decode them back — the per-element cost
+    // a dp-proc rank pays on top of the optimizer step.  Bytes/elem is the
+    // wire width (the payload carries no headers or scales).
+    let ar_n = n.min(1 << 18);
+    println!("\n== compressed allreduce codec (encode+decode), {ar_n} params ==");
+    let mut allreduce_obj = Obj::new();
+    let mut ar_table = Table::new("compressed allreduce: error-feedback codec cost");
+    ar_table.header(&["wire", "ns/elem", "bytes/elem", "vs f32 bytes"]);
+    for fmt in [BF16, FP16, FP8E4M3, FP8E5M2] {
+        let g_w: Vec<f32> = g[..ar_n].to_vec();
+        let mut ef = collage::parallel::compress::ErrorFeedback::new(ar_n);
+        let mut blob = Vec::with_capacity(ar_n * fmt.bytes);
+        let mut decoded = Vec::with_capacity(ar_n);
+        let secs = bench
+            .case_items(format!("allreduce/{}", fmt.name), ar_n as f64, || {
+                blob.clear();
+                ef.encode_segment(&fmt, 0, &g_w, &mut blob);
+                decoded.clear();
+                collage::parallel::compress::decode_segment(&fmt, &blob, &mut decoded).unwrap();
+                decoded.len()
+            })
+            .median
+            .as_secs_f64();
+        let ns = secs * 1e9 / ar_n as f64;
+        ar_table.row(vec![
+            fmt.name.to_string(),
+            fnum(ns, 2),
+            fmt.bytes.to_string(),
+            fnum(4.0 / fmt.bytes as f64, 1) + "x",
+        ]);
+        let mut o = Obj::new();
+        o.insert("ns_per_elem", ns);
+        o.insert("bytes_per_elem", fmt.bytes);
+        allreduce_obj.insert(fmt.name, Value::Obj(o));
+    }
+    println!();
+    ar_table.print();
+
     if let Err(e) = bench.write_json(
         "BENCH_optimizer_step.json",
         [
             ("table7".to_string(), Value::Obj(summary)),
             ("generic_formats".to_string(), Value::Obj(generic_obj)),
+            ("compressed_allreduce".to_string(), Value::Obj(allreduce_obj)),
         ],
     ) {
         eprintln!("could not write BENCH_optimizer_step.json: {e}");

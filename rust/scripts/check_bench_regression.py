@@ -26,17 +26,25 @@ import sys
 
 
 def fused_rows(doc):
-    """Flatten {row-name: fused ns/elem} from the bench JSON."""
+    """Flatten {row-name: fused ns/elem} from the bench JSON.
+
+    Non-dict entries (e.g. an embedded ``_comment`` string) are skipped,
+    not crashed on — baselines carry prose next to their numbers.
+    """
     rows = {}
-    strategies = doc.get("table7", {}).get("strategies", {})
-    for name, obj in strategies.items():
-        v = obj.get("fused_ns_per_elem")
-        if isinstance(v, (int, float)):
-            rows[f"strategy/{name}"] = float(v)
-    for name, obj in doc.get("generic_formats", {}).items():
-        v = obj.get("fused_ns_per_elem")
-        if isinstance(v, (int, float)):
-            rows[f"format/{name}"] = float(v)
+
+    def scan(section, prefix, field):
+        for name, obj in section.items():
+            if not isinstance(obj, dict):
+                continue
+            v = obj.get(field)
+            if isinstance(v, (int, float)):
+                rows[f"{prefix}/{name}"] = float(v)
+
+    scan(doc.get("table7", {}).get("strategies", {}), "strategy",
+         "fused_ns_per_elem")
+    scan(doc.get("generic_formats", {}), "format", "fused_ns_per_elem")
+    scan(doc.get("compressed_allreduce", {}), "allreduce", "ns_per_elem")
     return rows
 
 

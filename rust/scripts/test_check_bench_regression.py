@@ -28,13 +28,16 @@ SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                       "check_bench_regression.py")
 
 
-def bench_doc(strategies=None, formats=None):
+def bench_doc(strategies=None, formats=None, allreduce=None):
     """Build a minimal bench JSON document in the gate's schema."""
-    doc = {"table7": {"strategies": {}}, "generic_formats": {}}
+    doc = {"table7": {"strategies": {}}, "generic_formats": {},
+           "compressed_allreduce": {}}
     for name, ns in (strategies or {}).items():
         doc["table7"]["strategies"][name] = {"fused_ns_per_elem": ns}
     for name, ns in (formats or {}).items():
         doc["generic_formats"][name] = {"fused_ns_per_elem": ns}
+    for name, ns in (allreduce or {}).items():
+        doc["compressed_allreduce"][name] = {"ns_per_elem": ns}
     return doc
 
 
@@ -99,6 +102,18 @@ class GateTest(unittest.TestCase):
         code, out = self.run_gate(base, cand)
         self.assertEqual(code, 2, out)
         self.assertIn("no comparable", out)
+
+    def test_allreduce_rows_are_gated(self):
+        # The compressed-allreduce codec rows ride the same gate: a big
+        # encode/decode slowdown fails, and the rows flatten under their
+        # own namespace so they can never collide with kernel rows.
+        base = bench_doc({"collage-plus": 8.0}, allreduce={"fp8e4m3": 6.0})
+        cand = bench_doc({"collage-plus": 8.0}, allreduce={"fp8e4m3": 30.0})
+        code, out = self.run_gate(base, cand, "--tolerance", "0.25")
+        self.assertEqual(code, 1, out)
+        self.assertIn("allreduce/fp8e4m3", out)
+        code, out = self.run_gate(base, base)
+        self.assertEqual(code, 0, out)
 
     def test_candidate_only_rows_never_fail(self):
         # Adding kernels (new strategies/formats in the bench) must not

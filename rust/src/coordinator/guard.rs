@@ -50,6 +50,25 @@
 //! `"on"` (all defaults) or a comma-separated `key=value` list over
 //! `window`, `spike-factor`, `update-factor`, `max-rollbacks`,
 //! `cooldown`, `skip`, `k-backoff`, `retain-every`.
+//!
+//! ```
+//! use collage::coordinator::guard::GuardConfig;
+//!
+//! // "on" is the validated default tuning, and prints back as "on".
+//! let on: GuardConfig = "on".parse().unwrap();
+//! assert_eq!(on, GuardConfig::default());
+//! assert_eq!(on.to_string(), "on");
+//!
+//! // Overrides merge into the defaults and round-trip through Display
+//! // (which is what RunConfig JSON and the serve protocol carry).
+//! let g: GuardConfig = "window=8,update-factor=3,skip=32".parse().unwrap();
+//! assert_eq!((g.window, g.skip), (8, 32));
+//! assert_eq!(g.to_string().parse::<GuardConfig>().unwrap(), g);
+//!
+//! // Nonsense thresholds and unknown keys are errors, never defaults.
+//! assert!("spike-factor=1".parse::<GuardConfig>().is_err());
+//! assert!("verbosity=9".parse::<GuardConfig>().is_err());
+//! ```
 
 use std::fmt;
 use std::str::FromStr;

@@ -29,6 +29,24 @@
 //! ```
 //!
 //! `collage train --fault ...` accepts a `;`-separated list of these.
+//!
+//! ```
+//! use collage::data::faults::{FaultKind, FaultSpec};
+//!
+//! let spec: FaultSpec =
+//!     "outlier-burst:start=230,window=16,scale=12,frac-ppm=300000".parse().unwrap();
+//! assert_eq!((spec.start, spec.window), (230, 16));
+//! assert_eq!(spec.kind, FaultKind::OutlierBurst { scale_exp: 12, frac_ppm: 300_000 });
+//! // The spelling round-trips, like the plan and guard grammars.
+//! assert_eq!(spec.to_string().parse::<FaultSpec>().unwrap(), spec);
+//!
+//! // `--fault` takes a `;`-separated list; unknown kinds are errors.
+//! let specs = FaultSpec::parse_list(
+//!     "loss-spike:start=150,window=8,scale=8; update-shrink:start=200,window=60,scale=6",
+//! ).unwrap();
+//! assert_eq!(specs.len(), 2);
+//! assert!("meteor-strike:start=1".parse::<FaultSpec>().is_err());
+//! ```
 
 use std::fmt;
 use std::str::FromStr;

@@ -30,7 +30,7 @@
 //! | [`model`] | transformer shapes + the analytic memory model | Tables 2/8/12 |
 //! | [`data`] | synthetic + GLUE-style corpora, deterministic batch iterator | §5 setup |
 //! | [`runtime`] | PJRT client/executable wrappers + artifact manifest | — |
-//! | [`parallel`] | data-parallel runtime: per-rank workers, deterministic all-reduce ([`parallel::allreduce`]), sharded optimizer | §5 (training speed) |
+//! | [`parallel`] | data-parallel runtime: threaded workers, deterministic all-reduce ([`parallel::allreduce`]), and the multi-process rank runtime ([`parallel::proc`], `collage dp-proc`) — ZeRO-style chunk-grid state sharding ([`parallel::sharding::rank_regions`]) with fp8 error-feedback compressed gradient exchange ([`parallel::compress`]) | §5 (training speed); §6 (8-bit regime) |
 //! | [`coordinator`] | [`coordinator::trainer`]: the HLO train loop; [`coordinator::proxy`]: the artifact-free proxy trainer; configs, schedules, checkpoints, metrics | Figs. 1–3 pipelines |
 //! | [`serve`] | multi-tenant training service: TCP line protocol, typed request decode, fair per-step scheduling of concurrent runs on the shared pool, NDJSON telemetry streams | — |
 //! | [`experiments`] | regenerates the paper's tables/figures (`collage experiment --list`) | Tables 2–12, Figs. 1–7 |
@@ -45,6 +45,10 @@
 //!   worker count — the determinism contract in [`optim::kernels`],
 //!   enforced by `tests/kernel_equivalence.rs` and
 //!   `tests/generic_kernel_equivalence.rs`.
+//! * A `dp-proc` run is bitwise-identical at any process count: step rows
+//!   and the final state digest match between 1 and N ranks — the rank-
+//!   invariance contract in [`parallel::proc`], enforced over real
+//!   subprocesses by `tests/dp_proc_invariance.rs`.
 //!
 //! # Quickstart
 //!

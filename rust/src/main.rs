@@ -8,6 +8,7 @@
 //!   memory      analytic peak-memory report for any (model, plan)
 //!   inspect     dump manifest/artifact information
 //!   dp-train    data-parallel training demo (threaded workers)
+//!   dp-proc     multi-process data parallelism with fp8 compressed allreduce
 //!   serve       multi-tenant training service (NDJSON over TCP)
 //!   submit      submit a run to a serve instance and stream telemetry
 
@@ -30,12 +31,14 @@ use collage::model::memory::MemoryModel;
 use collage::numerics::format::FloatFormat;
 use collage::optim::adamw::AdamW;
 use collage::optim::plan::{PrecisionPlan, ALL_SCHEMES};
+use collage::parallel::proc::{self as dp_proc, DpProcConfig, WorkerSpawn};
 use collage::parallel::worker::DataParallel;
 use collage::runtime::{Manifest, Runtime};
 use collage::serve::client::submit_lines;
 use collage::serve::protocol::{build_request, RequestLimits};
 use collage::serve::server::{ServeConfig, Server};
 use collage::util::cli::{ArgSpec, Args};
+use collage::util::threadpool::default_workers;
 use collage::util::json::Obj;
 use collage::util::table::{fnum, Table};
 
@@ -62,6 +65,8 @@ fn usage() -> String {
        memory       analytic peak-memory report (any plan; --format for fp8 rows)\n\
        inspect      show artifact manifest details\n\
        dp-train     threaded data-parallel training\n\
+       dp-proc      multi-process data parallelism: sharded optimizer state,\n\
+                    error-feedback fp8-compressed gradient allreduce\n\
        serve        multi-tenant training service (NDJSON telemetry over TCP)\n\
        submit       submit a run to a serve instance and stream its telemetry\n\n\
      Plans combine a scheme (--strategy) with a storage format (--format),\n\
@@ -95,6 +100,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "memory" => cmd_memory(rest),
         "inspect" => cmd_inspect(rest),
         "dp-train" => cmd_dp_train(rest),
+        "dp-proc" => cmd_dp_proc(rest),
+        "dp-proc-worker" => cmd_dp_proc_worker(rest),
         "serve" => cmd_serve(rest),
         "submit" => cmd_submit(rest),
         "--help" | "-h" | "help" => {
@@ -517,6 +524,78 @@ fn cmd_dp_train(args: &[String]) -> Result<()> {
         tokens / dt
     );
     Ok(())
+}
+
+fn cmd_dp_proc(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "collage dp-proc",
+        "Multi-process data parallelism: each rank owns a chunk-aligned slice \
+         of the optimizer state; gradients cross the wire fp8-compressed with \
+         MCF error feedback.  Step rows and the final state digest are \
+         bit-identical at any rank and worker count.",
+    )
+    .opt(
+        "plan",
+        "collage-plus",
+        "precision plan (scheme[@format][+delta-scale=<pow2>|auto[:<k0>]]; sr excluded)",
+    )
+    .opt("wire", "fp8e4m3", "gradient wire format (element-wise: bf16|fp16|fp8e4m3|fp8e5m2)")
+    .opt("ranks", "2", "process count (rank 0 is the leader and also computes)")
+    .opt("shards", "0", "simulated data shards (0 = one per rank; must be divisible by ranks)")
+    .opt("params", "32768", "proxy parameter count (needs >= ranks chunks of 16384)")
+    .opt("steps", "60", "optimizer steps")
+    .opt("warmup", "6", "warmup steps")
+    .opt("lr", "2e-2", "peak learning rate")
+    .opt("min-lr-ratio", "0.1", "cosine floor as a fraction of peak")
+    .opt("beta2", "0.95", "AdamW β₂")
+    .opt("seed", "1234", "rng seed")
+    .opt("log-every", "10", "leader stdout cadence (0 = summary only)")
+    .opt("workers", "0", "kernel threads per rank (0 = CPU count)")
+    .opt("theta-scale", "8", "teacher parameter scale")
+    .flag("json", "emit NDJSON events instead of human lines");
+    let a = spec.parse(args)?;
+    let ranks = a.usize("ranks")?;
+    let shards = a.usize("shards")?;
+    let workers = a.usize("workers")?;
+    let cfg = DpProcConfig {
+        plan: a.get("plan").parse()?,
+        wire: a.get("wire").parse()?,
+        ranks,
+        shards: if shards == 0 { ranks } else { shards },
+        n: a.usize("params")?,
+        steps: a.u64("steps")?,
+        warmup: a.u64("warmup")?,
+        lr: a.f64("lr")?,
+        min_lr_ratio: a.f64("min-lr-ratio")?,
+        beta2: a.f64("beta2")?,
+        seed: a.u64("seed")?,
+        log_every: a.u64("log-every")?,
+        workers: if workers == 0 { default_workers() } else { workers },
+        theta_scale: a.f32("theta-scale")?,
+        json: a.flag("json"),
+        spawn: WorkerSpawn::Process,
+    };
+    if !cfg.json && cfg.log_every > 0 {
+        println!(
+            "dp-proc: ranks={} shards={} plan={} wire={} n={} steps={} workers={}",
+            cfg.ranks, cfg.shards, cfg.plan, cfg.wire.name, cfg.n, cfg.steps, cfg.workers
+        );
+    }
+    dp_proc::run(&cfg)?;
+    Ok(())
+}
+
+/// Internal entry point: one worker rank of a `dp-proc` run.  Spawned by
+/// the leader with its rendezvous address — not meant to be run by hand.
+fn cmd_dp_proc_worker(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "collage dp-proc-worker",
+        "One worker rank of a dp-proc run (spawned by the leader; internal)",
+    )
+    .req("connect", "leader address (host:port)")
+    .req("rank", "this worker's rank (1-based)");
+    let a = spec.parse(args)?;
+    dp_proc::worker_main(a.get("connect"), a.usize("rank")?)
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {

@@ -148,12 +148,45 @@ impl DeltaScaleCtrl {
 /// (`k` reverts; the clean-step counter stays reset, so the attempt
 /// naturally retries a growth interval later).
 pub(crate) fn post_step(state: &mut OptimState, n: u64, saturated: u64, underflow: u64) {
+    apply_observation(state, n, saturated, underflow, |s, t| {
+        s.delta_rescale_would_clip(t.old_k, t.new_k)
+    });
+}
+
+/// [`post_step`] for the multi-process runtime (`parallel::proc`): every
+/// rank feeds the same *global* counters to its region-local controller
+/// replica, but the grow veto must scan the *whole* state — so the caller
+/// passes `grow_would_clip` pre-reduced across ranks (the OR of each
+/// rank's local `delta_rescale_would_clip(k, k+1)`, which equals the
+/// single-state full-vector scan because the scan is itself an OR over
+/// elements).  With identical inputs every rank's slice transitions in
+/// lockstep, bit-identical to one process holding the full state.
+pub(crate) fn post_step_distributed(
+    state: &mut OptimState,
+    n: u64,
+    saturated: u64,
+    underflow: u64,
+    grow_would_clip: bool,
+) {
+    apply_observation(state, n, saturated, underflow, |_, _| grow_would_clip);
+}
+
+/// The shared observe→veto→rescale core: one decision path for the
+/// in-process and distributed hooks, parameterized only by how the grow
+/// veto predicate is evaluated.
+fn apply_observation(
+    state: &mut OptimState,
+    n: u64,
+    saturated: u64,
+    underflow: u64,
+    grow_would_clip: impl FnOnce(&OptimState, Transition) -> bool,
+) {
     let transition = match state.delta_ctrl_mut() {
         Some(ctrl) => ctrl.observe(n, saturated, underflow),
         None => return,
     };
     let Some(t) = transition else { return };
-    if t.new_k > t.old_k && state.delta_rescale_would_clip(t.old_k, t.new_k) {
+    if t.new_k > t.old_k && grow_would_clip(state, t) {
         state
             .delta_ctrl_mut()
             .expect("transition came from this controller")

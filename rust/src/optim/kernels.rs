@@ -149,7 +149,9 @@ impl ChunkAccum {
     /// `mcf_params` selects the expansion-parameter variant (Collage
     /// light/plus at any format); `delta_k` is the delta-scale exponent
     /// that was in effect for the step (reported, not computed here).
-    fn finalize(&self, mcf_params: bool, n: usize, delta_k: u8) -> StepStats {
+    /// `pub(crate)` so the dp-proc leader can fold rank-shipped chunk
+    /// partials in global chunk order and finish them identically.
+    pub(crate) fn finalize(&self, mcf_params: bool, n: usize, delta_k: u8) -> StepStats {
         use crate::numerics::analysis::EdqReport;
         let update_norm = self.un2.sqrt();
         // The two reference reducers round their ratio differently:
@@ -1857,6 +1859,54 @@ fn fused_step_generic(
 ) -> StepStats {
     let plan = state.plan;
     let n = state.n;
+    let k = state.delta_k();
+    // One key per step; per-element noise is counter-derived from it so
+    // the draw order cannot depend on chunk/thread assignment.
+    let sr_key = match plan.scheme {
+        Scheme::StochasticRounding => rng.next_u64(),
+        _ => 0,
+    };
+    let scratch = generic_step_chunks(opt, state, g, lr, t, sr_key, workers);
+
+    let mut total = ChunkAccum::default();
+    for part in &scratch {
+        total.merge(part);
+    }
+    state.put_accum_scratch(scratch);
+    let stats = total.finalize(plan.is_mcf_params(), n, k);
+    // Between steps: feed the counters to the adaptive controller (no-op
+    // unless the plan is `+delta-scale=auto`), rescaling the stored δθ
+    // words exactly on a k transition.  The counters are already the
+    // full-state totals, so every worker count — and every DP shard
+    // stepping from all-reduced gradients — decides identically.
+    super::delta_ctrl::post_step(state, n as u64, stats.delta_saturated, stats.delta_underflow);
+    stats
+}
+
+/// The kernel-dispatch core of [`fused_step_generic`]: run the per-chunk
+/// fused kernels over the fixed `CHUNK` grid and return the per-chunk
+/// diagnostics partials *unmerged*, in chunk-index order.  The vector is
+/// the state's accumulator scratch — callers must hand it back via
+/// `put_accum_scratch` once read (the zero-allocation contract).
+///
+/// Split out so the multi-process runtime ([`crate::parallel::proc`]) can
+/// step a rank's chunk-aligned state slice and ship the raw partials to
+/// the leader, which folds *all* ranks' partials in global chunk order —
+/// bit-identical to a single process stepping the whole state.  `sr_key`
+/// is the step's stochastic-rounding noise key (0 for every other scheme;
+/// dp-proc rejects SR plans because the noise counter is a state-local
+/// element index, which a region slice would shift).
+pub(crate) fn generic_step_chunks(
+    opt: &AdamW,
+    state: &mut OptimState,
+    g: &[f32],
+    lr: f32,
+    t: u64,
+    sr_key: u64,
+    workers: usize,
+) -> Vec<ChunkAccum> {
+    let plan = state.plan;
+    let n = state.n;
     // The delta-scale exponent in effect: the adaptive controller's live k
     // for `auto` plans (== plan.delta_scale for static/off plans).  Auto
     // plans always keep k ≥ 1, so kernel routing is stable across
@@ -1864,12 +1914,6 @@ fn fused_step_generic(
     let k = state.delta_k();
     let s = GenericScalars::new_with_k(plan, opt, lr, t, k);
     let scaled = k != 0;
-    // One key per step; per-element noise is counter-derived from it so
-    // the draw order cannot depend on chunk/thread assignment.
-    let sr_key = match plan.scheme {
-        Scheme::StochasticRounding => rng.next_u64(),
-        _ => 0,
-    };
 
     let mut scratch = state.take_accum_scratch();
     {
@@ -2083,20 +2127,7 @@ fn fused_step_generic(
             }
         }
     }
-
-    let mut total = ChunkAccum::default();
-    for part in &scratch {
-        total.merge(part);
-    }
-    state.put_accum_scratch(scratch);
-    let stats = total.finalize(plan.is_mcf_params(), n, k);
-    // Between steps: feed the counters to the adaptive controller (no-op
-    // unless the plan is `+delta-scale=auto`), rescaling the stored δθ
-    // words exactly on a k transition.  The counters are already the
-    // full-state totals, so every worker count — and every DP shard
-    // stepping from all-reduced gradients — decides identically.
-    super::delta_ctrl::post_step(state, n as u64, stats.delta_saturated, stats.delta_underflow);
-    stats
+    scratch
 }
 
 #[cfg(test)]

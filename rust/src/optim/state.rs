@@ -117,6 +117,59 @@ impl OptimState {
         })
     }
 
+    /// Clone the element region `range` into a standalone state — the
+    /// ZeRO-style rank slice of the multi-process runtime.  Every vector
+    /// is sliced identically and the live delta-scale controller is
+    /// copied, so a region state steps exactly as the corresponding
+    /// window of the full state does (provided `range.start` lies on the
+    /// `ACCUM_CHUNK` grid, which keeps chunk — and 32-element block —
+    /// boundaries aligned; `parallel::sharding::rank_regions` guarantees
+    /// that, and callers own the contract).
+    pub fn extract_region(&self, range: std::ops::Range<usize>) -> Result<OptimState> {
+        if range.start > range.end || range.end > self.n {
+            bail!("region {range:?} out of bounds for state of {} elements", self.n);
+        }
+        Ok(OptimState {
+            plan: self.plan,
+            n: range.len(),
+            names: self.names.clone(),
+            dtypes: self.dtypes.clone(),
+            vecs: self.vecs.iter().map(|v| v[range.clone()].to_vec()).collect(),
+            accum_scratch: Vec::new(),
+            delta_ctrl: self.delta_ctrl,
+        })
+    }
+
+    /// Reassemble a full state from contiguous region states in element
+    /// order — the inverse of [`OptimState::extract_region`] over a
+    /// partition.  All parts must share one plan and (for `auto` plans)
+    /// bit-identical controller state; the distributed controller hook
+    /// (`optim::delta_ctrl::post_step_distributed`) keeps ranks in
+    /// lockstep, so a mismatch here is a broken run, not a mergeable one.
+    pub fn concat_regions(parts: &[OptimState]) -> Result<OptimState> {
+        let Some(first) = parts.first() else {
+            bail!("concat_regions needs at least one region");
+        };
+        let plan = first.plan;
+        let mut vecs: Vec<Vec<f32>> = vec![Vec::new(); first.vecs.len()];
+        for part in parts {
+            if part.plan != plan {
+                bail!("region plans differ: {} vs {}", part.plan, plan);
+            }
+            if part.delta_ctrl != first.delta_ctrl {
+                bail!("region delta-scale controllers diverged");
+            }
+            for (dst, src) in vecs.iter_mut().zip(&part.vecs) {
+                dst.extend_from_slice(src);
+            }
+        }
+        let mut state = Self::from_vecs_plan(plan, vecs)?;
+        if let Some(ctrl) = first.delta_ctrl {
+            state.restore_delta_ctrl(ctrl.k, ctrl.good_steps)?;
+        }
+        Ok(state)
+    }
+
     /// The legacy strategy this state runs under, when it lies on the bf16
     /// row of the plan space.
     pub fn strategy(&self) -> Option<Strategy> {

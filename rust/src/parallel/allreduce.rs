@@ -19,6 +19,35 @@ use crate::util::threadpool::{default_workers, parallel_chunks};
 /// the worker count.
 const REDUCE_CHUNK: usize = 16_384;
 
+/// The one index-ordered combine core shared by the in-process threaded
+/// path ([`allreduce_mean`]) and the multi-process owner-side combine
+/// ([`crate::parallel::proc`], which reduces the decoded per-shard wire
+/// streams for its parameter region): copy the first part, add the rest in
+/// iteration order, then scale.  Every caller therefore performs the exact
+/// same f32 op sequence per element — the bit-determinism contract lives
+/// here, once, instead of being copy-pasted per transport.
+///
+/// Panics if `parts` is empty; part lengths must equal `out.len()`.
+pub fn reduce_into<'a>(
+    out: &mut [f32],
+    parts: impl IntoIterator<Item = &'a [f32]>,
+    scale: f32,
+) {
+    let mut parts = parts.into_iter();
+    let first = parts.next().expect("reduce_into needs at least one part");
+    assert_eq!(first.len(), out.len(), "part length mismatch");
+    out.copy_from_slice(first);
+    for part in parts {
+        assert_eq!(part.len(), out.len(), "part length mismatch");
+        for (a, &x) in out.iter_mut().zip(part) {
+            *a += x;
+        }
+    }
+    for a in out.iter_mut() {
+        *a *= scale;
+    }
+}
+
 /// Mean-reduce `grads[rank][i]` over ranks into a single vector, in a
 /// fixed summation order (rank 0, 1, 2, ... per element), parallelized
 /// over fixed-size chunks.
@@ -47,18 +76,8 @@ pub fn allreduce_mean(grads: &[Vec<f32>]) -> Vec<f32> {
         // SAFETY: disjoint window per chunk (see OutPtr).
         let dst =
             unsafe { std::slice::from_raw_parts_mut(p.0.add(r.start), r.len()) };
-        for (a, &x) in dst.iter_mut().zip(&grads[0][r.clone()]) {
-            *a = x;
-        }
-        // fixed order: rank 1, 2, ... — deterministic f32 summation
-        for g in &grads[1..] {
-            for (a, &x) in dst.iter_mut().zip(&g[r.clone()]) {
-                *a += x;
-            }
-        }
-        for a in dst.iter_mut() {
-            *a *= scale;
-        }
+        // fixed order: rank 0, 1, 2, ... — deterministic f32 summation
+        reduce_into(dst, grads.iter().map(|g| &g[r.clone()]), scale);
     });
     out
 }
@@ -119,5 +138,23 @@ mod tests {
     fn single_rank_passthrough() {
         let g = vec![vec![7.0f32; 10]];
         assert_eq!(allreduce_mean(&g), g[0]);
+    }
+
+    #[test]
+    fn reduce_core_matches_rank_ordered_scalar_sum() {
+        let mut rng = crate::util::rng::Rng::new(3, 0);
+        let parts: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..257).map(|_| rng.normal() as f32).collect()).collect();
+        let scale = 0.25f32;
+        let mut out = vec![0.0f32; 257];
+        reduce_into(&mut out, parts.iter().map(|p| p.as_slice()), scale);
+        for i in 0..257 {
+            let mut acc = parts[0][i];
+            for p in &parts[1..] {
+                acc += p[i];
+            }
+            acc *= scale;
+            assert_eq!(out[i].to_bits(), acc.to_bits(), "elem {i}");
+        }
     }
 }

@@ -1,0 +1,458 @@
+//! Compressed-gradient wire codec with MCF error feedback — the payload
+//! side of the process-level allreduce ([`crate::parallel::proc`]).
+//!
+//! Two pieces live here:
+//!
+//! 1. **A bit-exact element codec** for any element-wise [`FloatFormat`]
+//!    (`bf16`, `fp16`, `fp8e4m3`, `fp8e5m2`, and `fp32` as the identity
+//!    wire): a format-representable `f32` packs into `fmt.bytes`
+//!    little-endian bytes (`sign | biased-exponent | mantissa`, subnormals
+//!    with exponent field 0) and unpacks to the *identical* `f32` bits.
+//!    `decode ∘ encode` being the identity is load-bearing: the sending
+//!    shard keeps using its own `sent` values while the owning rank uses
+//!    the decoded copies, and rank invariance requires them to agree
+//!    bitwise.  Block-scaled formats (`mxfp4`) are rejected as wire
+//!    formats — their quantizer is not element-wise — via [`wire_check`].
+//!
+//! 2. **The error-feedback residual** ([`ErrorFeedback`]): per element,
+//!    the accumulated difference between the exact gradient contributions
+//!    and what was actually transmitted, carried in a length-3 `FP32`
+//!    [`ExpansionN`] — the same multi-component-float algebra the
+//!    optimizer uses for state, applied to communication.  Each round
+//!    sends `rn_wire(residual + g)` and folds the quantization error back
+//!    into the residual, so the *cumulative* transmitted sum never drifts
+//!    from the exact sum:
+//!
+//!    ```text
+//!    Σ_t sent_t[i] + residual[i]  ==  Σ_t g_t[i]        (bitwise, in f64)
+//!    ```
+//!
+//!    The adds use the unconditional [`two_sum`] cascade rather than the
+//!    [`grow_n`](crate::numerics::expansion::grow_n) Fast2Sum chain:
+//!    `grow_n` assumes the expansion head dominates the incoming scalar,
+//!    and here the opposite holds (the residual is at most a wire-ulp
+//!    fraction of each incoming gradient).  The invariant is exact
+//!    whenever the running error fits three non-overlapping f32
+//!    components (a ≤ 72-binade span — far beyond any training-scale
+//!    gradient stream); the unit tests pin it bitwise on multi-component
+//!    lattices and `tests/dp_proc_invariance.rs` re-pins it end-to-end.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::numerics::expansion::{renormalize, two_sum, ExpansionN};
+use crate::numerics::format::{FloatFormat, FP32};
+
+/// Total code width of an element-wise format: `1 + exp_bits + mantissa_bits`.
+pub fn code_bits(fmt: &FloatFormat) -> u32 {
+    1 + fmt.exp_bits + fmt.mantissa_bits
+}
+
+/// Bytes on the wire for `n` elements in `fmt`.
+pub fn encoded_len(fmt: &FloatFormat, n: usize) -> usize {
+    n * fmt.bytes
+}
+
+/// Typed validation that `fmt` can serve as a wire format: element-wise
+/// (no shared block scale) and byte-aligned (`1 + E + M == 8 · bytes`,
+/// true of every element-wise format in the zoo).
+pub fn wire_check(fmt: &FloatFormat) -> Result<()> {
+    if fmt.block != 0 {
+        bail!(
+            "wire format {} is block-scaled: per-block scale selection is \
+             not element-wise, so it cannot carry an error-feedback stream",
+            fmt.name
+        );
+    }
+    ensure!(
+        code_bits(fmt) == 8 * fmt.bytes as u32,
+        "wire format {} is not byte-aligned ({} code bits in {} bytes)",
+        fmt.name,
+        code_bits(fmt),
+        fmt.bytes
+    );
+    Ok(())
+}
+
+/// `2^e` as an exact f64 (normal range only).
+fn pow2(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((1023 + e) as u64) << 52)
+}
+
+/// Pack a `fmt`-representable f32 into its `code_bits(fmt)`-wide code:
+/// `sign << (E+M) | biased_exp << M | mantissa`.  Subnormals use exponent
+/// field 0 with `mantissa = |x| · 2^(M − e_min)` (an exact integer for
+/// representable inputs).  NaN encodes to the format's canonical NaN code
+/// (all-ones mantissa at the top exponent for saturating formats, quiet
+/// bit otherwise); infinities only exist for non-saturating formats.
+pub fn encode_code(fmt: &FloatFormat, x: f32) -> u32 {
+    debug_assert!(fmt.block == 0, "block formats have no element codes");
+    let m = fmt.mantissa_bits;
+    let e_bits = fmt.exp_bits;
+    let mant_mask = (1u32 << m) - 1;
+    let exp_mask = (1u32 << e_bits) - 1;
+    let sign = (x.to_bits() >> 31) << (e_bits + m);
+    if x == 0.0 {
+        return sign;
+    }
+    if x.is_nan() {
+        let mant = if fmt.saturating { mant_mask } else { 1 << (m - 1) };
+        return sign | (exp_mask << m) | mant;
+    }
+    if x.is_infinite() {
+        debug_assert!(!fmt.saturating, "saturating formats are inf-free");
+        return sign | (exp_mask << m);
+    }
+    debug_assert!(fmt.representable(x), "{x:?} is not {}-representable", fmt.name);
+    let mag = x.abs() as f64; // exact: every f32 is a normal-or-zero f64
+    let e = ((mag.to_bits() >> 52) & 0x7FF) as i32 - 1023;
+    if e < fmt.e_min() {
+        // Subnormal in fmt: integer count of the smallest quantum.
+        let mant = (mag * pow2(m as i32 - fmt.e_min())) as u32;
+        debug_assert!(mant <= mant_mask);
+        return sign | mant;
+    }
+    let biased = (e + fmt.bias()) as u32;
+    debug_assert!(biased >= 1 && biased <= exp_mask);
+    let mant = ((mag.to_bits() >> (52 - m)) as u32) & mant_mask;
+    sign | (biased << m) | mant
+}
+
+/// Unpack a code produced by [`encode_code`] back to the identical f32.
+/// Total over the full code space: non-canonical NaN codes decode to NaN,
+/// and (for non-saturating formats) the all-ones exponent with zero
+/// mantissa decodes to ±∞.
+pub fn decode_code(fmt: &FloatFormat, code: u32) -> f32 {
+    debug_assert!(fmt.block == 0, "block formats have no element codes");
+    let m = fmt.mantissa_bits;
+    let e_bits = fmt.exp_bits;
+    let mant_mask = (1u32 << m) - 1;
+    let exp_mask = (1u32 << e_bits) - 1;
+    let negative = (code >> (e_bits + m)) & 1 == 1;
+    let biased = (code >> m) & exp_mask;
+    let mant = code & mant_mask;
+    if biased == exp_mask {
+        if fmt.saturating {
+            if mant == mant_mask {
+                return f32::NAN;
+            }
+            // Reclaimed top-exponent finites (E4M3) fall through below.
+        } else if mant == 0 {
+            return if negative { f32::NEG_INFINITY } else { f32::INFINITY };
+        } else {
+            return f32::NAN;
+        }
+    }
+    let mag = if biased == 0 {
+        mant as f64 * pow2(fmt.e_min() - m as i32)
+    } else {
+        let e = biased as i32 - fmt.bias();
+        (1.0 + mant as f64 * pow2(-(m as i32))) * pow2(e)
+    };
+    let v = mag as f32; // exact: fmt values are a subset of f32
+    if negative {
+        -v
+    } else {
+        v
+    }
+}
+
+fn push_code(out: &mut Vec<u8>, code: u32, bytes: usize) {
+    out.extend_from_slice(&code.to_le_bytes()[..bytes]);
+}
+
+fn read_code(b: &[u8]) -> u32 {
+    let mut le = [0u8; 4];
+    le[..b.len()].copy_from_slice(b);
+    u32::from_le_bytes(le)
+}
+
+/// Exact add of scalar `a` into a length-3 FP32 expansion: an
+/// unconditional TwoSum cascade (each level's error feeds the next), one
+/// rounded add at the bottom, then [`renormalize`].  Unlike `grow_n`'s
+/// Fast2Sum chain this does not assume `|e.c[0]| ≥ |a|` — in error
+/// feedback the incoming gradient usually dwarfs the residual head.
+fn add_exact(e: ExpansionN<3>, a: f32) -> ExpansionN<3> {
+    let (s0, r0) = two_sum(&FP32, e.c[0], a);
+    let (s1, r1) = two_sum(&FP32, e.c[1], r0);
+    let s2 = FP32.round_nearest_f64(e.c[2] as f64 + r1 as f64);
+    renormalize(&FP32, [s0, s1, s2])
+}
+
+/// Per-element error-feedback state for one data shard: `residual[i]`
+/// carries `Σ g_t[i] − Σ sent_t[i]` as a length-3 FP32 expansion, full
+/// parameter length, regardless of which rank currently hosts the shard
+/// (that placement-independence is what makes the stream rank-invariant).
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    residual: Vec<ExpansionN<3>>,
+}
+
+impl ErrorFeedback {
+    /// Zero residual over `n` elements.
+    pub fn new(n: usize) -> Self {
+        ErrorFeedback { residual: vec![ExpansionN::zero(); n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.residual.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.residual.is_empty()
+    }
+
+    /// Evaluated residual for element `i` (exact in f64 while component
+    /// exponents span < 53 binades — see [`ExpansionN::value`]).
+    pub fn residual_value(&self, i: usize) -> f64 {
+        self.residual[i].value()
+    }
+
+    /// Compress the gradient segment `g` (elements `start..start + g.len()`
+    /// of this shard's stream) into `out`, updating the residual:
+    /// per element, `sent = rn_wire(residual + g)` goes on the wire and
+    /// `residual += g − sent` stays behind.  Appends exactly
+    /// `encoded_len(wire, g.len())` bytes.
+    pub fn encode_segment(
+        &mut self,
+        wire: &FloatFormat,
+        start: usize,
+        g: &[f32],
+        out: &mut Vec<u8>,
+    ) {
+        out.reserve(encoded_len(wire, g.len()));
+        for (j, &gj) in g.iter().enumerate() {
+            let e = add_exact(self.residual[start + j], gj);
+            let sent = wire.round_nearest_f64(e.value());
+            self.residual[start + j] = add_exact(e, -sent);
+            push_code(out, encode_code(wire, sent), wire.bytes);
+        }
+    }
+}
+
+/// Decode a byte segment produced by [`ErrorFeedback::encode_segment`],
+/// appending the transmitted values to `out` bit-identically to the
+/// sender's `sent` stream.
+pub fn decode_segment(wire: &FloatFormat, bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    ensure!(
+        bytes.len() % wire.bytes == 0,
+        "segment length {} is not a multiple of {} ({} wire)",
+        bytes.len(),
+        wire.bytes,
+        wire.name
+    );
+    out.reserve(bytes.len() / wire.bytes);
+    for code in bytes.chunks_exact(wire.bytes) {
+        out.push(decode_code(wire, read_code(code)));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::format::{ALL_FORMATS, BF16, FP16, FP8E4M3, FP8E5M2, MXFP4};
+    use crate::util::proptest::{check, check_msg};
+    use crate::util::rng::Rng;
+
+    const WIRES: [&FloatFormat; 3] = [&BF16, &FP8E4M3, &FP8E5M2];
+
+    #[test]
+    fn wire_check_accepts_elementwise_rejects_block() {
+        for fmt in &ALL_FORMATS {
+            wire_check(fmt).unwrap();
+        }
+        assert!(wire_check(&MXFP4).is_err());
+    }
+
+    /// Exhaustive fp8 conformance: every one of the 256 codes round-trips
+    /// — non-NaN codes are canonical fixed points of decode∘encode, NaN
+    /// codes decode to NaN (and NaN re-encodes to the canonical NaN code).
+    #[test]
+    fn fp8_codes_roundtrip_exhaustively() {
+        for fmt in [&FP8E4M3, &FP8E5M2] {
+            for code in 0u32..256 {
+                let v = decode_code(fmt, code);
+                if v.is_nan() {
+                    assert!(decode_code(fmt, encode_code(fmt, v)).is_nan());
+                } else {
+                    assert_eq!(
+                        encode_code(fmt, v),
+                        code,
+                        "{} code {code:#04x} decoded to {v:?}",
+                        fmt.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// The generic packer agrees with the bf16 truncation shortcut: a
+    /// bf16-representable f32 encodes to its high 16 bits exactly.
+    #[test]
+    fn bf16_codec_is_the_bit_shift() {
+        check("bf16 code == f32 bits >> 16", |rng| rng.normal() as f32 * 64.0, |&x| {
+            let v = BF16.round_nearest(x);
+            encode_code(&BF16, v) == v.to_bits() >> 16
+                && decode_code(&BF16, v.to_bits() >> 16).to_bits() == v.to_bits()
+        });
+    }
+
+    /// decode∘encode is the identity on wire-rounded values for every
+    /// element-wise format, including signs of zero and saturated edges.
+    #[test]
+    fn decode_encode_identity_on_rounded_values() {
+        for fmt in [&BF16, &FP16, &FP8E4M3, &FP8E5M2] {
+            check_msg(
+                &format!("decode∘encode identity ({})", fmt.name),
+                |rng| {
+                    let scale = (rng.below(41) as i32 - 20) as f64;
+                    fmt.round_nearest_f64(rng.normal() * scale.exp2())
+                },
+                |&v| {
+                    let back = decode_code(fmt, encode_code(fmt, v));
+                    if back.to_bits() == v.to_bits() {
+                        Ok(())
+                    } else {
+                        Err(format!("{v:?} ({:#010x}) -> {back:?}", v.to_bits()))
+                    }
+                },
+            );
+        }
+        for fmt in [&BF16, &FP8E4M3, &FP8E5M2] {
+            for v in [0.0f32, -0.0, fmt.max_finite_f32(), -fmt.max_finite_f32()] {
+                assert_eq!(decode_code(fmt, encode_code(fmt, v)).to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn segments_roundtrip_through_bytes() {
+        let mut rng = Rng::new(7, 0xC0);
+        for wire in WIRES {
+            let vals: Vec<f32> =
+                (0..97).map(|_| wire.round_nearest(rng.normal() as f32 * 8.0)).collect();
+            let mut bytes = Vec::new();
+            for &v in &vals {
+                push_code(&mut bytes, encode_code(wire, v), wire.bytes);
+            }
+            assert_eq!(bytes.len(), encoded_len(wire, vals.len()));
+            let mut back = Vec::new();
+            decode_segment(wire, &bytes, &mut back).unwrap();
+            assert_eq!(vals.len(), back.len());
+            for (a, b) in vals.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert!(decode_segment(wire, &bytes[..wire.bytes * 3 + 1], &mut back).is_err());
+        }
+    }
+
+    /// Lattice gradient: an integer multiple of 2^-20 bounded by ±2^10, so
+    /// every exact sum below is an exact f64 and the invariant can be
+    /// asserted bitwise.  The 30-bit span forces the residual past one f32
+    /// component — the expansion is doing real work here.
+    fn lattice_grad(rng: &mut Rng) -> f32 {
+        let q = (rng.below(1 << 31) as i64 - (1 << 30)) as f64;
+        (q * (-20f64).exp2()) as f32
+    }
+
+    /// The headline EF invariant, pinned bitwise: after K rounds,
+    /// `Σ sent + residual == Σ g` per element, for every wire format.
+    #[test]
+    fn error_feedback_transmits_the_exact_sum() {
+        for wire in WIRES {
+            check_msg(
+                &format!("EF K-round exact-sum invariant ({})", wire.name),
+                |rng| {
+                    let n = 1 + rng.below(8) as usize;
+                    let rounds = 1 + rng.below(20) as usize;
+                    (0..rounds)
+                        .map(|_| (0..n).map(|_| lattice_grad(rng)).collect::<Vec<f32>>())
+                        .collect::<Vec<_>>()
+                },
+                |gs| {
+                    let n = gs[0].len();
+                    let mut ef = ErrorFeedback::new(n);
+                    let mut sum_g = vec![0.0f64; n];
+                    let mut sum_sent = vec![0.0f64; n];
+                    let mut bytes = Vec::new();
+                    for g in gs {
+                        bytes.clear();
+                        ef.encode_segment(wire, 0, g, &mut bytes);
+                        let mut sent = Vec::new();
+                        decode_segment(wire, &bytes, &mut sent).unwrap();
+                        for i in 0..n {
+                            sum_g[i] += g[i] as f64;
+                            sum_sent[i] += sent[i] as f64;
+                        }
+                    }
+                    for i in 0..n {
+                        let total = sum_sent[i] + ef.residual_value(i);
+                        if total.to_bits() != sum_g[i].to_bits() {
+                            return Err(format!(
+                                "elem {i}: sent+residual {total:?} != exact {:?}",
+                                sum_g[i]
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    /// Without feedback the cumulative fp8 stream drifts from the exact
+    /// sum — the contrast that shows the residual is load-bearing.
+    #[test]
+    fn no_feedback_drifts_feedback_does_not() {
+        let g = 0.1f32; // dyadic in f32, not representable in fp8
+        let rounds = 100;
+        let exact: f64 = g as f64 * rounds as f64;
+        let naive: f64 = (FP8E4M3.round_nearest(g) as f64) * rounds as f64;
+        assert_ne!(naive.to_bits(), exact.to_bits());
+
+        let mut ef = ErrorFeedback::new(1);
+        let mut sum_sent = 0.0f64;
+        let mut bytes = Vec::new();
+        for _ in 0..rounds {
+            bytes.clear();
+            ef.encode_segment(&FP8E4M3, 0, &[g], &mut bytes);
+            let mut sent = Vec::new();
+            decode_segment(&FP8E4M3, &bytes, &mut sent).unwrap();
+            sum_sent += sent[0] as f64;
+        }
+        assert_eq!((sum_sent + ef.residual_value(0)).to_bits(), exact.to_bits());
+        // The transmitted stream alone stays within one bounded residual of
+        // exact, while the naive stream's drift grew linearly in rounds.
+        assert!((sum_sent - exact).abs() < (naive - exact).abs());
+    }
+
+    /// Segment offsets index the same residual stream: encoding [0..n) in
+    /// two segments is bit-identical to one segment.
+    #[test]
+    fn segment_split_is_invisible() {
+        let mut rng = Rng::new(11, 0xC1);
+        let n = 64;
+        let rounds = 7;
+        let gs: Vec<Vec<f32>> =
+            (0..rounds).map(|_| (0..n).map(|_| lattice_grad(&mut rng)).collect()).collect();
+        for wire in WIRES {
+            let mut whole = ErrorFeedback::new(n);
+            let mut split = ErrorFeedback::new(n);
+            for g in &gs {
+                let mut a = Vec::new();
+                whole.encode_segment(wire, 0, g, &mut a);
+                let mut b = Vec::new();
+                split.encode_segment(wire, 0, &g[..n / 2], &mut b);
+                split.encode_segment(wire, n / 2, &g[n / 2..], &mut b);
+                assert_eq!(a, b);
+            }
+            for i in 0..n {
+                assert_eq!(
+                    whole.residual_value(i).to_bits(),
+                    split.residual_value(i).to_bits()
+                );
+            }
+        }
+    }
+}

@@ -1,9 +1,123 @@
-//! Distributed-training substrate: the TP/PP sharding planner that feeds
-//! the memory model, plus a real threaded data-parallel runtime (workers
-//! execute the fwd+bwd artifact on batch shards; the leader all-reduces
-//! gradients and applies the bit-exact Rust optimizer).
+//! Data parallelism: deterministic gradient allreduce across threads
+//! ([`worker::DataParallel`]) and across **processes**
+//! ([`proc`] — `collage dp-proc`), plus the Megatron-style TP×PP
+//! sharding planner ([`sharding::ShardPlan`]) behind the paper's memory
+//! model.
+//!
+//! The multi-process runtime shards optimizer state ZeRO-style: each of
+//! N ranks owns a contiguous, `ACCUM_CHUNK`-aligned region
+//! ([`sharding::rank_regions`]) and steps only that region; gradients
+//! cross the wire compressed to an element-wise format through a
+//! per-shard error-feedback residual ([`compress::ErrorFeedback`]).
+//!
+//! # Rank control plane
+//!
+//! Leader (rank 0) and workers exchange **binary frames**
+//! ([`crate::util::json::write_frame`]): one compact JSON header line —
+//! always carrying an `"event"` field and a `"bytes"` payload length —
+//! followed by exactly that many raw payload bytes.  Per run:
+//!
+//! 1. worker → leader `{"event":"hello","rank":r}` (empty payload);
+//! 2. leader → worker `{"event":"config","config":{...}}` — the full
+//!    run config; `seed` travels as a 16-hex-digit string (JSON numbers
+//!    are f64 and corrupt integers above 2^53), unknown keys are typed
+//!    errors.
+//!
+//! Then per step `t` (every frame carries `"step":t`; a mismatch aborts
+//! the run — peers desynced):
+//!
+//! 3. worker → leader `"segments"` with `losses:[...]` — payload is this
+//!    rank's compressed shard streams, shard-ascending, each exactly
+//!    `n × wire.bytes`;
+//! 4. leader → worker `"combine"` — payload is all `shards` streams
+//!    sliced to the worker's region (byte range
+//!    `region.start × wire.bytes .. region.end × wire.bytes` of each
+//!    stream), concatenated in **global shard order** — the one combine
+//!    order the determinism contract allows;
+//! 5. worker → leader `"stats"` with `clip` (the rank's grow-veto vote)
+//!    — payload is one 64-byte record per owned chunk: `un2`, `en2`,
+//!    `dot`, `pn2` (f64 LE), `lost`, `saturated`, `underflow` (u64 LE),
+//!    `gn2` (f64 LE) — raw bits, so the leader folds exactly what the
+//!    owner computed;
+//! 6. leader → worker `"ctrl"` with the globally folded `sat`/`uflow`
+//!    counters and the OR-reduced `clip` — every rank feeds them to its
+//!    delta-scale controller replica, transitioning in lockstep;
+//! 7. worker → leader `"theta"` (region θ_eff, f64 LE), answered by
+//!    leader → worker `"theta_full"` (all `n` elements, f64 LE).
+//!
+//! After the last step: leader → worker `"finish"`, answered by
+//! `"state"` — the region's state vectors as f32 LE bits (plan arity ×
+//! region length), plus `k`/`good_steps` in the header for `auto`
+//! plans.  The leader reassembles the full state
+//! ([`crate::optim::state::OptimState::concat_regions`]) and digests it.
+//!
+//! # Compressed-gradient frames and the error-feedback invariant
+//!
+//! A gradient stream is element-wise codes of the wire format, one per
+//! element, `wire.bytes` each, little-endian — **no scale factors or
+//! block headers**, so any contiguous element range slices out by byte
+//! range (step 4 depends on this).  What ships for element `i` is not
+//! `g[i]` but `rn_wire(residual[i] + g[i])`; the rounding error stays
+//! behind in a length-3 MCF expansion (the same algebra as the
+//! optimizer's θ + δθ words).  The invariant — pinned bitwise by
+//! `compress`'s tests — is that nothing is ever lost, only deferred:
+//! the cumulative transmitted stream plus the residual equals the exact
+//! gradient sum:
+//!
+//! ```
+//! use collage::numerics::format::FP8E4M3;
+//! use collage::parallel::compress::{decode_segment, ErrorFeedback};
+//!
+//! // Three rounds of 2-element gradients; 0.515625 and friends are NOT
+//! // fp8-representable, so every round leaves a nonzero residual.
+//! let rounds = [[0.515625f32, -2.828125], [0.75, 1.953125], [-1.25, 0.328125]];
+//! let mut ef = ErrorFeedback::new(2);
+//! let mut sent_sum = [0.0f64; 2];
+//! for g in &rounds {
+//!     let mut frame = Vec::new();
+//!     ef.encode_segment(&FP8E4M3, 0, g, &mut frame);
+//!     assert_eq!(frame.len(), 2 * FP8E4M3.bytes);
+//!     let mut sent = Vec::new();
+//!     decode_segment(&FP8E4M3, &frame, &mut sent).unwrap();
+//!     for (s, &x) in sent_sum.iter_mut().zip(&sent) {
+//!         *s += x as f64; // sums of fp8 values: exact in f64
+//!     }
+//! }
+//! for i in 0..2 {
+//!     let exact: f64 = rounds.iter().map(|g| g[i] as f64).sum();
+//!     // sent + residual == exact gradient sum, bitwise.
+//!     assert_eq!(sent_sum[i] + ef.residual_value(i), exact);
+//! }
+//! ```
+//!
+//! Control frames round-trip through the shared binary-frame codec:
+//!
+//! ```
+//! use collage::util::json::{read_frame, write_frame, Obj};
+//!
+//! let mut h = Obj::new();
+//! h.insert("event", "segments");
+//! h.insert("step", 7u64);
+//! h.insert("rank", 1u64);
+//! let mut wire = Vec::new();
+//! write_frame(&mut wire, h, &[0x3f, 0x80]).unwrap();
+//!
+//! let (header, payload) = read_frame(&mut wire.as_slice(), 1 << 20).unwrap();
+//! assert_eq!(header.get_as::<String>("event").unwrap(), "segments");
+//! assert_eq!(header.get_as::<u64>("step").unwrap(), 7);
+//! assert_eq!(payload, [0x3f, 0x80]);
+//! ```
+//!
+//! # Determinism contract
+//!
+//! Step rows, `StepStats`, and the final state digest are bit-identical
+//! at 1 process, N processes, and N processes × M threads — see the
+//! [`proc`] module docs for the argument and
+//! `tests/dp_proc_invariance.rs` for the subprocess-level enforcement.
 
 pub mod allreduce;
+pub mod compress;
+pub mod proc;
 pub mod sharding;
 pub mod worker;
 

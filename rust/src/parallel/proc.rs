@@ -1,0 +1,1220 @@
+//! Multi-process data-parallel rank runtime with fp8 error-feedback
+//! compressed allreduce — ZeRO-style sharded optimizer state over real OS
+//! processes and `std::net` sockets.
+//!
+//! Each of `ranks` worker processes owns one contiguous, chunk-aligned
+//! region of the flat optimizer state ([`super::sharding::rank_regions`])
+//! and simulates `shards` data shards' gradients (a noisy variant of the
+//! proxy teacher objective, so shard gradients genuinely differ and the
+//! index-ordered combine is load-bearing).  Gradients cross the wire
+//! compressed to an element-wise [`FloatFormat`] through the
+//! [`ErrorFeedback`] codec: per (shard, element), what ships is
+//! `rn_wire(residual + g)` and the rounding error stays in a length-3 MCF
+//! residual folded into the next round — so the cumulative transmitted
+//! stream equals the exact gradient stream bitwise
+//! (`parallel::compress` pins the invariant).
+//!
+//! # Determinism contract
+//!
+//! Step rows, [`StepStats`] and the final state digest are bit-identical
+//! at 1 process, N processes, and N processes × M threads:
+//!
+//! * the gradient combine is index-ordered (shard 0, 1, …, `reduce_into`)
+//!   over the fixed `ACCUM_CHUNK` grid, and region boundaries sit on that
+//!   grid, so a region-local chunk is byte-for-byte the global chunk;
+//! * per-chunk [`ChunkAccum`] partials travel to the leader as raw f64/u64
+//!   bits and are folded in global chunk order (rank-ascending = chunk-
+//!   ascending) before `finalize`;
+//! * the adaptive delta-scale controller replicates per rank: every rank
+//!   feeds the same global counters to its slice
+//!   (`delta_ctrl::post_step_distributed`) with the grow veto OR-reduced
+//!   across ranks, so all slices transition in lockstep;
+//! * wire compression is *logical*: the single-process path runs the
+//!   identical encode → bytes → decode pipeline, so "1 process" is not a
+//!   shortcut around the codec.
+//!
+//! `tests/dp_proc_invariance.rs` enforces the contract end-to-end over
+//! real subprocesses; the in-module tests cover the thread-spawned
+//! transport.  The frame-level wire spec lives in [`super`] (the
+//! `parallel` module docs), mirroring `serve`'s protocol docs.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::metrics::{MetricsLog, StepRow};
+use crate::coordinator::proxy::state_digest;
+use crate::coordinator::schedule::LrSchedule;
+use crate::numerics::format::FloatFormat;
+use crate::optim::adamw::AdamW;
+use crate::optim::kernels::{generic_step_chunks, ChunkAccum, CHUNK};
+use crate::optim::plan::{PrecisionPlan, Scheme};
+use crate::optim::state::OptimState;
+use crate::util::json::{read_frame, write_frame, NdjsonWriter, Obj, Value};
+use crate::util::rng::Rng;
+use crate::util::threadpool::default_workers;
+
+use super::allreduce::reduce_into;
+use super::compress::{decode_segment, wire_check, ErrorFeedback};
+use super::sharding::rank_regions;
+
+/// Per-socket read/write timeout: generous enough for a slow CI step,
+/// small enough that a dead peer fails the run instead of hanging it.
+const IO_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// How long the leader waits for all workers to connect.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Shard-gradient noise amplitude as a fraction of `theta_scale`: shard
+/// gradients must differ (or combine order would be unobservable) but stay
+/// small against the teacher signal.
+const NOISE_FRAC: f32 = 0.02;
+
+/// Bytes per serialized [`ChunkAccum`] wire record (5 × f64 + 3 × u64,
+/// little-endian): un2, en2, dot, pn2, lost, saturated, underflow, gn2.
+const CHUNK_RECORD_BYTES: usize = 64;
+
+/// How worker ranks 1..N are brought up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerSpawn {
+    /// `current_exe() dp-proc-worker --connect … --rank r` subprocesses —
+    /// the real deployment shape (and the CI smoke's).
+    Process,
+    /// In-process threads running the identical socket worker loop — same
+    /// frames, same numerics, no fork; what the unit tests use.
+    Thread,
+}
+
+/// One `collage dp-proc` run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpProcConfig {
+    pub plan: PrecisionPlan,
+    /// Gradient wire format (element-wise only; see [`wire_check`]).
+    pub wire: FloatFormat,
+    /// Number of processes (rank 0 is the leader and also computes).
+    pub ranks: usize,
+    /// Number of simulated data shards (`ranks | shards`; each rank
+    /// generates `shards / ranks` of them).
+    pub shards: usize,
+    /// Flat parameter count.
+    pub n: usize,
+    pub steps: u64,
+    pub warmup: u64,
+    pub lr: f64,
+    pub min_lr_ratio: f64,
+    pub beta2: f64,
+    pub seed: u64,
+    /// Leader stdout cadence (0 = silent; workers never log).
+    pub log_every: u64,
+    /// Kernel worker threads per rank (output is invariant to this).
+    pub workers: usize,
+    pub theta_scale: f32,
+    /// Leader emits NDJSON events instead of human lines.
+    pub json: bool,
+    pub spawn: WorkerSpawn,
+}
+
+impl Default for DpProcConfig {
+    fn default() -> Self {
+        DpProcConfig {
+            plan: PrecisionPlan::bf16(Scheme::CollagePlus),
+            wire: crate::numerics::format::FP8E4M3,
+            ranks: 2,
+            shards: 2,
+            n: 2 * CHUNK,
+            steps: 60,
+            warmup: 6,
+            lr: 2e-2,
+            min_lr_ratio: 0.1,
+            beta2: 0.95,
+            seed: 1234,
+            log_every: 10,
+            workers: default_workers(),
+            theta_scale: 8.0,
+            json: false,
+            spawn: WorkerSpawn::Process,
+        }
+    }
+}
+
+/// Keys accepted in the `config` frame — anything else is rejected, so a
+/// version-skewed leader/worker pair fails loudly instead of silently
+/// dropping a field (the `serve` config idiom).
+const CONFIG_KEYS: [&str; 13] = [
+    "plan",
+    "wire",
+    "ranks",
+    "shards",
+    "n",
+    "steps",
+    "warmup",
+    "lr",
+    "min_lr_ratio",
+    "beta2",
+    "seed",
+    "theta_scale",
+    "workers",
+];
+
+impl DpProcConfig {
+    /// Typed validation of everything the run shape depends on.
+    pub fn validate(&self) -> Result<()> {
+        self.plan.validate()?;
+        if self.plan.scheme == Scheme::StochasticRounding {
+            bail!(
+                "dp-proc does not support the sr scheme: its per-element hash \
+                 is keyed on a per-step RNG draw owned by the stepping loop, \
+                 which region slicing would have to replicate exactly — use \
+                 a deterministic scheme"
+            );
+        }
+        wire_check(&self.wire)?;
+        ensure!(self.ranks >= 1, "need at least one rank");
+        ensure!(self.shards >= 1, "need at least one shard");
+        ensure!(
+            self.shards % self.ranks == 0,
+            "shards ({}) must be divisible by ranks ({})",
+            self.shards,
+            self.ranks
+        );
+        ensure!(self.n >= 1, "need at least one parameter");
+        let chunks = self.n.div_ceil(CHUNK);
+        ensure!(
+            chunks >= self.ranks,
+            "{} ranks need at least {} elements ({} chunk{} of {} for {} rank{})",
+            self.ranks,
+            self.ranks * CHUNK - CHUNK + 1,
+            chunks,
+            if chunks == 1 { "" } else { "s" },
+            CHUNK,
+            self.ranks,
+            if self.ranks == 1 { "" } else { "s" },
+        );
+        ensure!(self.steps >= 1, "need at least one step");
+        ensure!(self.workers >= 1, "need at least one kernel worker");
+        ensure!(
+            self.theta_scale.is_finite() && self.theta_scale > 0.0,
+            "theta_scale must be a positive finite number"
+        );
+        Ok(())
+    }
+
+    /// The `config` frame body.  `seed` travels as a 16-hex-digit string
+    /// (a JSON number is an f64 and would corrupt seeds ≥ 2^53); the
+    /// leader-only fields (`log_every`, `json`, `spawn`) do not travel.
+    pub fn to_json(&self) -> Value {
+        let mut o = Obj::new();
+        o.insert("plan", self.plan.to_string());
+        o.insert("wire", self.wire.name);
+        o.insert("ranks", self.ranks);
+        o.insert("shards", self.shards);
+        o.insert("n", self.n);
+        o.insert("steps", self.steps);
+        o.insert("warmup", self.warmup);
+        o.insert("lr", self.lr);
+        o.insert("min_lr_ratio", self.min_lr_ratio);
+        o.insert("beta2", self.beta2);
+        o.insert("seed", format!("{:016x}", self.seed));
+        o.insert("theta_scale", self.theta_scale);
+        o.insert("workers", self.workers);
+        Value::Obj(o)
+    }
+
+    /// Decode a `config` frame body (worker side): unknown keys are
+    /// rejected, every field is range-checked by [`DpProcConfig::validate`]
+    /// at the call site.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        for key in v.as_obj()?.keys() {
+            ensure!(CONFIG_KEYS.contains(&key.as_str()), "unknown config key {key:?}");
+        }
+        let plan: PrecisionPlan = v.get_as::<String>("plan")?.parse()?;
+        let wire: FloatFormat = v.get_as::<String>("wire")?.parse()?;
+        let seed_hex: String = v.get_as("seed")?;
+        let seed = u64::from_str_radix(&seed_hex, 16)
+            .map_err(|e| anyhow!("bad seed {seed_hex:?}: {e}"))?;
+        Ok(DpProcConfig {
+            plan,
+            wire,
+            ranks: v.get_as("ranks")?,
+            shards: v.get_as("shards")?,
+            n: v.get_as("n")?,
+            steps: v.get_as("steps")?,
+            warmup: v.get_as("warmup")?,
+            lr: v.get_as("lr")?,
+            min_lr_ratio: v.get_as("min_lr_ratio")?,
+            beta2: v.get_as("beta2")?,
+            seed,
+            log_every: 0,
+            workers: v.get_as("workers")?,
+            theta_scale: v.get_as("theta_scale")?,
+            json: false,
+            spawn: WorkerSpawn::Process,
+        })
+    }
+
+    /// Largest frame payload this run can legitimately produce (θ
+    /// snapshots at 8 B/element, state gathers at ≤ 7 vectors × 4 B,
+    /// segments at `shards · n · wire.bytes`), plus header slack.
+    fn frame_cap(&self) -> usize {
+        65536 + 8 * self.n * self.shards.max(8)
+    }
+}
+
+/// Summary of a finished run (leader side).
+#[derive(Debug, Clone)]
+pub struct DpProcOutcome {
+    pub steps: u64,
+    /// Mean loss over the last 10% of steps.
+    pub final_loss: f64,
+    /// FNV-1a-64 fingerprint of the reassembled full optimizer state
+    /// ([`state_digest`]) — the cross-run bit-identity assertion.
+    pub state_digest: u64,
+    /// Compressed gradient payload bytes shipped across all steps.  This
+    /// is the *logical* volume (`steps · shards · n · wire.bytes`): the
+    /// single-process path runs the same codec and reports the same
+    /// number, so compression ratios are comparable at any rank count.
+    pub grad_bytes: u64,
+    /// What the same traffic would cost uncompressed (f32).
+    pub grad_bytes_f32: u64,
+    pub log: MetricsLog,
+}
+
+// ---------------------------------------------------------------------------
+// Framed connection
+// ---------------------------------------------------------------------------
+
+/// One leader↔worker socket with the binary-frame codec attached
+/// ([`write_frame`]/[`read_frame`]): a JSON header line carrying the typed
+/// control fields, then `header["bytes"]` of raw payload.
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    cap: usize,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, cap: usize) -> Result<Conn> {
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let rd = stream.try_clone().context("cloning socket for the read half")?;
+        Ok(Conn { r: BufReader::new(rd), w: BufWriter::new(stream), cap })
+    }
+
+    fn send(&mut self, header: Obj, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.w, header, payload).context("writing frame")
+    }
+
+    /// Read one frame and require its `event` field to be `event`.
+    fn recv(&mut self, event: &str) -> Result<(Value, Vec<u8>)> {
+        let (h, p) =
+            read_frame(&mut self.r, self.cap).with_context(|| format!("awaiting {event:?}"))?;
+        let got: String = h.get_as("event")?;
+        ensure!(got == event, "expected {event:?} frame, got {got:?}");
+        Ok((h, p))
+    }
+}
+
+fn header(event: &str) -> Obj {
+    let mut h = Obj::new();
+    h.insert("event", event);
+    h
+}
+
+fn step_header(event: &str, step: u64) -> Obj {
+    let mut h = header(event);
+    h.insert("step", step);
+    h
+}
+
+fn check_step(h: &Value, t: u64) -> Result<()> {
+    let got: u64 = h.get_as("step")?;
+    ensure!(got == t, "frame for step {got}, expected step {t} — peers desynced");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Payload codecs
+// ---------------------------------------------------------------------------
+
+fn f64s_to_bytes(xs: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f64s(b: &[u8]) -> Result<Vec<f64>> {
+    ensure!(b.len() % 8 == 0, "f64 payload length {} is not a multiple of 8", b.len());
+    Ok(b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    ensure!(b.len() % 4 == 0, "f32 payload length {} is not a multiple of 4", b.len());
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Serialize per-chunk `(ChunkAccum, gn2)` partials as raw little-endian
+/// bits ([`CHUNK_RECORD_BYTES`] each) — the leader folds the exact f64/u64
+/// values the owning rank produced, nothing reformatted.
+fn encode_chunk_records(partials: &[(ChunkAccum, f64)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(partials.len() * CHUNK_RECORD_BYTES);
+    for (a, gn2) in partials {
+        out.extend_from_slice(&a.un2.to_le_bytes());
+        out.extend_from_slice(&a.en2.to_le_bytes());
+        out.extend_from_slice(&a.dot.to_le_bytes());
+        out.extend_from_slice(&a.pn2.to_le_bytes());
+        out.extend_from_slice(&a.lost.to_le_bytes());
+        out.extend_from_slice(&a.delta.saturated.to_le_bytes());
+        out.extend_from_slice(&a.delta.underflow.to_le_bytes());
+        out.extend_from_slice(&gn2.to_le_bytes());
+    }
+    out
+}
+
+fn decode_chunk_records(bytes: &[u8]) -> Result<Vec<(ChunkAccum, f64)>> {
+    ensure!(
+        bytes.len() % CHUNK_RECORD_BYTES == 0,
+        "chunk-record payload of {} bytes is not a multiple of {CHUNK_RECORD_BYTES}",
+        bytes.len()
+    );
+    let mut out = Vec::with_capacity(bytes.len() / CHUNK_RECORD_BYTES);
+    for rec in bytes.chunks_exact(CHUNK_RECORD_BYTES) {
+        let f = |i: usize| f64::from_le_bytes(rec[i * 8..i * 8 + 8].try_into().unwrap());
+        let u = |i: usize| u64::from_le_bytes(rec[i * 8..i * 8 + 8].try_into().unwrap());
+        let acc = ChunkAccum {
+            un2: f(0),
+            en2: f(1),
+            dot: f(2),
+            pn2: f(3),
+            lost: u(4),
+            delta: crate::optim::kernels::DeltaTally { saturated: u(5), underflow: u(6) },
+        };
+        out.push((acc, f(7)));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Shard gradients
+// ---------------------------------------------------------------------------
+
+/// SplitMix64 finalizer — the counter-hash core of the shard-noise stream
+/// (same construction as the fault injector's).
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Deterministic per-(shard, step, element) noise in [-0.5, 0.5): a pure
+/// counter hash, so a shard's gradient stream is identical wherever the
+/// shard is hosted — the rank-invariance contract's data half.
+fn shard_noise(key: u64, shard: u64, t: u64, i: u64) -> f32 {
+    let c = mix64(
+        key ^ mix64(shard.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(t))
+            .wrapping_add(i.wrapping_mul(0xd1b5_4a32_d192_ed03)),
+    );
+    ((c >> 40) as f32) * (1.0 / (1u64 << 24) as f32) - 0.5
+}
+
+// ---------------------------------------------------------------------------
+// Per-rank engine
+// ---------------------------------------------------------------------------
+
+/// Per-chunk partials one owner rank produced for one step, plus its local
+/// grow-veto vote.
+struct StepPartials {
+    partials: Vec<(ChunkAccum, f64)>,
+    clip: bool,
+    /// Delta-scale exponent in effect during the step (pre-`post_step`).
+    k: u8,
+}
+
+/// The per-rank compute state — identical on every rank (and on the
+/// single-process path): full teacher/θ_eff views, a region slice of the
+/// optimizer state, and one error-feedback residual per locally-generated
+/// shard.
+struct Engine {
+    cfg: DpProcConfig,
+    regions: Vec<std::ops::Range<usize>>,
+    region: std::ops::Range<usize>,
+    /// Global shard ids this rank generates gradients for.
+    shards: std::ops::Range<usize>,
+    state: OptimState,
+    opt: AdamW,
+    schedule: LrSchedule,
+    target: Vec<f32>,
+    theta_eff: Vec<f64>,
+    /// One full-length residual per local shard, indexed by
+    /// `global_shard - shards.start`.
+    ef: Vec<ErrorFeedback>,
+    noise_key: u64,
+    // Scratch reused across steps.
+    grad: Vec<f32>,
+    decoded: Vec<Vec<f32>>,
+    combined: Vec<f32>,
+}
+
+impl Engine {
+    /// Build rank `rank`'s engine.  The init replays the proxy trainer's
+    /// recipe (same RNG streams, same plan quantization) on *every* rank,
+    /// then slices: the full state exists transiently, the kept slice is
+    /// the rank's region.
+    fn new(cfg: &DpProcConfig, rank: usize) -> Result<Engine> {
+        ensure!(rank < cfg.ranks, "rank {rank} out of range for {} ranks", cfg.ranks);
+        let plan = cfg.plan;
+        let fmt = plan.format;
+        let blk = fmt.block != 0;
+        let mut init_rng = Rng::new(cfg.seed, 0xF8);
+        let mut target: Vec<f32> =
+            (0..cfg.n).map(|_| cfg.theta_scale * init_rng.normal() as f32).collect();
+        if blk {
+            crate::numerics::block::quantize_slice_in_place(&mut target);
+        } else {
+            for x in target.iter_mut() {
+                *x = fmt.round_nearest(*x);
+            }
+        }
+        let theta0: Vec<f32> = target
+            .iter()
+            .map(|&x| x + 0.3 * cfg.theta_scale * init_rng.normal() as f32)
+            .collect();
+        let opt = AdamW { weight_decay: 0.0, ..AdamW::for_plan(plan, cfg.beta2) };
+        let full = OptimState::init_plan(plan, &theta0);
+        let theta_eff = full.theta_effective();
+        let regions = rank_regions(cfg.n, cfg.ranks);
+        let region = regions[rank].clone();
+        let state = full.extract_region(region.clone())?;
+        let spr = cfg.shards / cfg.ranks;
+        let shards = rank * spr..(rank + 1) * spr;
+        Ok(Engine {
+            cfg: cfg.clone(),
+            regions,
+            region,
+            shards,
+            state,
+            opt,
+            schedule: LrSchedule::new(cfg.lr, cfg.warmup, cfg.steps, cfg.min_lr_ratio),
+            target,
+            theta_eff,
+            ef: vec![ErrorFeedback::new(cfg.n); spr],
+            noise_key: Rng::new(cfg.seed, 0xD9).next_u64(),
+            grad: vec![0.0; cfg.n],
+            decoded: Vec::new(),
+            combined: Vec::new(),
+        })
+    }
+
+    /// Generate this rank's shard gradients for step `t` and compress each
+    /// full stream through its error-feedback residual.  Returns the
+    /// per-shard losses and one `n · wire.bytes` blob per shard (regions
+    /// are contiguous in rank order, so the blob slices per owner by byte
+    /// range).
+    fn shard_packets(&mut self, t: u64) -> (Vec<f64>, Vec<Vec<u8>>) {
+        let n = self.cfg.n;
+        let scale = NOISE_FRAC * self.cfg.theta_scale;
+        let mut losses = Vec::with_capacity(self.shards.len());
+        let mut blobs = Vec::with_capacity(self.shards.len());
+        for shard in self.shards.clone() {
+            let mut loss = 0.0f64;
+            for (i, (g, (&e, &tg))) in self
+                .grad
+                .iter_mut()
+                .zip(self.theta_eff.iter().zip(self.target.iter()))
+                .enumerate()
+            {
+                let d = (e - tg as f64) as f32;
+                let gs = d + scale * shard_noise(self.noise_key, shard as u64, t, i as u64);
+                loss += gs as f64 * gs as f64;
+                *g = gs;
+            }
+            losses.push(loss * 0.5 / n as f64);
+            let mut blob = Vec::with_capacity(n * self.cfg.wire.bytes);
+            let local = shard - self.shards.start;
+            self.ef[local].encode_segment(&self.cfg.wire, 0, &self.grad, &mut blob);
+            blobs.push(blob);
+        }
+        (losses, blobs)
+    }
+
+    /// Owner half of the allreduce for this rank's region: decode the
+    /// `shards` compressed streams (shard order), mean-combine
+    /// (index-ordered), quantize to the plan format, and step the region
+    /// state through the plan-generic chunk kernels.  Returns the chunk
+    /// partials for the leader fold.
+    fn owner_step(&mut self, t: u64, streams: &[&[u8]]) -> Result<StepPartials> {
+        let wire = self.cfg.wire;
+        let s_count = self.cfg.shards;
+        ensure!(streams.len() == s_count, "expected {s_count} segment streams");
+        let rl = self.region.len();
+        self.decoded.resize_with(s_count, Vec::new);
+        for (dst, bytes) in self.decoded.iter_mut().zip(streams) {
+            ensure!(
+                bytes.len() == rl * wire.bytes,
+                "segment of {} bytes for a {rl}-element region at {} B/elem",
+                bytes.len(),
+                wire.bytes
+            );
+            dst.clear();
+            decode_segment(&wire, bytes, dst)?;
+        }
+        self.combined.clear();
+        self.combined.resize(rl, 0.0);
+        reduce_into(
+            &mut self.combined,
+            self.decoded.iter().map(|v| v.as_slice()),
+            1.0 / s_count as f32,
+        );
+        let fmt = self.cfg.plan.format;
+        if fmt.block != 0 {
+            // Region starts are ACCUM_CHUNK-aligned, so the 32-element
+            // block grid of a region slice is the global block grid.
+            crate::numerics::block::quantize_slice_in_place(&mut self.combined);
+        } else if fmt.mantissa_bits != 23 {
+            for x in self.combined.iter_mut() {
+                *x = fmt.round_nearest(*x);
+            }
+        }
+        let mut gn2 = Vec::with_capacity(rl.div_ceil(CHUNK));
+        for chunk in self.combined.chunks(CHUNK) {
+            let mut s = 0.0f64;
+            for &x in chunk {
+                s += x as f64 * x as f64;
+            }
+            gn2.push(s);
+        }
+        let lr = self.schedule.at(t) as f32;
+        let k = self.state.delta_k();
+        let scratch = generic_step_chunks(
+            &self.opt,
+            &mut self.state,
+            &self.combined,
+            lr,
+            t,
+            0,
+            self.cfg.workers,
+        );
+        ensure!(
+            scratch.len() == gn2.len(),
+            "kernel produced {} chunk partials for {} chunks",
+            scratch.len(),
+            gn2.len()
+        );
+        let partials: Vec<(ChunkAccum, f64)> = scratch.iter().copied().zip(gn2).collect();
+        self.state.put_accum_scratch(scratch);
+        let clip = self.state.delta_rescale_would_clip(k, k + 1);
+        Ok(StepPartials { partials, clip, k })
+    }
+
+    /// Feed the globally-folded counters to this rank's controller replica
+    /// (no-op for non-`auto` plans).
+    fn apply_ctrl(&mut self, saturated: u64, underflow: u64, grow_would_clip: bool) {
+        crate::optim::delta_ctrl::post_step_distributed(
+            &mut self.state,
+            self.cfg.n as u64,
+            saturated,
+            underflow,
+            grow_would_clip,
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker (ranks 1..N)
+// ---------------------------------------------------------------------------
+
+/// Entry point of `collage dp-proc-worker`: connect to the leader, say
+/// hello, receive the run config, then execute the per-step frame loop
+/// (see the wire spec in [`super`]).  Also run on in-process threads under
+/// [`WorkerSpawn::Thread`] — the code path is byte-identical.
+pub fn worker_main(connect: &str, rank: usize) -> Result<()> {
+    let stream = TcpStream::connect(connect)
+        .with_context(|| format!("rank {rank}: connecting to leader at {connect}"))?;
+    // Bootstrap cap until the config frame tells us the real sizes.
+    let mut conn = Conn::new(stream, 1 << 20)?;
+    let mut hello = header("hello");
+    hello.insert("rank", rank);
+    conn.send(hello, &[])?;
+    let (h, _) = conn.recv("config")?;
+    let cfg = DpProcConfig::from_json(h.get("config")?)?;
+    cfg.validate()?;
+    ensure!(rank >= 1 && rank < cfg.ranks, "worker rank {rank} outside 1..{}", cfg.ranks);
+    conn.cap = cfg.frame_cap();
+    let mut eng = Engine::new(&cfg, rank)?;
+    let wb = cfg.wire.bytes;
+    for t in 1..=cfg.steps {
+        // 1. Generate + compress local shard gradients; ship them.
+        let (losses, blobs) = eng.shard_packets(t);
+        let mut h = step_header("segments", t);
+        h.insert("rank", rank);
+        h.insert("losses", Value::Arr(losses.iter().map(|&l| Value::Num(l)).collect()));
+        let mut payload = Vec::with_capacity(blobs.iter().map(Vec::len).sum());
+        for b in &blobs {
+            payload.extend_from_slice(b);
+        }
+        conn.send(h, &payload)?;
+        // 2. Receive the S compressed streams for our region; step it.
+        let (h, payload) = conn.recv("combine")?;
+        check_step(&h, t)?;
+        let seg = eng.region.len() * wb;
+        ensure!(
+            payload.len() == cfg.shards * seg,
+            "combine payload of {} bytes, expected {} streams × {seg}",
+            payload.len(),
+            cfg.shards
+        );
+        let streams: Vec<&[u8]> = payload.chunks_exact(seg).collect();
+        let out = eng.owner_step(t, &streams)?;
+        let mut h = step_header("stats", t);
+        h.insert("rank", rank);
+        h.insert("clip", out.clip);
+        conn.send(h, &encode_chunk_records(&out.partials))?;
+        // 3. Receive the folded controller inputs; transition in lockstep.
+        let (h, _) = conn.recv("ctrl")?;
+        check_step(&h, t)?;
+        eng.apply_ctrl(h.get_as("sat")?, h.get_as("uflow")?, h.get_as("clip")?);
+        // 4. θ_eff exchange: our region up, the full vector back.
+        let mut th = step_header("theta", t);
+        th.insert("rank", rank);
+        conn.send(th, &f64s_to_bytes(&eng.state.theta_effective()))?;
+        let (h, payload) = conn.recv("theta_full")?;
+        check_step(&h, t)?;
+        let full = bytes_to_f64s(&payload)?;
+        ensure!(full.len() == cfg.n, "theta_full of {} elements, expected {}", full.len(), cfg.n);
+        eng.theta_eff = full;
+    }
+    // Final state gather: region vectors as raw f32 bits, controller
+    // state in the header.
+    let (_, _) = conn.recv("finish")?;
+    let mut h = header("state");
+    h.insert("rank", rank);
+    if let Some(ctrl) = eng.state.delta_ctrl() {
+        h.insert("k", ctrl.k as u64);
+        h.insert("good_steps", ctrl.good_steps as u64);
+    }
+    let mut payload = Vec::new();
+    for vec in eng.state.vecs() {
+        payload.extend_from_slice(&f32s_to_bytes(vec));
+    }
+    conn.send(h, &payload)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Leader (rank 0)
+// ---------------------------------------------------------------------------
+
+/// Run a full `dp-proc` job: spawn ranks 1..N (per `cfg.spawn`), accept
+/// their connections, drive the per-step frame loop as rank 0 (the leader
+/// computes too), and reassemble + digest the final state.
+pub fn run(cfg: &DpProcConfig) -> Result<DpProcOutcome> {
+    cfg.validate()?;
+    if cfg.ranks == 1 {
+        return lead(cfg, Vec::new());
+    }
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding leader socket")?;
+    let addr = listener.local_addr()?.to_string();
+    let mut children: Vec<Child> = Vec::new();
+    let mut threads: Vec<thread::JoinHandle<Result<()>>> = Vec::new();
+    match cfg.spawn {
+        WorkerSpawn::Process => {
+            let exe = std::env::current_exe().context("locating the collage binary")?;
+            for rank in 1..cfg.ranks {
+                let child = Command::new(&exe)
+                    .args(["dp-proc-worker", "--connect", &addr, "--rank", &rank.to_string()])
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::inherit())
+                    .spawn()
+                    .with_context(|| format!("spawning worker rank {rank}"))?;
+                children.push(child);
+            }
+        }
+        WorkerSpawn::Thread => {
+            for rank in 1..cfg.ranks {
+                let addr = addr.clone();
+                threads.push(thread::spawn(move || worker_main(&addr, rank)));
+            }
+        }
+    }
+    let result = accept_workers(cfg, &listener).and_then(|conns| lead(cfg, conns));
+    // Reap whatever we spawned; a worker failure poisons an otherwise-ok
+    // run, a leader failure kills the workers.
+    let mut worker_err: Option<anyhow::Error> = None;
+    for mut child in children {
+        if result.is_err() {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if !status.success() && result.is_ok() => {
+                worker_err.get_or_insert_with(|| anyhow!("worker exited with {status}"));
+            }
+            Err(e) if result.is_ok() => {
+                worker_err.get_or_insert_with(|| anyhow!("waiting on worker: {e}"));
+            }
+            _ => {}
+        }
+    }
+    for handle in threads {
+        match handle.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if result.is_ok() {
+                    worker_err.get_or_insert(e);
+                }
+            }
+            Err(_) => {
+                if result.is_ok() {
+                    worker_err.get_or_insert_with(|| anyhow!("worker thread panicked"));
+                }
+            }
+        }
+    }
+    match worker_err {
+        Some(e) => Err(e),
+        None => result,
+    }
+}
+
+/// Accept ranks 1..N, identified by their `hello` frames (connect order is
+/// arbitrary), and hand each its config.  Bounded by [`ACCEPT_TIMEOUT`] so
+/// a worker that died before connecting fails the run instead of wedging
+/// it.
+fn accept_workers(cfg: &DpProcConfig, listener: &TcpListener) -> Result<Vec<Conn>> {
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + ACCEPT_TIMEOUT;
+    let mut conns: Vec<Option<Conn>> = (1..cfg.ranks).map(|_| None).collect();
+    let mut connected = 0;
+    while connected < cfg.ranks - 1 {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let mut conn = Conn::new(stream, cfg.frame_cap())?;
+                let (h, _) = conn.recv("hello")?;
+                let rank: usize = h.get_as("rank")?;
+                ensure!(
+                    rank >= 1 && rank < cfg.ranks,
+                    "hello from unexpected rank {rank} (want 1..{})",
+                    cfg.ranks
+                );
+                ensure!(conns[rank - 1].is_none(), "duplicate hello from rank {rank}");
+                let mut ch = header("config");
+                ch.insert("config", cfg.to_json());
+                conn.send(ch, &[])?;
+                conns[rank - 1] = Some(conn);
+                connected += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                ensure!(
+                    Instant::now() < deadline,
+                    "only {connected} of {} workers connected within {ACCEPT_TIMEOUT:?}",
+                    cfg.ranks - 1
+                );
+                thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).context("accepting worker connection"),
+        }
+    }
+    Ok(conns.into_iter().map(|c| c.expect("all slots filled")).collect())
+}
+
+/// The rank-0 step loop: leader duties (fold, broadcast, log) interleaved
+/// with its own rank-0 compute through the same [`Engine`].
+fn lead(cfg: &DpProcConfig, mut conns: Vec<Conn>) -> Result<DpProcOutcome> {
+    let plan = cfg.plan;
+    let n = cfg.n;
+    let wb = cfg.wire.bytes;
+    let spr = cfg.shards / cfg.ranks;
+    let mut eng = Engine::new(cfg, 0)?;
+    let mut log = MetricsLog::new();
+    let mut grad_bytes: u64 = 0;
+    let mut ndjson = cfg.json.then(|| NdjsonWriter::new(std::io::stdout()));
+    if let Some(out) = ndjson.as_mut() {
+        let mut ev = header("config");
+        ev.insert("config", cfg.to_json());
+        out.write(&Value::Obj(ev))?;
+    }
+    for t in 1..=cfg.steps {
+        let t0 = Instant::now();
+        // Gather all shard streams, global-shard-ascending: rank 0's own,
+        // then each worker's (ranks own contiguous ascending shard ranges).
+        let (losses0, blobs0) = eng.shard_packets(t);
+        let mut all_losses = vec![0.0f64; cfg.shards];
+        all_losses[..spr].copy_from_slice(&losses0);
+        let mut all_blobs = blobs0;
+        for (w, conn) in conns.iter_mut().enumerate() {
+            let rank = w + 1;
+            let (h, payload) = conn.recv("segments")?;
+            check_step(&h, t)?;
+            ensure!(h.get_as::<usize>("rank")? == rank, "segments from the wrong rank");
+            let losses: Vec<f64> = h.get_as("losses")?;
+            ensure!(losses.len() == spr, "expected {spr} shard losses");
+            all_losses[rank * spr..(rank + 1) * spr].copy_from_slice(&losses);
+            ensure!(
+                payload.len() == spr * n * wb,
+                "segments payload of {} bytes, expected {spr} × {n} × {wb}",
+                payload.len()
+            );
+            for blob in payload.chunks_exact(n * wb) {
+                all_blobs.push(blob.to_vec());
+            }
+        }
+        grad_bytes += all_blobs.iter().map(|b| b.len() as u64).sum::<u64>();
+        // Scatter: each owner gets all S streams sliced to its region.
+        for (w, conn) in conns.iter_mut().enumerate() {
+            let region = &eng.regions[w + 1];
+            let mut payload = Vec::with_capacity(cfg.shards * region.len() * wb);
+            for blob in &all_blobs {
+                payload.extend_from_slice(&blob[region.start * wb..region.end * wb]);
+            }
+            conn.send(step_header("combine", t), &payload)?;
+        }
+        let r0 = eng.regions[0].clone();
+        let streams: Vec<&[u8]> =
+            all_blobs.iter().map(|b| &b[r0.start * wb..r0.end * wb]).collect();
+        let own = eng.owner_step(t, &streams)?;
+        // Fold: rank-ascending = global-chunk-ascending, the one combine
+        // order the determinism contract allows.
+        let mut total = ChunkAccum::default();
+        let mut gnorm2 = 0.0f64;
+        let mut clip = own.clip;
+        for (acc, g2) in &own.partials {
+            total.merge(acc);
+            gnorm2 += g2;
+        }
+        for conn in conns.iter_mut() {
+            let (h, payload) = conn.recv("stats")?;
+            check_step(&h, t)?;
+            clip |= h.get_as::<bool>("clip")?;
+            for (acc, g2) in decode_chunk_records(&payload)? {
+                total.merge(&acc);
+                gnorm2 += g2;
+            }
+        }
+        let stats = total.finalize(plan.is_mcf_params(), n, own.k);
+        let mut loss = 0.0f64;
+        for l in &all_losses {
+            loss += l;
+        }
+        let loss = loss / cfg.shards as f64;
+        ensure!(loss.is_finite(), "non-finite loss at step {t}");
+        // Controller broadcast, then every rank transitions in lockstep.
+        for conn in conns.iter_mut() {
+            let mut h = step_header("ctrl", t);
+            h.insert("sat", stats.delta_saturated);
+            h.insert("uflow", stats.delta_underflow);
+            h.insert("clip", clip);
+            conn.send(h, &[])?;
+        }
+        eng.apply_ctrl(stats.delta_saturated, stats.delta_underflow, clip);
+        // θ_eff gather/broadcast — after the controller hook on purpose: a
+        // vetoed-grow backoff rescales stored words, and θ_eff must be the
+        // post-transition view everywhere.
+        let mut full = vec![0.0f64; n];
+        full[r0.clone()].copy_from_slice(&eng.state.theta_effective());
+        for (w, conn) in conns.iter_mut().enumerate() {
+            let region = &eng.regions[w + 1];
+            let (h, payload) = conn.recv("theta")?;
+            check_step(&h, t)?;
+            let part = bytes_to_f64s(&payload)?;
+            ensure!(
+                part.len() == region.len(),
+                "theta of {} elements for a {}-element region",
+                part.len(),
+                region.len()
+            );
+            full[region.clone()].copy_from_slice(&part);
+        }
+        let theta_bytes = f64s_to_bytes(&full);
+        for conn in conns.iter_mut() {
+            conn.send(step_header("theta_full", t), &theta_bytes)?;
+        }
+        eng.theta_eff = full;
+        let lr = eng.schedule.at(t) as f32;
+        let row = StepRow {
+            step: t,
+            loss,
+            lr: lr as f64,
+            grad_norm: gnorm2.sqrt(),
+            param_norm: stats.param_norm,
+            update_norm: stats.edq.update_norm,
+            eff_update_norm: stats.edq.effective_norm,
+            edq: stats.edq.edq,
+            lost_frac: stats.lost_frac,
+            clip_coef: 1.0,
+            val_loss: f64::NAN,
+            step_time: t0.elapsed().as_secs_f64(),
+            delta_k: stats.delta_k,
+            delta_saturated: stats.delta_saturated,
+            delta_underflow: stats.delta_underflow,
+            guard_trips: 0,
+            rollbacks: 0,
+            steps_lost: 0,
+        };
+        if let Some(out) = ndjson.as_mut() {
+            let mut ev = row.to_json();
+            if let Value::Obj(o) = &mut ev {
+                o.insert("event", "step");
+            }
+            out.write(&ev)?;
+        } else if cfg.log_every > 0 && t % cfg.log_every == 0 {
+            let ds = stats.delta_log_suffix();
+            println!(
+                "[{t}/{}] loss={:.4e} lr={:.2e} edq={:.4} lost={:.1}% ‖θ‖={:.3}{ds}",
+                cfg.steps,
+                row.loss,
+                row.lr,
+                stats.edq.edq_ratio,
+                row.lost_frac * 100.0,
+                row.param_norm,
+            );
+        }
+        log.push(row);
+    }
+    // Gather regions, reassemble the full state, digest it.
+    for conn in conns.iter_mut() {
+        conn.send(header("finish"), &[])?;
+    }
+    let mut parts: Vec<OptimState> = Vec::with_capacity(cfg.ranks);
+    parts.push(eng.state.clone());
+    let arity = plan.state_spec().len();
+    for (w, conn) in conns.iter_mut().enumerate() {
+        let region = &eng.regions[w + 1];
+        let (h, payload) = conn.recv("state")?;
+        let rl = region.len();
+        ensure!(
+            payload.len() == arity * rl * 4,
+            "state payload of {} bytes, expected {arity} vecs × {rl} × 4",
+            payload.len()
+        );
+        let vecs: Result<Vec<Vec<f32>>> =
+            payload.chunks_exact(rl * 4).map(bytes_to_f32s).collect();
+        let mut st = OptimState::from_vecs_plan(plan, vecs?)?;
+        if plan.delta_auto {
+            let k: u8 = h.get_as("k")?;
+            let good_steps: u64 = h.get_as("good_steps")?;
+            st.restore_delta_ctrl(k, good_steps as u32)?;
+        }
+        parts.push(st);
+    }
+    let full_state = OptimState::concat_regions(&parts)?;
+    let digest = state_digest(&full_state);
+    let grad_bytes_f32 = cfg.steps * cfg.shards as u64 * n as u64 * 4;
+    let tail = (cfg.steps as usize / 10).max(1);
+    let outcome = DpProcOutcome {
+        steps: cfg.steps,
+        final_loss: log.tail_loss(tail),
+        state_digest: digest,
+        grad_bytes,
+        grad_bytes_f32,
+        log,
+    };
+    if let Some(out) = ndjson.as_mut() {
+        let mut ev = header("done");
+        ev.insert("steps", cfg.steps);
+        ev.insert("final_loss", outcome.final_loss);
+        ev.insert("grad_bytes", grad_bytes);
+        ev.insert("grad_bytes_f32", grad_bytes_f32);
+        ev.insert("state_digest", format!("{digest:016x}"));
+        out.write(&Value::Obj(ev))?;
+    } else if cfg.log_every > 0 {
+        println!(
+            "dp-proc done: ranks={} shards={} wire={} steps={} final_loss={:.4e} \
+             grad_bytes={grad_bytes} ({:.2}x vs f32) digest={digest:016x}",
+            cfg.ranks,
+            cfg.shards,
+            cfg.wire.name,
+            cfg.steps,
+            outcome.final_loss,
+            grad_bytes_f32 as f64 / grad_bytes as f64,
+        );
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::format::{BF16, FP8E4M3, FP8E5M2, MXFP4};
+
+    fn quiet(ranks: usize, spawn: WorkerSpawn) -> DpProcConfig {
+        DpProcConfig {
+            plan: "collage-light-3@fp8e4m3+delta-scale=auto".parse().unwrap(),
+            wire: FP8E5M2,
+            ranks,
+            shards: 2,
+            n: 2 * CHUNK,
+            steps: 30,
+            warmup: 3,
+            log_every: 0,
+            spawn,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_shapes() {
+        let ok = quiet(1, WorkerSpawn::Thread);
+        assert!(ok.validate().is_ok());
+        let sr = DpProcConfig { plan: "sr".parse().unwrap(), ..ok.clone() };
+        assert!(sr.validate().unwrap_err().to_string().contains("sr"));
+        let blk = DpProcConfig { wire: MXFP4, ..ok.clone() };
+        assert!(blk.validate().unwrap_err().to_string().contains("block-scaled"));
+        let uneven = DpProcConfig { ranks: 2, shards: 3, ..ok.clone() };
+        assert!(uneven.validate().unwrap_err().to_string().contains("divisible"));
+        let starved = DpProcConfig { ranks: 3, shards: 3, n: 2 * CHUNK, ..ok.clone() };
+        assert!(starved.validate().is_err(), "2 chunks cannot feed 3 ranks");
+        let zero = DpProcConfig { ranks: 0, shards: 0, ..ok };
+        assert!(zero.validate().is_err());
+    }
+
+    #[test]
+    fn config_round_trips_through_json() {
+        let cfg = DpProcConfig {
+            seed: u64::MAX - 17, // only survives as a hex string
+            log_every: 25,
+            json: true,
+            ..quiet(2, WorkerSpawn::Thread)
+        };
+        let back = DpProcConfig::from_json(&cfg.to_json()).unwrap();
+        // Leader-only fields do not travel.
+        let expect = DpProcConfig {
+            log_every: 0,
+            json: false,
+            spawn: WorkerSpawn::Process,
+            ..cfg
+        };
+        assert_eq!(back, expect);
+        // Unknown keys are rejected (version-skew guard).
+        let mut o = match cfg.to_json() {
+            Value::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("surprise", 1u64);
+        assert!(DpProcConfig::from_json(&Value::Obj(o)).is_err());
+    }
+
+    #[test]
+    fn chunk_records_round_trip_bitwise() {
+        let partials = vec![
+            (
+                ChunkAccum {
+                    un2: 1.5e-7,
+                    en2: 2.5,
+                    dot: -3.25,
+                    pn2: 1e300,
+                    lost: 7,
+                    delta: crate::optim::kernels::DeltaTally { saturated: 1, underflow: u64::MAX },
+                },
+                0.125,
+            ),
+            (ChunkAccum::default(), -0.0),
+        ];
+        let bytes = encode_chunk_records(&partials);
+        assert_eq!(bytes.len(), 2 * CHUNK_RECORD_BYTES);
+        let back = decode_chunk_records(&bytes).unwrap();
+        for ((a, g), (b, h)) in partials.iter().zip(&back) {
+            assert_eq!(a.un2.to_bits(), b.un2.to_bits());
+            assert_eq!(a.en2.to_bits(), b.en2.to_bits());
+            assert_eq!(a.dot.to_bits(), b.dot.to_bits());
+            assert_eq!(a.pn2.to_bits(), b.pn2.to_bits());
+            assert_eq!((a.lost, a.delta), (b.lost, b.delta));
+            assert_eq!(g.to_bits(), h.to_bits());
+        }
+        assert!(decode_chunk_records(&bytes[1..]).is_err());
+    }
+
+    #[test]
+    fn single_process_run_reports_wire_volume() {
+        let cfg = DpProcConfig {
+            plan: "collage-light@fp8e4m3".parse().unwrap(),
+            wire: FP8E4M3,
+            ranks: 1,
+            shards: 2,
+            n: CHUNK - 5,
+            steps: 5,
+            ..quiet(1, WorkerSpawn::Thread)
+        };
+        let o = run(&cfg).unwrap();
+        assert_eq!(o.log.rows().len(), 5);
+        assert_ne!(o.state_digest, 0);
+        // The codec runs even in one process: 5 steps × 2 shards × n × 1 B.
+        assert_eq!(o.grad_bytes, 5 * 2 * (CHUNK as u64 - 5));
+        assert_eq!(o.grad_bytes_f32, 4 * o.grad_bytes);
+        for r in o.log.rows() {
+            assert!(r.loss.is_finite() && r.param_norm.is_finite());
+        }
+    }
+
+    /// Everything the determinism contract pins, per step, bit-for-bit
+    /// (`step_time` excluded — it is wall-clock).
+    fn row_bits(log: &MetricsLog) -> Vec<(u64, [u64; 8], (u8, u64, u64))> {
+        log.rows()
+            .iter()
+            .map(|r| {
+                (
+                    r.step,
+                    [
+                        r.loss.to_bits(),
+                        r.lr.to_bits(),
+                        r.grad_norm.to_bits(),
+                        r.param_norm.to_bits(),
+                        r.update_norm.to_bits(),
+                        r.eff_update_norm.to_bits(),
+                        r.edq.to_bits(),
+                        r.lost_frac.to_bits(),
+                    ],
+                    (r.delta_k, r.delta_saturated, r.delta_underflow),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rank_and_worker_count_are_invariant_over_sockets() {
+        // 1 process vs 2 processes (thread-spawned, real sockets) vs 2
+        // processes × 2 kernel threads: identical rows and final digest.
+        let one = run(&DpProcConfig { workers: 1, ..quiet(1, WorkerSpawn::Thread) }).unwrap();
+        let two = run(&DpProcConfig { workers: 1, ..quiet(2, WorkerSpawn::Thread) }).unwrap();
+        let two_mt = run(&DpProcConfig { workers: 2, ..quiet(2, WorkerSpawn::Thread) }).unwrap();
+        assert_eq!(row_bits(&one.log), row_bits(&two.log), "1 vs 2 ranks");
+        assert_eq!(row_bits(&one.log), row_bits(&two_mt.log), "1 rank vs 2 ranks × 2 threads");
+        assert_eq!(one.state_digest, two.state_digest, "digest must not depend on rank count");
+        assert_eq!(one.state_digest, two_mt.state_digest);
+        assert_eq!(one.grad_bytes, two.grad_bytes, "wire volume is logical");
+    }
+
+    #[test]
+    fn bf16_wire_on_a_bf16_plan_is_also_invariant() {
+        // A second cell of the (plan, wire) grid, off the fp8 column, with
+        // an uneven 3-chunk grid over 2 ranks.
+        let mk = |ranks| DpProcConfig {
+            plan: PrecisionPlan::bf16(Scheme::CollagePlus),
+            wire: BF16,
+            n: 3 * CHUNK - 11,
+            shards: 4,
+            steps: 8,
+            ..quiet(ranks, WorkerSpawn::Thread)
+        };
+        let one = run(&mk(1)).unwrap();
+        let two = run(&mk(2)).unwrap();
+        assert_eq!(row_bits(&one.log), row_bits(&two.log));
+        assert_eq!(one.state_digest, two.state_digest);
+    }
+}

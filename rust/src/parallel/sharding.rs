@@ -11,6 +11,30 @@ use anyhow::{bail, Result};
 
 use crate::model::config::GptConfig;
 
+/// Contiguous, chunk-aligned element regions for `ranks` processes over an
+/// `n`-element flat state — the ZeRO-style ownership map of the
+/// multi-process runtime ([`crate::parallel::proc`]).  The unit of
+/// ownership is the kernels' fixed `ACCUM_CHUNK` grid (rank `r` gets
+/// chunks `⌊r·C/R⌋ .. ⌊(r+1)·C/R⌋` of `C = ⌈n/ACCUM_CHUNK⌉`), so a
+/// region-local chunk index maps 1:1 onto a global chunk index and every
+/// per-chunk quantity — kernel partials, 32-element block boundaries,
+/// `StepStats` counters — is identical whether the chunk is stepped inside
+/// a full state or a rank slice.  Regions cover `0..n` exactly, in rank
+/// order; a rank whose share rounds to zero chunks gets an empty region
+/// (callers wanting work on every rank should require `C ≥ ranks`).
+pub fn rank_regions(n: usize, ranks: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(ranks >= 1, "need at least one rank");
+    let chunk = crate::numerics::analysis::ACCUM_CHUNK;
+    let chunks = n.div_ceil(chunk);
+    (0..ranks)
+        .map(|r| {
+            let c0 = r * chunks / ranks;
+            let c1 = (r + 1) * chunks / ranks;
+            (c0 * chunk).min(n)..(c1 * chunk).min(n)
+        })
+        .collect()
+}
+
 /// How one logical tensor is distributed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardSpec {
@@ -149,6 +173,34 @@ mod tests {
         let cfg = find("gpt-6.7b").unwrap();
         let plan = ShardPlan::plan(cfg, 8, 1).unwrap();
         assert!(plan.balance() > 0.9, "balance {}", plan.balance());
+    }
+
+    #[test]
+    fn rank_regions_partition_the_chunk_grid() {
+        let chunk = crate::numerics::analysis::ACCUM_CHUNK;
+        for (n, ranks) in [
+            (chunk * 4, 2),
+            (chunk * 3 + 17, 2),
+            (chunk * 7 + 1, 3),
+            (chunk - 5, 1),
+            (chunk + 1, 4),
+        ] {
+            let regions = rank_regions(n, ranks);
+            assert_eq!(regions.len(), ranks);
+            let mut cursor = 0;
+            for r in &regions {
+                assert_eq!(r.start, cursor, "regions must be contiguous in rank order");
+                assert_eq!(r.start % chunk, 0, "region starts on the chunk grid");
+                cursor = r.end;
+            }
+            assert_eq!(cursor, n, "regions must cover 0..n exactly");
+        }
+        // Enough chunks for every rank → every region non-empty and
+        // balanced to within one chunk.
+        let regions = rank_regions(chunk * 7 + 1, 4);
+        let sizes: Vec<usize> = regions.iter().map(|r| r.len().div_ceil(chunk)).collect();
+        assert!(sizes.iter().all(|&s| s >= 1));
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
     }
 
     #[test]

@@ -664,6 +664,59 @@ impl<W: Write> NdjsonWriter<W> {
     }
 }
 
+// ----- Binary frames --------------------------------------------------------
+//
+// The control-plane framing of the multi-process runtime
+// (`parallel::proc`): one `\n`-terminated compact JSON header line —
+// the NDJSON invariant above guarantees the newline is unambiguous —
+// followed by exactly `header["bytes"]` raw payload bytes.  JSON carries
+// the typed control fields; bulk numeric payloads (gradient segments,
+// chunk partials, θ snapshots) ride the binary tail untouched, so framing
+// costs O(header) per message regardless of payload size.
+
+/// Write one binary frame: `header` (with a `"bytes"` field set to the
+/// payload length) as a single compact JSON line, then the raw payload.
+/// Flushes, so a blocking peer sees the full frame.
+pub fn write_frame<W: Write>(w: &mut W, mut header: Obj, payload: &[u8]) -> std::io::Result<()> {
+    header.insert("bytes", payload.len() as u64);
+    let mut line = Value::Obj(header).dump();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one binary frame written by [`write_frame`]: returns the parsed
+/// header and the payload.  Malformed JSON, a missing/oversized `"bytes"`
+/// field (`> max_payload`), or EOF mid-frame all surface as
+/// `InvalidData`/`UnexpectedEof` I/O errors — transport-level failures,
+/// not decode-level ones.
+pub fn read_frame<R: std::io::BufRead>(
+    r: &mut R,
+    max_payload: usize,
+) -> std::io::Result<(Value, Vec<u8>)> {
+    use std::io::{Error, ErrorKind, Read};
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(Error::new(ErrorKind::UnexpectedEof, "connection closed between frames"));
+    }
+    let header =
+        Value::parse(line.trim_end()).map_err(|e| Error::new(ErrorKind::InvalidData, e))?;
+    let bytes: usize = header
+        .opt_as("bytes")
+        .map_err(|e| Error::new(ErrorKind::InvalidData, e))?
+        .unwrap_or(0);
+    if bytes > max_payload {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            format!("frame payload of {bytes} bytes exceeds the {max_payload}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; bytes];
+    r.read_exact(&mut payload)?;
+    Ok((header, payload))
+}
+
 // ----- From conversions -----------------------------------------------------
 
 impl From<f64> for Value {
@@ -714,6 +767,55 @@ impl From<String> for Value {
 impl<T: Into<Value>> From<Vec<T>> for Value {
     fn from(v: Vec<T>) -> Self {
         Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod frame_tests {
+    use super::*;
+
+    fn header(kind: &str) -> Obj {
+        let mut h = Obj::new();
+        h.insert("event", kind);
+        h
+    }
+
+    #[test]
+    fn frames_roundtrip_header_and_payload() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, header("a"), b"\x00\x01binary\nwith newline").unwrap();
+        write_frame(&mut buf, header("b"), &[]).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let (h, p) = read_frame(&mut r, 1 << 20).unwrap();
+        assert_eq!(h.get_as::<String>("event").unwrap(), "a");
+        assert_eq!(p, b"\x00\x01binary\nwith newline");
+        let (h, p) = read_frame(&mut r, 1 << 20).unwrap();
+        assert_eq!(h.get_as::<String>("event").unwrap(), "b");
+        assert!(p.is_empty());
+        let eof = read_frame(&mut r, 1 << 20).unwrap_err();
+        assert_eq!(eof.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn oversized_and_truncated_frames_are_io_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, header("big"), &[7u8; 64]).unwrap();
+        let mut r = std::io::Cursor::new(buf.clone());
+        assert_eq!(
+            read_frame(&mut r, 63).unwrap_err().kind(),
+            std::io::ErrorKind::InvalidData
+        );
+        buf.truncate(buf.len() - 10);
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(
+            read_frame(&mut r, 1 << 20).unwrap_err().kind(),
+            std::io::ErrorKind::UnexpectedEof
+        );
+        let mut r = std::io::Cursor::new(b"not json\n".to_vec());
+        assert_eq!(
+            read_frame(&mut r, 1 << 20).unwrap_err().kind(),
+            std::io::ErrorKind::InvalidData
+        );
     }
 }
 
