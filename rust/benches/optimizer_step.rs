@@ -30,7 +30,8 @@ use collage::numerics::expansion::rn_bf16;
 use collage::numerics::block::quantize_slice_in_place;
 use collage::numerics::format::{BF16, FP16, FP8E4M3, FP8E5M2, MXFP4};
 use collage::optim::adamw::AdamW;
-use collage::optim::plan::{PrecisionPlan, Scheme};
+use collage::optim::kernels::KERNELS;
+use collage::optim::plan::PrecisionPlan;
 use collage::optim::state::OptimState;
 use collage::optim::strategy::{Strategy, PAPER_OPTIONS};
 use collage::runtime::{Manifest, Runtime};
@@ -147,6 +148,9 @@ fn main() {
         o.insert("sharded_speedup_vs_fused", t.fused / t.sharded);
         o.insert("speedup_vs_d", d_fused / t.fused);
         o.insert("state_bytes_per_param", s.state_bytes_per_param());
+        // Rows written by this bench are real measurements; the committed
+        // baseline flags hand-estimated ceilings with "estimated" instead.
+        o.insert("source", "measured");
         per_strategy.insert(s.option_str(), Value::Obj(o));
     }
     summary.insert("strategies", Value::Obj(per_strategy));
@@ -163,17 +167,15 @@ fn main() {
     println!("\n== format-generic fused kernels, {gen_n} params ==");
     let mut generic_obj = Obj::new();
     for fmt in [FP16, FP8E4M3, FP8E5M2, MXFP4] {
-        // Every scheme below is legal at mxfp4 too (BLOCK_SCHEMES is
-        // exactly this list), so the block row needs no filtering.
-        for scheme in [
-            Scheme::Plain,
-            Scheme::CollageLight,
-            Scheme::CollageLight3,
-            Scheme::CollagePlus,
-            Scheme::CollagePlus3,
-        ] {
-            let plan = PrecisionPlan::new(fmt, scheme);
-            let label = format!("{}@{}", scheme.name(), fmt.name);
+        // Registry-driven rows: the benched kernels are exactly the
+        // BLOCK_SCHEMES (all legal at mxfp4 too, so the block row needs
+        // no filtering), and `bench_row` is the one row-naming scheme the
+        // baseline JSON and the regression gate share — a new scheme
+        // enters the bench by flipping its registry row, not by editing
+        // a hand-synced list here.
+        for kern in KERNELS.iter().filter(|k| k.benched) {
+            let plan = PrecisionPlan::new(fmt, kern.scheme);
+            let label = kern.bench_row(&fmt);
             let opt = AdamW::for_plan(plan, 0.95);
             let quantize = |v: &[f32]| -> Vec<f32> {
                 let mut out: Vec<f32> = v.iter().map(|&x| fmt.round_nearest(x)).collect();
@@ -209,6 +211,7 @@ fn main() {
             o.insert("fused_ns_per_elem", fused * 1e9 / gen_n as f64);
             o.insert(format!("w{shard}_ns_per_elem"), sharded * 1e9 / gen_n as f64);
             o.insert("bytes_per_param", plan.bytes_per_param());
+            o.insert("source", "measured");
             generic_obj.insert(label, Value::Obj(o));
         }
     }
@@ -248,6 +251,7 @@ fn main() {
         let mut o = Obj::new();
         o.insert("ns_per_elem", ns);
         o.insert("bytes_per_elem", fmt.bytes);
+        o.insert("source", "measured");
         allreduce_obj.insert(fmt.name, Value::Obj(o));
     }
     println!();

@@ -15,14 +15,27 @@ while bisecting).  Candidate rows absent from the baseline are fine, so
 a quiet machine with ``make bench-baseline`` (see rust/Makefile) to start
 gating them.
 
+With ``--history PATH`` the gate also tracks the measurement *trajectory*:
+the candidate's rows are compared against the most recent record in the
+append-only ``BENCH_history.jsonl`` (same tolerance/abs-floor — so a slow
+creep past the last *measured* point fails even while it still clears the
+generous committed ceiling), and a new record ``{"timestamp", "sha",
+"rows", "outcome"}`` is appended **regardless** of the outcome, so the
+ns/elem trend across PRs survives in one greppable file.  A missing or
+empty history file is the bootstrap case: nothing to compare against, the
+first record is simply written.
+
 Usage:
     python3 scripts/check_bench_regression.py BASELINE CANDIDATE \
-        [--tolerance 0.25] [--abs-floor 2.0] [--allow-missing]
+        [--tolerance 0.25] [--abs-floor 2.0] [--allow-missing] \
+        [--history BENCH_history.jsonl]
 """
 
 import argparse
 import json
+import os
 import sys
+import time
 
 
 def fused_rows(doc):
@@ -48,6 +61,60 @@ def fused_rows(doc):
     return rows
 
 
+def last_history_record(path):
+    """The most recent record of the append-only history, or None on the
+    bootstrap path (no file yet / empty file / trailing garbage)."""
+    if not os.path.exists(path):
+        return None
+    last = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # a torn write must not brick the trajectory gate
+            if isinstance(rec, dict) and isinstance(rec.get("rows"), dict):
+                last = rec
+    return last
+
+
+def check_history(cand, path, tolerance, abs_floor):
+    """Trajectory gate: compare against the last measured point, then
+    append the candidate as a new record no matter what.  Returns the
+    list of regressed row names (empty on OK or bootstrap)."""
+    prev = last_history_record(path)
+    regressions = []
+    if prev is None:
+        print(f"bench history: bootstrap — no prior record in {path}")
+    else:
+        prev_rows = {k: v for k, v in prev["rows"].items()
+                     if isinstance(v, (int, float))}
+        shared = sorted(set(prev_rows) & set(cand))
+        label = prev.get("sha") or prev.get("timestamp") or "previous"
+        print(f"bench history: comparing against {label} "
+              f"({len(shared)} shared rows)")
+        for key in shared:
+            b, c = float(prev_rows[key]), cand[key]
+            if c > b * (1.0 + tolerance) and (c - b) > abs_floor:
+                print(f"  {key}: prev {b:.2f} -> cand {c:.2f} "
+                      f"({c / b:.2f}x)  REGRESSION vs last measured point")
+                regressions.append(key)
+    record = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "sha": os.environ.get("GITHUB_SHA", ""),
+        "rows": cand,
+        "outcome": "regression" if regressions else "ok",
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    print(f"bench history: appended record to {path} "
+          f"(outcome: {record['outcome']})")
+    return regressions
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -59,6 +126,9 @@ def main():
     ap.add_argument("--allow-missing", action="store_true",
                     help="tolerate baseline rows absent from the candidate "
                          "instead of failing")
+    ap.add_argument("--history", metavar="PATH",
+                    help="append-only JSONL trajectory: gate against the "
+                         "last record, then append this run regardless")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -101,12 +171,27 @@ def main():
         print(f"  ({verb} {len(missing)} baseline rows absent from candidate: "
               f"{', '.join(missing)})")
 
+    # Trajectory gate + append — runs (and appends) even when the ceiling
+    # gate above already failed, so the history never has silent gaps.
+    history_regressions = []
+    if args.history:
+        history_regressions = check_history(
+            cand, args.history, args.tolerance, args.abs_floor)
+
     failed = False
     if regressions:
         print(f"\nFAIL: {len(regressions)} fused-kernel regression(s) "
               f">{args.tolerance:.0%}: {', '.join(regressions)}")
         print("If intentional (e.g. new baseline hardware), refresh with "
               "`make bench-baseline` and commit the result.")
+        failed = True
+    if history_regressions:
+        print(f"\nFAIL: {len(history_regressions)} regression(s) vs the "
+              f"last measured history point: "
+              f"{', '.join(history_regressions)}")
+        print("The run still clears the committed ceiling but regressed "
+              "against the previous measurement — investigate before the "
+              "creep compounds (the record was appended either way).")
         failed = True
     if missing and not args.allow_missing:
         print(f"\nFAIL: {len(missing)} baseline row(s) missing from the "

@@ -14,7 +14,10 @@ Scenarios:
   3. small absolute regression under floor -> OK (the noise allowance)
   4. baseline row missing from candidate   -> FAIL; --allow-missing -> OK
   5. zero row overlap (schema drift)       -> distinct failure (exit 2)
-plus: candidate-only rows never fail the gate (adding kernels is free).
+plus: candidate-only rows never fail the gate (adding kernels is free),
+and the ``--history`` trajectory mode: missing-history bootstrap, append
+on every run (pass or fail), and regression vs the previous *measured*
+point failing even when the committed ceiling still passes.
 """
 
 import json
@@ -46,15 +49,20 @@ class GateTest(unittest.TestCase):
         """Write the two docs to temp files and run the gate; returns
         (exit_code, stdout+stderr)."""
         with tempfile.TemporaryDirectory() as td:
-            bpath = os.path.join(td, "baseline.json")
-            cpath = os.path.join(td, "candidate.json")
-            with open(bpath, "w") as f:
-                json.dump(baseline, f)
-            with open(cpath, "w") as f:
-                json.dump(candidate, f)
-            proc = subprocess.run(
-                [sys.executable, SCRIPT, bpath, cpath, *args],
-                capture_output=True, text=True)
+            return self.run_gate_in(td, baseline, candidate, *args)
+
+    def run_gate_in(self, td, baseline, candidate, *args):
+        """Like run_gate, but in a caller-owned directory so state (the
+        history JSONL) survives across invocations."""
+        bpath = os.path.join(td, "baseline.json")
+        cpath = os.path.join(td, "candidate.json")
+        with open(bpath, "w") as f:
+            json.dump(baseline, f)
+        with open(cpath, "w") as f:
+            json.dump(candidate, f)
+        proc = subprocess.run(
+            [sys.executable, SCRIPT, bpath, cpath, *args],
+            capture_output=True, text=True)
         return proc.returncode, proc.stdout + proc.stderr
 
     def test_identical_runs_pass(self):
@@ -114,6 +122,68 @@ class GateTest(unittest.TestCase):
         self.assertIn("allreduce/fp8e4m3", out)
         code, out = self.run_gate(base, base)
         self.assertEqual(code, 0, out)
+
+    def test_history_bootstrap_then_append(self):
+        # Missing history file is the bootstrap case: the gate passes,
+        # creates the file, and every run appends exactly one record with
+        # the flattened rows, a timestamp, and an outcome.
+        doc = bench_doc({"collage-plus": 8.0})
+        with tempfile.TemporaryDirectory() as td:
+            hist = os.path.join(td, "BENCH_history.jsonl")
+            code, out = self.run_gate_in(td, doc, doc, "--history", hist)
+            self.assertEqual(code, 0, out)
+            self.assertIn("bootstrap", out)
+            code, out = self.run_gate_in(td, doc, doc, "--history", hist)
+            self.assertEqual(code, 0, out)
+            with open(hist) as f:
+                records = [json.loads(line) for line in f if line.strip()]
+            self.assertEqual(len(records), 2)
+            for rec in records:
+                self.assertIn("timestamp", rec)
+                self.assertEqual(rec["outcome"], "ok")
+                self.assertEqual(rec["rows"]["strategy/collage-plus"], 8.0)
+
+    def test_history_regression_vs_previous_measured_point(self):
+        # A run that clears the generous committed ceiling but regresses
+        # past tolerance vs the LAST MEASURED record must fail — and the
+        # regressed record is appended anyway (outcome "regression"), so
+        # the trajectory has no gaps.
+        ceiling = bench_doc({"collage-plus": 100.0})  # loose committed bound
+        fast = bench_doc({"collage-plus": 8.0})
+        slow = bench_doc({"collage-plus": 20.0})  # ok vs ceiling, 2.5x vs fast
+        with tempfile.TemporaryDirectory() as td:
+            hist = os.path.join(td, "h.jsonl")
+            code, out = self.run_gate_in(td, ceiling, fast, "--history", hist)
+            self.assertEqual(code, 0, out)
+            code, out = self.run_gate_in(td, ceiling, slow, "--history", hist)
+            self.assertEqual(code, 1, out)
+            self.assertIn("vs last measured point", out)
+            with open(hist) as f:
+                records = [json.loads(line) for line in f if line.strip()]
+            self.assertEqual(len(records), 2)
+            self.assertEqual(records[-1]["outcome"], "regression")
+            # The next run compares against the appended (slow) record, so
+            # recovering to 8.0 is an improvement, not a failure.
+            code, out = self.run_gate_in(td, ceiling, fast, "--history", hist)
+            self.assertEqual(code, 0, out)
+
+    def test_history_tolerates_torn_trailing_write(self):
+        # Trailing garbage (a torn append from a killed runner) must not
+        # brick the trajectory gate: the last parseable record wins and
+        # the new record still lands after it.
+        doc = bench_doc({"bf16": 3.0})
+        with tempfile.TemporaryDirectory() as td:
+            hist = os.path.join(td, "h.jsonl")
+            with open(hist, "w") as f:
+                f.write(json.dumps({"rows": {"strategy/bf16": 3.0},
+                                    "outcome": "ok"}) + "\n")
+                f.write('{"rows": {"strategy/bf16": 3.\n')  # torn line
+            code, out = self.run_gate_in(td, doc, doc, "--history", hist)
+            self.assertEqual(code, 0, out)
+            with open(hist) as f:
+                lines = [line for line in f if line.strip()]
+            self.assertEqual(len(lines), 3)  # record + torn line + new record
+            self.assertEqual(json.loads(lines[-1])["outcome"], "ok")
 
     def test_candidate_only_rows_never_fail(self):
         # Adding kernels (new strategies/formats in the bench) must not

@@ -303,6 +303,155 @@ pub fn mul_n<const N: usize>(
 }
 
 // ---------------------------------------------------------------------------
+// 8-wide lane variants.
+//
+// The Fast2Sum dependency chain inside ONE element cannot vectorize — every
+// op consumes the previous op's rounded result.  Across elements there are
+// no dependencies at all, so the lane variants below process 8 independent
+// elements per chain step: each scalar `RN(a ∘ b)` becomes one
+// `FloatFormat::round_nearest_f64_x8` over 8 lanes, in the *identical* op
+// order as the scalar function.  Because every op is pure and per-element,
+// each lane's result is bitwise equal to the scalar call on that lane's
+// inputs — `prop_lane_ops_match_scalar` below pins it, and the optimizer
+// lane kernels (`optim/kernels.rs`) inherit the guarantee.
+// ---------------------------------------------------------------------------
+
+/// Lane width shared by the x8 algebra and `FloatFormat::round_x8`.
+pub const LANES: usize = 8;
+
+#[inline]
+fn rn_x8(fmt: &FloatFormat, x: [f64; LANES]) -> [f32; LANES] {
+    fmt.round_nearest_f64_x8(x)
+}
+
+/// [`two_sum`] over 8 independent lanes (identical op sequence per lane).
+pub fn two_sum_x8(fmt: &FloatFormat, a: [f32; LANES], b: [f32; LANES]) -> ([f32; LANES], [f32; LANES]) {
+    use std::array::from_fn;
+    let x = rn_x8(fmt, from_fn(|l| a[l] as f64 + b[l] as f64));
+    let b_virtual = rn_x8(fmt, from_fn(|l| x[l] as f64 - a[l] as f64));
+    let a_virtual = rn_x8(fmt, from_fn(|l| x[l] as f64 - b_virtual[l] as f64));
+    let b_roundoff = rn_x8(fmt, from_fn(|l| b[l] as f64 - b_virtual[l] as f64));
+    let a_roundoff = rn_x8(fmt, from_fn(|l| a[l] as f64 - a_virtual[l] as f64));
+    let y = rn_x8(fmt, from_fn(|l| a_roundoff[l] as f64 + b_roundoff[l] as f64));
+    (x, y)
+}
+
+/// [`fast2sum`] over 8 independent lanes.
+pub fn fast2sum_x8(fmt: &FloatFormat, a: [f32; LANES], b: [f32; LANES]) -> ([f32; LANES], [f32; LANES]) {
+    use std::array::from_fn;
+    let x = rn_x8(fmt, from_fn(|l| a[l] as f64 + b[l] as f64));
+    let t = rn_x8(fmt, from_fn(|l| x[l] as f64 - a[l] as f64));
+    let y = rn_x8(fmt, from_fn(|l| b[l] as f64 - t[l] as f64));
+    (x, y)
+}
+
+/// [`two_prod`] over 8 independent lanes.
+pub fn two_prod_x8(fmt: &FloatFormat, a: [f32; LANES], b: [f32; LANES]) -> ([f32; LANES], [f32; LANES]) {
+    use std::array::from_fn;
+    let prod: [f64; LANES] = from_fn(|l| a[l] as f64 * b[l] as f64); // exact for p<=26 operands
+    let x = rn_x8(fmt, prod);
+    let e = rn_x8(fmt, from_fn(|l| prod[l] - x[l] as f64));
+    (x, e)
+}
+
+/// [`grow`] over 8 independent lanes: add `a[l]` to expansion
+/// `(hi[l], lo[l])` per lane.  Returns the new `(hi, lo)` lanes.
+pub fn grow_x8(
+    fmt: &FloatFormat,
+    hi: [f32; LANES],
+    lo: [f32; LANES],
+    a: [f32; LANES],
+) -> ([f32; LANES], [f32; LANES]) {
+    use std::array::from_fn;
+    let (u, v) = fast2sum_x8(fmt, hi, a);
+    let w = rn_x8(fmt, from_fn(|l| lo[l] as f64 + v[l] as f64));
+    fast2sum_x8(fmt, u, w)
+}
+
+/// [`mul`] over 8 independent lanes: expansion × expansion per lane.
+pub fn mul_x8(
+    fmt: &FloatFormat,
+    a_hi: [f32; LANES],
+    a_lo: [f32; LANES],
+    b_hi: [f32; LANES],
+    b_lo: [f32; LANES],
+) -> ([f32; LANES], [f32; LANES]) {
+    use std::array::from_fn;
+    let (x, e) = two_prod_x8(fmt, a_hi, b_hi);
+    let c1 = rn_x8(fmt, from_fn(|l| a_hi[l] as f64 * b_lo[l] as f64));
+    let c2 = rn_x8(fmt, from_fn(|l| a_lo[l] as f64 * b_hi[l] as f64));
+    let cross = rn_x8(fmt, from_fn(|l| c1[l] as f64 + c2[l] as f64));
+    let e = rn_x8(fmt, from_fn(|l| e[l] as f64 + cross[l] as f64));
+    fast2sum_x8(fmt, x, e)
+}
+
+/// [`renormalize`] over 8 independent lanes (component-major layout:
+/// `t[i][l]` is component `i` of lane `l`).
+pub fn renormalize_x8<const N: usize>(fmt: &FloatFormat, t: [[f32; LANES]; N]) -> [[f32; LANES]; N] {
+    assert!(N >= 2, "expansions have at least two components");
+    let mut e = [[0.0f32; LANES]; N];
+    let mut s = t[N - 1];
+    for i in (0..N - 1).rev() {
+        let (x, y) = fast2sum_x8(fmt, t[i], s);
+        s = x;
+        e[i + 1] = y;
+    }
+    let mut out = [[0.0f32; LANES]; N];
+    out[0] = s;
+    let mut carry = e[1];
+    for i in 2..N {
+        let (x, y) = two_sum_x8(fmt, carry, e[i]);
+        out[i - 1] = x;
+        carry = y;
+    }
+    out[N - 1] = carry;
+    out
+}
+
+/// [`grow_n`] over 8 independent lanes.
+pub fn grow_n_x8<const N: usize>(
+    fmt: &FloatFormat,
+    c: [[f32; LANES]; N],
+    a: [f32; LANES],
+) -> [[f32; LANES]; N] {
+    use std::array::from_fn;
+    let mut t = [[0.0f32; LANES]; N];
+    let mut carry = a;
+    for i in 0..N - 1 {
+        let (x, y) = fast2sum_x8(fmt, c[i], carry);
+        t[i] = x;
+        carry = y;
+    }
+    t[N - 1] = rn_x8(fmt, from_fn(|l| c[N - 1][l] as f64 + carry[l] as f64));
+    renormalize_x8(fmt, t)
+}
+
+/// [`mul_n`] over 8 independent lanes.
+pub fn mul_n_x8<const N: usize>(
+    fmt: &FloatFormat,
+    a: [[f32; LANES]; N],
+    b: [[f32; LANES]; N],
+) -> [[f32; LANES]; N] {
+    use std::array::from_fn;
+    let mut t = [[0.0f32; LANES]; N];
+    let (x, e00) = two_prod_x8(fmt, a[0], b[0]);
+    t[0] = x;
+    for k in 1..N {
+        let mut s = rn_x8(fmt, from_fn(|l| a[0][l] as f64 * b[k][l] as f64));
+        for i in 1..=k {
+            let p = rn_x8(fmt, from_fn(|l| a[i][l] as f64 * b[k - i][l] as f64));
+            s = rn_x8(fmt, from_fn(|l| s[l] as f64 + p[l] as f64));
+        }
+        t[k] = if k == 1 {
+            rn_x8(fmt, from_fn(|l| e00[l] as f64 + s[l] as f64))
+        } else {
+            s
+        };
+    }
+    renormalize_x8(fmt, t)
+}
+
+// ---------------------------------------------------------------------------
 // bf16 fast paths (f32 arithmetic + bit-trick rounding).  These are the
 // exact same functions specialized for the optimizer hot loop; tests assert
 // bitwise agreement with the generic versions.
@@ -532,6 +681,73 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn prop_lane_ops_match_scalar_bitwise() {
+        // Every x8 function must be bitwise equal, lane for lane, to 8
+        // scalar calls — across formats, including the saturating one.
+        use crate::numerics::format::{FP16, FP8E4M3};
+        fn gen_lanes(rng: &mut crate::util::rng::Rng) -> ([f32; LANES], [f32; LANES], [f32; LANES]) {
+            let mut a = [0.0f32; LANES];
+            let mut b = [0.0f32; LANES];
+            let mut c = [0.0f32; LANES];
+            for l in 0..LANES {
+                let (x, y) = {
+                    let p = gen_bf16_interesting(rng);
+                    let q = gen_bf16_interesting(rng);
+                    if p.abs() >= q.abs() { (p, q) } else { (q, p) }
+                };
+                a[l] = x;
+                b[l] = y;
+                c[l] = gen_bf16_interesting(rng);
+            }
+            (a, b, c)
+        }
+        let eq = |u: f32, v: f32| u.to_bits() == v.to_bits();
+        check_msg("lane ops == scalar", gen_lanes, |&(a, b, c)| {
+            for fmt in [&BF16, &FP16, &FP8E4M3] {
+                let (x8, y8) = two_sum_x8(fmt, a, b);
+                let (f8, g8) = fast2sum_x8(fmt, a, b);
+                let (p8, e8) = two_prod_x8(fmt, a, b);
+                let (gh8, gl8) = grow_x8(fmt, a, b, c);
+                let (mh8, ml8) = mul_x8(fmt, a, b, a, b);
+                let gn8 = grow_n_x8::<3>(fmt, [a, b, c], c);
+                let mn8 = mul_n_x8::<3>(fmt, [a, b, c], [a, b, c]);
+                for l in 0..LANES {
+                    let (x, y) = two_sum(fmt, a[l], b[l]);
+                    let (f, g) = fast2sum(fmt, a[l], b[l]);
+                    let (p, e) = two_prod(fmt, a[l], b[l]);
+                    let gr = grow(fmt, Expansion::new(a[l], b[l]), c[l]);
+                    let mu = mul(fmt, Expansion::new(a[l], b[l]), Expansion::new(a[l], b[l]));
+                    let gn = grow_n(fmt, ExpansionN::new([a[l], b[l], c[l]]), c[l]);
+                    let mn = mul_n(
+                        fmt,
+                        ExpansionN::new([a[l], b[l], c[l]]),
+                        ExpansionN::new([a[l], b[l], c[l]]),
+                    );
+                    let ok = eq(x8[l], x)
+                        && eq(y8[l], y)
+                        && eq(f8[l], f)
+                        && eq(g8[l], g)
+                        && eq(p8[l], p)
+                        && eq(e8[l], e)
+                        && eq(gh8[l], gr.hi)
+                        && eq(gl8[l], gr.lo)
+                        && eq(mh8[l], mu.hi)
+                        && eq(ml8[l], mu.lo)
+                        && (0..3).all(|i| eq(gn8[i][l], gn.c[i]))
+                        && (0..3).all(|i| eq(mn8[i][l], mn.c[i]));
+                    if !ok {
+                        return Err(format!(
+                            "lane {l} diverged for fmt {} on a={:e} b={:e} c={:e}",
+                            fmt.name, a[l], b[l], c[l]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -395,6 +395,65 @@ impl FloatFormat {
         self.round(x)
     }
 
+    /// [`FloatFormat::round`] over a lane of 8 **independent** elements —
+    /// the single batched rounding entry point the lane kernels in
+    /// `optim/kernels.rs` are built on.
+    ///
+    /// Bitwise contract: `round_x8(x)[l] == round(x[l])` for every lane
+    /// and every format (`tests/round_x8.rs` pins it, including NaN
+    /// canonicalization).  The per-lane math is the same branchless
+    /// shift+round-to-even core as the scalar path — bf16 keeps its `u32`
+    /// bit trick (here in branch-free select form so all 8 lanes run the
+    /// same instruction sequence), fp32 is the identity, and everything
+    /// else runs the generalized mantissa shift per lane.  Batching is
+    /// profitable because one element's rounding never feeds another's:
+    /// the compiler can vectorize across lanes even though the Fast2Sum
+    /// dependency *chains* inside one element cannot be.
+    ///
+    /// ```
+    /// use collage::numerics::format::{BF16, FP8E4M3};
+    /// let x = [1.0f32, 1.0 + 2f32.powi(-8), -0.0, 1e6, 3.14, -3.14, 448.0, 0.1];
+    /// let batched = BF16.round_x8(x);
+    /// for l in 0..8 {
+    ///     assert_eq!(batched[l].to_bits(), BF16.round(x[l]).to_bits());
+    /// }
+    /// // E4M3 saturates inside the lane body exactly like the scalar path.
+    /// assert_eq!(FP8E4M3.round_x8(x)[3], 448.0);
+    /// ```
+    #[inline]
+    pub fn round_x8(&self, x: [f32; 8]) -> [f32; 8] {
+        if self.exp_bits == 8 {
+            if self.mantissa_bits == 23 {
+                return x;
+            }
+            if self.mantissa_bits == 7 {
+                // Branch-free 8-wide form of `bf16_round`: round-to-even via
+                // the carry trick, NaN lanes selected to the canonical quiet
+                // NaN (same canonicalization as the scalar guard branch).
+                return std::array::from_fn(|l| {
+                    let bits = x[l].to_bits();
+                    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
+                    let is_nan = (bits & 0x7FFF_FFFF) > 0x7F80_0000;
+                    f32::from_bits(if is_nan { f32::NAN.to_bits() } else { rounded })
+                });
+            }
+        }
+        std::array::from_fn(|l| self.round_bits_f64(x[l] as f64))
+    }
+
+    /// [`FloatFormat::round_nearest_f64`] over a lane of 8 independent
+    /// elements — the f64-domain companion of [`FloatFormat::round_x8`],
+    /// used by the lane kernels for exact-then-round chain steps whose
+    /// exact value lives in f64.  Same bitwise contract:
+    /// `round_nearest_f64_x8(x)[l] == round_nearest_f64(x[l])` per lane.
+    #[inline]
+    pub fn round_nearest_f64_x8(&self, x: [f64; 8]) -> [f32; 8] {
+        if self.exp_bits == 8 && self.mantissa_bits == 23 {
+            return std::array::from_fn(|l| x[l] as f32);
+        }
+        std::array::from_fn(|l| self.round_bits_f64(x[l]))
+    }
+
     /// True iff `x` is exactly representable in this format.
     pub fn representable(&self, x: f32) -> bool {
         x.is_nan() || self.round_nearest(x) == x

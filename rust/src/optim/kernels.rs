@@ -7,10 +7,53 @@
 //! * the **bf16 row** (`step_chunk_*`): one monomorphized kernel per legacy
 //!   [`Strategy`], bit-identical to the PR-1 kernels and to the AOT HLO
 //!   semantics — these are untouched by the plan redesign;
-//! * the **format-generic row** (`gstep_chunk_*`): one kernel per
+//! * the **format-generic row**: one [`SchemeKernel`] registry row per
 //!   [`Scheme`], parameterized by the plan's [`FloatFormat`] (FP16,
-//!   FP8-E4M3, FP8-E5M2, ...), bit-identical to the scalar oracle
+//!   FP8-E4M3, FP8-E5M2, mxfp4, ...), bit-identical to the scalar oracle
 //!   `GenericAdamW::step`.
+//!
+//! # The `SchemeKernel` registry
+//!
+//! The format-generic dispatch surface is a table, not a match: [`KERNELS`]
+//! holds one row per scheme carrying its fused entry point, its always-
+//! scalar oracle twin, its optional block-scaled entry, its state-vector
+//! arity, its lane width, and its canonical bench-row name
+//! ([`SchemeKernel::bench_row`] — the single naming scheme shared by
+//! `benches/optimizer_step.rs`, `BENCH_baseline/optimizer_step.json` and
+//! `scripts/check_bench_regression.py`).  The dispatcher
+//! ([`generic_step_chunks`]), the equivalence tests and the bench emitter
+//! all iterate this table, so **adding a scheme is adding one row** (plus
+//! its kernels and `state_spec` arm) and every downstream surface picks it
+//! up.
+//!
+//! # The lane/scalar contract
+//!
+//! The hot element-wise kernels of the five paper-grid schemes (plain,
+//! collage-light/-3, collage-plus/-3) run an 8-wide lane main loop
+//! (`lstep_chunk_*`) with the scalar body as the tail path:
+//!
+//! * **When the lane path engages:** element-wise (non-block) formats with
+//!   delta-scale off (`ds_scale == 1`) — one dispatch decision inside the
+//!   scheme's fused wrapper.  Scaled plans, Kahan, SR and the fp32-state
+//!   schemes stay scalar (their chains are short, branchy, or — for SR —
+//!   index-keyed, so batching buys nothing).
+//! * **Why bitwise equality holds:** per-element math is pure and
+//!   independent, so the lane helpers restate the *identical* op sequence
+//!   over 8 independent elements per chain step — Fast2Sum chains do not
+//!   vectorize within one element, but across elements every
+//!   `RN(a ∘ b)` becomes one [`FloatFormat::round_nearest_f64_x8`] with
+//!   unchanged per-lane bits (`numerics::expansion`'s `*_x8` algebra).
+//!   The f64 diagnostics tally stays scalar **in element order** (the
+//!   determinism contract pins the summation order), integer counters
+//!   commute, and [`CHUNK`] is a multiple of the lane width so lane
+//!   bodies never straddle chunk boundaries — tail and body fold on the
+//!   same `ACCUM_CHUNK` grid.
+//! * **How it is enforced:** every registry row's fused entry is compared
+//!   bitwise (state bits + `StepStats`, including the
+//!   `delta_saturated`/`delta_underflow` counters) against its oracle twin
+//!   in this module's tests and against `GenericAdamW::step` in
+//!   `tests/generic_kernel_equivalence.rs`, across formats × lane-boundary
+//!   lengths (7/8/9/15/16/17, …) × worker counts 1/2/8.
 //!
 //! Every kernel performs the AdamW update **and** streams the Def. 3.3
 //! diagnostics (EDQ dot/norms, the lost-update count of Def. 3.2, and the
@@ -39,9 +82,10 @@ use std::ops::Range;
 
 use crate::numerics::block::BLOCK;
 use crate::numerics::expansion::{
-    grow, grow_bf16, grow_n, mul, mul_bf16, mul_n, rn_bf16, Expansion, ExpansionN,
+    grow, grow_bf16, grow_n, grow_n_x8, grow_x8, mul, mul_bf16, mul_n, mul_n_x8, mul_x8, rn_bf16,
+    Expansion, ExpansionN,
 };
-use crate::numerics::format::FloatFormat;
+use crate::numerics::format::{FloatFormat, BF16};
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks;
 
@@ -271,41 +315,34 @@ pub fn sr_round(exact: f32, noise: u32) -> f32 {
 // ---------------------------------------------------------------------------
 
 // ---------------------------------------------------------------------------
-// bf16 SIMD lanes.  `rn_bf16` is a handful of integer ops per element, but
-// its NaN guard is a branch, which blocks autovectorization of the scalar
-// loops.  The lane helpers below restate the same math over [`LANES`]
-// independent elements in branchless straight-line code (`u32x8`-style
-// manual lanes on stable Rust) that LLVM turns into vector instructions.
-// Lanes are independent elements, so the lane kernels are bit-identical to
-// the scalar ones — `tests/kernel_equivalence.rs` enforces it.  Only the
-// option-A kernel is lane-ized: the MCF kernels chain Fast2Sum sequences
-// whose length makes the scalar form competitive, and the fp32 kernels
-// already autovectorize.
+// SIMD lanes.  Per-element rounding is a handful of integer ops, but its
+// NaN/overflow guards are branches, which block autovectorization of the
+// scalar loops.  The lane kernels below restate the same math over
+// [`LANES`] independent elements per chain step through the batched
+// [`FloatFormat::round_x8`] / [`FloatFormat::round_nearest_f64_x8`] entry
+// points (`u32x8`-style manual lanes on stable Rust) that LLVM turns into
+// vector instructions.  Lanes are independent elements, so the lane
+// kernels are bit-identical to the scalar ones — see the module-level
+// "lane/scalar contract" section; `tests/kernel_equivalence.rs` and
+// `tests/generic_kernel_equivalence.rs` enforce it.
 // ---------------------------------------------------------------------------
 
-/// Lane width of the bf16 chunk-kernel main loop (one AVX2 register of
-/// f32s; narrower targets simply unroll).
-const LANES: usize = 8;
+/// Lane width of the chunk-kernel main loops (one AVX2 register of f32s;
+/// narrower targets simply unroll).  Re-exported width of the
+/// `numerics::expansion` lane algebra.
+const LANES: usize = crate::numerics::expansion::LANES;
 
-/// [`crate::numerics::format::bf16_round`] over [`LANES`] elements,
-/// branchless: the NaN select reproduces the scalar guard exactly
-/// (canonical quiet NaN out for any NaN in).
-#[inline]
-fn rn_bf16_x8(x: [f32; LANES]) -> [f32; LANES] {
-    std::array::from_fn(|l| {
-        let bits = x[l].to_bits();
-        let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
-        let is_nan = (bits & 0x7FFF_FFFF) > 0x7F80_0000;
-        f32::from_bits(if is_nan { f32::NAN.to_bits() } else { rounded })
-    })
-}
+// Lane bodies must never straddle a chunk boundary: the tail path and the
+// lane path have to fold diagnostics on the same ACCUM_CHUNK grid.
+const _: () = assert!(CHUNK % LANES == 0);
 
 /// Option A: plain bf16 parameters and optimizer states.
 ///
-/// The main loop runs `LANES` (8) elements at a time through the
-/// branchless lane helpers; the tail reuses the scalar helpers.  Both
-/// apply the exact op sequence of [`AdamW::step_reference`]'s option-A
-/// arm, so the output is bit-identical to the scalar loop at any `n`.
+/// The main loop runs `LANES` (8) elements at a time through the batched
+/// [`FloatFormat::round_x8`] entry; the tail reuses the scalar helpers.
+/// Both apply the exact op sequence of [`AdamW::step_reference`]'s
+/// option-A arm, so the output is bit-identical to the scalar loop at any
+/// `n`.
 pub fn step_chunk_bf16(
     s: &StepScalars,
     g: &[f32],
@@ -323,24 +360,24 @@ pub fn step_chunk_bf16(
         let vk: [f32; LANES] = v[k..k + LANES].try_into().unwrap();
         let th: [f32; LANES] = theta[k..k + LANES].try_into().unwrap();
         // m ← β₁m ⊕ (1-β₁)g   (lane-for-lane `StepScalars::m_bf16`)
-        let ma = rn_bf16_x8(from_fn(|l| mk[l] * s.beta1_f));
-        let mb = rn_bf16_x8(from_fn(|l| gk[l] * s.one_m_beta1));
-        let m_new = rn_bf16_x8(from_fn(|l| ma[l] + mb[l]));
+        let ma = BF16.round_x8(from_fn(|l| mk[l] * s.beta1_f));
+        let mb = BF16.round_x8(from_fn(|l| gk[l] * s.one_m_beta1));
+        let m_new = BF16.round_x8(from_fn(|l| ma[l] + mb[l]));
         // v ← β₂v ⊕ (1-β₂)g²
-        let g2 = rn_bf16_x8(from_fn(|l| gk[l] * gk[l]));
-        let va = rn_bf16_x8(from_fn(|l| vk[l] * s.b2hi));
-        let vb = rn_bf16_x8(from_fn(|l| g2[l] * s.one_m_beta2));
-        let v_new = rn_bf16_x8(from_fn(|l| va[l] + vb[l]));
-        let vh = rn_bf16_x8(from_fn(|l| v_new[l] / s.bc2));
+        let g2 = BF16.round_x8(from_fn(|l| gk[l] * gk[l]));
+        let va = BF16.round_x8(from_fn(|l| vk[l] * s.b2hi));
+        let vb = BF16.round_x8(from_fn(|l| g2[l] * s.one_m_beta2));
+        let v_new = BF16.round_x8(from_fn(|l| va[l] + vb[l]));
+        let vh = BF16.round_x8(from_fn(|l| v_new[l] / s.bc2));
         // Δθ   (lane-for-lane `delta_theta_bf16`)
-        let m_hat = rn_bf16_x8(from_fn(|l| m_new[l] / s.bc1));
-        let root = rn_bf16_x8(from_fn(|l| vh[l].sqrt()));
-        let denom = rn_bf16_x8(from_fn(|l| root[l] + s.eps));
-        let t1 = rn_bf16_x8(from_fn(|l| m_hat[l] / denom[l]));
-        let t2 = rn_bf16_x8(from_fn(|l| th[l] * s.wd));
-        let t12 = rn_bf16_x8(from_fn(|l| t1[l] + t2[l]));
-        let dt = rn_bf16_x8(from_fn(|l| -s.lr * t12[l]));
-        let th_new = rn_bf16_x8(from_fn(|l| th[l] + dt[l]));
+        let m_hat = BF16.round_x8(from_fn(|l| m_new[l] / s.bc1));
+        let root = BF16.round_x8(from_fn(|l| vh[l].sqrt()));
+        let denom = BF16.round_x8(from_fn(|l| root[l] + s.eps));
+        let t1 = BF16.round_x8(from_fn(|l| m_hat[l] / denom[l]));
+        let t2 = BF16.round_x8(from_fn(|l| th[l] * s.wd));
+        let t12 = BF16.round_x8(from_fn(|l| t1[l] + t2[l]));
+        let dt = BF16.round_x8(from_fn(|l| -s.lr * t12[l]));
+        let th_new = BF16.round_x8(from_fn(|l| th[l] + dt[l]));
         m[k..k + LANES].copy_from_slice(&m_new);
         v[k..k + LANES].copy_from_slice(&v_new);
         theta[k..k + LANES].copy_from_slice(&th_new);
@@ -1041,6 +1078,120 @@ impl GenericScalars {
         tally.saturated += clipped;
         (h, lo_n[0], dtx as f32)
     }
+
+    // -----------------------------------------------------------------------
+    // 8-wide lane twins of the moment/theta helpers above: the identical op
+    // sequence over [`LANES`] independent elements per chain step, batched
+    // through [`FloatFormat::round_nearest_f64_x8`] and the
+    // `numerics::expansion` `*_x8` algebra.  Bit-identical per lane to the
+    // scalar helpers — the module-level lane/scalar contract.
+    // -----------------------------------------------------------------------
+
+    /// [`GenericScalars::moments_m_g2`] over [`LANES`] elements.
+    #[inline]
+    pub fn moments_m_g2_x8(
+        &self,
+        m: [f32; LANES],
+        gk: [f32; LANES],
+    ) -> ([f32; LANES], [f32; LANES]) {
+        use std::array::from_fn;
+        let rn8 = |x: [f64; LANES]| self.fmt.round_nearest_f64_x8(x);
+        let a = rn8(from_fn(|l| m[l] as f64 * self.beta1_f as f64));
+        let b = rn8(from_fn(|l| gk[l] as f64 * self.one_m_beta1 as f64));
+        let m_new = rn8(from_fn(|l| a[l] as f64 + b[l] as f64));
+        let g2 = rn8(from_fn(|l| gk[l] as f64 * gk[l] as f64));
+        (m_new, g2)
+    }
+
+    /// [`GenericScalars::moment_v_plain`] over [`LANES`] elements.
+    #[inline]
+    pub fn moment_v_plain_x8(&self, v: [f32; LANES], g2: [f32; LANES]) -> [f32; LANES] {
+        use std::array::from_fn;
+        let rn8 = |x: [f64; LANES]| self.fmt.round_nearest_f64_x8(x);
+        let a = rn8(from_fn(|l| v[l] as f64 * self.beta2_lp as f64));
+        let b = rn8(from_fn(|l| g2[l] as f64 * self.one_m_beta2 as f64));
+        rn8(from_fn(|l| a[l] as f64 + b[l] as f64))
+    }
+
+    /// [`GenericScalars::moment_v_plus`] over [`LANES`] elements
+    /// (component-major: returns the `(v, δv)` lane pair).
+    #[inline]
+    pub fn moment_v_plus_x8(
+        &self,
+        v: [f32; LANES],
+        dv: [f32; LANES],
+        g2: [f32; LANES],
+    ) -> ([f32; LANES], [f32; LANES]) {
+        use std::array::from_fn;
+        let (vx, ve) = mul_x8(&self.fmt, v, dv, [self.b2hi; LANES], [self.b2lo; LANES]);
+        let incr = self
+            .fmt
+            .round_nearest_f64_x8(from_fn(|l| g2[l] as f64 * self.one_m_beta2 as f64));
+        grow_x8(&self.fmt, vx, ve, incr)
+    }
+
+    /// [`GenericScalars::moment_v_plus3`] over [`LANES`] elements
+    /// (component-major: `[v, δv₁, δv₂]` lanes).
+    #[inline]
+    pub fn moment_v_plus3_x8(
+        &self,
+        v: [f32; LANES],
+        dv: [f32; LANES],
+        dv2: [f32; LANES],
+        g2: [f32; LANES],
+    ) -> [[f32; LANES]; 3] {
+        use std::array::from_fn;
+        let vx = mul_n_x8::<3>(
+            &self.fmt,
+            [v, dv, dv2],
+            [[self.b2hi; LANES], [self.b2lo; LANES], [self.b2lo2; LANES]],
+        );
+        let incr = self
+            .fmt
+            .round_nearest_f64_x8(from_fn(|l| g2[l] as f64 * self.one_m_beta2 as f64));
+        grow_n_x8::<3>(&self.fmt, vx, incr)
+    }
+
+    /// The **unscaled** θ chain of [`gstep_chunk_light`] over [`LANES`]
+    /// elements: round each exact Δθ once into the format, count
+    /// underflows (integer adds commute, so lane order cannot change the
+    /// totals), grow the 2-component expansion.  Returns
+    /// `(hi', δθ', Δθ)`.
+    #[inline]
+    pub fn apply_theta2_x8(
+        &self,
+        hi: [f32; LANES],
+        lo: [f32; LANES],
+        dtx: [f64; LANES],
+        tally: &mut DeltaTally,
+    ) -> ([f32; LANES], [f32; LANES], [f32; LANES]) {
+        let dt = self.fmt.round_nearest_f64_x8(dtx);
+        for l in 0..LANES {
+            tally.underflow += (dtx[l] != 0.0 && dt[l] == 0.0) as u64;
+        }
+        let (h, c) = grow_x8(&self.fmt, hi, lo, dt);
+        (h, c, dt)
+    }
+
+    /// The **unscaled** arm of [`GenericScalars::apply_theta3`] over
+    /// [`LANES`] elements (the lane path never engages on delta-scale
+    /// plans — their registry wrappers fall back to the scalar kernels).
+    #[inline]
+    pub fn apply_theta3_x8(
+        &self,
+        hi: [f32; LANES],
+        lo1: [f32; LANES],
+        lo2: [f32; LANES],
+        dtx: [f64; LANES],
+        tally: &mut DeltaTally,
+    ) -> ([[f32; LANES]; 3], [f32; LANES]) {
+        debug_assert!(self.ds_scale == 1.0, "lane θ chain is unscaled-only");
+        let dt = self.fmt.round_nearest_f64_x8(dtx);
+        for l in 0..LANES {
+            tally.underflow += (dtx[l] != 0.0 && dt[l] == 0.0) as u64;
+        }
+        (grow_n_x8::<3>(&self.fmt, [hi, lo1, lo2], dt), dt)
+    }
 }
 
 /// Stochastic rounding of an exact f64 value onto an arbitrary format grid:
@@ -1082,6 +1233,24 @@ pub fn gstep_chunk_plain(
     v: &mut [f32],
 ) -> ChunkAccum {
     let mut acc = ChunkAccum::default();
+    gstep_plain_into(s, g, theta, m, v, &mut acc);
+    acc
+}
+
+/// Scalar body of [`gstep_chunk_plain`], continuing an existing
+/// accumulator.  The lane kernel's tail runs this on the remainder with
+/// the **same** accumulator the lane body used: f64 addition is not
+/// associative, so merging a separately-started tail partial would change
+/// the diagnostics bits — sequential accumulation in element order is the
+/// contract.
+fn gstep_plain_into(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    acc: &mut ChunkAccum,
+) {
     for (k, &gk) in g.iter().enumerate() {
         let (m_new, g2) = s.moments_m_g2(m[k], gk);
         let v_new = s.moment_v_plain(v[k], g2);
@@ -1093,6 +1262,52 @@ pub fn gstep_chunk_plain(
         v[k] = v_new;
         acc.tally(dt, th_old, th_new);
     }
+}
+
+/// 8-wide lane main loop of [`gstep_chunk_plain`]; scalar tail.  Bitwise
+/// equal to the scalar kernel at any `n` (module-level lane/scalar
+/// contract).
+pub fn lstep_chunk_plain(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    use std::array::from_fn;
+    let mut acc = ChunkAccum::default();
+    let split = g.len() - g.len() % LANES;
+    let mut k = 0;
+    while k < split {
+        let gk: [f32; LANES] = g[k..k + LANES].try_into().unwrap();
+        let mk: [f32; LANES] = m[k..k + LANES].try_into().unwrap();
+        let vk: [f32; LANES] = v[k..k + LANES].try_into().unwrap();
+        let th: [f32; LANES] = theta[k..k + LANES].try_into().unwrap();
+        let (m_new, g2) = s.moments_m_g2_x8(mk, gk);
+        let v_new = s.moment_v_plain_x8(vk, g2);
+        let dt = s
+            .fmt
+            .round_nearest_f64_x8(from_fn(|l| s.delta_exact(th[l], m_new[l], v_new[l] as f64)));
+        let th_new = s
+            .fmt
+            .round_nearest_f64_x8(from_fn(|l| th[l] as f64 + dt[l] as f64));
+        theta[k..k + LANES].copy_from_slice(&th_new);
+        m[k..k + LANES].copy_from_slice(&m_new);
+        v[k..k + LANES].copy_from_slice(&v_new);
+        // Diagnostics stay scalar, in element order (determinism contract).
+        for l in 0..LANES {
+            acc.tally(dt[l], th[l], th_new[l]);
+        }
+        k += LANES;
+    }
+    gstep_plain_into(
+        s,
+        &g[split..],
+        &mut theta[split..],
+        &mut m[split..],
+        &mut v[split..],
+        &mut acc,
+    );
     acc
 }
 
@@ -1106,6 +1321,21 @@ pub fn gstep_chunk_light(
     v: &mut [f32],
 ) -> ChunkAccum {
     let mut acc = ChunkAccum::default();
+    gstep_light_into(s, g, theta, dtheta_c, m, v, &mut acc);
+    acc
+}
+
+/// Scalar body of [`gstep_chunk_light`], continuing an existing
+/// accumulator (the lane kernel's tail path; see [`gstep_plain_into`]).
+fn gstep_light_into(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    acc: &mut ChunkAccum,
+) {
     for (k, &gk) in g.iter().enumerate() {
         let (m_new, g2) = s.moments_m_g2(m[k], gk);
         let v_new = s.moment_v_plain(v[k], g2);
@@ -1122,6 +1352,53 @@ pub fn gstep_chunk_light(
         v[k] = v_new;
         acc.tally_f64(dt, hi_old as f64 + lo_old as f64, e.hi as f64 + e.lo as f64);
     }
+}
+
+/// 8-wide lane main loop of [`gstep_chunk_light`]; scalar tail.
+pub fn lstep_chunk_light(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    use std::array::from_fn;
+    let mut acc = ChunkAccum::default();
+    let split = g.len() - g.len() % LANES;
+    let mut k = 0;
+    while k < split {
+        let gk: [f32; LANES] = g[k..k + LANES].try_into().unwrap();
+        let mk: [f32; LANES] = m[k..k + LANES].try_into().unwrap();
+        let vk: [f32; LANES] = v[k..k + LANES].try_into().unwrap();
+        let hi: [f32; LANES] = theta[k..k + LANES].try_into().unwrap();
+        let lo: [f32; LANES] = dtheta_c[k..k + LANES].try_into().unwrap();
+        let (m_new, g2) = s.moments_m_g2_x8(mk, gk);
+        let v_new = s.moment_v_plain_x8(vk, g2);
+        let dtx: [f64; LANES] = from_fn(|l| s.delta_exact(hi[l], m_new[l], v_new[l] as f64));
+        let (h_new, c_new, dt) = s.apply_theta2_x8(hi, lo, dtx, &mut acc.delta);
+        theta[k..k + LANES].copy_from_slice(&h_new);
+        dtheta_c[k..k + LANES].copy_from_slice(&c_new);
+        m[k..k + LANES].copy_from_slice(&m_new);
+        v[k..k + LANES].copy_from_slice(&v_new);
+        for l in 0..LANES {
+            acc.tally_f64(
+                dt[l],
+                hi[l] as f64 + lo[l] as f64,
+                h_new[l] as f64 + c_new[l] as f64,
+            );
+        }
+        k += LANES;
+    }
+    gstep_light_into(
+        s,
+        &g[split..],
+        &mut theta[split..],
+        &mut dtheta_c[split..],
+        &mut m[split..],
+        &mut v[split..],
+        &mut acc,
+    );
     acc
 }
 
@@ -1137,6 +1414,23 @@ pub fn gstep_chunk_plus(
     dv: &mut [f32],
 ) -> ChunkAccum {
     let mut acc = ChunkAccum::default();
+    gstep_plus_into(s, g, theta, dtheta_c, m, v, dv, &mut acc);
+    acc
+}
+
+/// Scalar body of [`gstep_chunk_plus`], continuing an existing
+/// accumulator (the lane kernel's tail path; see [`gstep_plain_into`]).
+#[allow(clippy::too_many_arguments)]
+fn gstep_plus_into(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    acc: &mut ChunkAccum,
+) {
     for (k, &gk) in g.iter().enumerate() {
         let (m_new, g2) = s.moments_m_g2(m[k], gk);
         let ve = s.moment_v_plus(v[k], dv[k], g2);
@@ -1152,6 +1446,60 @@ pub fn gstep_chunk_plus(
         dv[k] = ve.lo;
         acc.tally_f64(dt, hi_old as f64 + lo_old as f64, e.hi as f64 + e.lo as f64);
     }
+}
+
+/// 8-wide lane main loop of [`gstep_chunk_plus`]; scalar tail.  The lane
+/// v_eval mirrors `Expansion::value` exactly (`hi as f64 + lo as f64`).
+#[allow(clippy::too_many_arguments)]
+pub fn lstep_chunk_plus(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+) -> ChunkAccum {
+    use std::array::from_fn;
+    let mut acc = ChunkAccum::default();
+    let split = g.len() - g.len() % LANES;
+    let mut k = 0;
+    while k < split {
+        let gk: [f32; LANES] = g[k..k + LANES].try_into().unwrap();
+        let mk: [f32; LANES] = m[k..k + LANES].try_into().unwrap();
+        let vk: [f32; LANES] = v[k..k + LANES].try_into().unwrap();
+        let dvk: [f32; LANES] = dv[k..k + LANES].try_into().unwrap();
+        let hi: [f32; LANES] = theta[k..k + LANES].try_into().unwrap();
+        let lo: [f32; LANES] = dtheta_c[k..k + LANES].try_into().unwrap();
+        let (m_new, g2) = s.moments_m_g2_x8(mk, gk);
+        let (vh, vl) = s.moment_v_plus_x8(vk, dvk, g2);
+        let dtx: [f64; LANES] =
+            from_fn(|l| s.delta_exact(hi[l], m_new[l], vh[l] as f64 + vl[l] as f64));
+        let (h_new, c_new, dt) = s.apply_theta2_x8(hi, lo, dtx, &mut acc.delta);
+        theta[k..k + LANES].copy_from_slice(&h_new);
+        dtheta_c[k..k + LANES].copy_from_slice(&c_new);
+        m[k..k + LANES].copy_from_slice(&m_new);
+        v[k..k + LANES].copy_from_slice(&vh);
+        dv[k..k + LANES].copy_from_slice(&vl);
+        for l in 0..LANES {
+            acc.tally_f64(
+                dt[l],
+                hi[l] as f64 + lo[l] as f64,
+                h_new[l] as f64 + c_new[l] as f64,
+            );
+        }
+        k += LANES;
+    }
+    gstep_plus_into(
+        s,
+        &g[split..],
+        &mut theta[split..],
+        &mut dtheta_c[split..],
+        &mut m[split..],
+        &mut v[split..],
+        &mut dv[split..],
+        &mut acc,
+    );
     acc
 }
 
@@ -1170,6 +1518,23 @@ pub fn gstep_chunk_light3(
     v: &mut [f32],
 ) -> ChunkAccum {
     let mut acc = ChunkAccum::default();
+    gstep_light3_into(s, g, theta, dtheta_c, dtheta_c2, m, v, &mut acc);
+    acc
+}
+
+/// Scalar body of [`gstep_chunk_light3`], continuing an existing
+/// accumulator (the lane kernel's tail path; see [`gstep_plain_into`]).
+#[allow(clippy::too_many_arguments)]
+fn gstep_light3_into(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    acc: &mut ChunkAccum,
+) {
     for (k, &gk) in g.iter().enumerate() {
         let (m_new, g2) = s.moments_m_g2(m[k], gk);
         let v_new = s.moment_v_plain(v[k], g2);
@@ -1184,6 +1549,61 @@ pub fn gstep_chunk_light3(
         v[k] = v_new;
         acc.tally_f64(dt, old_eff, eff_theta3(hi_n, lo1_n, lo2_n, s.ds_inv));
     }
+}
+
+/// 8-wide lane main loop of [`gstep_chunk_light3`] (unscaled plans only —
+/// the registry wrapper routes delta-scale plans to the scalar kernel);
+/// scalar tail.
+#[allow(clippy::too_many_arguments)]
+pub fn lstep_chunk_light3(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) -> ChunkAccum {
+    use std::array::from_fn;
+    let mut acc = ChunkAccum::default();
+    let split = g.len() - g.len() % LANES;
+    let mut k = 0;
+    while k < split {
+        let gk: [f32; LANES] = g[k..k + LANES].try_into().unwrap();
+        let mk: [f32; LANES] = m[k..k + LANES].try_into().unwrap();
+        let vk: [f32; LANES] = v[k..k + LANES].try_into().unwrap();
+        let hi: [f32; LANES] = theta[k..k + LANES].try_into().unwrap();
+        let lo1: [f32; LANES] = dtheta_c[k..k + LANES].try_into().unwrap();
+        let lo2: [f32; LANES] = dtheta_c2[k..k + LANES].try_into().unwrap();
+        let (m_new, g2) = s.moments_m_g2_x8(mk, gk);
+        let v_new = s.moment_v_plain_x8(vk, g2);
+        let old_eff: [f64; LANES] = from_fn(|l| eff_theta3(hi[l], lo1[l], lo2[l], s.ds_inv));
+        let dtx: [f64; LANES] = from_fn(|l| s.delta_exact(hi[l], m_new[l], v_new[l] as f64));
+        let (th3, dt) = s.apply_theta3_x8(hi, lo1, lo2, dtx, &mut acc.delta);
+        theta[k..k + LANES].copy_from_slice(&th3[0]);
+        dtheta_c[k..k + LANES].copy_from_slice(&th3[1]);
+        dtheta_c2[k..k + LANES].copy_from_slice(&th3[2]);
+        m[k..k + LANES].copy_from_slice(&m_new);
+        v[k..k + LANES].copy_from_slice(&v_new);
+        for l in 0..LANES {
+            acc.tally_f64(
+                dt[l],
+                old_eff[l],
+                eff_theta3(th3[0][l], th3[1][l], th3[2][l], s.ds_inv),
+            );
+        }
+        k += LANES;
+    }
+    gstep_light3_into(
+        s,
+        &g[split..],
+        &mut theta[split..],
+        &mut dtheta_c[split..],
+        &mut dtheta_c2[split..],
+        &mut m[split..],
+        &mut v[split..],
+        &mut acc,
+    );
     acc
 }
 
@@ -1202,6 +1622,25 @@ pub fn gstep_chunk_plus3(
     dv2: &mut [f32],
 ) -> ChunkAccum {
     let mut acc = ChunkAccum::default();
+    gstep_plus3_into(s, g, theta, dtheta_c, dtheta_c2, m, v, dv, dv2, &mut acc);
+    acc
+}
+
+/// Scalar body of [`gstep_chunk_plus3`], continuing an existing
+/// accumulator (the lane kernel's tail path; see [`gstep_plain_into`]).
+#[allow(clippy::too_many_arguments)]
+fn gstep_plus3_into(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    dv2: &mut [f32],
+    acc: &mut ChunkAccum,
+) {
     for (k, &gk) in g.iter().enumerate() {
         let (m_new, g2) = s.moments_m_g2(m[k], gk);
         let ve = s.moment_v_plus3(v[k], dv[k], dv2[k], g2);
@@ -1218,6 +1657,70 @@ pub fn gstep_chunk_plus3(
         dv2[k] = ve.c[2];
         acc.tally_f64(dt, old_eff, eff_theta3(hi_n, lo1_n, lo2_n, s.ds_inv));
     }
+}
+
+/// 8-wide lane main loop of [`gstep_chunk_plus3`] (unscaled plans only);
+/// scalar tail.  The lane v_eval mirrors `ExpansionN::value` exactly
+/// (a 0.0-seeded component-order f64 fold).
+#[allow(clippy::too_many_arguments)]
+pub fn lstep_chunk_plus3(
+    s: &GenericScalars,
+    g: &[f32],
+    theta: &mut [f32],
+    dtheta_c: &mut [f32],
+    dtheta_c2: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    dv2: &mut [f32],
+) -> ChunkAccum {
+    use std::array::from_fn;
+    let mut acc = ChunkAccum::default();
+    let split = g.len() - g.len() % LANES;
+    let mut k = 0;
+    while k < split {
+        let gk: [f32; LANES] = g[k..k + LANES].try_into().unwrap();
+        let mk: [f32; LANES] = m[k..k + LANES].try_into().unwrap();
+        let vk: [f32; LANES] = v[k..k + LANES].try_into().unwrap();
+        let dvk: [f32; LANES] = dv[k..k + LANES].try_into().unwrap();
+        let dv2k: [f32; LANES] = dv2[k..k + LANES].try_into().unwrap();
+        let hi: [f32; LANES] = theta[k..k + LANES].try_into().unwrap();
+        let lo1: [f32; LANES] = dtheta_c[k..k + LANES].try_into().unwrap();
+        let lo2: [f32; LANES] = dtheta_c2[k..k + LANES].try_into().unwrap();
+        let (m_new, g2) = s.moments_m_g2_x8(mk, gk);
+        let ve = s.moment_v_plus3_x8(vk, dvk, dv2k, g2);
+        let v_eval: [f64; LANES] = from_fn(|l| ve.iter().fold(0.0f64, |a, c| a + c[l] as f64));
+        let old_eff: [f64; LANES] = from_fn(|l| eff_theta3(hi[l], lo1[l], lo2[l], s.ds_inv));
+        let dtx: [f64; LANES] = from_fn(|l| s.delta_exact(hi[l], m_new[l], v_eval[l]));
+        let (th3, dt) = s.apply_theta3_x8(hi, lo1, lo2, dtx, &mut acc.delta);
+        theta[k..k + LANES].copy_from_slice(&th3[0]);
+        dtheta_c[k..k + LANES].copy_from_slice(&th3[1]);
+        dtheta_c2[k..k + LANES].copy_from_slice(&th3[2]);
+        m[k..k + LANES].copy_from_slice(&m_new);
+        v[k..k + LANES].copy_from_slice(&ve[0]);
+        dv[k..k + LANES].copy_from_slice(&ve[1]);
+        dv2[k..k + LANES].copy_from_slice(&ve[2]);
+        for l in 0..LANES {
+            acc.tally_f64(
+                dt[l],
+                old_eff[l],
+                eff_theta3(th3[0][l], th3[1][l], th3[2][l], s.ds_inv),
+            );
+        }
+        k += LANES;
+    }
+    gstep_plus3_into(
+        s,
+        &g[split..],
+        &mut theta[split..],
+        &mut dtheta_c[split..],
+        &mut dtheta_c2[split..],
+        &mut m[split..],
+        &mut v[split..],
+        &mut dv[split..],
+        &mut dv2[split..],
+        &mut acc,
+    );
     acc
 }
 
@@ -1845,6 +2348,328 @@ pub fn bstep_chunk_plus3(
     acc
 }
 
+// ---------------------------------------------------------------------------
+// The SchemeKernel registry: scheme → {fused, oracle, block, layout, bench
+// row}.  See the module-level registry section.
+// ---------------------------------------------------------------------------
+
+/// Per-call context handed to every registry entry point: the step scalars
+/// plus the two scheme-specific extras (the stochastic-rounding noise key
+/// and the block quantizer), so all entries share one signature.  Plain
+/// data + a fn pointer — `Sync` by construction, so `parallel_chunks`
+/// workers can share one context.
+struct KernelCtx<'a> {
+    s: &'a GenericScalars,
+    sr_key: u64,
+    qb: BlockQuantizer,
+}
+
+/// One registry entry point: update one chunk's state windows (carved out
+/// of the shared [`VecPtrs`] view over `r`) and return its diagnostics
+/// partial.  Callers must pass disjoint `r` across concurrent calls (the
+/// [`VecPtrs::slice`] contract).
+type ChunkFn = unsafe fn(&KernelCtx, &[f32], &VecPtrs, Range<usize>) -> ChunkAccum;
+
+/// One row of the format-generic kernel table: everything the dispatcher,
+/// the equivalence tests and the bench emitter need to know about a
+/// [`Scheme`].  Adding a scheme = adding one row (plus its kernels and
+/// `state_spec` arm).
+pub struct SchemeKernel {
+    pub scheme: Scheme,
+    /// State-vector arity — must equal `PrecisionPlan::state_spec().len()`
+    /// at any element-wise format (the registry coverage test pins it).
+    pub state_vecs: usize,
+    /// Main-loop width of the fused entry on unscaled element-wise plans:
+    /// [`LANES`] for the lane-ized schemes, 1 for scalar-only ones.
+    pub lane_width: usize,
+    /// Whether `benches/optimizer_step.rs` emits `generic_formats` rows
+    /// for this scheme (the paper-grid block schemes).
+    pub benched: bool,
+    /// Fused entry: the lane kernel on unscaled element-wise plans, the
+    /// scalar (or delta-scale) kernel otherwise — the one dispatch
+    /// decision of the lane/scalar contract.
+    fused: ChunkFn,
+    /// Always-scalar oracle twin the fused entry is proven against.
+    oracle: ChunkFn,
+    /// Block-scaled (`bstep_chunk_*`) entry; `None` for schemes that
+    /// `PrecisionPlan::validate` rejects at block formats.
+    block: Option<ChunkFn>,
+}
+
+impl SchemeKernel {
+    /// The canonical bench/baseline/gate row key for this scheme at `fmt`
+    /// — the single naming scheme shared by `benches/optimizer_step.rs`,
+    /// `BENCH_baseline/optimizer_step.json` and
+    /// `scripts/check_bench_regression.py` (which prefixes `format/`).
+    pub fn bench_row(&self, fmt: &FloatFormat) -> String {
+        format!("{}@{}", self.scheme.name(), fmt.name)
+    }
+
+    /// Whether this scheme has a block-scaled kernel (mirrors
+    /// `BLOCK_SCHEMES` membership; the registry coverage test pins it).
+    pub fn has_block(&self) -> bool {
+        self.block.is_some()
+    }
+}
+
+// Registry entry-point wrappers.  SAFETY (all of them): the caller passes
+// disjoint `r` across concurrent calls, so the `p.slice` windows are
+// disjoint `&mut` views per vector.
+unsafe fn k_plain_fused(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    lstep_chunk_plain(cx.s, gr, p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r))
+}
+
+unsafe fn k_plain_oracle(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    gstep_chunk_plain(cx.s, gr, p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r))
+}
+
+unsafe fn k_plain_block(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    bstep_chunk_plain(cx.s, cx.qb, gr, p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r))
+}
+
+unsafe fn k_light_fused(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (m, v) = (p.slice(2, r.clone()), p.slice(3, r));
+    if cx.s.ds_scale == 1.0 {
+        lstep_chunk_light(cx.s, gr, t, c, m, v)
+    } else {
+        gstep_chunk_light_ds(cx.s, gr, t, c, m, v)
+    }
+}
+
+unsafe fn k_light_oracle(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (m, v) = (p.slice(2, r.clone()), p.slice(3, r));
+    if cx.s.ds_scale == 1.0 {
+        gstep_chunk_light(cx.s, gr, t, c, m, v)
+    } else {
+        gstep_chunk_light_ds(cx.s, gr, t, c, m, v)
+    }
+}
+
+unsafe fn k_light_block(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (m, v) = (p.slice(2, r.clone()), p.slice(3, r));
+    bstep_chunk_light(cx.s, cx.qb, gr, t, c, m, v)
+}
+
+unsafe fn k_light3_fused(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c, c2) = (p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r.clone()));
+    let (m, v) = (p.slice(3, r.clone()), p.slice(4, r));
+    if cx.s.ds_scale == 1.0 {
+        lstep_chunk_light3(cx.s, gr, t, c, c2, m, v)
+    } else {
+        gstep_chunk_light3(cx.s, gr, t, c, c2, m, v)
+    }
+}
+
+unsafe fn k_light3_oracle(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c, c2) = (p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r.clone()));
+    let (m, v) = (p.slice(3, r.clone()), p.slice(4, r));
+    gstep_chunk_light3(cx.s, gr, t, c, c2, m, v)
+}
+
+unsafe fn k_light3_block(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c, c2) = (p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r.clone()));
+    let (m, v) = (p.slice(3, r.clone()), p.slice(4, r));
+    bstep_chunk_light3(cx.s, cx.qb, gr, t, c, c2, m, v)
+}
+
+unsafe fn k_plus_fused(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (m, v, dv) = (p.slice(2, r.clone()), p.slice(3, r.clone()), p.slice(4, r));
+    if cx.s.ds_scale == 1.0 {
+        lstep_chunk_plus(cx.s, gr, t, c, m, v, dv)
+    } else {
+        gstep_chunk_plus_ds(cx.s, gr, t, c, m, v, dv)
+    }
+}
+
+unsafe fn k_plus_oracle(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (m, v, dv) = (p.slice(2, r.clone()), p.slice(3, r.clone()), p.slice(4, r));
+    if cx.s.ds_scale == 1.0 {
+        gstep_chunk_plus(cx.s, gr, t, c, m, v, dv)
+    } else {
+        gstep_chunk_plus_ds(cx.s, gr, t, c, m, v, dv)
+    }
+}
+
+unsafe fn k_plus_block(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (m, v, dv) = (p.slice(2, r.clone()), p.slice(3, r.clone()), p.slice(4, r));
+    bstep_chunk_plus(cx.s, cx.qb, gr, t, c, m, v, dv)
+}
+
+unsafe fn k_plus3_fused(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c, c2) = (p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r.clone()));
+    let (m, v) = (p.slice(3, r.clone()), p.slice(4, r.clone()));
+    let (dv, dv2) = (p.slice(5, r.clone()), p.slice(6, r));
+    if cx.s.ds_scale == 1.0 {
+        lstep_chunk_plus3(cx.s, gr, t, c, c2, m, v, dv, dv2)
+    } else {
+        gstep_chunk_plus3(cx.s, gr, t, c, c2, m, v, dv, dv2)
+    }
+}
+
+unsafe fn k_plus3_oracle(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c, c2) = (p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r.clone()));
+    let (m, v) = (p.slice(3, r.clone()), p.slice(4, r.clone()));
+    let (dv, dv2) = (p.slice(5, r.clone()), p.slice(6, r));
+    gstep_chunk_plus3(cx.s, gr, t, c, c2, m, v, dv, dv2)
+}
+
+unsafe fn k_plus3_block(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c, c2) = (p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r.clone()));
+    let (m, v) = (p.slice(3, r.clone()), p.slice(4, r.clone()));
+    let (dv, dv2) = (p.slice(5, r.clone()), p.slice(6, r));
+    bstep_chunk_plus3(cx.s, cx.qb, gr, t, c, c2, m, v, dv, dv2)
+}
+
+unsafe fn k_kahan(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, c) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (m, v) = (p.slice(2, r.clone()), p.slice(3, r));
+    gstep_chunk_kahan(cx.s, gr, t, c, m, v)
+}
+
+unsafe fn k_sr(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let base = r.start;
+    gstep_chunk_sr(
+        cx.s,
+        cx.sr_key,
+        base,
+        gr,
+        p.slice(0, r.clone()),
+        p.slice(1, r.clone()),
+        p.slice(2, r),
+    )
+}
+
+unsafe fn k_fp32_optim(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    gstep_chunk_fp32_optim(cx.s, gr, p.slice(0, r.clone()), p.slice(1, r.clone()), p.slice(2, r))
+}
+
+unsafe fn k_fp32_mw(cx: &KernelCtx, g: &[f32], p: &VecPtrs, r: Range<usize>) -> ChunkAccum {
+    let gr = &g[r.clone()];
+    let (t, m) = (p.slice(0, r.clone()), p.slice(1, r.clone()));
+    let (v, mw) = (p.slice(2, r.clone()), p.slice(3, r));
+    gstep_chunk_fp32_mw(cx.s, gr, t, m, v, mw)
+}
+
+/// The format-generic kernel table, one row per [`Scheme`] (same order as
+/// `plan::ALL_SCHEMES`; the registry coverage test pins the metadata
+/// against `PrecisionPlan::state_spec` and `plan::BLOCK_SCHEMES`).
+pub static KERNELS: [SchemeKernel; 9] = [
+    SchemeKernel {
+        scheme: Scheme::Plain,
+        state_vecs: 3,
+        lane_width: LANES,
+        benched: true,
+        fused: k_plain_fused,
+        oracle: k_plain_oracle,
+        block: Some(k_plain_block),
+    },
+    SchemeKernel {
+        scheme: Scheme::CollageLight,
+        state_vecs: 4,
+        lane_width: LANES,
+        benched: true,
+        fused: k_light_fused,
+        oracle: k_light_oracle,
+        block: Some(k_light_block),
+    },
+    SchemeKernel {
+        scheme: Scheme::CollageLight3,
+        state_vecs: 5,
+        lane_width: LANES,
+        benched: true,
+        fused: k_light3_fused,
+        oracle: k_light3_oracle,
+        block: Some(k_light3_block),
+    },
+    SchemeKernel {
+        scheme: Scheme::CollagePlus,
+        state_vecs: 5,
+        lane_width: LANES,
+        benched: true,
+        fused: k_plus_fused,
+        oracle: k_plus_oracle,
+        block: Some(k_plus_block),
+    },
+    SchemeKernel {
+        scheme: Scheme::CollagePlus3,
+        state_vecs: 7,
+        lane_width: LANES,
+        benched: true,
+        fused: k_plus3_fused,
+        oracle: k_plus3_oracle,
+        block: Some(k_plus3_block),
+    },
+    SchemeKernel {
+        scheme: Scheme::Fp32Optim,
+        state_vecs: 3,
+        lane_width: 1,
+        benched: false,
+        fused: k_fp32_optim,
+        oracle: k_fp32_optim,
+        block: None,
+    },
+    SchemeKernel {
+        scheme: Scheme::Fp32MasterWeights,
+        state_vecs: 4,
+        lane_width: 1,
+        benched: false,
+        fused: k_fp32_mw,
+        oracle: k_fp32_mw,
+        block: None,
+    },
+    SchemeKernel {
+        scheme: Scheme::Kahan,
+        state_vecs: 4,
+        lane_width: 1,
+        benched: false,
+        fused: k_kahan,
+        oracle: k_kahan,
+        block: None,
+    },
+    SchemeKernel {
+        scheme: Scheme::StochasticRounding,
+        state_vecs: 3,
+        lane_width: 1,
+        benched: false,
+        fused: k_sr,
+        oracle: k_sr,
+        block: None,
+    },
+];
+
+/// The registry row for `scheme` — total over [`Scheme`] (the coverage
+/// test proves it).
+pub fn kernel_for(scheme: Scheme) -> &'static SchemeKernel {
+    KERNELS
+        .iter()
+        .find(|k| k.scheme == scheme)
+        .expect("every Scheme has a registry row")
+}
+
 /// The format-generic half of [`fused_step`]: same chunk grid, same
 /// index-ordered combine, same zero-allocation contract — dispatched by
 /// [`Scheme`] instead of legacy [`Strategy`].
@@ -1913,219 +2738,33 @@ pub(crate) fn generic_step_chunks(
     // transitions.
     let k = state.delta_k();
     let s = GenericScalars::new_with_k(plan, opt, lr, t, k);
-    let scaled = k != 0;
 
     let mut scratch = state.take_accum_scratch();
     {
         let vecs = state.vecs_mut();
         let p = VecPtrs::new(vecs, n);
         let run = &mut scratch;
-        // Block-scaled formats route to the `bstep_chunk_*` family with the
-        // fast block quantizer (the scalar oracle runs the same `bgroup_*`
-        // math with the reference quantizer).  `PrecisionPlan::validate`
-        // restricts block plans to `BLOCK_SCHEMES`, so the guard arms below
-        // cover every reachable scheme; delta-scale needs no separate
-        // kernels here — the uniform θ chain degenerates exactly at k = 0.
-        let blk = plan.format.block != 0;
-        let qb: BlockQuantizer = crate::numerics::block::quantize_block;
-        // SAFETY (all arms): `parallel_chunks` hands out non-overlapping
-        // ranges, each claimed by exactly one thread, so the `p.slice`
-        // windows are disjoint &mut views per vector.
-        match plan.scheme {
-            Scheme::Plain if blk => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                bstep_chunk_plain(
-                    &s,
-                    qb,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r),
-                )
-            }),
-            Scheme::CollageLight if blk => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    bstep_chunk_light(
-                        &s,
-                        qb,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r.clone()),
-                        p.slice(3, r),
-                    )
-                })
-            }
-            Scheme::CollageLight3 if blk => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    bstep_chunk_light3(
-                        &s,
-                        qb,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r.clone()),
-                        p.slice(3, r.clone()),
-                        p.slice(4, r),
-                    )
-                })
-            }
-            Scheme::CollagePlus if blk => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    bstep_chunk_plus(
-                        &s,
-                        qb,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r.clone()),
-                        p.slice(3, r.clone()),
-                        p.slice(4, r),
-                    )
-                })
-            }
-            Scheme::CollagePlus3 if blk => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    bstep_chunk_plus3(
-                        &s,
-                        qb,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r.clone()),
-                        p.slice(3, r.clone()),
-                        p.slice(4, r.clone()),
-                        p.slice(5, r.clone()),
-                        p.slice(6, r),
-                    )
-                })
-            }
-            sch if blk => {
-                unreachable!("scheme {sch:?} rejected at block formats by PrecisionPlan::validate")
-            }
-            Scheme::Plain => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_plain(
-                    &s,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r),
-                )
-            }),
-            Scheme::CollageLight if !scaled => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    gstep_chunk_light(
-                        &s,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r.clone()),
-                        p.slice(3, r),
-                    )
-                })
-            }
-            Scheme::CollageLight => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_light_ds(
-                    &s,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r.clone()),
-                    p.slice(3, r),
-                )
-            }),
-            Scheme::CollageLight3 => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_light3(
-                    &s,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r.clone()),
-                    p.slice(3, r.clone()),
-                    p.slice(4, r),
-                )
-            }),
-            Scheme::CollagePlus if !scaled => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    gstep_chunk_plus(
-                        &s,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r.clone()),
-                        p.slice(3, r.clone()),
-                        p.slice(4, r),
-                    )
-                })
-            }
-            Scheme::CollagePlus => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_plus_ds(
-                    &s,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r.clone()),
-                    p.slice(3, r.clone()),
-                    p.slice(4, r),
-                )
-            }),
-            Scheme::CollagePlus3 => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_plus3(
-                    &s,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r.clone()),
-                    p.slice(3, r.clone()),
-                    p.slice(4, r.clone()),
-                    p.slice(5, r.clone()),
-                    p.slice(6, r),
-                )
-            }),
-            Scheme::Kahan => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_kahan(
-                    &s,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r.clone()),
-                    p.slice(3, r),
-                )
-            }),
-            Scheme::StochasticRounding => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    gstep_chunk_sr(
-                        &s,
-                        sr_key,
-                        r.start,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r),
-                    )
-                })
-            }
-            Scheme::Fp32Optim => parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                gstep_chunk_fp32_optim(
-                    &s,
-                    &g[r.clone()],
-                    p.slice(0, r.clone()),
-                    p.slice(1, r.clone()),
-                    p.slice(2, r),
-                )
-            }),
-            Scheme::Fp32MasterWeights => {
-                parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe {
-                    gstep_chunk_fp32_mw(
-                        &s,
-                        &g[r.clone()],
-                        p.slice(0, r.clone()),
-                        p.slice(1, r.clone()),
-                        p.slice(2, r.clone()),
-                        p.slice(3, r),
-                    )
-                })
-            }
-        }
+        // One dispatch decision, off the registry: block-scaled formats
+        // route to the row's `bstep_chunk_*` entry with the fast block
+        // quantizer (the scalar oracle runs the same `bgroup_*` math with
+        // the reference quantizer); element-wise formats take the row's
+        // fused entry, which internally selects lane vs scalar (and the
+        // delta-scale kernels — the uniform block θ chain needs no such
+        // split, it degenerates exactly at k = 0).
+        let kern = kernel_for(plan.scheme);
+        let entry: ChunkFn = match (plan.format.block != 0, kern.block) {
+            (true, Some(block)) => block,
+            (true, None) => unreachable!(
+                "scheme {:?} rejected at block formats by PrecisionPlan::validate",
+                plan.scheme
+            ),
+            (false, _) => kern.fused,
+        };
+        let cx = KernelCtx { s: &s, sr_key, qb: crate::numerics::block::quantize_block };
+        // SAFETY: `parallel_chunks` hands out non-overlapping ranges, each
+        // claimed by exactly one thread, so the `p.slice` windows inside
+        // the entry are disjoint &mut views per vector.
+        parallel_chunks(n, CHUNK, workers, run, |_, r| unsafe { entry(&cx, g, &p, r) });
     }
     scratch
 }
@@ -2259,6 +2898,127 @@ mod tests {
         let s = GenericScalars::new(plan.with_delta_scale(12).unwrap(), &opt, 1e-3, 1);
         assert!(!s.delta_underflowed(-1e-4));
         assert!(s.delta_underflowed(-1e-7), "still vanishes even ×2¹²");
+    }
+
+    /// Deterministic format-representable pseudo-state (nonneg for the
+    /// second-moment vectors so v̂ stays in √ range).
+    fn gen_state_vec(rng: &mut Rng, fmt: &FloatFormat, n: usize, nonneg: bool) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let u = (rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+                let x = if nonneg { u } else { u - 0.5 };
+                fmt.round_nearest(x)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn registry_covers_every_scheme_with_consistent_metadata() {
+        use crate::numerics::format::FP16;
+        use crate::optim::plan::{ALL_SCHEMES, BLOCK_SCHEMES};
+        assert_eq!(KERNELS.len(), ALL_SCHEMES.len());
+        for (row, &scheme) in KERNELS.iter().zip(ALL_SCHEMES.iter()) {
+            assert_eq!(row.scheme, scheme, "registry order mirrors ALL_SCHEMES");
+            let kern = kernel_for(scheme);
+            assert_eq!(kern.scheme, scheme);
+            let plan = PrecisionPlan::new(FP16, scheme);
+            assert_eq!(kern.state_vecs, plan.state_spec().len(), "{scheme:?} state arity");
+            assert_eq!(kern.has_block(), BLOCK_SCHEMES.contains(&scheme), "{scheme:?} block");
+            assert_eq!(kern.benched, BLOCK_SCHEMES.contains(&scheme), "{scheme:?} bench");
+            assert!(kern.lane_width == 1 || kern.lane_width == LANES);
+            assert_eq!(kern.bench_row(&FP16), format!("{}@{}", scheme.name(), FP16.name));
+        }
+    }
+
+    #[test]
+    fn lane_fused_entries_match_scalar_oracles_bitwise() {
+        use crate::numerics::format::{FP16, FP8E4M3, FP8E5M2};
+        use crate::optim::plan::BLOCK_SCHEMES;
+        let opt = AdamW::default();
+        for fmt in [FP16, FP8E4M3, FP8E5M2] {
+            for &scheme in BLOCK_SCHEMES.iter() {
+                let kern = kernel_for(scheme);
+                assert_eq!(kern.lane_width, LANES, "{scheme:?} must be lane-ized");
+                let plan = PrecisionPlan::new(fmt, scheme);
+                let s = GenericScalars::new(plan, &opt, 1e-3, 3);
+                let cx =
+                    KernelCtx { s: &s, sr_key: 0, qb: crate::numerics::block::quantize_block };
+                // Lane-boundary lengths: below/at/above one lane, two lanes
+                // minus/at/plus one, and a multi-lane length with tail.
+                for n in [1usize, 7, 8, 9, 15, 16, 17, 43] {
+                    let mut rng =
+                        Rng::new(0x1A7E_C0DE, ((n as u64) << 8) | fmt.mantissa_bits as u64);
+                    let g = gen_state_vec(&mut rng, &fmt, n, false);
+                    let mut vecs_a: Vec<Vec<f32>> = (0..kern.state_vecs)
+                        .map(|i| gen_state_vec(&mut rng, &fmt, n, i >= 2))
+                        .collect();
+                    let mut vecs_b = vecs_a.clone();
+                    let pa = VecPtrs::new(&mut vecs_a, n);
+                    let acc_a = unsafe { (kern.fused)(&cx, &g, &pa, 0..n) };
+                    let pb = VecPtrs::new(&mut vecs_b, n);
+                    let acc_b = unsafe { (kern.oracle)(&cx, &g, &pb, 0..n) };
+                    for (i, (va, vb)) in vecs_a.iter().zip(&vecs_b).enumerate() {
+                        for (j, (a, b)) in va.iter().zip(vb).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{scheme:?}@{} n={n} vec {i} elem {j}: lane {a:e} vs scalar {b:e}",
+                                fmt.name
+                            );
+                        }
+                    }
+                    for (a, b, what) in [
+                        (acc_a.un2, acc_b.un2, "un2"),
+                        (acc_a.en2, acc_b.en2, "en2"),
+                        (acc_a.dot, acc_b.dot, "dot"),
+                        (acc_a.pn2, acc_b.pn2, "pn2"),
+                    ] {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{scheme:?}@{} n={n} accum {what}: lane {a:e} vs scalar {b:e}",
+                            fmt.name
+                        );
+                    }
+                    assert_eq!(acc_a.lost, acc_b.lost, "{scheme:?}@{} n={n}", fmt.name);
+                    assert_eq!(acc_a.delta, acc_b.delta, "{scheme:?}@{} n={n}", fmt.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_plans_take_the_scalar_path_via_registry() {
+        // Delta-scale plans must never reach a lane θ chain: the fused
+        // entry falls back to the scalar/_ds kernels, so fused ≡ oracle
+        // holds trivially — this pins the dispatch decision itself.
+        use crate::numerics::format::FP8E4M3;
+        let opt = AdamW::default();
+        for scheme in [
+            Scheme::CollageLight,
+            Scheme::CollageLight3,
+            Scheme::CollagePlus,
+            Scheme::CollagePlus3,
+        ] {
+            let plan = PrecisionPlan::new(FP8E4M3, scheme).with_delta_scale(8).unwrap();
+            let kern = kernel_for(scheme);
+            let s = GenericScalars::new(plan, &opt, 1e-3, 3);
+            assert!(s.ds_scale != 1.0);
+            let cx = KernelCtx { s: &s, sr_key: 0, qb: crate::numerics::block::quantize_block };
+            let n = 17;
+            let mut rng = Rng::new(0x5CA1_ED00, n as u64);
+            let g = gen_state_vec(&mut rng, &FP8E4M3, n, false);
+            let mut vecs_a: Vec<Vec<f32>> = (0..kern.state_vecs)
+                .map(|i| gen_state_vec(&mut rng, &FP8E4M3, n, i >= 2))
+                .collect();
+            let mut vecs_b = vecs_a.clone();
+            let pa = VecPtrs::new(&mut vecs_a, n);
+            let acc_a = unsafe { (kern.fused)(&cx, &g, &pa, 0..n) };
+            let pb = VecPtrs::new(&mut vecs_b, n);
+            let acc_b = unsafe { (kern.oracle)(&cx, &g, &pb, 0..n) };
+            assert_eq!(vecs_a, vecs_b, "{scheme:?} scaled state must match");
+            assert_eq!(acc_a.delta, acc_b.delta, "{scheme:?} scaled telemetry must match");
+        }
     }
 
     #[test]

@@ -11,15 +11,18 @@
 use collage::numerics::format::{FloatFormat, FP16, FP8E4M3, FP8E5M2};
 use collage::optim::adamw::{AdamW, StepStats};
 use collage::optim::generic::GenericAdamW;
+use collage::optim::kernels::{CHUNK, KERNELS};
 use collage::optim::plan::{PrecisionPlan, Scheme, ALL_SCHEMES};
 use collage::optim::state::OptimState;
 use collage::util::proptest::check_msg;
 use collage::util::rng::Rng;
 
-/// Sizes around the interesting boundaries: single element, sub-chunk,
-/// and off-by-one past a power of two (4097 < CHUNK keeps a single chunk;
-/// 40_000 spans multiple chunks and exercises the index-ordered combine).
-const SIZES: [usize; 3] = [1, 1023, 4097];
+/// Sizes around the interesting boundaries: single element, the 8-wide
+/// lane boundary (7/8/9 and 15/16/17 pin every lane kernel's remainder
+/// path below/at/past one and two lanes), sub-chunk, and off-by-one past
+/// a power of two (4097 < CHUNK keeps a single chunk; 40_000 spans
+/// multiple chunks and exercises the index-ordered combine).
+const SIZES: [usize; 9] = [1, 7, 8, 9, 15, 16, 17, 1023, 4097];
 
 const FORMATS: [FloatFormat; 3] = [FP16, FP8E4M3, FP8E5M2];
 
@@ -110,10 +113,14 @@ fn compare_paths(plan: PrecisionPlan, n: usize, workers: usize, steps: u64) {
 
 #[test]
 fn fused_matches_oracle_every_format_scheme_size() {
+    // Registry-driven: a scheme only exists as a `KERNELS` row, so
+    // iterating the registry (instead of a hand-kept list) means a new
+    // scheme cannot ship without entering this matrix — including its
+    // lane/scalar dispatch decision.
     for fmt in FORMATS {
-        for scheme in ALL_SCHEMES {
+        for kern in KERNELS.iter() {
             for n in SIZES {
-                compare_paths(PrecisionPlan::new(fmt, scheme), n, 1, 3);
+                compare_paths(PrecisionPlan::new(fmt, kern.scheme), n, 1, 3);
             }
         }
     }
@@ -122,8 +129,8 @@ fn fused_matches_oracle_every_format_scheme_size() {
 #[test]
 fn sharded_matches_oracle_workers_2() {
     for fmt in FORMATS {
-        for scheme in ALL_SCHEMES {
-            compare_paths(PrecisionPlan::new(fmt, scheme), 40_000, 2, 2);
+        for kern in KERNELS.iter() {
+            compare_paths(PrecisionPlan::new(fmt, kern.scheme), 40_000, 2, 2);
         }
     }
 }
@@ -131,11 +138,34 @@ fn sharded_matches_oracle_workers_2() {
 #[test]
 fn sharded_matches_oracle_workers_8() {
     for fmt in FORMATS {
-        for scheme in ALL_SCHEMES {
+        for kern in KERNELS.iter() {
             for n in [1usize, 1023] {
-                compare_paths(PrecisionPlan::new(fmt, scheme), n, 8, 2);
+                compare_paths(PrecisionPlan::new(fmt, kern.scheme), n, 8, 2);
             }
         }
+    }
+}
+
+#[test]
+fn lane_body_and_scalar_tail_fold_on_the_same_accum_chunk_grid() {
+    // The lane body and its scalar tail must continue the SAME per-chunk
+    // accumulator: all f64 diagnostics fold on the ACCUM_CHUNK grid, and
+    // f64 addition is not associative, so a lane/scalar split that moved
+    // a fold boundary would change bits.  Two pins: (a) a lane block can
+    // never straddle a chunk, and (b) at n = CHUNK + 9 one run contains a
+    // lane-only full chunk followed by a 9-element chunk that splits into
+    // one 8-wide lane block plus a 1-element scalar tail — the pure-scalar
+    // oracle on the same grid must still agree bitwise, StepStats included.
+    for kern in KERNELS.iter() {
+        assert_eq!(
+            CHUNK % kern.lane_width,
+            0,
+            "{:?}: lane block would straddle the ACCUM_CHUNK grid",
+            kern.scheme
+        );
+    }
+    for kern in KERNELS.iter().filter(|k| k.lane_width > 1) {
+        compare_paths(PrecisionPlan::new(FP8E4M3, kern.scheme), CHUNK + 9, 2, 2);
     }
 }
 

@@ -12,10 +12,12 @@ use collage::optim::state::OptimState;
 use collage::optim::strategy::{Strategy, ALL_STRATEGIES};
 use collage::util::rng::Rng;
 
-/// Sizes around the interesting boundaries: single elements, sub-chunk,
-/// power-of-two, off-by-one, and a multi-chunk length that exercises the
-/// index-ordered partial combine (40_000 > 2 × CHUNK).
-const SIZES: [usize; 6] = [1, 5, 1023, 4096, 4097, 40_000];
+/// Sizes around the interesting boundaries: single elements, the 8-wide
+/// lane boundary (7/8/9 and 15/16/17 pin the lane kernels' remainder
+/// path below/at/past one and two lanes), sub-chunk, power-of-two,
+/// off-by-one, and a multi-chunk length that exercises the index-ordered
+/// partial combine (40_000 > 2 × CHUNK).
+const SIZES: [usize; 12] = [1, 5, 7, 8, 9, 15, 16, 17, 1023, 4096, 4097, 40_000];
 
 fn gradient(rng: &mut Rng, n: usize, quantized: bool, zeros: bool) -> Vec<f32> {
     (0..n)

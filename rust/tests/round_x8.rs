@@ -1,0 +1,193 @@
+//! The batched-rounding contract: `FloatFormat::round_x8` and
+//! `FloatFormat::round_nearest_f64_x8` must be **bitwise** identical to 8
+//! independent scalar `round` / `round_nearest_f64` calls — for every
+//! lane, every format, and every input: NaN canonicalization, E4M3
+//! saturation vs E5M2/fp16 overflow-to-inf, subnormals and signed zeros
+//! alike.  The lane kernels in `optim/kernels.rs` are built on exactly
+//! this identity, so this file is the rounding-layer leg of the
+//! lane ≡ scalar proof (`generic_kernel_equivalence.rs` is the kernel
+//! layer).
+//!
+//! Tier 1 runs hand-picked boundary vectors rotated through every lane
+//! position plus a seeded property sample honoring
+//! `COLLAGE_PROPTEST_CASES`.  The exhaustive sweep over all 2³² f32 bit
+//! patterns through the lane entry is `#[ignore]`d:
+//!
+//! ```sh
+//! cargo test --release --test round_x8 -- --ignored
+//! ```
+
+use collage::numerics::format::{FloatFormat, BF16, FP16, FP32, FP8E4M3, FP8E5M2, MXFP4};
+use collage::util::proptest::check_msg;
+use collage::util::rng::Rng;
+
+/// Every element grid the batched entry points can see: the five scalar
+/// formats (fp32 is the identity lane — pinned too, it is a real dispatch
+/// arm) plus mxfp4's element grid (block plans quantize through the block
+/// quantizer, but the element-wise `round` must stay coherent with it).
+const FORMATS: [FloatFormat; 6] = [FP32, FP16, BF16, FP8E4M3, FP8E5M2, MXFP4];
+
+fn assert_lanes_f32(fmt: &FloatFormat, x: [f32; 8]) {
+    let batched = fmt.round_x8(x);
+    for l in 0..8 {
+        let scalar = fmt.round(x[l]);
+        if batched[l].is_nan() || scalar.is_nan() {
+            assert!(
+                batched[l].is_nan() && scalar.is_nan(),
+                "{} lane {l} x={:e} ({:08x}): batched={:e} scalar={:e}",
+                fmt.name,
+                x[l],
+                x[l].to_bits(),
+                batched[l],
+                scalar
+            );
+            continue;
+        }
+        assert_eq!(
+            batched[l].to_bits(),
+            scalar.to_bits(),
+            "{} lane {l} x={:e} ({:08x}): batched={:e} scalar={:e}",
+            fmt.name,
+            x[l],
+            x[l].to_bits(),
+            batched[l],
+            scalar
+        );
+    }
+}
+
+fn assert_lanes_f64(fmt: &FloatFormat, x: [f64; 8]) {
+    let batched = fmt.round_nearest_f64_x8(x);
+    for l in 0..8 {
+        let scalar = fmt.round_nearest_f64(x[l]);
+        if batched[l].is_nan() || scalar.is_nan() {
+            assert!(
+                batched[l].is_nan() && scalar.is_nan(),
+                "{} lane {l} x={:e} ({:016x}): batched={:e} scalar={:e}",
+                fmt.name,
+                x[l],
+                x[l].to_bits(),
+                batched[l],
+                scalar
+            );
+            continue;
+        }
+        assert_eq!(
+            batched[l].to_bits(),
+            scalar.to_bits(),
+            "{} lane {l} x={:e} ({:016x}): batched={:e} scalar={:e}",
+            fmt.name,
+            x[l],
+            x[l].to_bits(),
+            batched[l],
+            scalar
+        );
+    }
+}
+
+#[test]
+fn boundary_lanes_bitwise() {
+    for fmt in &FORMATS {
+        let minsub = fmt.ulp(0.0) as f32; // smallest positive subnormal
+        let max = fmt.max_finite() as f32;
+        let cases: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            minsub,
+            -minsub,
+            minsub / 2.0,  // exact tie at half the smallest subnormal
+            minsub / 4.0,  // below the tie: rounds to zero
+            0.75 * minsub, // above the tie: rounds to minsub
+            1.5 * minsub,  // tie between the two smallest subnormals
+            max,
+            -max,
+            max * 2.0, // E4M3 saturates to max, E5M2/fp16 overflow to inf
+            -max * 2.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::MAX,
+            f32::MIN_POSITIVE,       // smallest normal f32
+            f32::MIN_POSITIVE / 8.0, // f32 subnormal
+            1.0,
+            1.0 + 2f32.powi(-8), // bf16 tie-to-even
+            3.1415927,
+            -2.7182817,
+        ];
+        // Rotate the boundary vector so every case visits every lane
+        // position with mixed neighbours — a lane-indexed bug (wrong
+        // shuffle, lane 0 special-cased) cannot hide behind uniform lanes.
+        for i in 0..cases.len() {
+            let lane: [f32; 8] = std::array::from_fn(|l| cases[(i + l) % cases.len()]);
+            assert_lanes_f32(fmt, lane);
+            let lane64: [f64; 8] = std::array::from_fn(|l| lane[l] as f64);
+            assert_lanes_f64(fmt, lane64);
+        }
+        // f64-only boundaries: values no f32 can carry exactly, which the
+        // kernels' exact-then-round chain steps do feed the f64 entry.
+        let minsub64 = fmt.ulp(0.0);
+        let f64_cases: Vec<f64> = vec![
+            minsub64 / 2.0,
+            0.75 * minsub64,
+            f64::MAX,
+            -f64::MAX,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 8.0,
+            1.0 + 2f64.powi(-30), // rounds on every grid here
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ];
+        for i in 0..f64_cases.len() {
+            let lane: [f64; 8] =
+                std::array::from_fn(|l| f64_cases[(i + l) % f64_cases.len()]);
+            assert_lanes_f64(fmt, lane);
+        }
+    }
+}
+
+#[test]
+fn prop_round_x8_matches_scalar_bitwise() {
+    // Uniform random bit patterns (normals, subnormals, infs and NaNs all
+    // appear) plus magnitudes concentrated on each format's own dynamic
+    // range, where the subnormal/overflow edges actually live.  Case count
+    // honors COLLAGE_PROPTEST_CASES via the shared proptest harness.
+    check_msg(
+        "round_x8 ≡ 8 × round (all formats)",
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed, 0);
+            for fmt in &FORMATS {
+                let xf: [f32; 8] = std::array::from_fn(|_| f32::from_bits(rng.next_u32()));
+                assert_lanes_f32(fmt, xf);
+                let xd: [f64; 8] = std::array::from_fn(|_| f64::from_bits(rng.next_u64()));
+                assert_lanes_f64(fmt, xd);
+                let scaled: [f64; 8] = std::array::from_fn(|_| {
+                    let scale = rng.below(40) as i32 - 20;
+                    rng.normal() * 2f64.powi(scale)
+                });
+                assert_lanes_f64(fmt, scaled);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+#[ignore = "exhaustive 2^32-pattern sweep through the lane entry (minutes per format); run with --release -- --ignored"]
+fn exhaustive_all_f32_bit_patterns_x8() {
+    // Every f32 bit pattern flows through round_x8 in some lane (2³² is a
+    // multiple of 8, so consecutive-pattern lanes tile the space exactly).
+    for fmt in &FORMATS {
+        let mut bits: u32 = 0;
+        loop {
+            let lane: [f32; 8] =
+                std::array::from_fn(|l| f32::from_bits(bits.wrapping_add(l as u32)));
+            assert_lanes_f32(fmt, lane);
+            bits = match bits.checked_add(8) {
+                Some(b) => b,
+                None => break,
+            };
+        }
+    }
+}
